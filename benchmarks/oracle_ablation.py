@@ -1,0 +1,97 @@
+"""Oracle ablation — the paper's future work ("study other approaches to
+resize the spinning window"), §5.
+
+Same DES, same mutable-lock state machine, different EvalSWS replacements:
+
+    paper   — double on late wake-up, −1 after K clean (K=10)
+    paper-k3/k30 — K sensitivity (paper: K trades late-wake probability
+              ~1/(K+1) against hardware contention)
+    aimd    — +1 on late wake-up, halve after K clean (opposite bias:
+              favors CPU savings over latency)
+    fixed1 / fixed-cores — no adaptation (static windows)
+
+Reported per oracle: throughput ratio to the per-cell optimum and spin
+CPU per CS, averaged over the paper's four CS/NCS regimes at 8/16/20/26
+threads.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from repro.core.des import simulate
+from repro.core.oracle import AIMDOracle, EvalSWS, FixedOracle
+
+SHORT = (0.0, 3.7e-6)
+LONG = (0.0, 366e-6)
+REGIMES = {"ss": (SHORT, SHORT), "ls": (LONG, SHORT),
+           "sl": (SHORT, LONG), "ll": (LONG, LONG)}
+THREADS = [8, 16, 20, 26]
+CORES = 20
+WAKE = 8e-6
+
+ORACLES = {
+    "paper":   lambda: {"oracle": EvalSWS(k=10)},
+    "paper-k3":  lambda: {"oracle": EvalSWS(k=3)},
+    "paper-k30": lambda: {"oracle": EvalSWS(k=30)},
+    "aimd":    lambda: {"oracle": AIMDOracle(k=10)},
+    "fixed1":  lambda: {"oracle": FixedOracle(), "initial_sws": 1},
+    "fixed-cores": lambda: {"oracle": FixedOracle(), "initial_sws": CORES},
+}
+
+
+def run(target_cs: int = 1200, seeds=(0, 1)) -> dict:
+    out = {}
+    for name, mk in ORACLES.items():
+        thr_sum = cpu_sum = 0.0
+        cells = 0
+        per_regime = {}
+        for rname, (cs, ncs) in REGIMES.items():
+            best = {}
+            for tc in THREADS:
+                thr = cpu = 0.0
+                for seed in seeds:
+                    r = simulate("mutable", tc, cores=CORES, cs=cs, ncs=ncs,
+                                 wake_latency=WAKE, target_cs=target_cs,
+                                 seed=seed, lock_kwargs=mk())
+                    thr += r.throughput / len(seeds)
+                    cpu += r.sync_cpu_per_cs / len(seeds)
+                best[tc] = (thr, cpu)
+            per_regime[rname] = best
+        out[name] = per_regime
+    # normalize: per (regime, tc) optimum across oracles
+    table = {}
+    for name in ORACLES:
+        ratios, cpus = [], []
+        for rname in REGIMES:
+            for tc in THREADS:
+                opt = max(out[o][rname][tc][0] for o in ORACLES)
+                ratios.append(out[name][rname][tc][0] / opt)
+                cpus.append(out[name][rname][tc][1])
+        table[name] = {"mean_ratio_to_opt": sum(ratios) / len(ratios),
+                       "mean_sync_cpu_us": 1e6 * sum(cpus) / len(cpus)}
+    return table
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--target-cs", type=int, default=1200)
+    ap.add_argument("--out", default="reports/oracle_ablation.json")
+    args = ap.parse_args(argv)
+    table = run(args.target_cs)
+    print(f"{'oracle':>12} {'ratio-to-opt':>13} {'sync CPU/CS (µs)':>17}")
+    for name, row in sorted(table.items(),
+                            key=lambda kv: -kv[1]["mean_ratio_to_opt"]):
+        print(f"{name:>12} {row['mean_ratio_to_opt']:13.3f} "
+              f"{row['mean_sync_cpu_us']:17.1f}")
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(table, f, indent=1)
+    print(f"wrote {args.out}")
+    return table
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,137 @@
+"""Roofline report: reads reports/dryrun/*/*.json -> markdown tables for
+EXPERIMENTS.md §Dry-run and §Roofline.
+
+    PYTHONPATH=src python -m benchmarks.roofline [--mesh pod1] [--tag ...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+ARCH_ORDER = ["gemma3-4b", "llama3.2-1b", "qwen2.5-14b", "stablelm-3b",
+              "granite-moe-1b-a400m", "qwen3-moe-235b-a22b",
+              "jamba-1.5-large-398b", "chameleon-34b", "rwkv6-1.6b",
+              "whisper-large-v3"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load_cells(root: str = "reports/dryrun", mesh: str = "pod1",
+               tag: str = "") -> dict:
+    cells = {}
+    for path in glob.glob(os.path.join(root, mesh, "*.json")):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("tag", "") != tag:
+            continue
+        cells[(rec["arch"], rec["shape"])] = rec
+    return cells
+
+
+def _fmt_s(x) -> str:
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}µs"
+
+
+def roofline_table(cells: dict, mesh: str) -> str:
+    lines = [
+        f"### Roofline — mesh `{mesh}` (terms in per-step seconds; "
+        "v5e: 197 TF/s bf16, 819 GB/s HBM, 50 GB/s ICI)",
+        "",
+        "| arch | shape | compute | memory | collective | dominant | "
+        "useful (6ND/HLO) | roofline frac | HBM/dev | status |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            rec = cells.get((arch, shape))
+            if rec is None:
+                continue
+            if rec["status"] == "skipped":
+                lines.append(f"| {arch} | {shape} | - | - | - | - | - | - "
+                             f"| - | skipped: {rec['reason'][:50]} |")
+                continue
+            if rec["status"] != "ok":
+                lines.append(f"| {arch} | {shape} | - | - | - | - | - | - "
+                             f"| - | FAILED |")
+                continue
+            r = rec["roofline"]
+            mem = rec["memory"]["peak_bytes_per_device"] / 2**30
+            lines.append(
+                f"| {arch} | {shape} | {_fmt_s(r['compute_s'])} "
+                f"| {_fmt_s(r['memory_s'])} | {_fmt_s(r['collective_s'])} "
+                f"| **{r['dominant']}** | {r['useful_ratio']:.3f} "
+                f"| {r['roofline_fraction']:.4f} | {mem:.1f} GiB "
+                f"| ok |")
+    return "\n".join(lines)
+
+
+def dryrun_table(cells: dict, mesh: str) -> str:
+    lines = [
+        f"### Dry-run — mesh `{mesh}`",
+        "",
+        "| arch | shape | chips | compile | HBM/dev | args/dev | HLO flops/dev "
+        "| collective ops | status |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            rec = cells.get((arch, shape))
+            if rec is None:
+                continue
+            if rec["status"] != "ok":
+                lines.append(
+                    f"| {arch} | {shape} | - | - | - | - | - | - "
+                    f"| {rec['status']} |")
+                continue
+            m = rec["memory"]
+            colls = rec["roofline"]["collective_count"]
+            ctxt = ", ".join(f"{k}×{v}" for k, v in sorted(colls.items())
+                             if not k.endswith("(g=1)"))[:80]
+            lines.append(
+                f"| {arch} | {shape} | {rec['n_chips']} "
+                f"| {rec.get('compile_s', '-')}s "
+                f"| {m['peak_bytes_per_device']/2**30:.1f} GiB "
+                f"| {m['argument_bytes']/2**30:.2f} GiB "
+                f"| {rec['roofline']['flops']:.2e} | {ctxt} | ok |")
+    return "\n".join(lines)
+
+
+def summarize(root: str = "reports/dryrun") -> str:
+    parts = []
+    for mesh in ("pod1", "pod2"):
+        for tag in ("", "v2"):
+            cells = load_cells(root, mesh, tag)
+            if not cells:
+                continue
+            label = f"{mesh}" + (f" (optimized `{tag}`)" if tag else
+                                 " (paper-faithful baseline)")
+            parts.append(dryrun_table(cells, label))
+            parts.append("")
+            if mesh == "pod1":  # roofline table is single-pod per assignment
+                parts.append(roofline_table(cells, label))
+                parts.append("")
+    return "\n".join(parts)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--root", default="reports/dryrun")
+    ap.add_argument("--out", default="reports/roofline.md")
+    args = ap.parse_args(argv)
+    text = summarize(args.root)
+    with open(args.out, "w") as f:
+        f.write(text)
+    print(text)
+    print(f"\nwrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,114 @@
+"""Benchmark orchestrator — one entry per paper artifact.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+| benchmark  | paper artifact         | module                  |
+|------------|------------------------|-------------------------|
+| fig1       | Fig. 1 timelines       | benchmarks.lockbench    |
+| fig3       | Fig. 3 lockbench grid  | benchmarks.lockbench    |
+| phold      | Fig. 4 PHOLD/PDES      | benchmarks.phold        |
+| sched      | §3 technique on TPU    | benchmarks.sched_bench  |
+| roofline   | EXPERIMENTS §Roofline  | benchmarks.roofline     |
+
+Artifacts land in reports/*.json; a summary CSV is printed at the end.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sample counts (slower)")
+    args = ap.parse_args(argv)
+    os.makedirs("reports", exist_ok=True)
+    t0 = time.time()
+    summary: list[tuple[str, object]] = []
+
+    print("=" * 72)
+    print("[1/5] lockbench fig1 (paper Fig. 1 timelines)")
+    print("=" * 72)
+    from benchmarks import lockbench
+    f1 = lockbench.fig1()
+    summary.append(("fig1.spin.makespan_slots",
+                    f1["ttas"]["makespan_slots"]))
+    summary.append(("fig1.sleep.makespan_slots",
+                    f1["sleep"]["makespan_slots"]))
+    summary.append(("fig1.mutable.makespan_slots",
+                    f1["mutable"]["makespan_slots"]))
+
+    print("\n" + "=" * 72)
+    print("[2/5] lockbench fig3 (paper Fig. 3 grid, DES @ 20 cores)")
+    print("=" * 72)
+    f3 = lockbench.fig3(target_cs=2000 if args.full else 1000)
+    for regime, data in f3.items():
+        for lock in ("mutable", "pt-exp"):
+            summary.append((f"fig3.{regime}.{lock}.ratio",
+                            round(data["summary"][lock]["ratio_to_opt"], 3)))
+    with open("reports/lockbench.json", "w") as f:
+        json.dump({"fig1": f1, "fig3": f3}, f, indent=1)
+
+    print("\n" + "=" * 72)
+    print("[3/5] PHOLD on share-everything PDES (paper Fig. 4)")
+    print("=" * 72)
+    from benchmarks import phold
+    ph = phold.run_phold(n_events=3000 if args.full else 1500)
+    with open("reports/phold.json", "w") as f:
+        json.dump(ph, f, indent=1)
+    for g, rows in ph.items():
+        for tc, locks in rows.items():
+            summary.append((f"phold.{g}.t{tc}.mutable.speedup",
+                            locks["mutable"]["speedup"]))
+
+    print("\n" + "=" * 72)
+    print("[4/5] serving-window scheduler (the technique on TPU batches)")
+    print("=" * 72)
+    from benchmarks import sched_bench
+    sb = sched_bench.main(["--requests", "400" if args.full else "250"])
+    for pol, agg in sb.items():
+        summary.append((f"sched.{pol}.late_handoff_rate",
+                        round(agg["late_handoff_rate"], 3)))
+        summary.append((f"sched.{pol}.avg_standby",
+                        round(agg["avg_standby"], 2)))
+
+    print("\n" + "=" * 72)
+    print("[5/6] oracle ablation (paper §5 future work)")
+    print("=" * 72)
+    from benchmarks import oracle_ablation
+    oa = oracle_ablation.main(["--target-cs",
+                               "1200" if args.full else "800"])
+    for name, row in oa.items():
+        summary.append((f"oracle.{name}.ratio",
+                        round(row["mean_ratio_to_opt"], 3)))
+
+    print("\n" + "=" * 72)
+    print("[6/6] roofline tables from dry-run artifacts")
+    print("=" * 72)
+    from benchmarks import roofline
+    text = roofline.summarize()
+    if text.strip():
+        with open("reports/roofline.md", "w") as f:
+            f.write(text)
+        n_ok = text.count("| ok |")
+        print(f"roofline: {n_ok} compiled cells tabulated "
+              f"-> reports/roofline.md")
+        summary.append(("roofline.cells_ok", n_ok))
+    else:
+        print("no dry-run artifacts found — run "
+              "`python -m repro.launch.dryrun --all` first")
+
+    print("\n" + "=" * 72)
+    print(f"benchmark suite done in {time.time()-t0:.0f}s — summary CSV")
+    print("=" * 72)
+    print("name,value")
+    for k, v in summary:
+        print(f"{k},{v}")
+
+
+if __name__ == "__main__":
+    main()

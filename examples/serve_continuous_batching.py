@@ -1,0 +1,14 @@
+"""Window-scheduled serving of a real (tiny) model — deliverable b.
+
+    PYTHONPATH=src python examples/serve_continuous_batching.py
+
+Compares the three admission policies on the same engine (paper §4's
+spin/sleep/static-vs-mutable comparison, on TPU-batch admission).
+"""
+
+from repro.launch.serve import main as serve_main
+
+for policy in ("zero", "max", "mutable"):
+    print(f"\n=== policy: {policy} ===")
+    serve_main(["--arch", "llama3.2-1b", "--tiny", "--requests", "12",
+                "--slots", "3", "--max-new", "6", "--policy", policy])

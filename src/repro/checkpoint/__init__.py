@@ -1,0 +1,5 @@
+"""Atomic async checkpointing (save/restore/elastic-reshard)."""
+
+from .manager import CheckpointManager, load_pytree, save_pytree
+
+__all__ = ["CheckpointManager", "save_pytree", "load_pytree"]

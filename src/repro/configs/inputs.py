@@ -1,0 +1,67 @@
+"""ShapeDtypeStruct stand-ins for every model input — the dry-run pattern:
+weak-type-correct, shardable, zero device allocation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import models
+from .base import ModelConfig, ShapeConfig
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_inputs(cfg: ModelConfig, shape: ShapeConfig):
+    B, S = shape.global_batch, shape.seq_len
+    batch = {"tokens": _sds((B, S), jnp.int32),
+             "labels": _sds((B, S), jnp.int32)}
+    if cfg.input_kind == "frames":
+        batch["frames"] = _sds((B, cfg.encoder_seq, cfg.d_model),
+                               jnp.bfloat16)
+    return batch
+
+
+def prefill_inputs(cfg: ModelConfig, shape: ShapeConfig):
+    B, S = shape.global_batch, shape.seq_len
+    batch = {"tokens": _sds((B, S), jnp.int32)}
+    if cfg.input_kind == "frames":
+        batch["frames"] = _sds((B, cfg.encoder_seq, cfg.d_model),
+                               jnp.bfloat16)
+    return batch
+
+
+def decode_inputs(cfg: ModelConfig, shape: ShapeConfig):
+    """(cache, tokens) for serve_step: KV cache of seq_len positions, one
+    new token."""
+    B, S = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(lambda: models.init_cache(cfg, B, S))
+    tokens = _sds((B, 1), jnp.int32)
+    return cache, tokens
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """Inputs for the step function this shape exercises."""
+    if shape.step == "train":
+        return (train_inputs(cfg, shape),)
+    if shape.step == "prefill":
+        return (prefill_inputs(cfg, shape),)
+    if shape.step == "decode":
+        return decode_inputs(cfg, shape)
+    raise ValueError(shape.step)
+
+
+def concrete_batch(cfg: ModelConfig, batch_size: int, seq_len: int, key):
+    """Small concrete batch for smoke tests / examples."""
+    k1, k2 = jax.random.split(key)
+    tokens = jax.random.randint(k1, (batch_size, seq_len), 0, cfg.vocab_size,
+                                jnp.int32)
+    labels = jnp.roll(tokens, -1, axis=1)
+    batch = {"tokens": tokens, "labels": labels}
+    if cfg.input_kind == "frames":
+        batch["frames"] = jax.random.normal(
+            k2, (batch_size, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+    return batch

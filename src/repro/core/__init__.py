@@ -1,0 +1,42 @@
+"""repro.core — the paper's contribution: Mutable Locks (Marotta et al., 2019).
+
+Public API:
+
+* :class:`MutableLock`     — Algorithm 1, drop-in for ``threading.Lock``.
+* :class:`SpinningWindow`  — the window state machine, reusable for any
+                             bounded-active-set resource (serving scheduler).
+* :class:`MutableWait`     — self-tuned hybrid spin/sleep predicate wait.
+* :mod:`baselines`         — TAS/TTAS/MCS/sleep/adaptive adversaries.
+* :mod:`des`               — deterministic discrete-event validation of the
+                             paper's multi-core claims.
+"""
+
+from .atomic import AtomicBool, AtomicU64, pack_lstate, sws_delta, unpack_lstate
+from .baselines import LOCKS, AdaptiveMutex, MCSLock, SleepLock, TASLock, TTASLock
+from .mutlock import MutableLock, MutLockStats, SemSleep, TTASSpin
+from .oracle import AIMDOracle, EvalSWS, FixedOracle, Oracle
+from .waitpolicy import MutableWait
+from .window import SpinningWindow
+
+#: Factory registry: every lock the framework can be configured with.
+ALL_LOCKS = dict(LOCKS, mutable=MutableLock)
+
+
+def make_lock(kind: str = "mutable", **kwargs):
+    """Instantiate a lock by name (``mutable|tas|ttas|mcs|sleep|adaptive``)."""
+    try:
+        cls = ALL_LOCKS[kind]
+    except KeyError as e:
+        raise ValueError(f"unknown lock kind {kind!r}; "
+                         f"options: {sorted(ALL_LOCKS)}") from e
+    return cls(**kwargs)
+
+
+__all__ = [
+    "AtomicBool", "AtomicU64", "pack_lstate", "unpack_lstate", "sws_delta",
+    "MutableLock", "MutLockStats", "SemSleep", "TTASSpin",
+    "EvalSWS", "FixedOracle", "AIMDOracle", "Oracle",
+    "SpinningWindow", "MutableWait",
+    "TASLock", "TTASLock", "MCSLock", "SleepLock", "AdaptiveMutex",
+    "LOCKS", "ALL_LOCKS", "make_lock",
+]

@@ -1,0 +1,487 @@
+"""Discrete-event simulation of lock algorithms under processor sharing.
+
+Purpose (DESIGN.md §2): this container has a single hardware core, so real
+threads can never exhibit the paper's *multi-core* regimes (20-core machine,
+spinners genuinely parallel with the critical-section holder).  This module
+simulates the six lock disciplines on a machine with a configurable number
+of cores, CS/NCS length distributions, and OS wake-up latency — reproducing
+Fig. 1's timelines and Fig. 3's throughput / CPU-time trends deterministically.
+
+Model
+-----
+* ``cores`` CPUs, generalized processor sharing: every *runnable* task
+  (executing CS, executing NCS, or spinning) advances at rate
+  ``min(1, cores / n_runnable)``.
+* Sleeping / waking threads are not runnable (consume no CPU).
+* Waking takes ``wake_latency`` wall seconds (OS scheduling delay).
+* Hardware contention: the CS holder's rate is additionally multiplied by
+  ``1 / (1 + alpha * n_spinners)`` — the cache-coherency pressure the paper
+  attributes to concurrent RMW/spin traffic (§2).  ``alpha`` is per-lock
+  (MCS spins on local lines -> 0; TAS is worst) and overridable per run.
+* Wake permits are conserved exactly like a semaphore: a wake-up issued when
+  no thread is parked is banked and absorbed by the next would-be sleeper.
+* Metric "CPU time in synchronization" = integral of CPU consumed by
+  spinning, the paper's wasted-cycles metric.
+
+The mutable-lock model runs the real :class:`~repro.core.oracle.EvalSWS`
+oracle and the C1/C2 wake-up-count corrections of Algorithm 1 — the DES and
+the threaded implementation share the oracle code, so validating one
+validates the policy of the other.
+"""
+
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+
+from .oracle import EvalSWS, Oracle
+
+# thread states
+NCS, CS, SPIN, SLEEP, WAKING, DONE = range(6)
+STATE_NAMES = ["NCS", "CS", "SPIN", "SLEEP", "WAKING", "DONE"]
+
+
+@dataclass
+class _Task:
+    tid: int
+    state: int = NCS
+    remaining: float = 0.0      # CPU-seconds of work left (CS/NCS/spin budget)
+    wake_at: float = -1.0       # wall time the wake completes (WAKING)
+    slept: bool = False         # paper's per-acquire `slept` flag
+    spun: bool = False          # paper's per-acquire `spun` flag
+    cs_done: int = 0
+    spin_cpu: float = 0.0
+
+
+@dataclass
+class SimResult:
+    lock: str
+    threads: int
+    cores: int
+    completed_cs: int = 0
+    t_end: float = 0.0
+    spin_cpu: float = 0.0       # CPU-seconds burnt spinning (sync waste)
+    wake_count: int = 0
+    sws_trace: list = field(default_factory=list)
+    timeline: list = field(default_factory=list)  # (t, tid, event) triples
+
+    @property
+    def throughput(self) -> float:
+        return self.completed_cs / self.t_end if self.t_end > 0 else 0.0
+
+    @property
+    def sync_cpu_per_cs(self) -> float:
+        return self.spin_cpu / max(1, self.completed_cs)
+
+
+# ---------------------------------------------------------------------------
+# Lock discipline models
+# ---------------------------------------------------------------------------
+class _LockModel:
+    """Reacts to arrive/release/wake events; decides spin vs sleep vs enter."""
+
+    default_alpha = 0.0  # hardware-contention coefficient
+
+    def __init__(self, sim: "LockSim", alpha: float | None = None):
+        self.sim = sim
+        self.alpha = self.default_alpha if alpha is None else alpha
+        self.holder: int | None = None
+        self.permits = 0  # banked semaphore permits (conserved wake-ups)
+
+    # -- hooks --------------------------------------------------------------
+    def on_arrive(self, t: _Task) -> None:
+        raise NotImplementedError
+
+    def on_release(self, t: _Task) -> None:
+        raise NotImplementedError
+
+    def on_wake_complete(self, t: _Task) -> None:
+        raise NotImplementedError
+
+    def on_spin_budget_exhausted(self, t: _Task) -> None:
+        raise AssertionError("no spin budget in this discipline")
+
+    # -- helpers --------------------------------------------------------------
+    def _enter_cs(self, t: _Task) -> None:
+        assert self.holder is None, "mutual exclusion violated in model"
+        self.holder = t.tid
+        self.sim.start_cs(t)
+
+    def _sleep(self, t: _Task) -> None:
+        """Park t, absorbing a banked permit if one exists (semaphore law)."""
+        if self.permits > 0:
+            self.permits -= 1
+            self.sim.schedule_wake_direct(t)  # instant re-dispatch path
+        else:
+            t.state = SLEEP
+
+    def _wake_some(self, k: int) -> None:
+        """Issue k wake permits; park-free permits are banked."""
+        for _ in range(k):
+            sl = self.sleepers()
+            if sl:
+                self.sim.schedule_wake(self.sim.rng.choice(sl))
+            else:
+                self.permits += 1
+
+    def spinners(self) -> list[_Task]:
+        return [t for t in self.sim.tasks if t.state == SPIN]
+
+    def sleepers(self) -> list[_Task]:
+        return [t for t in self.sim.tasks if t.state == SLEEP]
+
+
+class SpinModel(_LockModel):
+    """TTAS-style: every waiter spins; release hands to a random spinner."""
+
+    name = "ttas"
+    default_alpha = 0.02
+
+    def on_arrive(self, t):
+        if self.holder is None:
+            self._enter_cs(t)
+        else:
+            t.state = SPIN
+            t.spun = True
+
+    def on_release(self, t):
+        self.holder = None
+        sp = self.spinners()
+        if sp:
+            self._enter_cs(self.sim.rng.choice(sp))
+
+    def on_wake_complete(self, t):
+        raise AssertionError("spin lock never sleeps")
+
+
+class TASModel(SpinModel):
+    name = "tas"
+    default_alpha = 0.05
+
+
+class MCSModel(_LockModel):
+    """FIFO queue lock; waiters spin on private lines (alpha = 0)."""
+
+    name = "mcs"
+    default_alpha = 0.0
+
+    def __init__(self, sim, alpha=None):
+        super().__init__(sim, alpha)
+        self.queue: list[int] = []
+
+    def on_arrive(self, t):
+        if self.holder is None and not self.queue:
+            self._enter_cs(t)
+        else:
+            t.state = SPIN
+            t.spun = True
+            self.queue.append(t.tid)
+
+    def on_release(self, t):
+        self.holder = None
+        if self.queue:
+            self._enter_cs(self.sim.tasks[self.queue.pop(0)])
+
+    def on_wake_complete(self, t):
+        raise AssertionError("mcs never sleeps")
+
+
+class SleepModel(_LockModel):
+    """Benaphore / pthread-mutex default: always sleep when contended."""
+
+    name = "sleep"
+    default_alpha = 0.0
+
+    def on_arrive(self, t):
+        if self.holder is None:
+            self._enter_cs(t)
+        else:
+            t.slept = True
+            self._sleep(t)
+
+    def on_release(self, t):
+        self.holder = None
+        if self.sleepers() or self.sim.any_waking():
+            self._wake_some(1)
+
+    def on_wake_complete(self, t):
+        if self.holder is None:
+            self._enter_cs(t)
+        else:  # barged by a new arrival; park again
+            self._sleep(t)
+
+
+class AdaptiveModel(_LockModel):
+    """glibc adaptive: spin for a fixed budget, then sleep.  No sleep->spin."""
+
+    name = "adaptive"
+    default_alpha = 0.02
+
+    def __init__(self, sim, spin_budget: float = 2e-6, alpha=None):
+        super().__init__(sim, alpha)
+        self.spin_budget = spin_budget  # CPU-seconds before giving up
+
+    def on_arrive(self, t):
+        if self.holder is None:
+            self._enter_cs(t)
+        else:
+            t.state = SPIN
+            t.spun = True
+            t.remaining = self.spin_budget  # consumed at CPU rate
+
+    def on_spin_budget_exhausted(self, t):
+        t.slept = True
+        self._sleep(t)
+
+    def on_release(self, t):
+        self.holder = None
+        sp = self.spinners()
+        if sp:
+            self._enter_cs(self.sim.rng.choice(sp))
+        elif self.sleepers() or self.sim.any_waking():
+            self._wake_some(1)
+
+    def on_wake_complete(self, t):
+        if self.holder is None:
+            self._enter_cs(t)
+        else:
+            self._sleep(t)
+
+
+class MutableModel(_LockModel):
+    """Paper Algorithm 1 on top of the DES: spinning window + sleep->spin
+    transitions + EvalSWS oracle + C1/C2 wake-up-count corrections."""
+
+    name = "mutable"
+    default_alpha = 0.02
+
+    def __init__(self, sim, initial_sws: int = 1, max_sws: int | None = None,
+                 oracle: Oracle | None = None, alpha=None):
+        super().__init__(sim, alpha)
+        self.sws = initial_sws
+        self.max = max_sws if max_sws is not None else sim.cores
+        self.thc = 0
+        self.wuc = 0
+        self.oracle = oracle if oracle is not None else EvalSWS(k=10)
+
+    def on_arrive(self, t):
+        thc_pre, self.thc = self.thc, self.thc + 1       # A4: FAD(+1)
+        t.slept = t.spun = False
+        if thc_pre >= self.sws:                          # A7: outside SW
+            t.slept = True                               # A8
+            self._sleep(t)                               # A9
+        elif self.holder is None:                        # A11: spn_obj free
+            self._acquired(t)
+        else:
+            t.state = SPIN                               # A11: spin phase
+            t.spun = True
+
+    def _acquired(self, t):
+        """spn_obj acquired: run EvalSWS + C1/C2 bookkeeping (A12-A33)."""
+        self._enter_cs(t)
+        self.sim.res.sws_trace.append((self.sim.now, self.sws))
+        delta = self.oracle.eval_sws(t.spun, t.slept, self.sws)  # A12
+        if self.sws + delta < 1:                         # A16: clamp low
+            delta = 1 - self.sws
+        if self.sws + delta > self.max:                  # A17: clamp high
+            delta = self.max - self.sws
+        if delta:                                        # A18
+            sws_pre, self.sws = self.sws, self.sws + delta       # A20
+            thc = self.thc                               # A21
+            if delta < 0 and thc > self.sws:             # A25: C2
+                tmp = thc - self.sws                     # A26
+            elif delta > 0 and thc > sws_pre:            # A27: C1
+                tmp = thc - sws_pre                      # A28
+            else:
+                tmp = 0                                  # A30
+            sign = 1 if delta > 0 else -1                # A24
+            self.wuc += sign * min(abs(delta), tmp)      # A32-A33
+
+    def on_release(self, t):
+        if self.wuc >= 0:                                # R2
+            r_wuc, self.wuc = self.wuc, 0                # R3-R4
+        else:
+            self.wuc += 1                                # R7: C2 suppression
+            r_wuc = -1                                   # R6
+        thc_pre, self.thc = self.thc, self.thc - 1       # R9: FAD(-1)
+        self.holder = None                               # R10: spn unlock
+        sp = self.spinners()
+        if sp:                                           # spn handoff
+            self._acquired(self.sim.rng.choice(sp))
+        if r_wuc < 0:                                    # R11-R12
+            return
+        if thc_pre > self.sws:                           # R16: sleepers exist
+            r_wuc += 1                                   # R17: sleep->spin
+        self._wake_some(r_wuc)                           # R19-R21
+
+    def on_wake_complete(self, t):
+        # The sleep->spin transition: the woken thread joins the window.
+        if self.holder is None:
+            # spn_obj free: acquired with no spinning -> t.spun stays False,
+            # so EvalSWS sees the late wake-up and doubles the window.
+            self._acquired(t)
+        else:
+            t.state = SPIN
+            t.spun = True  # spn_obj.lock() will observe contention
+
+
+_MODELS = {
+    "tas": TASModel,
+    "ttas": SpinModel,
+    "mcs": MCSModel,
+    "sleep": SleepModel,
+    "adaptive": AdaptiveModel,
+    "mutable": MutableModel,
+}
+
+
+# ---------------------------------------------------------------------------
+# The simulator core
+# ---------------------------------------------------------------------------
+class LockSim:
+    """Generalized-processor-sharing DES of N threads hammering one lock."""
+
+    def __init__(
+        self,
+        lock: str,
+        threads: int,
+        cores: int,
+        cs: tuple[float, float],
+        ncs: tuple[float, float],
+        wake_latency: float,
+        seed: int = 0,
+        record_timeline: bool = False,
+        max_cs_per_thread: int | None = None,
+        lock_kwargs: dict | None = None,
+    ):
+        self.rng = random.Random(seed)
+        self.cores = cores
+        self.cs_lo, self.cs_hi = cs
+        self.ncs_lo, self.ncs_hi = ncs
+        self.wake_latency = wake_latency
+        self.now = 0.0
+        self.tasks = [_Task(tid=i) for i in range(threads)]
+        self.model: _LockModel = _MODELS[lock](self, **(lock_kwargs or {}))
+        self.res = SimResult(lock=lock, threads=threads, cores=cores)
+        self.record_timeline = record_timeline
+        self.max_cs_per_thread = max_cs_per_thread
+
+    # -- helpers for models -------------------------------------------------
+    def any_waking(self) -> bool:
+        return any(t.state == WAKING for t in self.tasks)
+
+    def _log(self, tid: int, event: str) -> None:
+        if self.record_timeline:
+            self.res.timeline.append((round(self.now, 12), tid, event))
+
+    def start_cs(self, t: _Task) -> None:
+        t.state = CS
+        t.remaining = self.rng.uniform(self.cs_lo, self.cs_hi)
+        self._log(t.tid, "cs_start")
+
+    def schedule_wake(self, t: _Task) -> None:
+        assert t.state == SLEEP
+        t.state = WAKING
+        t.wake_at = self.now + self.wake_latency
+        self.res.wake_count += 1
+        self._log(t.tid, "wake_scheduled")
+
+    def schedule_wake_direct(self, t: _Task) -> None:
+        """A banked permit absorbed the sleep: still pays the park/unpark
+        round-trip latency (the thread had committed to sleeping)."""
+        t.state = WAKING
+        t.wake_at = self.now + self.wake_latency
+        self.res.wake_count += 1
+        self._log(t.tid, "wake_banked")
+
+    # -- main loop ------------------------------------------------------------
+    def run(self, target_cs: int = 1000, horizon: float = 1e9) -> SimResult:
+        for t in self.tasks:
+            t.state = NCS
+            t.remaining = self.rng.uniform(self.ncs_lo, self.ncs_hi)
+
+        while self.res.completed_cs < target_cs and self.now < horizon:
+            runnable = [t for t in self.tasks if t.state in (CS, NCS, SPIN)]
+            if not runnable:
+                wakes = [t for t in self.tasks if t.state == WAKING]
+                if not wakes:
+                    break  # all DONE (or a model bug; tests assert progress)
+                nxt = min(wakes, key=lambda t: t.wake_at)
+                self.now = nxt.wake_at
+                self._wake(nxt)
+                continue
+
+            rate = min(1.0, self.cores / len(runnable))
+            n_spin = sum(1 for t in runnable if t.state == SPIN)
+            holder_rate = rate / (1.0 + self.model.alpha * n_spin)
+            has_budget = isinstance(self.model, AdaptiveModel)
+
+            dt = float("inf")
+            for t in runnable:
+                if t.state == CS:
+                    dt = min(dt, t.remaining / holder_rate)
+                elif t.state == NCS:
+                    dt = min(dt, t.remaining / rate)
+                elif has_budget:  # SPIN with budget
+                    dt = min(dt, t.remaining / rate)
+            for t in self.tasks:
+                if t.state == WAKING:
+                    dt = min(dt, t.wake_at - self.now)
+            dt = max(dt, 0.0)
+            assert dt != float("inf")
+
+            self.now += dt
+            finished: list[_Task] = []
+            for t in runnable:
+                if t.state == CS:
+                    t.remaining -= dt * holder_rate
+                    if t.remaining <= 1e-15:
+                        finished.append(t)
+                elif t.state == NCS:
+                    t.remaining -= dt * rate
+                    if t.remaining <= 1e-15:
+                        finished.append(t)
+                else:  # SPIN
+                    burn = dt * rate
+                    t.spin_cpu += burn
+                    self.res.spin_cpu += burn
+                    if has_budget:
+                        t.remaining -= burn
+                        if t.remaining <= 1e-15:
+                            self.model.on_spin_budget_exhausted(t)
+            for t in self.tasks:
+                if t.state == WAKING and t.wake_at <= self.now + 1e-15:
+                    self._wake(t)
+
+            for t in sorted(finished, key=lambda x: x.tid):
+                if t.state == CS:
+                    t.cs_done += 1
+                    self.res.completed_cs += 1
+                    self._log(t.tid, "cs_end")
+                    self.model.on_release(t)
+                    if (self.max_cs_per_thread is not None
+                            and t.cs_done >= self.max_cs_per_thread):
+                        t.state = DONE
+                    else:
+                        t.state = NCS
+                        t.remaining = self.rng.uniform(self.ncs_lo, self.ncs_hi)
+                elif t.state == NCS:
+                    self._log(t.tid, "arrive")
+                    self.model.on_arrive(t)
+
+        self.res.t_end = self.now
+        return self.res
+
+    def _wake(self, t: _Task) -> None:
+        self._log(t.tid, "wake_complete")
+        self.model.on_wake_complete(t)
+
+
+def simulate(lock: str, threads: int, cores: int = 20,
+             cs: tuple[float, float] = (0.0, 3.7e-6),
+             ncs: tuple[float, float] = (0.0, 3.7e-6),
+             wake_latency: float = 5e-6, target_cs: int = 2000,
+             seed: int = 0, **kw) -> SimResult:
+    """One lockbench cell (paper Fig. 3) under the DES."""
+    return LockSim(lock, threads, cores, cs, ncs, wake_latency,
+                   seed=seed, **kw).run(target_cs=target_cs)

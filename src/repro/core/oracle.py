@@ -1,0 +1,95 @@
+"""SWS adaptation oracles (paper §3.2, routine EvalSWS).
+
+The mutable-lock algorithm is independent of the oracle that resizes the
+spinning window (paper §3.1: "the mutable lock algorithm is independent of
+the actually selected SWS adaptation oracle").  We keep the oracle pluggable
+so the same state machine drives both the OS-thread lock and the serving
+scheduler's active-window controller.
+
+The paper's oracle (EvalSWS, Algorithm 1 lines E1-E12):
+
+* a thread that **slept and then acquired the spin lock without spinning**
+  (``slept and not spun``) proves the window failed to mask wake-up latency
+  -> grow: ``delta = +sws`` (doubling);
+* if that event does not occur for ``K`` consecutive acquisitions
+  -> shrink: ``delta = -1``.
+
+``K = 10`` in the paper's evaluation: late wake-up probability is kept below
+~1/(K+1) ~= 10%.
+"""
+
+from __future__ import annotations
+
+from typing import Protocol
+
+
+class Oracle(Protocol):
+    """Signed window variation computed at lock-acquire time."""
+
+    def eval_sws(self, spun: bool, slept: bool, sws: int) -> int:
+        """Return the signed variation ``delta`` to apply to ``sws``."""
+        ...
+
+
+class EvalSWS:
+    """The paper's oracle, faithful to Algorithm 1 lines E1-E12.
+
+    State ``cnt`` counts consecutive critical-section executions without a
+    late wake-up.  It is only read/written while holding ``spn_obj`` (the
+    call sits between spn_obj.lock() and the end of ACQUIRE), so it needs no
+    extra synchronization — mirroring the paper's placement of ``m.cnt``.
+    """
+
+    def __init__(self, k: int = 10):
+        if k < 1:
+            raise ValueError("K must be >= 1")
+        self.k = k
+        self.cnt = 0
+        # Observability counters (not part of the algorithm).
+        self.grow_events = 0
+        self.shrink_events = 0
+
+    def eval_sws(self, spun: bool, slept: bool, sws: int) -> int:
+        self.cnt += 1                      # E2
+        delta = 0                          # E3
+        if slept and not spun:             # E4: late wake-up detected
+            delta = sws                    # E5: double the window
+            self.cnt = 0                   # E6
+            self.grow_events += 1
+        elif self.cnt >= self.k:           # E7 (>= guards lost updates)
+            delta = -1                     # E8
+            self.cnt = 0                   # E9
+            self.shrink_events += 1
+        return delta                       # E11
+
+
+class FixedOracle:
+    """Never resizes — degenerates the mutable lock into a static
+    spin(window)/sleep hybrid.  Useful as an ablation baseline."""
+
+    def eval_sws(self, spun: bool, slept: bool, sws: int) -> int:
+        return 0
+
+
+class AIMDOracle:
+    """Additive-increase / multiplicative-decrease variant (beyond-paper
+    ablation): grow by +1 on late wake-up, halve after K clean rounds.
+
+    The paper doubles on a late wake and shrinks by 1; AIMD is the opposite
+    bias (favors small windows / CPU savings over latency).  Exposed so the
+    benchmarks can compare oracle families, per the paper's future-work note.
+    """
+
+    def __init__(self, k: int = 10):
+        self.k = k
+        self.cnt = 0
+
+    def eval_sws(self, spun: bool, slept: bool, sws: int) -> int:
+        self.cnt += 1
+        if slept and not spun:
+            self.cnt = 0
+            return 1
+        if self.cnt >= self.k:
+            self.cnt = 0
+            return -(sws // 2)
+        return 0

@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for the roofline hot-spots + pure-jnp oracles.
+
+flash_attention — blockwise online-softmax attention (causal/SWA/GQA/softcap)
+rwkv6_scan      — WKV linear-attention scan, state resident in VMEM
+mamba_scan      — selective-scan, state resident in VMEM
+rmsnorm         — fused norm
+
+Use via :mod:`repro.kernels.ops` (layout mapping + backend dispatch).
+"""
+
+from . import ops, ref
+from .flash_attention import flash_attention
+from .mamba_scan import mamba_scan
+from .rmsnorm import rmsnorm
+from .rwkv6_scan import rwkv6_scan
+
+__all__ = ["flash_attention", "rwkv6_scan", "mamba_scan", "rmsnorm",
+           "ops", "ref"]

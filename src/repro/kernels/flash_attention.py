@@ -1,0 +1,158 @@
+"""Flash attention Pallas kernel (TPU target, interpret-validated on CPU).
+
+Blockwise online-softmax attention — the production path for the attention
+hot-spot that the XLA lowering (repro.models.attention.attend_qchunk)
+materializes f32 scores for.  The dry-run's §Roofline shows train/prefill
+cells are memory-term dominated precisely because of those scores; this
+kernel keeps the (block_q x block_k) score tile in VMEM and never writes it
+to HBM.
+
+TPU adaptation (DESIGN.md §3): tiles are MXU-aligned (block_q/block_k
+multiples of 128 on the lane dim, head_dim padded to 128 lanes by the
+caller), accumulation is f32 in VMEM scratch, the kv loop is the innermost
+*arbitrary* grid dimension so the Mosaic pipeline overlaps the HBM->VMEM
+streaming of K/V blocks with compute — the kernel-level analogue of the
+paper's spinning window: enough buffers in flight to mask fetch latency,
+no more (VMEM is the wasted resource).
+
+Supports: causal masking, sliding-window (local) attention, GQA (query
+groups share one KV head), logit softcap (gemma).
+
+Layout: q (BH, Sq, hd) with BH = batch*num_q_heads; k/v (BKV, Sk, hd) with
+BKV = batch*num_kv_heads.  The ops.py wrapper maps model-layout tensors to
+this layout and back.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            block_q: int, block_k: int, seq_k: int, causal: bool,
+            window: int, softcap: float, scale: float):
+    """One (q-block, k-block) grid step.  Grid: (BH, nq, nk) with nk
+    innermost/arbitrary.  Scratch acc/m/l persist across the nk loop."""
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                     # (bq, hd)
+        k = k_ref[0].astype(jnp.float32)                     # (bk, hd)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale      # (bq, bk)
+        if softcap > 0.0:
+            s = jnp.tanh(s / softcap) * softcap
+        mask = k_pos < seq_k                                  # kv padding
+        if causal:
+            mask &= q_pos >= k_pos
+        if window > 0:
+            mask &= (q_pos - k_pos) < window
+        s = jnp.where(mask, s, _NEG_INF)
+
+        m_prev = m_ref[...]                                   # (bq,)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+        m_ref[...] = m_new
+        v = v_ref[0].astype(jnp.float32)                      # (bk, hd)
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + pv
+
+    if causal or window > 0:
+        # skip k-blocks that are fully masked for this q-block
+        first_q = qi * block_q
+        last_q = first_q + block_q - 1
+        first_k = ki * block_k
+        last_k = first_k + block_k - 1
+        live = jnp.asarray(True)
+        if causal:
+            live &= last_q >= first_k
+        if window > 0:            # newest allowed k is q_pos - window + 1
+            live &= last_k > first_q - window
+        pl.when(live)(_compute)
+    else:
+        _compute()
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "block_q", "block_k",
+                     "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = True):
+    """q: (BH, Sq, hd); k, v: (BKV, Sk, hd); BH % BKV == 0 (GQA groups).
+
+    Returns (BH, Sq, hd) in q.dtype.  Sq/Sk are padded to block multiples
+    internally; kv padding is masked, q padding rows are dropped on return.
+    """
+    BH, Sq, hd = q.shape
+    BKV, Sk, _ = k.shape
+    assert BH % BKV == 0, (BH, BKV)
+    group = BH // BKV
+    scale = 1.0 / math.sqrt(hd)
+
+    pq = (-Sq) % block_q
+    pk = (-Sk) % block_k
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0)))
+    Sqp, Skp = Sq + pq, Sk + pk
+    nq, nk = Sqp // block_q, Skp // block_k
+
+    kernel = functools.partial(
+        _kernel, block_q=block_q, block_k=block_k, seq_k=Sk, causal=causal,
+        window=window, softcap=softcap, scale=scale)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, i, j: (b // group, j, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, i, j: (b // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sqp, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, hd), jnp.float32),   # acc
+            pltpu.VMEM((block_q,), jnp.float32),      # running max
+            pltpu.VMEM((block_q,), jnp.float32),      # running sum
+        ],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )(q, k, v)
+    return out[:, :Sq, :]

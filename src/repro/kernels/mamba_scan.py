@@ -1,0 +1,95 @@
+"""Mamba selective-scan Pallas kernel.
+
+Recurrence per channel block (state s: (bd, N)):
+
+    s_t = exp(dt_t ⊙ a) ⊙ s_{t-1} + (dt_t ⊙ x_t) B_tᵀ
+    y_t = s_t C_t
+
+TPU adaptation: like the RWKV kernel, the op is bandwidth-bound; the state
+block stays in VMEM scratch for the whole sequence.  Grid is
+(B, d_blocks, num_chunks): batch and channel-blocks parallel, chunks
+sequential (arbitrary) so input chunk streaming overlaps compute.  The
+channel dim is tiled by ``block_d`` (lane-aligned); ``a`` is (d, N) and the
+kernel reads only its (block_d, N) tile.
+
+Layout: dt, x: (B, T, d); Bm, Cm: (B, T, N).  Returns y: (B, T, d) f32.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(dt_ref, x_ref, b_ref, c_ref, a_ref, y_ref, s_ref, *,
+            chunk: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    a = a_ref[...].astype(jnp.float32)                        # (bd, N)
+
+    def step(t, _):
+        dt_t = dt_ref[0, t].astype(jnp.float32)               # (bd,)
+        x_t = x_ref[0, t].astype(jnp.float32)                 # (bd,)
+        B_t = b_ref[0, t].astype(jnp.float32)                 # (N,)
+        C_t = c_ref[0, t].astype(jnp.float32)                 # (N,)
+        da = jnp.exp(dt_t[:, None] * a)                       # (bd, N)
+        s = s_ref[...] * da + (dt_t * x_t)[:, None] * B_t[None, :]
+        s_ref[...] = s
+        # y_t = s C_t  — (bd, N) @ (N,) matvec on the MXU
+        y = jax.lax.dot_general(
+            s, C_t[:, None], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)[:, 0]
+        y_ref[0, t] = y.astype(y_ref.dtype)
+        return 0
+
+    jax.lax.fori_loop(0, chunk, step, 0, unroll=False)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("chunk", "block_d", "interpret"))
+def mamba_scan(dt, x, Bm, Cm, a, *, chunk: int = 64, block_d: int = 128,
+               interpret: bool = True):
+    """dt, x: (B, T, d); Bm, Cm: (B, T, N); a: (d, N) negative.
+    Returns y: (B, T, d) f32."""
+    B, T, d = x.shape
+    N = a.shape[-1]
+    bd = min(block_d, d)
+    pd = (-d) % bd
+    if pd:
+        dt = jnp.pad(dt, ((0, 0), (0, 0), (0, pd)))
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, pd)))
+        a = jnp.pad(a, ((0, pd), (0, 0)))
+    dp = d + pd
+    pt = (-T) % chunk
+    if pt:
+        dt, x = (jnp.pad(v, ((0, 0), (0, pt), (0, 0))) for v in (dt, x))
+        Bm, Cm = (jnp.pad(v, ((0, 0), (0, pt), (0, 0))) for v in (Bm, Cm))
+    Tp = T + pt
+    nd, nc = dp // bd, Tp // chunk
+
+    y = pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk),
+        grid=(B, nd, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, bd), lambda b, i, c: (b, c, i)),  # dt
+            pl.BlockSpec((1, chunk, bd), lambda b, i, c: (b, c, i)),  # x
+            pl.BlockSpec((1, chunk, N), lambda b, i, c: (b, c, 0)),   # B
+            pl.BlockSpec((1, chunk, N), lambda b, i, c: (b, c, 0)),   # C
+            pl.BlockSpec((bd, N), lambda b, i, c: (i, 0)),            # a
+        ],
+        out_specs=pl.BlockSpec((1, chunk, bd), lambda b, i, c: (b, c, i)),
+        out_shape=jax.ShapeDtypeStruct((B, Tp, dp), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bd, N), jnp.float32)],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )(dt, x, Bm, Cm, a)
+    return y[:, :T, :d]

@@ -1,0 +1,93 @@
+"""jit'd dispatch wrappers: model-layout tensors -> kernel layouts.
+
+``use_pallas()`` decides the execution path at trace time:
+
+* TPU backend      -> compiled Pallas kernels (production)
+* CPU + TEST flag  -> interpret-mode Pallas (CI correctness)
+* CPU (default)    -> the models' own XLA paths (dry-run / smoke tests)
+
+Set ``REPRO_USE_PALLAS=1`` to force the kernels (interpret mode on CPU).
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention
+from .mamba_scan import mamba_scan
+from .rmsnorm import rmsnorm
+from .rwkv6_scan import rwkv6_scan
+
+
+def use_pallas() -> bool:
+    if os.environ.get("REPRO_USE_PALLAS") == "1":
+        return True
+    return jax.default_backend() == "tpu"
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# --------------------------------------------------------------------------
+# Attention: model layout q (B, Sq, H, hd), k/v (B, Sk, KV, hd)
+# --------------------------------------------------------------------------
+def attention(q, k, v, *, causal=True, window=0, softcap=0.0):
+    B, Sq, H, hd = q.shape
+    _, Sk, KV, _ = k.shape
+    qk = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, hd)
+    kk = k.transpose(0, 2, 1, 3).reshape(B * KV, Sk, hd)
+    vk = v.transpose(0, 2, 1, 3).reshape(B * KV, Sk, hd)
+    if use_pallas():
+        o = flash_attention(qk, kk, vk, causal=causal, window=int(window),
+                            softcap=softcap, interpret=_interpret())
+    else:
+        o = ref.flash_attention_ref(qk, kk, vk, causal=causal,
+                                    window=int(window), softcap=softcap)
+    return o.reshape(B, H, Sq, hd).transpose(0, 2, 1, 3)
+
+
+# --------------------------------------------------------------------------
+# RWKV6: model layout r/k/v/w (B, T, D) with H = D // n heads; u (D,)
+# --------------------------------------------------------------------------
+def wkv(r, k, v, w, u, head_dim: int, s0=None):
+    B, T, D = r.shape
+    n = head_dim
+    H = D // n
+
+    def to_bh(x):
+        return x.reshape(B, T, H, n).transpose(0, 2, 1, 3).reshape(
+            B * H, T, n)
+
+    rb, kb, vb, wb = map(to_bh, (r, k, v, w))
+    ub = jnp.broadcast_to(u.reshape(H, n), (B, H, n)).reshape(B * H, n)
+    s0b = (None if s0 is None
+           else s0.reshape(B * H, n, n))
+    if use_pallas():
+        y, sT = rwkv6_scan(rb, kb, vb, wb, ub, s0b, interpret=_interpret())
+    else:
+        y, sT = ref.rwkv6_scan_ref(rb, kb, vb, wb, ub, s0b)
+    y = y.reshape(B, H, T, n).transpose(0, 2, 1, 3).reshape(B, T, D)
+    return y, sT.reshape(B, H, n, n)
+
+
+# --------------------------------------------------------------------------
+# Mamba selective scan (model layout already matches the kernel)
+# --------------------------------------------------------------------------
+def selective_scan(dt, x, Bm, Cm, a):
+    if use_pallas():
+        return mamba_scan(dt, x, Bm, Cm, a, interpret=_interpret())
+    return ref.mamba_scan_ref(dt, x, Bm, Cm, a)
+
+
+# --------------------------------------------------------------------------
+# RMSNorm
+# --------------------------------------------------------------------------
+def fused_rmsnorm(x, w, eps: float = 1e-6):
+    if use_pallas():
+        return rmsnorm(x, w, eps=eps, interpret=_interpret())
+    return ref.rmsnorm_ref(x, w, eps)

@@ -1,0 +1,81 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+These are *definitions*, not fast paths: direct dense math, f32 accumulate.
+The model code has its own (chunked/blockwise) implementations; tests check
+kernel == ref and model-path == ref independently.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, softcap=0.0):
+    """q: (BH, Sq, hd); k, v: (BKV, Sk, hd)."""
+    BH, Sq, hd = q.shape
+    BKV, Sk, _ = k.shape
+    g = BH // BKV
+    k = jnp.repeat(k, g, axis=0)
+    v = jnp.repeat(v, g, axis=0)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    qp = jnp.arange(Sq)[:, None]
+    kp = jnp.arange(Sk)[None, :]
+    m = jnp.ones((Sq, Sk), bool)
+    if causal:
+        m &= qp >= kp
+    if window:
+        m &= (qp - kp) < window
+    s = jnp.where(m, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)
+                      ).astype(q.dtype)
+
+
+def rwkv6_scan_ref(r, k, v, w, u, s0=None):
+    """Sequential definition.  r,k,v,w: (BH, T, n); u: (BH, n)."""
+    BH, T, n = r.shape
+    S = (jnp.zeros((BH, n, n), jnp.float32) if s0 is None
+         else s0.astype(jnp.float32))
+
+    def step(S, t):
+        r_t, k_t, v_t, w_t = t                               # (BH, n)
+        kv = k_t[..., :, None] * v_t[..., None, :]
+        y = jnp.einsum("bk,bkv->bv", r_t, S + u[..., None] * kv)
+        S = w_t[..., None] * S + kv
+        return S, y
+
+    ts = tuple(a.swapaxes(0, 1).astype(jnp.float32) for a in (r, k, v, w))
+    S, ys = jax.lax.scan(step, S, ts)
+    return ys.swapaxes(0, 1), S
+
+
+def mamba_scan_ref(dt, x, Bm, Cm, a):
+    """Sequential definition.  dt,x: (B,T,d); Bm,Cm: (B,T,N); a: (d,N)."""
+    B, T, d = x.shape
+    N = a.shape[-1]
+    s0 = jnp.zeros((B, d, N), jnp.float32)
+
+    def step(s, t):
+        dt_t, x_t, B_t, C_t = t
+        da = jnp.exp(dt_t[..., None] * a)
+        s = s * da + (dt_t * x_t)[..., None] * B_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", s, C_t)
+        return s, y
+
+    ts = tuple(v.swapaxes(0, 1).astype(jnp.float32)
+               for v in (dt, x, Bm, Cm))
+    _, ys = jax.lax.scan(step, s0, ts)
+    return ys.swapaxes(0, 1)
+
+
+def rmsnorm_ref(x, w, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)
+            * (1.0 + w.astype(jnp.float32))).astype(x.dtype)

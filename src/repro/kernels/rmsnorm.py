@@ -1,0 +1,57 @@
+"""Fused RMSNorm Pallas kernel.
+
+y = x * rsqrt(mean(x^2) + eps) * (1 + w) — one HBM pass instead of the
+three (square-reduce, rsqrt-broadcast, scale) an unfused lowering makes.
+Grid tiles rows (everything before the feature dim); the feature dim stays
+whole in VMEM (d_model ≤ 8192 → ≤ 32 KB/row in f32, trivially resident).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)                        # (bm, D)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    o_ref[...] = (y * (1.0 + w_ref[...].astype(jnp.float32))
+                  ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows",
+                                             "interpret"))
+def rmsnorm(x, w, *, eps: float = 1e-6, block_rows: int = 256,
+            interpret: bool = True):
+    """x: (..., D); w: (D,).  Returns x.dtype."""
+    shape = x.shape
+    D = shape[-1]
+    rows = 1
+    for s in shape[:-1]:
+        rows *= s
+    x2 = x.reshape(rows, D)
+    bm = min(block_rows, rows)
+    pr = (-rows) % bm
+    if pr:
+        x2 = jnp.pad(x2, ((0, pr), (0, 0)))
+    nm = (rows + pr) // bm
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, eps=eps),
+        grid=(nm,),
+        in_specs=[
+            pl.BlockSpec((bm, D), lambda i: (i, 0)),
+            pl.BlockSpec((D,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, D), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows + pr, D), x.dtype),
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+    )(x2, w)
+    return out[:rows].reshape(shape)

@@ -1,0 +1,106 @@
+"""RWKV6 (Finch) WKV scan Pallas kernel.
+
+Recurrence per head (state S: (n, n) matrix, n = head_dim):
+
+    y_t = r_t · (S_{t-1} + diag(u) k_tᵀ v_t)
+    S_t = diag(w_t) S_{t-1} + k_tᵀ v_t            w_t ∈ (0,1) data-dependent
+
+TPU adaptation: the hot property of this op is that it is *bandwidth*-bound
+(state never leaves VMEM; every input element is read exactly once).  The
+kernel keeps S resident in VMEM scratch across the whole sequence — grid is
+(B·H, num_chunks) with the chunk dimension *arbitrary* (sequential) so
+Mosaic streams r/k/v/w chunks HBM→VMEM while the current chunk computes.
+Inside a chunk we run the exact diagonal recurrence (fori_loop over time,
+rank-1 MXU updates) rather than the 1/decay-normalized matmul form, which
+overflows f32 for long chunks with small w — numerical robustness is part
+of the spec (ref.py is the oracle).
+
+Layout: r,k,v,w: (BH, T, n); u: (BH, n) (broadcast from (H, n) by ops.py).
+Returns y: (BH, T, n) and final state (BH, n, n).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, sT_ref,
+            S_ref, *, chunk: int):
+    ci = pl.program_id(1)
+    nc = pl.num_programs(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        S_ref[...] = s0_ref[0]
+
+    u = u_ref[0].astype(jnp.float32)                         # (n,)
+
+    def step(t, _):
+        r_t = r_ref[0, t].astype(jnp.float32)                # (n,)
+        k_t = k_ref[0, t].astype(jnp.float32)
+        v_t = v_ref[0, t].astype(jnp.float32)
+        w_t = w_ref[0, t].astype(jnp.float32)
+        kv = k_t[:, None] * v_t[None, :]                     # (n, n) rank-1
+        S = S_ref[...]
+        # y_t = r·S + (r·(u*k)) v   — matvec on MXU + rank-1 bonus
+        y_main = jax.lax.dot_general(
+            r_t[None, :], S, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)[0]           # (n,)
+        bonus = jnp.sum(r_t * u * k_t) * v_t
+        y_ref[0, t] = (y_main + bonus).astype(y_ref.dtype)
+        S_ref[...] = w_t[:, None] * S + kv
+        return 0
+
+    jax.lax.fori_loop(0, chunk, step, 0, unroll=False)
+
+    @pl.when(ci == nc - 1)
+    def _fin():
+        sT_ref[0] = S_ref[...].astype(sT_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("chunk", "interpret"))
+def rwkv6_scan(r, k, v, w, u, s0=None, *, chunk: int = 64,
+               interpret: bool = True):
+    """r,k,v,w: (BH, T, n) — w is the decay in (0,1); u: (BH, n);
+    s0: (BH, n, n) or None.  Returns (y (BH, T, n) f32, sT (BH, n, n) f32)."""
+    BH, T, n = r.shape
+    if s0 is None:
+        s0 = jnp.zeros((BH, n, n), jnp.float32)
+    pt = (-T) % chunk
+    if pt:
+        r, k, v = (jnp.pad(a, ((0, 0), (0, pt), (0, 0))) for a in (r, k, v))
+        w = jnp.pad(w, ((0, 0), (0, pt), (0, 0)), constant_values=1.0)
+    Tp = T + pt
+    nc = Tp // chunk
+
+    y, sT = pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk),
+        grid=(BH, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, n), lambda b, c: (b, c, 0)),   # r
+            pl.BlockSpec((1, chunk, n), lambda b, c: (b, c, 0)),   # k
+            pl.BlockSpec((1, chunk, n), lambda b, c: (b, c, 0)),   # v
+            pl.BlockSpec((1, chunk, n), lambda b, c: (b, c, 0)),   # w
+            pl.BlockSpec((1, n), lambda b, c: (b, 0)),             # u
+            pl.BlockSpec((1, n, n), lambda b, c: (b, 0, 0)),       # s0
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, n), lambda b, c: (b, c, 0)),   # y
+            pl.BlockSpec((1, n, n), lambda b, c: (b, 0, 0)),       # sT
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, Tp, n), jnp.float32),
+            jax.ShapeDtypeStruct((BH, n, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((n, n), jnp.float32)],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+    )(r, k, v, w, u, s0)
+    return y[:, :T], sT

@@ -1,0 +1,289 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves, without TPU hardware, that the distribution
+config is coherent: parameters/optimizer state/caches shard onto the
+production mesh, the program compiles under SPMD, fits per-device memory
+(``memory_analysis``), and yields the roofline terms (loop-aware FLOPs /
+traffic / collective bytes via :mod:`repro.launch.hloanalysis`).
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-4b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all            # one pod
+    PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+    ... --set seqcarry=model --set fsdp=data,model --tag sp_v2    # hillclimb
+
+Artifacts land in reports/dryrun/<mesh>/<arch>__<shape>[__tag].json and are
+the single source for EXPERIMENTS.md §Dry-run/§Roofline (benchmarks/roofline.py).
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import models
+from repro.configs import base as cbase
+from repro.configs import inputs as cinputs
+from repro.launch.hloanalysis import analyze_hlo, roofline_terms
+from repro.launch.mesh import make_production_mesh
+from repro.sharding import profiles, specs as sh
+from repro.train import TrainConfig, make_train_step
+from repro.train.train_step import init_state
+
+ARCHS = ["gemma3-4b", "llama3.2-1b", "qwen2.5-14b", "stablelm-3b",
+         "granite-moe-1b-a400m", "qwen3-moe-235b-a22b",
+         "jamba-1.5-large-398b", "chameleon-34b", "rwkv6-1.6b",
+         "whisper-large-v3"]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def default_tcfg(cfg) -> TrainConfig:
+    n = models.param_count(cfg)
+    # grad-accum defaults follow §Perf cell A: activation memory scales with
+    # the microbatch, and (B/accum) must stay divisible by the 32-way pod2
+    # batch sharding, so 8 is the deepest safe default.
+    dl = cfg.d_model * cfg.num_layers
+    if n >= 100e9:        # jamba-398b, qwen3-moe-235b: factored states
+        return TrainConfig(optimizer="adafactor", master_weights=False,
+                           grad_accum=8, accum_dtype="bfloat16")
+    if dl >= 200_000:                      # qwen2.5-14b, chameleon-34b
+        accum = 8
+    elif (dl >= 80_000                     # gemma3, stablelm
+          or cfg.family in ("ssm", "hybrid")   # scan-state memory (rwkv6)
+          or cfg.is_encoder_decoder):      # two stacks (whisper)
+        accum = 4
+    else:
+        accum = 1
+    return TrainConfig(optimizer="adamw", grad_accum=accum)
+
+
+def _shardings_for_tree(tree_shape, mesh, rules, kind: str):
+    """kind: 'param' (regex param rules) | 'cache' | 'batch'."""
+    if kind == "param":
+        specs = sh.param_specs(tree_shape, mesh, rules)
+    elif kind == "cache":
+        specs = sh.cache_specs(tree_shape, mesh, rules)
+    else:
+        def one(leaf):
+            logical = ("batch",) + (None,) * (len(leaf.shape) - 1)
+            return sh.logical_to_spec(leaf.shape, logical, mesh, rules)
+        specs = jax.tree.map(one, tree_shape)
+    return sh.tree_shardings(specs, mesh)
+
+
+def build_cell(arch: str, shape_name: str, mesh, overrides=None,
+               tcfg: TrainConfig | None = None, tcfg_kw: dict | None = None):
+    """Returns (jitted_fn, example_args_SDS) for the cell, under mesh rules."""
+    import dataclasses
+    cfg = cbase.get_config(arch)
+    shape = cbase.SHAPES[shape_name]
+    rules = profiles.rules_for(cfg, mesh, shape.step, overrides)
+    tcfg = tcfg or default_tcfg(cfg)
+    if tcfg_kw:
+        tcfg = dataclasses.replace(tcfg, **tcfg_kw)
+
+    if shape.step == "train":
+        state_shape = jax.eval_shape(
+            lambda k: init_state(cfg, tcfg, k),
+            jax.ShapeDtypeStruct((2,), jnp.uint32))
+        state_sh = _shardings_for_tree(state_shape, mesh, rules, "param")
+        batch = cinputs.train_inputs(cfg, shape)
+        batch_sh = _shardings_for_tree(batch, mesh, rules, "batch")
+        step_fn = make_train_step(cfg, tcfg)
+
+        def wrapped(state, b):
+            with sh.use_mesh(mesh, rules):
+                return step_fn(state, b)
+
+        jitted = jax.jit(wrapped, in_shardings=(state_sh, batch_sh),
+                         out_shardings=(state_sh, None), donate_argnums=0)
+        return jitted, (state_shape, batch), rules, tcfg
+
+    params_shape = jax.eval_shape(
+        lambda k: models.init_params(cfg, k),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+    params_sh = _shardings_for_tree(params_shape, mesh, rules, "param")
+
+    if shape.step == "prefill":
+        batch = cinputs.prefill_inputs(cfg, shape)
+        batch_sh = _shardings_for_tree(batch, mesh, rules, "batch")
+
+        def wrapped(p, b):
+            with sh.use_mesh(mesh, rules):
+                return models.prefill(cfg, p, b)
+
+        out_shape = jax.eval_shape(wrapped, params_shape, batch)
+        cache_sh = _shardings_for_tree(out_shape[1], mesh, rules, "cache")
+        jitted = jax.jit(wrapped, in_shardings=(params_sh, batch_sh),
+                         out_shardings=(None, cache_sh))
+        return jitted, (params_shape, batch), rules, tcfg
+
+    # decode: one new token against a seq_len KV cache
+    cache_shape, tokens = cinputs.decode_inputs(cfg, shape)
+    cache_sh = _shardings_for_tree(cache_shape, mesh, rules, "cache")
+    tok_sh = _shardings_for_tree({"t": tokens}, mesh, rules, "batch")["t"]
+
+    def wrapped(p, cache, toks):
+        with sh.use_mesh(mesh, rules):
+            return models.decode_step(cfg, p, cache, toks)
+
+    jitted = jax.jit(wrapped, in_shardings=(params_sh, cache_sh, tok_sh),
+                     out_shardings=(None, cache_sh), donate_argnums=1)
+    return jitted, (params_shape, cache_shape, tokens), rules, tcfg
+
+
+def model_flops(cfg, shape) -> float:
+    """Assignment formula: 6*N_active*D train, 2*N_active*D inference."""
+    n_active = models.active_param_count(cfg)
+    tokens = shape.global_batch * (shape.seq_len if shape.step != "decode"
+                                   else 1)
+    mult = 6.0 if shape.step == "train" else 2.0
+    return mult * n_active * tokens
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+             overrides=None, tag: str = "", force: bool = False,
+             tcfg_kw: dict | None = None) -> dict:
+    mesh_name = "pod2" if multi_pod else "pod1"
+    cell_dir = os.path.join(out_dir, mesh_name)
+    os.makedirs(cell_dir, exist_ok=True)
+    stem = f"{arch}__{shape_name}" + (f"__{tag}" if tag else "")
+    path = os.path.join(cell_dir, stem + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    cfg = cbase.get_config(arch)
+    shape = cbase.SHAPES[shape_name]
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "tag": tag, "overrides": {k: v for k, v in (overrides or {}).items()},
+           "tcfg_kw": dict(tcfg_kw or {}), "status": "running"}
+    ok, reason = cbase.shape_applicable(cfg, shape)
+    if not ok:
+        rec.update(status="skipped", reason=reason)
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        return rec
+
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        n_chips = mesh.devices.size
+        jitted, args, rules, tcfg = build_cell(arch, shape_name, mesh,
+                                               overrides, tcfg_kw=tcfg_kw)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        cost = analyze_hlo(hlo, default_group=n_chips)
+        terms = roofline_terms(cost, cost.traffic_bytes)
+        mf = model_flops(cfg, shape)
+        total_hlo_flops = cost.flops * n_chips
+        terms["model_flops"] = mf
+        terms["useful_ratio"] = mf / total_hlo_flops if total_hlo_flops else 0
+        # roofline fraction: useful model flops per second at the bound set
+        # by the slowest term vs the pure-compute ideal
+        t_bound = max(terms["compute_s"], terms["memory_s"],
+                      terms["collective_s"])
+        ideal = mf / (n_chips * 197e12)
+        terms["roofline_fraction"] = ideal / t_bound if t_bound else 0.0
+
+        rec.update(
+            status="ok",
+            n_chips=n_chips,
+            rules={k: rules.resolve(k) for k in rules.__dataclass_fields__},
+            optimizer=tcfg.optimizer if shape.step == "train" else None,
+            grad_accum=tcfg.grad_accum if shape.step == "train" else None,
+            lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+            memory={
+                "argument_bytes": ma.argument_size_in_bytes,
+                "output_bytes": ma.output_size_in_bytes,
+                "temp_bytes": ma.temp_size_in_bytes,
+                "alias_bytes": ma.alias_size_in_bytes,
+                "peak_bytes_per_device": (ma.argument_size_in_bytes
+                                          + ma.output_size_in_bytes
+                                          + ma.temp_size_in_bytes
+                                          - ma.alias_size_in_bytes),
+            },
+            xla_cost={"flops": ca.get("flops"),
+                      "bytes": ca.get("bytes accessed")},
+            roofline=terms,
+            hlo_bytes=len(hlo),
+        )
+    except Exception as e:  # noqa: BLE001 — record and continue the sweep
+        rec.update(status="failed", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-4000:])
+    rec["wall_s"] = round(time.time() - t0, 1)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS)
+    ap.add_argument("--shape", choices=SHAPES)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="sweep every (arch x shape) for the chosen mesh")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--set", dest="sets", action="append", default=[],
+                    help="MeshRules override, e.g. --set seqcarry=model")
+    ap.add_argument("--accum", type=int, default=None,
+                    help="gradient-accumulation microbatches (train cells)")
+    ap.add_argument("--optimizer", default=None,
+                    choices=["adamw", "adafactor", "sgd"])
+    ap.add_argument("--compress", default=None, choices=["none", "int8"],
+                    help="cross-pod gradient compression (needs --multi-pod)")
+    ap.add_argument("--accum-dtype", default=None,
+                    choices=["float32", "bfloat16"])
+    ap.add_argument("--out", default="reports/dryrun")
+    args = ap.parse_args()
+
+    overrides = profiles.parse_rule_overrides(args.sets) or None
+    tcfg_kw = {}
+    if args.accum is not None:
+        tcfg_kw["grad_accum"] = args.accum
+    if args.optimizer is not None:
+        tcfg_kw["optimizer"] = args.optimizer
+    if args.compress is not None:
+        tcfg_kw["dp_compression"] = args.compress
+    if args.accum_dtype is not None:
+        tcfg_kw["accum_dtype"] = args.accum_dtype
+    cells = ([(a, s) for a in ARCHS for s in SHAPES] if args.all
+             else [(args.arch, args.shape)])
+    results = []
+    for arch, shape in cells:
+        rec = run_cell(arch, shape, args.multi_pod, args.out,
+                       overrides, args.tag, args.force, tcfg_kw or None)
+        r = rec.get("roofline", {})
+        print(f"[{rec['status']:>7}] {arch:>24} {shape:<12} "
+              f"mesh={rec['mesh']} wall={rec.get('wall_s', 0):>7}s "
+              f"dom={r.get('dominant', '-'):<10} "
+              f"frac={r.get('roofline_fraction', 0):.3f}"
+              + (f"  ({rec.get('reason', rec.get('error', ''))[:60]})"
+                 if rec["status"] != "ok" else ""),
+              flush=True)
+        results.append(rec)
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_fail = sum(r["status"] == "failed" for r in results)
+    print(f"\n{n_ok} ok, {n_skip} skipped, {n_fail} failed "
+          f"of {len(results)} cells")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,441 @@
+"""Loop-aware analysis of post-SPMD HLO text — the dry-run "profiler".
+
+``compiled.cost_analysis()`` visits every computation exactly once: a
+94-layer ``lax.scan`` reports 1-layer FLOPs (verified empirically on this
+container).  The roofline therefore needs its own accounting.  This module
+parses ``compiled.as_text()`` into computations, discovers ``while`` loops
+and their trip counts (the scan bound is a visible ``constant(N)`` in the
+condition computation), and recursively accumulates:
+
+* ``flops``            — 2·M·N·K for every ``dot``; convolutions as
+                         2·out·kernel; loop-multiplied.
+* ``collective_bytes`` — per collective kind, operand bytes (assignment
+                         formula) and ring-adjusted wire bytes; grouped by
+                         mesh axis group size; loop-multiplied.
+* ``traffic_bytes``    — HBM-traffic approximation: Σ over top-level
+                         (post-fusion) instructions of unique operand bytes +
+                         output bytes; loop-multiplied.
+
+The parser is deliberately tolerant: HLO text it does not understand is
+skipped, never fatal (the roofline is an estimate, not a checksum).
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2,
+    "f32": 4, "f64": 8, "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+    "s4": 1, "u4": 1,
+}
+
+COLLECTIVE_KINDS = ("all-reduce", "all-gather", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes of an HLO shape string; tuples summed."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(shape_str: str):
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return None, []
+    dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+    return m.group(1), dims
+
+
+@dataclass
+class Instr:
+    name: str
+    shape: str               # result shape string (may be a tuple)
+    op: str                  # opcode, e.g. "dot", "while", "fusion"
+    operands: list
+    raw: str
+    attrs: str
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: list = field(default_factory=list)
+    by_name: dict = field(default_factory=dict)
+
+
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+
+
+def _balanced(s: str, start: int) -> int:
+    """Index of the char closing the paren opened at ``start``."""
+    depth = 0
+    for i in range(start, len(s)):
+        if s[i] == "(":
+            depth += 1
+        elif s[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return i
+    return len(s) - 1
+
+
+def _parse_instr_line(stripped: str):
+    """'%name = SHAPE op(args), attrs' -> (name, shape, op, args, attrs).
+
+    Hand-rolled because tuple shapes contain nested parens, layout braces
+    and '/*index=k*/' comments that defeat any single regex."""
+    s = stripped
+    if s.startswith("ROOT "):
+        s = s[5:]
+    eq = s.find(" = ")
+    if eq < 0:
+        return None
+    name = s[:eq].strip().lstrip("%")
+    rest = s[eq + 3:].lstrip()
+    if rest.startswith("("):                     # tuple-shaped result
+        close = _balanced(rest, 0)
+        shape, rest2 = rest[:close + 1], rest[close + 1:].lstrip()
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        shape, rest2 = rest[:sp], rest[sp + 1:].lstrip()
+    par = rest2.find("(")
+    if par < 0:
+        return None
+    op = rest2[:par].strip()
+    if not re.fullmatch(r"[\w\-]+", op):
+        return None
+    close = _balanced(rest2, par)
+    args = rest2[par + 1:close]
+    attrs = rest2[close + 1:]
+    return name, shape, op, args, attrs
+
+
+def parse_hlo(text: str) -> dict:
+    """Parse HLO text into {computation_name: Computation}."""
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    entry = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        if not stripped or stripped.startswith("//"):
+            continue
+        if stripped == "}":
+            cur = None
+            continue
+        if stripped.endswith("{") and "=" not in stripped.split("(")[0]:
+            m = _COMP_RE.match(stripped)
+            if m:
+                cur = Computation(m.group(1))
+                comps[cur.name] = cur
+                if stripped.startswith("ENTRY"):
+                    entry = cur.name
+            continue
+        if cur is None:
+            continue
+        parsed = _parse_instr_line(stripped)
+        if parsed is None:
+            continue
+        name, shape, op, args, attrs = parsed
+        ops = []
+        depth = 0
+        buf = ""
+        for ch in args:
+            if ch == "(" or ch == "{":
+                depth += 1
+            elif ch == ")" or ch == "}":
+                depth -= 1
+            if ch == "," and depth == 0:
+                ops.append(buf.strip())
+                buf = ""
+            else:
+                buf += ch
+        if buf.strip():
+            ops.append(buf.strip())
+        ops = [o.lstrip("%") for o in ops]
+        instr = Instr(name=name, shape=shape.strip(), op=op,
+                      operands=ops, raw=stripped, attrs=attrs)
+        cur.instrs.append(instr)
+        cur.by_name[name] = instr
+    comps["__entry__"] = comps.get(entry) or next(iter(comps.values()))
+    return comps
+
+
+# --------------------------------------------------------------------------
+# Trip counts
+# --------------------------------------------------------------------------
+def _trip_count(comps: dict, cond_name: str) -> int:
+    """Largest integer constant in the while-condition computation — exact
+    for lax.scan/fori_loop counted loops; 1 if nothing found."""
+    comp = comps.get(cond_name)
+    if comp is None:
+        return 1
+    best = 1
+    for ins in comp.instrs:
+        if ins.op == "constant":
+            m = re.search(r"constant\((-?\d+)\)", ins.raw)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def _called(attrs: str, key: str):
+    m = re.search(key + r"=%?([\w.\-]+)", attrs)
+    return m.group(1) if m else None
+
+
+# --------------------------------------------------------------------------
+# FLOPs
+# --------------------------------------------------------------------------
+def _dot_flops(ins: Instr, comp: Computation, comps: dict) -> float:
+    """2 * prod(output) * prod(contracting dims of lhs)."""
+    _, out_dims = _shape_dims(ins.shape)
+    lhs_shape = _operand_shape(ins.operands[0], comp, comps)
+    if lhs_shape is None:
+        return 0.0
+    _, lhs_dims = _shape_dims(lhs_shape)
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.raw)
+    contract = 1
+    if m and m.group(1):
+        for d in m.group(1).split(","):
+            d = int(d)
+            if d < len(lhs_dims):
+                contract *= lhs_dims[d]
+    return 2.0 * math.prod(out_dims or [1]) * contract
+
+
+def _conv_flops(ins: Instr, comp: Computation, comps: dict) -> float:
+    _, out_dims = _shape_dims(ins.shape)
+    rhs_shape = _operand_shape(ins.operands[1], comp, comps) \
+        if len(ins.operands) > 1 else None
+    if rhs_shape is None:
+        return 0.0
+    _, k_dims = _shape_dims(rhs_shape)
+    # out spatial+batch+feature x kernel (input_feature * spatial)
+    return 2.0 * math.prod(out_dims or [1]) * math.prod(k_dims[:-1] or [1])
+
+
+_OPERAND_SHAPE_RE = re.compile(r"^((?:\([^)]*\)|[\w\[\],{}/]+?))\s+%?([\w.\-]+)$")
+
+
+def _operand_shape(operand: str, comp: Computation, comps: dict):
+    """Operand text is either 'shape %name' or just a name to look up."""
+    m = _OPERAND_SHAPE_RE.match(operand.strip())
+    if m and "[" in m.group(1):
+        return m.group(1)
+    name = operand.strip().lstrip("%")
+    ins = comp.by_name.get(name)
+    if ins is not None:
+        return ins.shape
+    return None
+
+
+# --------------------------------------------------------------------------
+# Recursive accumulation
+# --------------------------------------------------------------------------
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    traffic_bytes: float = 0.0
+    collective_operand_bytes: dict = field(
+        default_factory=lambda: defaultdict(float))
+    collective_wire_bytes: dict = field(
+        default_factory=lambda: defaultdict(float))
+    collective_count: dict = field(default_factory=lambda: defaultdict(int))
+
+    def scaled(self, k: float) -> "HloCost":
+        out = HloCost(self.flops * k, self.traffic_bytes * k)
+        for d_src, d_dst in (
+                (self.collective_operand_bytes, out.collective_operand_bytes),
+                (self.collective_wire_bytes, out.collective_wire_bytes)):
+            for key, v in d_src.items():
+                d_dst[key] = v * k
+        for key, v in self.collective_count.items():
+            out.collective_count[key] = int(v * k)
+        return out
+
+    def add(self, other: "HloCost") -> None:
+        self.flops += other.flops
+        self.traffic_bytes += other.traffic_bytes
+        for key, v in other.collective_operand_bytes.items():
+            self.collective_operand_bytes[key] += v
+        for key, v in other.collective_wire_bytes.items():
+            self.collective_wire_bytes[key] += v
+        for key, v in other.collective_count.items():
+            self.collective_count[key] += v
+
+    @property
+    def total_collective_operand_bytes(self) -> float:
+        return sum(self.collective_operand_bytes.values())
+
+    @property
+    def total_collective_wire_bytes(self) -> float:
+        return sum(self.collective_wire_bytes.values())
+
+
+def _group_size(ins: Instr, default_g: int) -> int:
+    """Participants per replica group, e.g. replica_groups=[2,4]<=[8] -> 4,
+    {{0,1},{2,3}} -> 2, {} -> all participants (default_g)."""
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=\[", ins.raw)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", ins.raw)
+    if m:
+        return len(m.group(1).split(","))
+    if "replica_groups={}" in ins.raw:
+        return default_g
+    return default_g if ins.op.startswith("all-") else 1
+
+
+def _collective(ins: Instr, comp: Computation, comps: dict, cost: HloCost,
+                default_g: int):
+    kind = next((k for k in COLLECTIVE_KINDS if ins.op.startswith(k)), None)
+    if kind is None:
+        return
+    g = _group_size(ins, default_g)
+    op_bytes = 0
+    for o in ins.operands:
+        s = _operand_shape(o, comp, comps)
+        if s:
+            op_bytes += _shape_bytes(s)
+    out_bytes = _shape_bytes(ins.shape)
+    # ring-algorithm wire bytes per device
+    if kind == "all-reduce":
+        wire = 2.0 * op_bytes * (g - 1) / max(1, g)
+    elif kind == "all-gather":
+        wire = out_bytes * (g - 1) / max(1, g)
+    elif kind == "reduce-scatter":
+        wire = op_bytes * (g - 1) / max(1, g)
+    elif kind == "all-to-all":
+        wire = op_bytes * (g - 1) / max(1, g)
+    else:  # collective-permute
+        wire = op_bytes
+    key = f"{kind}(g={g})"
+    cost.collective_operand_bytes[key] += op_bytes
+    cost.collective_wire_bytes[key] += wire
+    cost.collective_count[key] += 1
+
+
+_SKIP_TRAFFIC = {"parameter", "constant", "tuple", "get-tuple-element",
+                 "bitcast", "while", "conditional", "call", "custom-call",
+                 "after-all", "partition-id", "replica-id"}
+
+
+def _comp_cost(comps: dict, comp: Computation, memo: dict,
+               default_g: int = 1) -> HloCost:
+    if comp.name in memo:
+        return memo[comp.name]
+    memo[comp.name] = HloCost()      # break cycles defensively
+    cost = HloCost()
+    for ins in comp.instrs:
+        if ins.op == "while":
+            body = _called(ins.attrs, "body")
+            cond = _called(ins.attrs, "condition")
+            trips = _trip_count(comps, cond)
+            if body in comps:
+                cost.add(_comp_cost(comps, comps[body], memo, default_g).scaled(trips))
+            continue
+        if ins.op in ("call", "async-start"):
+            tgt = _called(ins.attrs, "to") or _called(ins.attrs, "calls")
+            if tgt in comps:
+                cost.add(_comp_cost(comps, comps[tgt], memo, default_g))
+            continue
+        if ins.op == "conditional":
+            for m in re.finditer(r"(?:true_computation|false_computation|"
+                                 r"branch_computations=\{)([\w.,\-%\s]+)",
+                                 ins.attrs):
+                for t in re.split(r"[,\s}]+", m.group(1)):
+                    t = t.strip().lstrip("%")
+                    if t in comps:
+                        cost.add(_comp_cost(comps, comps[t], memo, default_g))
+            continue
+        if ins.op == "fusion":
+            tgt = _called(ins.attrs, "calls")
+            if tgt in comps:
+                inner = _comp_cost(comps, comps[tgt], memo, default_g)
+                cost.flops += inner.flops      # dots inside fusions
+            # fusion traffic = its operands + outputs (internals stay in reg)
+            for o in ins.operands:
+                s = _operand_shape(o, comp, comps)
+                if s:
+                    cost.traffic_bytes += _shape_bytes(s)
+            cost.traffic_bytes += _shape_bytes(ins.shape)
+            continue
+        if ins.op == "dot":
+            cost.flops += _dot_flops(ins, comp, comps)
+        elif ins.op.startswith("convolution"):
+            cost.flops += _conv_flops(ins, comp, comps)
+        _collective(ins, comp, comps, cost, default_g)
+        if ins.op not in _SKIP_TRAFFIC:
+            op_bytes = [(_shape_bytes(s) if (s := _operand_shape(
+                o, comp, comps)) else 0) for o in ins.operands]
+            if ins.op in ("scatter", "dynamic-update-slice"):
+                # in-place update under buffer aliasing: the big target is
+                # neither copied nor re-written; only the update traffic
+                # counts
+                cost.traffic_bytes += sum(op_bytes) - max(op_bytes,
+                                                          default=0)
+            else:
+                cost.traffic_bytes += sum(op_bytes)
+                cost.traffic_bytes += _shape_bytes(ins.shape)
+    memo[comp.name] = cost
+    return cost
+
+
+def analyze_hlo(text: str, default_group: int = 1) -> HloCost:
+    """Loop-aware cost of the ENTRY computation of post-SPMD HLO text.
+    ``default_group``: participants assumed when replica_groups={} (= all
+    devices); pass the mesh size."""
+    comps = parse_hlo(text)
+    entry = comps["__entry__"]
+    memo: dict = {}
+    return _comp_cost(comps, entry, memo, default_group)
+
+
+# --------------------------------------------------------------------------
+# Roofline terms (TPU v5e constants per the assignment)
+# --------------------------------------------------------------------------
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_BW = 50e9                     # bytes/s per link
+
+
+def roofline_terms(cost: HloCost, mem_bytes: float) -> dict:
+    """Per-chip seconds for each roofline term.  ``cost`` is already the
+    per-device (post-SPMD) program; ``mem_bytes`` is the per-device HBM
+    traffic (falls back to cost.traffic_bytes)."""
+    compute_s = cost.flops / PEAK_FLOPS_BF16
+    memory_s = (mem_bytes or cost.traffic_bytes) / HBM_BW
+    collective_s = cost.total_collective_wire_bytes / ICI_BW
+    dominant = max(
+        (("compute", compute_s), ("memory", memory_s),
+         ("collective", collective_s)), key=lambda kv: kv[1])[0]
+    return {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+        "flops": cost.flops,
+        "traffic_bytes": mem_bytes or cost.traffic_bytes,
+        "collective_operand_bytes": dict(cost.collective_operand_bytes),
+        "collective_wire_bytes": dict(cost.collective_wire_bytes),
+        "collective_count": dict(cost.collective_count),
+    }

@@ -1,0 +1,73 @@
+"""Model zoo: one API over decoder-only and encoder-decoder stacks.
+
+    init_params(cfg, key)            -> params pytree
+    loss_fn(cfg, params, batch)      -> (loss, metrics)     [train_step]
+    prefill(cfg, params, batch)      -> (logits, cache)     [prefill_step]
+    decode_step(cfg, params, cache, tokens) -> (logits, cache')  [serve_step]
+    init_cache(cfg, batch, max_seq)  -> empty decode cache
+    param_count(cfg)                 -> exact N (eval_shape, no allocation)
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+from . import encdec, transformer
+
+
+def init_params(cfg: ModelConfig, key):
+    if cfg.is_encoder_decoder:
+        return encdec.init_params(cfg, key)
+    return transformer.init_params(cfg, key)
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    if cfg.is_encoder_decoder:
+        return encdec.loss_fn(cfg, params, batch)
+    return transformer.loss_fn(cfg, params, batch)
+
+
+def prefill(cfg: ModelConfig, params, batch):
+    if cfg.is_encoder_decoder:
+        return encdec.prefill(cfg, params, batch["tokens"], batch["frames"])
+    return transformer.prefill(cfg, params, batch["tokens"])
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens):
+    if cfg.is_encoder_decoder:
+        return encdec.decode_step(cfg, params, cache, tokens)
+    return transformer.decode_step(cfg, params, cache, tokens)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    if cfg.is_encoder_decoder:
+        return encdec.init_cache(cfg, batch, max_seq)
+    return transformer.init_cache(cfg, batch, max_seq)
+
+
+def param_count(cfg: ModelConfig) -> int:
+    shapes = jax.eval_shape(lambda k: init_params(cfg, k),
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    return sum(int(math.prod(s.shape)) for s in jax.tree.leaves(shapes))
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Per-token active params: total minus the non-selected experts."""
+    total = param_count(cfg)
+    if cfg.moe is None:
+        return total
+    m = cfg.moe
+    n_moe_layers = sum(1 for i in range(cfg.num_layers)
+                       if cfg.pattern[i % cfg.layers_per_period].ffn == "moe")
+    per_expert = 3 * cfg.d_model * m.d_ff
+    inactive = n_moe_layers * (m.num_experts - m.top_k) * per_expert
+    return total - inactive
+
+
+__all__ = ["init_params", "loss_fn", "prefill", "decode_step", "init_cache",
+           "param_count", "active_param_count", "transformer", "encdec"]

@@ -1,0 +1,446 @@
+"""GQA attention: training/prefill (blockwise online-softmax) and decode.
+
+Design notes
+------------
+* **Blockwise path** (seq > _BLOCKWISE_MIN): ``lax.scan`` over KV blocks with
+  an online-softmax carry — peak memory is O(S·block) instead of O(S²), which
+  is what lets prefill_32k lower without a (32k)² score tensor.  This is also
+  the pure-jnp oracle for the Pallas flash-attention kernel
+  (:mod:`repro.kernels.flash_attention`).
+* **Window as data**: the sliding-window size arrives as a (possibly traced)
+  scalar so gemma3's 5-local:1-global schedule rides through a homogeneous
+  scan-over-layers (window/theta are per-layer scan xs), keeping HLO size
+  depth-independent.
+* **Decode**: one new token against a sharded KV cache.  The softmax
+  reductions over the KV-sequence dim are partitionable, so GSPMD inserts the
+  pmax/psum combine (flash-decode) automatically when the cache is sharded
+  over ``kvseq``.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AttentionConfig
+from repro.sharding import specs as sh
+
+from .layers import apply_rope, fan_in_init, rmsnorm, zeros
+
+_BLOCKWISE_MIN = 8_192     # use the O(S·block) path above this many KV slots
+_KV_BLOCK = 1_024
+_NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------
+# Params
+# --------------------------------------------------------------------------
+def init_attention(key, acfg: AttentionConfig, d_model: int, dtype):
+    ks = jax.random.split(key, 6)
+    H, KV, hd = acfg.num_heads, acfg.num_kv_heads, acfg.head_dim
+    p = {
+        "wq": fan_in_init(ks[0], (d_model, H, hd), dtype, fan_axis=0),
+        "wk": fan_in_init(ks[1], (d_model, KV, hd), dtype, fan_axis=0),
+        "wv": fan_in_init(ks[2], (d_model, KV, hd), dtype, fan_axis=0),
+        "wo": fan_in_init(ks[3], (H, hd, d_model), dtype, fan_axis=1),
+    }
+    if acfg.qkv_bias:
+        p["bq"] = zeros((H, hd), dtype)
+        p["bk"] = zeros((KV, hd), dtype)
+        p["bv"] = zeros((KV, hd), dtype)
+    if acfg.out_bias:
+        p["bo"] = zeros((d_model,), dtype)
+    if acfg.qk_norm:
+        p["q_norm"] = zeros((hd,), dtype)
+        p["k_norm"] = zeros((hd,), dtype)
+    return p
+
+
+def qkv_project(acfg: AttentionConfig, params, x, positions, rope_theta,
+                norm_eps: float = 1e-6):
+    """x: (B, S, D) -> q (B, S, H, hd), k/v (B, S, KV, hd), rope applied."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if acfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    if acfg.qk_norm:
+        q = rmsnorm(q, params["q_norm"], norm_eps)
+        k = rmsnorm(k, params["k_norm"], norm_eps)
+    if acfg.use_rope:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+    q = sh.shard(q, "batch", "seq", "heads", None)
+    # kvseq: context-parallel K/V (sequence-sharded) for archs whose head
+    # count does not divide the model axis; None (default) leaves K/V
+    # replicated over model and heads TP-sharded.
+    k = sh.shard(k, "batch", "kvseq", "kvheads", None)
+    v = sh.shard(v, "batch", "kvseq", "kvheads", None)
+    return q, k, v
+
+
+def _softcap(scores, cap: float):
+    if cap and cap > 0.0:
+        return jnp.tanh(scores / cap) * cap
+    return scores
+
+
+def _expand_kv(k, n_rep: int, axis: int = 2):
+    """(B, S, KV, hd) -> (B, S, KV*n_rep, hd) by repetition (GQA)."""
+    if n_rep == 1:
+        return k
+    return jnp.repeat(k, n_rep, axis=axis)
+
+
+# --------------------------------------------------------------------------
+# Dense (materialized-scores) path — short sequences / tests oracle
+# --------------------------------------------------------------------------
+def attend_dense(acfg: AttentionConfig, q, k, v, q_pos, kv_pos, window,
+                 kv_len=None):
+    """q: (B, Sq, H, hd); k,v: (B, Sk, KV, hd); positions int32.
+
+    window: scalar (0 = full) — may be traced.
+    kv_len: optional scalar — valid KV prefix length (decode with a
+            partially-filled cache).
+    """
+    H, KV = acfg.num_heads, acfg.num_kv_heads
+    n_rep = H // KV
+    k = _expand_kv(k, n_rep)
+    v = _expand_kv(v, n_rep)
+    scale = 1.0 / math.sqrt(acfg.head_dim)
+    scores = jnp.einsum("bqhk,bshk->bhqs", q, k).astype(jnp.float32) * scale
+    scores = _softcap(scores, acfg.logit_softcap)
+
+    mask = jnp.ones(scores.shape[-2:], bool)
+    dq = q_pos[..., :, None]                     # (..., Sq, 1)
+    dk = kv_pos[..., None, :]                    # (..., 1, Sk)
+    if acfg.causal:
+        mask = mask & (dq >= dk)
+    w = jnp.asarray(window)
+    mask = mask & jnp.where(w > 0, dq - dk < w, True)
+    if kv_len is not None:
+        kl = jnp.asarray(kv_len)
+        if kl.ndim == 1:                         # per-sequence lengths (B,)
+            kl = kl[:, None, None]
+        mask = mask & (dk < kl)
+    if mask.ndim == scores.ndim - 1:             # batched positions
+        mask = mask[:, None]
+    scores = jnp.where(mask, scores, _NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqs,bshk->bqhk", p.astype(v.dtype), v)
+    return out
+
+
+# --------------------------------------------------------------------------
+# Blockwise online-softmax path (memory O(S·block)); oracle for the Pallas
+# flash kernel.  Scans over KV blocks; carry = (acc, row_max, row_sum).
+# --------------------------------------------------------------------------
+def attend_blockwise(acfg: AttentionConfig, q, k, v, q_pos, kv_pos, window,
+                     kv_block: int = _KV_BLOCK):
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    KV = acfg.num_kv_heads
+    n_rep = H // KV
+    if Sk % kv_block != 0:
+        pad = kv_block - Sk % kv_block
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, pad),), constant_values=2**30)
+        Sk += pad
+    nk = Sk // kv_block
+    scale = 1.0 / math.sqrt(hd)
+
+    kb = k.reshape(B, nk, kv_block, KV, hd).swapaxes(0, 1)   # (nk, B, c, KV, hd)
+    vb = v.reshape(B, nk, kv_block, KV, hd).swapaxes(0, 1)
+    pb = kv_pos.reshape(nk, kv_block)
+
+    def body(carry, xs):
+        acc, m, l = carry                        # (B,Sq,H,hd), (B,H,Sq), (B,H,Sq)
+        kc, vc, pc = xs
+        kc = _expand_kv(kc, n_rep)
+        vc = _expand_kv(vc, n_rep)
+        s = jnp.einsum("bqhk,bchk->bhqc", q, kc).astype(jnp.float32) * scale
+        s = _softcap(s, acfg.logit_softcap)
+        dq = q_pos[:, None]                      # (Sq, 1)
+        dk = pc[None, :]                         # (1, c)
+        mask = jnp.ones((Sq, kv_block), bool)
+        if acfg.causal:
+            mask = mask & (dq >= dk)
+        w = jnp.asarray(window)
+        mask = mask & jnp.where(w > 0, dq - dk < w, True)
+        s = jnp.where(mask, s, _NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # guard fully-masked rows: keep exp() finite
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bhqc,bchk->bqhk", p.astype(vc.dtype), vc)
+        acc_new = acc * corr.transpose(0, 2, 1)[..., None].astype(acc.dtype) \
+            + pv.astype(acc.dtype)
+        return (acc_new, m_new, l_new), None
+
+    acc0 = jnp.zeros((B, Sq, H, hd), jnp.float32)
+    m0 = jnp.full((B, H, Sq), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0), (kb, vb, pb))
+    l = jnp.maximum(l, 1e-30)
+    out = acc / l.transpose(0, 2, 1)[..., None]
+    return out.astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# Q-chunked path: scan over query chunks, full softmax over KV per chunk.
+# Peak memory O(chunk * S) instead of O(S^2); the chunk body is remat'd so
+# the backward never holds more than one chunk's scores.  The reductions
+# over the KV dim are partitionable, so a ``kvseq``-sharded K/V lowers to
+# context-parallel attention (partial max/sum + psum) under GSPMD.
+# --------------------------------------------------------------------------
+def attend_qchunk(acfg: AttentionConfig, q, k, v, q_pos, kv_pos, window,
+                  q_chunk: int = 512):
+    B, Sq, H, hd = q.shape
+    nq = Sq // q_chunk
+    qb = q.reshape(B, nq, q_chunk, H, hd).swapaxes(0, 1)   # (nq, B, c, H, hd)
+    pb = q_pos.reshape(nq, q_chunk)
+
+    def body(_, xs):
+        qc, pc = xs
+        out = attend_dense(acfg, qc, k, v, pc, kv_pos, window)
+        return None, out
+
+    body = jax.checkpoint(body, prevent_cse=False)
+    _, outs = jax.lax.scan(body, None, (qb, pb))           # (nq, B, c, H, hd)
+    return outs.swapaxes(0, 1).reshape(B, Sq, H, hd)
+
+
+_Q_CHUNK = 512
+
+
+# --------------------------------------------------------------------------
+# Public entry points
+# --------------------------------------------------------------------------
+def self_attention(acfg: AttentionConfig, params, x, positions, window,
+                   rope_theta, norm_eps: float = 1e-6,
+                   static_window: int | None = None):
+    """Training/prefill self-attention.  x: (B, S, D); positions: (S,).
+
+    ``window`` may be a traced per-layer scalar (gemma3's schedule rides
+    the layer scan as data).  ``static_window`` is its compile-time value
+    when the arch has a homogeneous schedule — that is what lets the
+    Pallas flash kernel (which specializes on the mask) take over as the
+    production path (``REPRO_USE_PALLAS=1`` or a TPU backend).
+    """
+    B, S, D = x.shape
+    q, k, v = qkv_project(acfg, params, x, positions, rope_theta, norm_eps)
+    from repro.kernels import ops as kops
+    if (static_window is not None and kops.use_pallas()
+            and not sh.active()):
+        out = kops.attention(q, k, v, causal=acfg.causal,
+                             window=static_window,
+                             softcap=acfg.logit_softcap)
+    elif S > _Q_CHUNK and S % _Q_CHUNK == 0:
+        out = attend_qchunk(acfg, q, k, v, positions, positions, window)
+    else:
+        out = attend_dense(acfg, q, k, v, positions, positions, window)
+    y = jnp.einsum("bqhk,hkd->bqd", out.astype(x.dtype), params["wo"])
+    if acfg.out_bias:
+        y = y + params["bo"]
+    return sh.shard(y, "batch", "seq", "dmodel"), (k, v)
+
+
+def cross_attention(acfg: AttentionConfig, params, x, enc_kv, norm_eps=1e-6):
+    """Decoder cross-attention.  enc_kv = (k, v): (B, Senc, KV, hd), already
+    projected from the encoder output (computed once per sequence)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    if acfg.qkv_bias:
+        q = q + params["bq"]
+    if acfg.qk_norm:
+        q = rmsnorm(q, params["q_norm"], norm_eps)
+    k, v = enc_kv
+    Sq, Sk = q.shape[1], k.shape[1]
+    q_pos = jnp.zeros((Sq,), jnp.int32)
+    kv_pos = jnp.zeros((Sk,), jnp.int32)
+    noncausal = AttentionConfig(
+        num_heads=acfg.num_heads, num_kv_heads=acfg.num_kv_heads,
+        head_dim=acfg.head_dim, causal=False, use_rope=False,
+        logit_softcap=acfg.logit_softcap)
+    out = attend_dense(noncausal, q, k, v, q_pos, kv_pos, window=0)
+    y = jnp.einsum("bqhk,hkd->bqd", out.astype(x.dtype), params["wo"])
+    if acfg.out_bias:
+        y = y + params["bo"]
+    return y
+
+
+def project_enc_kv(acfg: AttentionConfig, params, enc_out):
+    """Precompute cross-attention K/V from encoder output."""
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, params["wv"])
+    if acfg.qkv_bias:
+        k, v = k + params["bk"], v + params["bv"]
+    if acfg.qk_norm:
+        k = rmsnorm(k, params["k_norm"])
+    return k, v
+
+
+def decode_attention(acfg: AttentionConfig, params, x, cache_k, cache_v,
+                     cache_len, window, rope_theta, norm_eps: float = 1e-6):
+    """Single-step decode.  x: (B, 1, D); cache_k/v: (B, Smax, KV, hd) with
+    ``cache_len`` valid slots (the new token's k/v must already be inserted
+    by the caller).  Positions: new token at ``cache_len - 1``.
+
+    The softmax over the cache sequence dim is expressed with partitionable
+    reductions, so a ``kvseq``-sharded cache lowers to flash-decode (local
+    max/sum + pmax/psum) under GSPMD.
+    """
+    B = x.shape[0]
+    pos = (jnp.asarray(cache_len) - 1).astype(jnp.int32)
+    positions = pos[:, None] if pos.ndim == 1 else jnp.broadcast_to(pos, (B, 1))
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    if acfg.qkv_bias:
+        q = q + params["bq"]
+    if acfg.qk_norm:
+        q = rmsnorm(q, params["q_norm"], norm_eps)
+    if acfg.use_rope:
+        q = apply_rope(q, positions, rope_theta)
+
+    Smax = cache_k.shape[1]
+    kv_pos = jnp.arange(Smax, dtype=jnp.int32)[None, :]       # (1, Smax)
+    kv_pos = jnp.broadcast_to(kv_pos, (B, Smax))
+    out = attend_dense(acfg, q, cache_k, cache_v, positions, kv_pos, window,
+                       kv_len=cache_len)
+    y = jnp.einsum("bqhk,hkd->bqd", out.astype(x.dtype), params["wo"])
+    if acfg.out_bias:
+        y = y + params["bo"]
+    return y
+
+
+def decode_attention_cp(acfg: AttentionConfig, params, x, cache_k, cache_v,
+                        k_new, v_new, cache_len, window, rope_theta,
+                        norm_eps: float = 1e-6):
+    """Context-parallel flash-decode via explicit shard_map: the KV cache
+    stays sequence-sharded on the ``kvseq`` mesh axes; each shard computes a
+    local partial softmax (max/sum) and a tiny (B, 1, H, hd) psum combines.
+
+    GSPMD's auto-partitioning of the same math chooses to all-gather the
+    (B, H, 1, S) attention weights instead (~0.5 GB/layer at 32k·128 —
+    measured in §Perf cell C); writing the combine by hand removes those
+    collectives entirely.
+    """
+    from repro.sharding import specs as shs
+    from jax.sharding import PartitionSpec as P
+
+    mesh = shs.current_mesh()
+    rules = shs.current_rules()
+    kv_axes = rules.resolve("kvseq")
+    kv_axes = (kv_axes,) if isinstance(kv_axes, str) else kv_axes
+    B, Smax = cache_k.shape[0], cache_k.shape[1]
+    if (mesh is None or not kv_axes
+            or Smax % math.prod(mesh.shape[a] for a in kv_axes) != 0):
+        idx = (jnp.asarray(cache_len) - 1).astype(jnp.int32)
+        onehot = (jnp.arange(Smax, dtype=jnp.int32)[None, :]
+                  == idx[:, None])[..., None, None]
+        ck = jnp.where(onehot, k_new[:, :1].astype(cache_k.dtype), cache_k)
+        cv = jnp.where(onehot, v_new[:, :1].astype(cache_v.dtype), cache_v)
+        y = decode_attention(acfg, params, x, ck, cv, cache_len, window,
+                             rope_theta, norm_eps)
+        return y, ck, cv
+
+    pos = (jnp.asarray(cache_len) - 1).astype(jnp.int32)
+    positions = pos[:, None] if pos.ndim == 1 else jnp.broadcast_to(pos, (B, 1))
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    if acfg.qkv_bias:
+        q = q + params["bq"]
+    if acfg.qk_norm:
+        q = rmsnorm(q, params["q_norm"], norm_eps)
+    if acfg.use_rope:
+        q = apply_rope(q, positions, rope_theta)
+
+    H, KV, hd = acfg.num_heads, acfg.num_kv_heads, acfg.head_dim
+    n_rep = H // KV
+    scale = 1.0 / math.sqrt(hd)
+    batch_axes = rules.resolve("batch")
+    batch_axes = ((batch_axes,) if isinstance(batch_axes, str)
+                  else (batch_axes or ()))
+    batch_axes = tuple(a for a in batch_axes
+                       if a in mesh.axis_names and a not in kv_axes)
+    bspec = batch_axes if (batch_axes and B % math.prod(
+        mesh.shape[a] for a in batch_axes) == 0) else None
+    w = jnp.asarray(window)
+    kl = jnp.asarray(cache_len)
+    if kl.ndim == 0:
+        kl = jnp.broadcast_to(kl, (B,))
+
+    def body(q, k, v, kn, vn, kl, qpos):
+        # k, v: (B, S_loc, KV, hd) local shard; kv positions are offset by
+        # the shard index.  The new token's k/v is written as a LOCAL
+        # scatter (only the owning shard touches memory, in place under
+        # donation) before attending.
+        ax = kv_axes[0] if len(kv_axes) == 1 else kv_axes
+        shard_id = jax.lax.axis_index(ax)
+        S_loc = k.shape[1]
+        kv_pos = shard_id * S_loc + jnp.arange(S_loc, dtype=jnp.int32)
+        local_idx = kl - 1 - shard_id * S_loc          # (B,)
+        rows = jnp.arange(k.shape[0], dtype=jnp.int32)
+        oob = jnp.where((local_idx >= 0) & (local_idx < S_loc),
+                        local_idx, S_loc)              # drop if not ours
+        k = k.at[rows, oob].set(kn[:, 0].astype(k.dtype), mode="drop")
+        v = v.at[rows, oob].set(vn[:, 0].astype(v.dtype), mode="drop")
+        # grouped-query einsum: never materialize the n_rep-expanded K/V
+        # (the expand copies + f32 upcasts were the top traffic terms in
+        # §Perf C iteration 3); f32 accumulate via preferred_element_type.
+        Bl = q.shape[0]
+        qg = q.reshape(Bl, 1, KV, n_rep, hd)
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                       preferred_element_type=jnp.float32) * scale
+        s = _softcap(s, acfg.logit_softcap)
+        dq = qpos[:, :, None]                        # (B, 1, 1)
+        dk = kv_pos[None, None, :]                   # (1, 1, S_loc)
+        mask = (dq >= dk) & (dk < kl[:, None, None])
+        mask = mask & jnp.where(w > 0, dq - dk < w, True)
+        s = jnp.where(mask[:, None, None], s, _NEG_INF)  # (B,KV,g,1,S)
+        m_loc = jnp.max(s, axis=-1)                  # (B, KV, g, 1)
+        m_glob = jax.lax.pmax(m_loc, kv_axes)
+        p = jnp.exp(s - m_glob[..., None])
+        den = jax.lax.psum(jnp.sum(p, axis=-1), kv_axes)  # (B, KV, g, 1)
+        num = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v.dtype), v,
+                         preferred_element_type=jnp.float32)
+        num = jax.lax.psum(num, kv_axes)             # (B, 1, KV, g, hd)
+        out = num / jnp.maximum(den, 1e-30)[:, None, :, :, 0][..., None]
+        return out.reshape(Bl, 1, H, hd).astype(q.dtype), k, v
+
+    kvspec = kv_axes[0] if len(kv_axes) == 1 else kv_axes
+    out, ck, cv = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(bspec, None, None, None),
+                  P(bspec, kvspec, None, None),
+                  P(bspec, kvspec, None, None),
+                  P(bspec, None, None, None),
+                  P(bspec, None, None, None),
+                  P(bspec), P(bspec, None)),
+        out_specs=(P(bspec, None, None, None),
+                   P(bspec, kvspec, None, None),
+                   P(bspec, kvspec, None, None)),
+        check_vma=False)(q, cache_k, cache_v, k_new, v_new, kl, positions)
+    y = jnp.einsum("bqhk,hkd->bqd", out.astype(x.dtype), params["wo"])
+    if acfg.out_bias:
+        y = y + params["bo"]
+    return y, ck, cv
+
+
+def decode_project_kv(acfg: AttentionConfig, params, x, cache_len, rope_theta,
+                      norm_eps: float = 1e-6):
+    """Project the new token's k/v (rope at position cache_len - 1)."""
+    B = x.shape[0]
+    pos = (jnp.asarray(cache_len) - 1).astype(jnp.int32)
+    positions = pos[:, None] if pos.ndim == 1 else jnp.broadcast_to(pos, (B, 1))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if acfg.qkv_bias:
+        k, v = k + params["bk"], v + params["bv"]
+    if acfg.qk_norm:
+        k = rmsnorm(k, params["k_norm"], norm_eps)
+    if acfg.use_rope:
+        k = apply_rope(k, positions, rope_theta)
+    return k, v

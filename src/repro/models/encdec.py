@@ -1,0 +1,238 @@
+"""Encoder-decoder backbone (whisper-large-v3).
+
+Assignment note: the conv/mel frontend is a STUB — ``input_specs()`` feeds
+precomputed frame embeddings (B, 1500, D), exactly as the shape grid
+specifies for [audio] entries.  The backbone is the real deliverable:
+32 encoder + 32 decoder layers, MHA (kv=20 ⇒ no GQA sharing), GELU MLPs,
+LayerNorm, sinusoidal positions (whisper's decoder uses a learned table of
+448 positions; the assigned shapes reach 32k, so we use the sinusoidal form
+for both stacks — recorded in DESIGN.md §Arch-applicability).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.sharding import specs as sh
+
+from . import attention as attn
+from .layers import (dtype_of, init_embed, init_mlp_nogate, layernorm,
+                     mlp_nogate, softmax_xent, unembed_logits, zeros, ones,
+                     chunked_xent)
+
+
+def _ln_init(d, dtype):
+    return {"w": ones((d,), dtype), "b": zeros((d,), dtype)}
+
+
+def _ln(p, x, eps=1e-5):
+    return layernorm(x, p["w"], p["b"], eps)
+
+
+def sinusoidal(positions, d_model):
+    """positions (S,) or (B,S) -> (..., d_model) f32."""
+    half = d_model // 2
+    freq = jnp.exp(-math.log(10000.0)
+                   * jnp.arange(half, dtype=jnp.float32) / (half - 1))
+    ang = positions[..., None].astype(jnp.float32) * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# --------------------------------------------------------------------------
+# Init
+# --------------------------------------------------------------------------
+def _init_enc_layer(cfg, key):
+    dtype = dtype_of(cfg.param_dtype)
+    k1, k2 = jax.random.split(key)
+    return {"ln1": _ln_init(cfg.d_model, dtype),
+            "attn": attn.init_attention(k1, cfg.attention, cfg.d_model, dtype),
+            "ln2": _ln_init(cfg.d_model, dtype),
+            "mlp": init_mlp_nogate(k2, cfg.d_model, cfg.d_ff, dtype)}
+
+
+def _init_dec_layer(cfg, key):
+    dtype = dtype_of(cfg.param_dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"ln1": _ln_init(cfg.d_model, dtype),
+            "self_attn": attn.init_attention(k1, cfg.attention, cfg.d_model,
+                                             dtype),
+            "ln_x": _ln_init(cfg.d_model, dtype),
+            "cross_attn": attn.init_attention(k2, cfg.attention, cfg.d_model,
+                                              dtype),
+            "ln2": _ln_init(cfg.d_model, dtype),
+            "mlp": init_mlp_nogate(k3, cfg.d_model, cfg.d_ff, dtype)}
+
+
+def init_params(cfg: ModelConfig, key):
+    dtype = dtype_of(cfg.param_dtype)
+    ke, kd, kt = jax.random.split(key, 3)
+    enc_keys = jax.random.split(ke, cfg.encoder_layers)
+    dec_keys = jax.random.split(kd, cfg.num_layers)
+    return {
+        "embed": init_embed(kt, cfg.vocab_size, cfg.d_model, dtype,
+                            cfg.tie_embeddings),
+        "encoder": jax.vmap(lambda k: _init_enc_layer(cfg, k))(enc_keys),
+        "enc_norm": _ln_init(cfg.d_model, dtype),
+        "decoder": jax.vmap(lambda k: _init_dec_layer(cfg, k))(dec_keys),
+        "dec_norm": _ln_init(cfg.d_model, dtype),
+    }
+
+
+# --------------------------------------------------------------------------
+# Encoder
+# --------------------------------------------------------------------------
+def encode(cfg: ModelConfig, params, frames):
+    """frames (B, S_enc, D) -> (B, S_enc, D)."""
+    B, S, D = frames.shape
+    pos = jnp.arange(S, dtype=jnp.int32)
+    x = frames + sinusoidal(pos, D).astype(frames.dtype)
+    x = sh.shard(x, "batch", "seq", "dmodel")
+    acfg = cfg.attention
+
+    import dataclasses
+    enc_acfg = dataclasses.replace(acfg, causal=False, use_rope=False)
+
+    def body(h, p):
+        hn = _ln(p["ln1"], h)
+        y, _ = attn.self_attention(enc_acfg, p["attn"], hn, pos, 0, 1.0,
+                                   cfg.norm_eps)
+        h = h + y
+        hn = _ln(p["ln2"], h)
+        h = h + mlp_nogate(p["mlp"], hn, "gelu")
+        return h, None
+
+    wrapped = jax.checkpoint(body) if cfg.remat != "none" else body
+    x, _ = jax.lax.scan(wrapped, x, params["encoder"])
+    return _ln(params["enc_norm"], x)
+
+
+def project_enc_kv_stack(cfg: ModelConfig, params, enc_out):
+    """Per-decoder-layer cross K/V, stacked over layers."""
+    def one(p):
+        return attn.project_enc_kv(cfg.attention, p["cross_attn"], enc_out)
+    return jax.vmap(one, in_axes=(0,))(params["decoder"])
+
+
+# --------------------------------------------------------------------------
+# Decoder (train / teacher-forced)
+# --------------------------------------------------------------------------
+def decode_train(cfg: ModelConfig, params, tokens, enc_out):
+    from .layers import embed as embed_fn
+    x = embed_fn(params["embed"], tokens, cfg.embed_scale, cfg.d_model)
+    B, S, D = x.shape
+    pos = jnp.arange(S, dtype=jnp.int32)
+    x = x + sinusoidal(pos, D).astype(x.dtype)
+    enc_kv = project_enc_kv_stack(cfg, params, enc_out)
+
+    def body(h, xs):
+        p, ekv = xs
+        hn = _ln(p["ln1"], h)
+        y, _ = attn.self_attention(cfg.attention, p["self_attn"], hn, pos,
+                                   0, 1.0, cfg.norm_eps)
+        h = h + y
+        hn = _ln(p["ln_x"], h)
+        h = h + attn.cross_attention(cfg.attention, p["cross_attn"], hn, ekv,
+                                     cfg.norm_eps)
+        hn = _ln(p["ln2"], h)
+        h = h + mlp_nogate(p["mlp"], hn, "gelu")
+        return h, None
+
+    wrapped = jax.checkpoint(body) if cfg.remat != "none" else body
+    h, _ = jax.lax.scan(wrapped, x, (params["decoder"], enc_kv))
+    return _ln(params["dec_norm"], h)
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    enc_out = encode(cfg, params, batch["frames"].astype(
+        dtype_of(cfg.dtype)))
+    h = decode_train(cfg, params, batch["tokens"], enc_out)
+    loss = chunked_xent(cfg, params["embed"], h, batch["labels"],
+                        batch.get("mask"))
+    return loss, {"ce": loss, "aux": jnp.zeros((), jnp.float32)}
+
+
+# --------------------------------------------------------------------------
+# Prefill / decode
+# --------------------------------------------------------------------------
+def prefill(cfg: ModelConfig, params, tokens, frames):
+    from .layers import embed as embed_fn
+    enc_out = encode(cfg, params, frames.astype(dtype_of(cfg.dtype)))
+    enc_kv = project_enc_kv_stack(cfg, params, enc_out)
+    x = embed_fn(params["embed"], tokens, cfg.embed_scale, cfg.d_model)
+    B, S, D = x.shape
+    pos = jnp.arange(S, dtype=jnp.int32)
+    x = x + sinusoidal(pos, D).astype(x.dtype)
+
+    def body(h, xs):
+        p, ekv = xs
+        hn = _ln(p["ln1"], h)
+        y, (k, v) = attn.self_attention(cfg.attention, p["self_attn"], hn,
+                                        pos, 0, 1.0, cfg.norm_eps)
+        h = h + y
+        hn = _ln(p["ln_x"], h)
+        h = h + attn.cross_attention(cfg.attention, p["cross_attn"], hn, ekv,
+                                     cfg.norm_eps)
+        hn = _ln(p["ln2"], h)
+        h = h + mlp_nogate(p["mlp"], hn, "gelu")
+        return h, (k, v)
+
+    h, kv = jax.lax.scan(body, x, (params["decoder"], enc_kv))
+    h = _ln(params["dec_norm"], h)
+    logits = unembed_logits(params["embed"], h[:, -1], cfg.tie_embeddings)
+    cache = {"k": kv[0], "v": kv[1], "enc_kv": enc_kv,
+             "len": jnp.full((B,), S, jnp.int32)}
+    return logits, cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    dtype = dtype_of(cfg.dtype)
+    a = cfg.attention
+    L = cfg.num_layers
+    kv_shape = (L, batch, max_seq, a.num_kv_heads, a.head_dim)
+    enc_kv_shape = (L, batch, cfg.encoder_seq, a.num_kv_heads, a.head_dim)
+    return {"k": jnp.zeros(kv_shape, dtype), "v": jnp.zeros(kv_shape, dtype),
+            "enc_kv": (jnp.zeros(enc_kv_shape, dtype),
+                       jnp.zeros(enc_kv_shape, dtype)),
+            "len": jnp.zeros((batch,), jnp.int32)}
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens):
+    from .layers import embed as embed_fn
+    x = embed_fn(params["embed"], tokens, cfg.embed_scale, cfg.d_model)
+    B, _, D = x.shape
+    new_len = cache["len"] + 1
+    pos = (new_len - 1)[:, None]
+    x = x + sinusoidal(pos, D).astype(x.dtype)
+    acfg = cfg.attention
+
+    def body(h, xs):
+        p, ck, cv, ekv = xs
+        hn = _ln(p["ln1"], h)
+        k, v = attn.decode_project_kv(acfg, p["self_attn"], hn, new_len, 1.0,
+                                      cfg.norm_eps)
+        # one-hot masked write — partitionable along batch AND kvseq (a
+        # per-row scatter forces GSPMD to replicate the cache; §Perf cell C)
+        onehot = (jnp.arange(ck.shape[1], dtype=jnp.int32)[None, :]
+                  == (new_len - 1)[:, None])[..., None, None]
+        ck = jnp.where(onehot, k[:, :1].astype(ck.dtype), ck)
+        cv = jnp.where(onehot, v[:, :1].astype(cv.dtype), cv)
+        y = attn.decode_attention(acfg, p["self_attn"], hn, ck, cv, new_len,
+                                  0, 1.0, cfg.norm_eps)
+        h = h + y
+        hn = _ln(p["ln_x"], h)
+        h = h + attn.cross_attention(acfg, p["cross_attn"], hn, ekv,
+                                     cfg.norm_eps)
+        hn = _ln(p["ln2"], h)
+        h = h + mlp_nogate(p["mlp"], hn, "gelu")
+        return h, (ck, cv)
+
+    h, (nk, nv) = jax.lax.scan(
+        body, x, (params["decoder"], cache["k"], cache["v"],
+                  cache["enc_kv"]))
+    h = _ln(params["dec_norm"], h)
+    logits = unembed_logits(params["embed"], h[:, 0], cfg.tie_embeddings)
+    return logits, dict(cache, k=nk, v=nv, len=new_len)

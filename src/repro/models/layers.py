@@ -1,0 +1,220 @@
+"""Shared building blocks: inits, norms, rotary embeddings, losses.
+
+Everything is a pure function over explicit pytrees (nested dicts of
+jnp arrays); no framework dependency.  Activation sharding annotations go
+through :mod:`repro.sharding.specs` and are identities when no mesh is
+installed (CPU smoke tests).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import specs as sh
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+# --------------------------------------------------------------------------
+# Initializers
+# --------------------------------------------------------------------------
+def normal(key, shape, std, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def fan_in_init(key, shape, dtype, fan_axis: int = -2):
+    """Truncated-normal-ish scaled init: std = 1/sqrt(fan_in)."""
+    fan_in = shape[fan_axis] if len(shape) > 1 else shape[0]
+    return normal(key, shape, 1.0 / math.sqrt(max(1, fan_in)), dtype)
+
+
+def zeros(shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+def ones(shape, dtype):
+    return jnp.ones(shape, dtype)
+
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+def rmsnorm(x, w, eps: float = 1e-6):
+    """RMSNorm in f32 accumulation (returned in x.dtype)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + w.astype(jnp.float32))).astype(x.dtype)
+
+
+def layernorm(x, w, b, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def act_fn(name: str):
+    return {
+        "silu": jax.nn.silu,
+        "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+        "relu_sq": lambda x: jnp.square(jax.nn.relu(x)),
+        "relu": jax.nn.relu,
+    }[name]
+
+
+# --------------------------------------------------------------------------
+# Rotary position embeddings.  theta may be a traced scalar (per-layer rope
+# schedules ride through scan xs), so inv_freq is computed inline.
+# --------------------------------------------------------------------------
+def apply_rope(x, positions, theta, head_dim: int | None = None):
+    """x: (..., seq, heads, head_dim); positions: (..., seq) int32."""
+    hd = head_dim or x.shape[-1]
+    half = hd // 2
+    theta = jnp.asarray(theta, jnp.float32)
+    exponent = jnp.arange(half, dtype=jnp.float32) / half
+    inv_freq = theta ** (-exponent)                           # (half,)
+    angles = positions[..., None].astype(jnp.float32) * inv_freq
+    cos = jnp.cos(angles)[..., None, :]                       # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Embedding / unembedding
+# --------------------------------------------------------------------------
+def init_embed(key, vocab, d_model, dtype, tie: bool):
+    # std = 1/sqrt(d): tied-embedding logits come out O(1) per component, and
+    # embed_scale (gemma) multiplies by sqrt(d) to restore O(1) activations.
+    k1, k2 = jax.random.split(key)
+    p = {"tok": normal(k1, (vocab, d_model), 1.0 / math.sqrt(d_model), dtype)}
+    if not tie:
+        p["head"] = fan_in_init(k2, (d_model, vocab), dtype)
+    return p
+
+
+def embed(params, tokens, scale: bool, d_model: int):
+    x = jnp.take(params["tok"], tokens, axis=0)
+    if scale:
+        x = x * jnp.asarray(math.sqrt(d_model), x.dtype)
+    return sh.shard(x, "batch", "seq", "dmodel")
+
+
+def unembed_logits(params, x, tie: bool):
+    w = params["tok"].T if tie else params["head"]
+    logits = jnp.einsum("...d,dv->...v", x, w)
+    if logits.ndim == 3:
+        logits = sh.shard(logits, "batch", "seq", "vocab")
+    return logits
+
+
+# --------------------------------------------------------------------------
+# Chunked softmax cross-entropy.  The full (B, S, V) logits tensor for e.g.
+# gemma3 (V=262k) would be tens of GB per device; scanning over sequence
+# chunks keeps the transient at (B, chunk, V/shard).
+# --------------------------------------------------------------------------
+def softmax_xent(logits, labels, mask=None):
+    """Stable CE in f32; logits (..., V), labels (...) int32."""
+    lf = logits.astype(jnp.float32)
+    m = jnp.max(lf, axis=-1, keepdims=True)
+    lse = jnp.log(jnp.sum(jnp.exp(lf - m), axis=-1)) + m[..., 0]
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        nll = nll * mask
+        return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def chunked_xent(cfg, embed_params, x, labels, mask=None):
+    """Scan over sequence chunks: embed->logits->CE without materializing
+    (B, S, V).  x: (B, S, D) final hidden states; labels: (B, S)."""
+    B, S, D = x.shape
+    chunk = cfg.logit_chunk
+    if chunk <= 0 or S <= chunk or S % chunk != 0:
+        logits = unembed_logits(embed_params, x, cfg.tie_embeddings)
+        return softmax_xent(logits, labels, mask)
+
+    n = S // chunk
+    xs = (
+        x.reshape(B, n, chunk, D).swapaxes(0, 1),         # (n, B, c, D)
+        labels.reshape(B, n, chunk).swapaxes(0, 1),
+        (mask.reshape(B, n, chunk).swapaxes(0, 1)
+         if mask is not None else jnp.ones((n, B, chunk), jnp.float32)),
+    )
+
+    def body(carry, xm):
+        tot, cnt = carry
+        xc, yc, mc = xm
+        logits = unembed_logits(embed_params, xc, cfg.tie_embeddings)
+        lf = logits.astype(jnp.float32)
+        m = jnp.max(lf, axis=-1, keepdims=True)
+        lse = jnp.log(jnp.sum(jnp.exp(lf - m), axis=-1)) + m[..., 0]
+        gold = jnp.take_along_axis(lf, yc[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * mc
+        return (tot + jnp.sum(nll), cnt + jnp.sum(mc)), None
+
+    # remat: never keep a chunk's logits for the backward pass
+    body = jax.checkpoint(body, prevent_cse=False)
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32),
+                                        jnp.zeros((), jnp.float32)), xs)
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+# --------------------------------------------------------------------------
+# Dense (SwiGLU / GeGLU) FFN
+# --------------------------------------------------------------------------
+def init_mlp(key, d_model, d_ff, dtype, bias: bool = False):
+    ks = jax.random.split(key, 3)
+    p = {"w_gate": fan_in_init(ks[0], (d_model, d_ff), dtype),
+         "w_in": fan_in_init(ks[1], (d_model, d_ff), dtype),
+         "w_out": fan_in_init(ks[2], (d_ff, d_model), dtype)}
+    if bias:
+        p["b_in"] = zeros((d_ff,), dtype)
+        p["b_out"] = zeros((d_model,), dtype)
+    return p
+
+
+def mlp(params, x, act: str):
+    h = jnp.einsum("...d,df->...f", x, params["w_gate"])
+    u = jnp.einsum("...d,df->...f", x, params["w_in"])
+    if x.ndim == 3:
+        h = sh.shard(h, "batch", "seq", "ffn")
+        u = sh.shard(u, "batch", "seq", "ffn")
+    y = act_fn(act)(h) * u
+    out = jnp.einsum("...f,fd->...d", y, params["w_out"])
+    if x.ndim == 3:
+        out = sh.shard(out, "batch", "seq", "dmodel")
+    return out
+
+
+# --------------------------------------------------------------------------
+# Whisper-style GELU MLP (no gate) — used by the encoder/decoder stacks that
+# predate gated FFNs.
+# --------------------------------------------------------------------------
+def init_mlp_nogate(key, d_model, d_ff, dtype):
+    ks = jax.random.split(key, 2)
+    return {"w_in": fan_in_init(ks[0], (d_model, d_ff), dtype),
+            "b_in": zeros((d_ff,), dtype),
+            "w_out": fan_in_init(ks[1], (d_ff, d_model), dtype),
+            "b_out": zeros((d_model,), dtype)}
+
+
+def mlp_nogate(params, x, act: str = "gelu"):
+    h = jnp.einsum("...d,df->...f", x, params["w_in"]) + params["b_in"]
+    if x.ndim == 3:
+        h = sh.shard(h, "batch", "seq", "ffn")
+    y = act_fn(act)(h)
+    out = jnp.einsum("...f,fd->...d", y, params["w_out"]) + params["b_out"]
+    if x.ndim == 3:
+        out = sh.shard(out, "batch", "seq", "dmodel")
+    return out

@@ -1,0 +1,184 @@
+"""Mamba-1 selective-state-space mixer (Jamba flavor).
+
+XLA path: chunked scan — outer ``lax.scan`` over time chunks carrying the
+(B, d_in, N) state, inner rematerialized scan within a chunk.  This bounds
+both live memory (no (B, T, d_in, N) tensor) and backward residuals
+(states checkpointed once per chunk).  The Pallas kernel
+(:mod:`repro.kernels.mamba_scan`) implements the same chunking for TPU.
+
+TP: d_in (the expanded channel dim) is sharded over ``model``; the scan is
+per-channel so no collective appears between in_proj and out_proj.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MambaConfig
+from repro.sharding import specs as sh
+
+from .layers import fan_in_init, normal, ones, rmsnorm, zeros
+
+_CHUNK = 64
+
+
+def dt_rank_of(mcfg: MambaConfig, d_model: int) -> int:
+    return mcfg.dt_rank or -(-d_model // 16)
+
+
+def init_mamba(key, mcfg: MambaConfig, d_model: int, dtype):
+    d_in = mcfg.expand * d_model
+    R = dt_rank_of(mcfg, d_model)
+    N = mcfg.d_state
+    ks = jax.random.split(key, 8)
+    # S4D-real initialization for A
+    a = jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32)[None, :], (d_in, 1))
+    dt_init_std = R ** -0.5
+    p = {
+        "in_proj": fan_in_init(ks[0], (d_model, 2 * d_in), dtype),
+        "conv_w": normal(ks[1], (mcfg.d_conv, d_in), 0.02, dtype),
+        "conv_b": zeros((d_in,), dtype),
+        "x_dt": fan_in_init(ks[2], (d_in, R), dtype),
+        "x_b": fan_in_init(ks[3], (d_in, N), dtype),
+        "x_c": fan_in_init(ks[4], (d_in, N), dtype),
+        "dt_proj": normal(ks[5], (R, d_in), dt_init_std, dtype),
+        "dt_bias": _dt_bias_init(ks[6], d_in),
+        "a_log": jnp.log(a),                      # f32
+        "d": ones((d_in,), jnp.float32),
+        "norm": zeros((d_in,), dtype),
+        "out_proj": fan_in_init(ks[7], (d_in, d_model), dtype),
+    }
+    return p
+
+
+def _dt_bias_init(key, d_in, dt_min=1e-3, dt_max=0.1):
+    u = jax.random.uniform(key, (d_in,), jnp.float32)
+    dt = jnp.exp(u * (math.log(dt_max) - math.log(dt_min)) + math.log(dt_min))
+    # inverse softplus
+    return jnp.log(jnp.expm1(dt))
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv; x: (B, T, d_in), w: (K, d_in)."""
+    K = w.shape[0]
+    out = jnp.zeros_like(x)
+    for j in range(K):
+        shift = K - 1 - j
+        xs = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + xs * w[j]
+    return out + b
+
+
+def _ssm_chunk_scan(dt, Bmat, Cmat, x, a, chunk: int):
+    """Selective scan, chunked.
+
+    dt, x: (B, T, d_in) f32;  Bmat, Cmat: (B, T, N) f32;  a: (d_in, N) (< 0).
+    Returns y: (B, T, d_in) f32.
+    """
+    Bsz, T, d_in = x.shape
+    N = a.shape[-1]
+    if T % chunk:
+        pad = chunk - T % chunk
+        dt, x = (jnp.pad(v, ((0, 0), (0, pad), (0, 0))) for v in (dt, x))
+        Bmat, Cmat = (jnp.pad(v, ((0, 0), (0, pad), (0, 0)))
+                      for v in (Bmat, Cmat))
+    Tp = dt.shape[1]
+    nc = Tp // chunk
+
+    def per_chunk(state, xs):
+        dt_c, B_c, C_c, x_c = xs                      # (B, c, ...)
+
+        @jax.checkpoint
+        def inner(state, dt_c, B_c, C_c, x_c):
+            def step(s, t):
+                dt_t, B_t, C_t, x_t = t               # (B,d_in),(B,N),(B,N),(B,d_in)
+                da = jnp.exp(dt_t[..., None] * a)     # (B, d_in, N)
+                s = s * da + (dt_t * x_t)[..., None] * B_t[:, None, :]
+                y = jnp.einsum("bdn,bn->bd", s, C_t)
+                return s, y
+
+            ts = (dt_c.swapaxes(0, 1), B_c.swapaxes(0, 1),
+                  C_c.swapaxes(0, 1), x_c.swapaxes(0, 1))
+            s, ys = jax.lax.scan(step, state, ts)
+            return s, ys.swapaxes(0, 1)               # (B, c, d_in)
+
+        state, y_c = inner(state, dt_c, B_c, C_c, x_c)
+        return state, y_c
+
+    xs = tuple(v.reshape(Bsz, nc, chunk, -1).swapaxes(0, 1)
+               for v in (dt, Bmat, Cmat, x))
+    s0 = jnp.zeros((Bsz, d_in, N), jnp.float32)
+    _, ys = jax.lax.scan(per_chunk, s0, xs)
+    y = ys.swapaxes(0, 1).reshape(Bsz, Tp, d_in)
+    return y[:, :T]
+
+
+def mamba_forward(mcfg: MambaConfig, params, x, chunk: int = _CHUNK):
+    """x: (B, T, D) -> (B, T, D)."""
+    B, T, D = x.shape
+    d_in = mcfg.expand * D
+    h = jnp.einsum("btd,de->bte", x, params["in_proj"])
+    h = sh.shard(h, "batch", "seq", "ffn")
+    xz, z = h[..., :d_in], h[..., d_in:]
+    xz = _causal_conv(xz, params["conv_w"], params["conv_b"])
+    xz = jax.nn.silu(xz)
+
+    xf = xz.astype(jnp.float32)
+    dt_low = jnp.einsum("bte,er->btr", xz, params["x_dt"])
+    dt = jnp.einsum("btr,re->bte", dt_low, params["dt_proj"]).astype(jnp.float32)
+    dt = jax.nn.softplus(dt + params["dt_bias"])
+    Bmat = jnp.einsum("bte,en->btn", xz, params["x_b"]).astype(jnp.float32)
+    Cmat = jnp.einsum("bte,en->btn", xz, params["x_c"]).astype(jnp.float32)
+    a = -jnp.exp(params["a_log"])
+
+    y = _ssm_chunk_scan(dt, Bmat, Cmat, xf, a, chunk)
+    y = y + xf * params["d"]
+    y = y.astype(x.dtype)
+    y = rmsnorm(y, params["norm"]) * jax.nn.silu(z)
+    out = jnp.einsum("bte,ed->btd", y, params["out_proj"])
+    return sh.shard(out, "batch", "seq", "dmodel")
+
+
+# --------------------------------------------------------------------------
+# Decode: O(1) per step.  Cache = {"conv": (B, K-1, d_in), "ssm": (B, d_in, N)}
+# --------------------------------------------------------------------------
+def mamba_decode_init(mcfg: MambaConfig, d_model: int, batch: int, dtype):
+    d_in = mcfg.expand * d_model
+    return {
+        "conv": jnp.zeros((batch, mcfg.d_conv - 1, d_in), dtype),
+        "ssm": jnp.zeros((batch, d_in, mcfg.d_state), jnp.float32),
+    }
+
+
+def mamba_decode_step(mcfg: MambaConfig, params, x, cache):
+    """x: (B, 1, D); returns (y (B, 1, D), cache')."""
+    B, _, D = x.shape
+    d_in = mcfg.expand * D
+    h = jnp.einsum("btd,de->bte", x, params["in_proj"])
+    xz, z = h[..., :d_in], h[..., d_in:]
+
+    window = jnp.concatenate([cache["conv"], xz], axis=1)     # (B, K, d_in)
+    conv = jnp.einsum("bke,ke->be", window, params["conv_w"]) \
+        + params["conv_b"]
+    xc = jax.nn.silu(conv)[:, None, :]                        # (B, 1, d_in)
+    new_conv = window[:, 1:]
+
+    dt_low = jnp.einsum("bte,er->btr", xc, params["x_dt"])
+    dt = jnp.einsum("btr,re->bte", dt_low, params["dt_proj"]).astype(jnp.float32)
+    dt = jax.nn.softplus(dt + params["dt_bias"])[:, 0]        # (B, d_in)
+    Bm = jnp.einsum("bte,en->bn", xc, params["x_b"]).astype(jnp.float32)
+    Cm = jnp.einsum("bte,en->bn", xc, params["x_c"]).astype(jnp.float32)
+    a = -jnp.exp(params["a_log"])
+
+    s = cache["ssm"]
+    da = jnp.exp(dt[..., None] * a)
+    xf = xc[:, 0].astype(jnp.float32)
+    s = s * da + (dt * xf)[..., None] * Bm[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", s, Cm) + xf * params["d"]
+    y = y.astype(x.dtype)[:, None, :]
+    y = rmsnorm(y, params["norm"]) * jax.nn.silu(z)
+    out = jnp.einsum("bte,ed->btd", y, params["out_proj"])
+    return out, {"conv": new_conv, "ssm": s}

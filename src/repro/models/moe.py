@@ -1,0 +1,314 @@
+"""Mixture-of-Experts FFN: dense reference + expert-parallel production path.
+
+Three execution paths, one semantics (top-k routing, renormalized gates,
+capacity dropping on the EP path):
+
+* :func:`moe_dense` — pure-jnp oracle: every expert applied to every token,
+  combined with the gate matrix.  No dropping.  Used by tiny smoke tests and
+  as the correctness reference for the EP path.
+* :func:`moe_ep` — production training/prefill path: ``shard_map`` over the
+  mesh; tokens sharded over (dp, model); sort-based capacity dispatch into an
+  (E, C, D) buffer; ``all_to_all`` over the ``model`` (expert) axis; grouped
+  expert matmuls; ``all_to_all`` back; scatter-add combine.  Expert weights
+  may additionally be FSDP-sharded over the dp axes (all-gathered per layer
+  inside the scan, which is the standard ZeRO-3 pattern).
+* :func:`moe_decode` — decode path: one token per sequence, tokens
+  replicated over the ``model`` axis; each device computes only its local
+  experts' (masked) contribution and a ``psum`` combines.  Decode MoE is
+  weight-bandwidth-bound, so the masked-compute overhead is irrelevant while
+  the a2a is avoided entirely.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import MoEConfig
+from repro.sharding import specs as sh
+
+from .layers import act_fn, fan_in_init
+
+
+# --------------------------------------------------------------------------
+# Params
+# --------------------------------------------------------------------------
+def init_moe(key, mcfg: MoEConfig, d_model: int, dtype):
+    ks = jax.random.split(key, 5)
+    E, F = mcfg.num_experts, mcfg.d_ff
+    p = {
+        "router": fan_in_init(ks[0], (d_model, E), jnp.float32),
+        "w_gate": fan_in_init(ks[1], (E, d_model, F), dtype, fan_axis=1),
+        "w_in": fan_in_init(ks[2], (E, d_model, F), dtype, fan_axis=1),
+        "w_out": fan_in_init(ks[3], (E, F, d_model), dtype, fan_axis=1),
+    }
+    if mcfg.shared_d_ff:
+        from .layers import init_mlp
+        p["shared"] = init_mlp(ks[4], d_model, mcfg.shared_d_ff, dtype)
+    return p
+
+
+# --------------------------------------------------------------------------
+# Routing (common)
+# --------------------------------------------------------------------------
+def route(mcfg: MoEConfig, router_w, tokens):
+    """tokens (T, D) -> (gates (T, k) f32, eidx (T, k) i32, probs (T, E) f32)."""
+    logits = tokens.astype(jnp.float32) @ router_w.astype(jnp.float32)
+    if mcfg.router_logit_softcap:
+        logits = jnp.tanh(logits / mcfg.router_logit_softcap) \
+            * mcfg.router_logit_softcap
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eidx = jax.lax.top_k(probs, mcfg.top_k)
+    gates = gates / jnp.maximum(jnp.sum(gates, -1, keepdims=True), 1e-9)
+    return gates, eidx, probs
+
+
+def aux_loss(mcfg: MoEConfig, probs, eidx, axis_names=()):
+    """Switch-style load-balancing loss: E * sum_e f_e * P_e.
+
+    f_e — fraction of routed assignments to expert e; P_e — mean router
+    probability.  When called inside shard_map, ``axis_names`` psum-combines
+    the statistics so the loss is the global one.
+    """
+    E = probs.shape[-1]
+    onehot = jax.nn.one_hot(eidx, E, dtype=jnp.float32)       # (T, k, E)
+    f = jnp.mean(jnp.sum(onehot, axis=1), axis=0)             # (E,)
+    p = jnp.mean(probs, axis=0)                               # (E,)
+    cnt = jnp.ones((), jnp.float32)
+    if axis_names:
+        f = jax.lax.psum(f, axis_names)
+        p = jax.lax.psum(p, axis_names)
+        cnt = jax.lax.psum(cnt, axis_names)
+    return E * jnp.sum((f / cnt) * (p / cnt))
+
+
+# --------------------------------------------------------------------------
+# Dense reference path
+# --------------------------------------------------------------------------
+def moe_dense(mcfg: MoEConfig, params, x, act: str, with_aux: bool = True):
+    """x: (B, S, D).  Computes every expert on every token (oracle)."""
+    B, S, D = x.shape
+    tokens = x.reshape(B * S, D)
+    gates, eidx, probs = route(mcfg, params["router"], tokens)
+    E = mcfg.num_experts
+    gate_mat = jnp.zeros((B * S, E), jnp.float32)
+    gate_mat = gate_mat.at[jnp.arange(B * S)[:, None], eidx].set(gates)
+
+    h = jnp.einsum("td,edf->etf", tokens, params["w_gate"])
+    u = jnp.einsum("td,edf->etf", tokens, params["w_in"])
+    y = act_fn(act)(h) * u
+    y = jnp.einsum("etf,efd->etd", y, params["w_out"])        # (E, T, D)
+    out = jnp.einsum("etd,te->td", y.astype(jnp.float32), gate_mat)
+    out = out.reshape(B, S, D).astype(x.dtype)
+    if mcfg.shared_d_ff:
+        from .layers import mlp
+        out = out + mlp(params["shared"], x, act)
+    aux = aux_loss(mcfg, probs, eidx) if with_aux else jnp.zeros((), jnp.float32)
+    return out, aux
+
+
+# --------------------------------------------------------------------------
+# Expert-parallel path (training / prefill)
+# --------------------------------------------------------------------------
+def _dispatch_local(mcfg: MoEConfig, tokens, gates, eidx, capacity):
+    """Sort-based capacity dispatch on one device.
+
+    Returns (send_buf (E, C, D), combine_idx, combine_gate, keep) where
+    ``combine_idx[t*k + j]`` is the flat (E*C) slot of assignment j of token
+    t (or an overflow slot that is masked by ``keep``).
+    """
+    T, D = tokens.shape
+    K, E, C = mcfg.top_k, mcfg.num_experts, capacity
+    eid_flat = eidx.reshape(T * K)
+    gate_flat = gates.reshape(T * K)
+    tok_flat = jnp.repeat(jnp.arange(T, dtype=jnp.int32), K)
+
+    order = jnp.argsort(eid_flat, stable=True)
+    sorted_eid = eid_flat[order]
+    # rank of each assignment within its expert segment
+    seg_start = jnp.searchsorted(sorted_eid, jnp.arange(E, dtype=sorted_eid.dtype),
+                                 side="left")
+    rank = jnp.arange(T * K, dtype=jnp.int32) - seg_start[sorted_eid].astype(jnp.int32)
+    keep_sorted = rank < C
+    # overflow assignments scatter out-of-bounds and are dropped, so they can
+    # never clobber a kept slot
+    slot_sorted = jnp.where(keep_sorted,
+                            sorted_eid.astype(jnp.int32) * C + rank,
+                            E * C)
+
+    send = jnp.zeros((E * C, D), tokens.dtype)
+    src = tokens[tok_flat[order]]
+    send = send.at[slot_sorted].set(src, mode="drop")
+
+    # un-sort the bookkeeping so combine indexes align with (t, j) order
+    inv = jnp.zeros_like(order).at[order].set(jnp.arange(T * K))
+    slot = slot_sorted[inv]
+    keep = keep_sorted[inv]
+    return send.reshape(E, C, D), slot, gate_flat, keep, tok_flat
+
+
+def _expert_ffn(w_gate, w_in, w_out, xs, act: str):
+    """xs: (E_loc, C', D) grouped matmuls."""
+    h = jnp.einsum("ecd,edf->ecf", xs, w_gate)
+    u = jnp.einsum("ecd,edf->ecf", xs, w_in)
+    y = act_fn(act)(h) * u
+    return jnp.einsum("ecf,efd->ecd", y, w_out)
+
+
+def moe_ep(mcfg: MoEConfig, params, x, act: str, with_aux: bool = True):
+    """Expert-parallel MoE over the active mesh.  x: (B, S, D) global."""
+    mesh = sh.current_mesh()
+    rules = sh.current_rules()
+    ep_axis = "model"
+    ep = mesh.shape[ep_axis]
+    dp_axes = tuple(a for a in mesh.axis_names if a != ep_axis)
+    fsdp_axes = rules.fsdp
+    if isinstance(fsdp_axes, str):
+        fsdp_axes = (fsdp_axes,)
+    E = mcfg.num_experts
+    assert E % ep == 0, f"experts {E} not divisible by ep={ep}"
+
+    B, S, D = x.shape
+    dp = math.prod(mesh.shape[a] for a in dp_axes)
+    if B % dp != 0:               # unshardable batch: dense fallback
+        return moe_dense(mcfg, params, x, act, with_aux)
+    # capacity is computed from *local* token count (static)
+    seq_shard = ep if S % ep == 0 else 1
+    t_loc = (B // dp) * (S // seq_shard)
+    capacity = int(math.ceil(t_loc * mcfg.top_k / E * mcfg.capacity_factor))
+    capacity = max(8, -(-capacity // 8) * 8)
+
+    w_specs = {
+        "router": P(*(None,) * 2),
+        "w_gate": P(ep_axis, fsdp_axes, None),
+        "w_in": P(ep_axis, fsdp_axes, None),
+        "w_out": P(ep_axis, fsdp_axes, None),
+    }
+    if mcfg.shared_d_ff:
+        w_specs["shared"] = {
+            "w_gate": P(fsdp_axes, None), "w_in": P(fsdp_axes, None),
+            "w_out": P(None, fsdp_axes)}
+    x_spec = P(dp_axes, ep_axis if seq_shard > 1 else None, None)
+
+    def body(wp, xl):
+        # xl: (B_loc, S_loc, D)
+        Bl, Sl, _ = xl.shape
+        tokens = xl.reshape(Bl * Sl, D)
+        if fsdp_axes:
+            wg = jax.lax.all_gather(wp["w_gate"], fsdp_axes, axis=1, tiled=True)
+            wi = jax.lax.all_gather(wp["w_in"], fsdp_axes, axis=1, tiled=True)
+            wo = jax.lax.all_gather(wp["w_out"], fsdp_axes, axis=1, tiled=True)
+        else:
+            wg, wi, wo = wp["w_gate"], wp["w_in"], wp["w_out"]
+
+        gates, eidx, probs = route(mcfg, wp["router"], tokens)
+        send, slot, gate_flat, keep, tok_flat = _dispatch_local(
+            mcfg, tokens, gates, eidx, capacity)
+
+        # (E, C, D) -> (ep, E_loc, C, D) -> a2a -> rows become source shards
+        send = send.reshape(ep, E // ep, capacity, D)
+        recv = jax.lax.all_to_all(send, ep_axis, split_axis=0, concat_axis=0,
+                                  tiled=False)
+        # recv: (ep, E_loc, C, D); flatten source shard into capacity
+        xs = recv.transpose(1, 0, 2, 3).reshape(E // ep, ep * capacity, D)
+        ys = _expert_ffn(wg, wi, wo, xs, act)
+        back = ys.reshape(E // ep, ep, capacity, D).transpose(1, 0, 2, 3)
+        got = jax.lax.all_to_all(back, ep_axis, split_axis=0, concat_axis=0,
+                                 tiled=False)
+        got = got.reshape(E * capacity, D)
+
+        w = (gate_flat * keep.astype(jnp.float32))[:, None]
+        contrib = got[slot].astype(jnp.float32) * w
+        out = jnp.zeros((Bl * Sl, D), jnp.float32)
+        out = out.at[tok_flat].add(contrib)
+        out = out.astype(xl.dtype).reshape(Bl, Sl, D)
+        if with_aux:
+            aux = aux_loss(mcfg, probs, eidx,
+                           axis_names=dp_axes + (ep_axis,))
+        else:
+            aux = jnp.zeros((), jnp.float32)
+        return out, aux
+
+    wanted = {k: params[k] for k in ("router", "w_gate", "w_in", "w_out")}
+    specs_in = {k: w_specs[k] for k in wanted}
+    out, aux = jax.shard_map(
+        body, mesh=mesh, in_specs=(specs_in, x_spec),
+        out_specs=(x_spec, P()), check_vma=False)(wanted, x)
+    if mcfg.shared_d_ff:
+        from .layers import mlp
+        out = out + mlp(params["shared"], x, act)
+    return sh.shard(out, "batch", "seq", "dmodel"), aux
+
+
+# --------------------------------------------------------------------------
+# Decode path: tokens replicated over the expert axis; masked local compute
+# + psum combine (no all_to_all on the latency-critical path).
+# --------------------------------------------------------------------------
+def moe_decode(mcfg: MoEConfig, params, x, act: str):
+    mesh = sh.current_mesh()
+    if mesh is None or mcfg.num_experts % mesh.shape["model"] != 0:
+        out, _ = moe_dense(mcfg, params, x, act, with_aux=False)
+        return out
+    ep_axis = "model"
+    ep = mesh.shape[ep_axis]
+    dp_axes = tuple(a for a in mesh.axis_names if a != ep_axis)
+    dp = math.prod(mesh.shape[a] for a in dp_axes)
+    E, D = mcfg.num_experts, x.shape[-1]
+    E_loc = E // ep
+
+    w_specs = {
+        "router": P(None, None),
+        "w_gate": P(ep_axis, None, None),
+        "w_in": P(ep_axis, None, None),
+        "w_out": P(ep_axis, None, None),
+    }
+    # batch=1 (long-context decode): replicate tokens over the dp axes
+    x_spec = P(dp_axes if x.shape[0] % dp == 0 else None, None, None)
+
+    def body(wp, xl):
+        Bl, Sl, _ = xl.shape
+        tokens = xl.reshape(Bl * Sl, D)
+        gates, eidx, _ = route(mcfg, wp["router"], tokens)
+        my = jax.lax.axis_index(ep_axis) * E_loc
+        # gate matrix restricted to local experts: (T, E_loc)
+        local = (eidx >= my) & (eidx < my + E_loc)            # (T, k)
+        gmat = jnp.zeros((tokens.shape[0], E_loc), jnp.float32)
+        gmat = gmat.at[jnp.arange(tokens.shape[0])[:, None],
+                       jnp.clip(eidx - my, 0, E_loc - 1)].add(
+            gates * local.astype(jnp.float32), mode="drop")
+        h = jnp.einsum("td,edf->etf", tokens, wp["w_gate"])
+        u = jnp.einsum("td,edf->etf", tokens, wp["w_in"])
+        y = act_fn(act)(h) * u
+        y = jnp.einsum("etf,efd->etd", y, wp["w_out"])
+        out = jnp.einsum("etd,te->td", y.astype(jnp.float32), gmat)
+        out = jax.lax.psum(out, ep_axis)
+        return out.astype(xl.dtype).reshape(Bl, Sl, D)
+
+    wanted = {k: params[k] for k in ("router", "w_gate", "w_in", "w_out")}
+    out = jax.shard_map(body, mesh=mesh, in_specs=(w_specs, x_spec),
+                        out_specs=x_spec, check_vma=False)(wanted, x)
+    if mcfg.shared_d_ff:
+        from .layers import mlp
+        out = out + mlp(params["shared"], x, act)
+    return out
+
+
+# --------------------------------------------------------------------------
+# Dispatcher
+# --------------------------------------------------------------------------
+def moe_forward(mcfg: MoEConfig, params, x, act: str, mode: str = "train",
+                with_aux: bool = True):
+    """mode: train | prefill | decode."""
+    mesh = sh.current_mesh()
+    ep_ok = (mesh is not None and "model" in mesh.axis_names
+             and mcfg.num_experts % mesh.shape["model"] == 0
+             and mesh.shape["model"] > 1)
+    if mode == "decode":
+        return moe_decode(mcfg, params, x, act), jnp.zeros((), jnp.float32)
+    if ep_ok:
+        return moe_ep(mcfg, params, x, act, with_aux)
+    return moe_dense(mcfg, params, x, act, with_aux)

@@ -1,0 +1,230 @@
+"""RWKV6 ("Finch") mixer: data-dependent per-channel decay linear attention.
+
+Time-mix recurrence per head (state S: (head_dim, head_dim) matrix):
+
+    y_t = r_t · (S_{t-1} + diag(u) k_tᵀ v_t)
+    S_t = diag(w_t) S_{t-1} + k_tᵀ v_t
+
+with w_t ∈ (0,1) computed *from the input* (the paper's data-dependent decay)
+and u a learned "bonus" for the current token.
+
+XLA path scans over time in chunks (checkpointed like the mamba scan); the
+Pallas kernel (:mod:`repro.kernels.rwkv6_scan`) implements the chunked
+intra/inter block form for TPU.
+
+Channel-mix (rwkv_ffn) is the squared-relu K/V gating of the paper.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RWKV6Config
+from repro.sharding import specs as sh
+
+from .layers import fan_in_init, normal, zeros
+
+_CHUNK = 64
+
+
+def init_rwkv6(key, rcfg: RWKV6Config, d_model: int, dtype):
+    D = d_model
+    H = D // rcfg.head_dim
+    ks = jax.random.split(key, 12)
+    p = {
+        # ddlerp token-shift mixers: 5 targets (w,k,v,r,g) + base
+        "mu_base": normal(ks[0], (D,), 0.02, jnp.float32),
+        "mu_wkvrg": normal(ks[1], (5, D), 0.02, jnp.float32),
+        "ddlerp_a": normal(ks[2], (D, 5 * rcfg.lora_mix), 0.02, jnp.float32),
+        "ddlerp_b": normal(ks[3], (5, rcfg.lora_mix, D), 0.02, jnp.float32),
+        # decay: w = exp(-exp(w0 + tanh(xw @ A) @ B))
+        "w0": normal(ks[4], (D,), 0.02, jnp.float32) - 6.0,
+        "lora_wa": normal(ks[5], (D, rcfg.lora_w), 0.02, jnp.float32),
+        "lora_wb": normal(ks[6], (rcfg.lora_w, D), 0.02, jnp.float32),
+        "u": normal(ks[7], (D,), 0.02, jnp.float32),
+        "w_r": fan_in_init(ks[8], (D, D), dtype),
+        "w_k": fan_in_init(ks[9], (D, D), dtype),
+        "w_v": fan_in_init(ks[10], (D, D), dtype),
+        "w_g": fan_in_init(ks[11], (D, D), dtype),
+        "w_o": fan_in_init(jax.random.fold_in(key, 99), (D, D), dtype),
+        "ln_w": zeros((D,), jnp.float32),
+        "ln_b": zeros((D,), jnp.float32),
+    }
+    return p
+
+
+def init_rwkv_ffn(key, d_model: int, d_ff: int, dtype):
+    ks = jax.random.split(key, 4)
+    return {
+        "mu_k": normal(ks[0], (d_model,), 0.02, jnp.float32),
+        "mu_r": normal(ks[1], (d_model,), 0.02, jnp.float32),
+        "w_k": fan_in_init(ks[2], (d_model, d_ff), dtype),
+        "w_v": fan_in_init(ks[3], (d_ff, d_model), dtype),
+        "w_r": fan_in_init(jax.random.fold_in(key, 7), (d_model, d_model), dtype),
+    }
+
+
+def _token_shift(x, last=None):
+    """Previous token's x; first position uses ``last`` (decode cache) or 0."""
+    if last is None:
+        return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    return jnp.concatenate([last[:, None, :], x[:, :-1]], axis=1)
+
+
+def _ddlerp(p, x, xx):
+    """RWKV6 data-dependent lerp producing the 5 mixed inputs (w,k,v,r,g)."""
+    sx = (xx - x).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    base = xf + sx * p["mu_base"]
+    low = jnp.tanh(jnp.einsum("btd,dm->btm", base, p["ddlerp_a"]))
+    B, T, _ = x.shape
+    low = low.reshape(B, T, 5, -1)
+    adj = jnp.einsum("btsm,smd->sbtd", low, p["ddlerp_b"])  # (5, B, T, D)
+    mixed = xf[None] + sx[None] * (p["mu_wkvrg"][:, None, None, :] + adj)
+    return mixed  # f32 (5, B, T, D)
+
+
+def _decay(p, xw):
+    """w_t in (0, 1): exp(-exp(w0 + lora(xw)))."""
+    lo = jnp.tanh(xw @ p["lora_wa"]) @ p["lora_wb"]
+    return jnp.exp(-jnp.exp(p["w0"] + lo))
+
+
+def _wkv_chunk_scan(r, k, v, w, u, head_dim: int, chunk: int = _CHUNK,
+                    state0=None, return_state: bool = False):
+    """Linear-attention scan.  r,k,v,w: (B, T, D) f32 (w in (0,1)).
+
+    Per head h of size n: S_t = diag(w) S + kᵀv;  y = r (S + diag(u) kᵀv).
+    """
+    B, T, D = r.shape
+    n = head_dim
+    H = D // n
+    rs = r.reshape(B, T, H, n)
+    ks_ = k.reshape(B, T, H, n)
+    vs = v.reshape(B, T, H, n)
+    ws = w.reshape(B, T, H, n)
+    uu = u.reshape(H, n)
+
+    if T % chunk:
+        pad = chunk - T % chunk
+        rs, ks_, vs = (jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                       for a in (rs, ks_, vs))
+        ws = jnp.pad(ws, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                     constant_values=1.0)
+    Tp = rs.shape[1]
+    nc = Tp // chunk
+
+    def per_chunk(S, xs):
+        r_c, k_c, v_c, w_c = xs                     # (B, c, H, n)
+
+        @jax.checkpoint
+        def inner(S, r_c, k_c, v_c, w_c):
+            def step(S, t):
+                r_t, k_t, v_t, w_t = t              # (B, H, n)
+                kv = k_t[..., :, None] * v_t[..., None, :]   # (B,H,n,n)
+                y = jnp.einsum("bhk,bhkv->bhv", r_t,
+                               S + uu[..., None] * kv)
+                S = w_t[..., None] * S + kv
+                return S, y
+
+            ts = tuple(a.swapaxes(0, 1) for a in (r_c, k_c, v_c, w_c))
+            S, ys = jax.lax.scan(step, S, ts)
+            return S, ys.swapaxes(0, 1)             # (B, c, H, n)
+
+        return inner(S, r_c, k_c, v_c, w_c)
+
+    xs = tuple(a.reshape(B, nc, chunk, H, n).swapaxes(0, 1)
+               for a in (rs, ks_, vs, ws))
+    S0 = state0 if state0 is not None else jnp.zeros((B, H, n, n), jnp.float32)
+    S, ys = jax.lax.scan(per_chunk, S0, xs)
+    y = ys.swapaxes(0, 1).reshape(B, Tp, D)[:, :T]
+    if return_state:
+        return y, S
+    return y
+
+
+def _groupnorm(x, w, b, H: int, eps: float = 64e-5):
+    """Per-head groupnorm (RWKV normalizes each head's output)."""
+    B, T, D = x.shape
+    n = D // H
+    xh = x.reshape(B, T, H, n).astype(jnp.float32)
+    mu = jnp.mean(xh, axis=-1, keepdims=True)
+    var = jnp.var(xh, axis=-1, keepdims=True)
+    y = (xh - mu) * jax.lax.rsqrt(var + eps)
+    y = y.reshape(B, T, D)
+    return y * w + b
+
+
+def rwkv6_forward(rcfg: RWKV6Config, params, x, shift_state=None,
+                  wkv_state=None, return_state: bool = False):
+    """x: (B, T, D).  Optional decode states (last token, S matrix)."""
+    B, T, D = x.shape
+    H = D // rcfg.head_dim
+    xx = _token_shift(x, shift_state)
+    mixed = _ddlerp(params, x, xx)                  # (5, B, T, D) f32
+    xw, xk, xv, xr, xg = mixed
+    w = _decay(params, xw)                          # (B, T, D) f32
+    r = jnp.einsum("btd,de->bte", xr.astype(x.dtype), params["w_r"])
+    k = jnp.einsum("btd,de->bte", xk.astype(x.dtype), params["w_k"])
+    v = jnp.einsum("btd,de->bte", xv.astype(x.dtype), params["w_v"])
+    g = jax.nn.silu(jnp.einsum("btd,de->bte", xg.astype(x.dtype),
+                               params["w_g"]))
+    out = _wkv_chunk_scan(r.astype(jnp.float32), k.astype(jnp.float32),
+                          v.astype(jnp.float32), w, params["u"],
+                          rcfg.head_dim, state0=wkv_state,
+                          return_state=return_state)
+    if return_state:
+        out, S = out
+    y = _groupnorm(out, params["ln_w"], params["ln_b"], H)
+    y = (y * g.astype(jnp.float32)).astype(x.dtype)
+    y = jnp.einsum("btd,de->bte", y, params["w_o"])
+    y = sh.shard(y, "batch", "seq", "dmodel")
+    if return_state:
+        return y, (x[:, -1], S)
+    return y
+
+
+def rwkv_ffn_forward(params, x, shift_state=None, return_state: bool = False):
+    xx = _token_shift(x, shift_state)
+    sx = (xx - x).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    xk = (xf + sx * params["mu_k"]).astype(x.dtype)
+    xr = (xf + sx * params["mu_r"]).astype(x.dtype)
+    k = jnp.einsum("btd,df->btf", xk, params["w_k"])
+    k = sh.shard(k, "batch", "seq", "ffn")
+    k = jnp.square(jax.nn.relu(k))
+    kv = jnp.einsum("btf,fd->btd", k, params["w_v"])
+    r = jax.nn.sigmoid(jnp.einsum("btd,de->bte", xr, params["w_r"]))
+    y = r * kv
+    y = sh.shard(y, "batch", "seq", "dmodel")
+    if return_state:
+        return y, x[:, -1]
+    return y
+
+
+# -- decode ------------------------------------------------------------------
+def rwkv6_decode_init(rcfg: RWKV6Config, d_model: int, batch: int, dtype):
+    H = d_model // rcfg.head_dim
+    return {
+        "att_shift": jnp.zeros((batch, d_model), dtype),
+        "ffn_shift": jnp.zeros((batch, d_model), dtype),
+        "wkv": jnp.zeros((batch, H, rcfg.head_dim, rcfg.head_dim),
+                         jnp.float32),
+    }
+
+
+def rwkv6_decode_step(rcfg: RWKV6Config, params, ffn_params, x, cache,
+                      norm1_fn, norm2_fn):
+    """One token through time-mix + channel-mix with cached states."""
+    h = norm1_fn(x)
+    y, (att_shift, wkv) = rwkv6_forward(
+        rcfg, params, h, shift_state=cache["att_shift"],
+        wkv_state=cache["wkv"], return_state=True)
+    x = x + y
+    h = norm2_fn(x)
+    y, ffn_shift = rwkv_ffn_forward(ffn_params, h,
+                                    shift_state=cache["ffn_shift"],
+                                    return_state=True)
+    x = x + y
+    return x, {"att_shift": att_shift, "ffn_shift": ffn_shift, "wkv": wkv}

@@ -1,0 +1,376 @@
+"""Decoder-stack assembly: init / forward / prefill / decode for every
+decoder-only architecture (dense, MoE, hybrid, VLM, SSM).
+
+The stack is organized as ``num_periods`` repetitions of a static
+``pattern`` of layers (homogeneous models: pattern length 1).  Parameters
+for pattern position ``j`` are stacked over periods and the whole stack runs
+under one ``lax.scan`` with an optional rematerialized body — HLO size and
+compile time are depth-independent (a 94-layer MoE compiles like a 1-layer
+one).
+
+Per-layer attention schedules (sliding-window size, rope theta) are *data*:
+they ride through the scan as xs, which is what lets gemma3's 5-local:1-global
+pattern share the homogeneous scan.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.sharding import specs as sh
+
+from . import attention as attn
+from . import mamba as mam
+from . import moe as moe_mod
+from . import rwkv6 as rwkv
+from .layers import (chunked_xent, dtype_of, embed, init_embed, init_mlp,
+                     mlp, rmsnorm, unembed_logits, zeros)
+
+
+# --------------------------------------------------------------------------
+# Init
+# --------------------------------------------------------------------------
+def _init_layer(cfg: ModelConfig, spec: LayerSpec, key):
+    dtype = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    p = {"norm1": zeros((cfg.d_model,), dtype),
+         "norm2": zeros((cfg.d_model,), dtype)}
+    if spec.mixer == "attention":
+        p["attn"] = attn.init_attention(ks[0], cfg.attention, cfg.d_model,
+                                        dtype)
+    elif spec.mixer == "mamba":
+        p["mamba"] = mam.init_mamba(ks[0], cfg.mamba, cfg.d_model, dtype)
+    elif spec.mixer == "rwkv6":
+        p["rwkv"] = rwkv.init_rwkv6(ks[0], cfg.rwkv6, cfg.d_model, dtype)
+    if spec.ffn == "dense":
+        p["mlp"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff, dtype)
+    elif spec.ffn == "moe":
+        p["moe"] = moe_mod.init_moe(ks[1], cfg.moe, cfg.d_model, dtype)
+    elif spec.ffn == "rwkv_ffn":
+        p["rwkvffn"] = rwkv.init_rwkv_ffn(ks[1], cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def init_params(cfg: ModelConfig, key):
+    dtype = dtype_of(cfg.param_dtype)
+    k_embed, k_stack, k_out = jax.random.split(key, 3)
+    params = {"embed": init_embed(k_embed, cfg.vocab_size, cfg.d_model,
+                                  dtype, cfg.tie_embeddings),
+              "final_norm": zeros((cfg.d_model,), dtype)}
+    stack = []
+    P = cfg.layers_per_period
+    for j, spec in enumerate(cfg.pattern):
+        keys = jax.random.split(jax.random.fold_in(k_stack, j),
+                                cfg.num_periods)
+        stacked = jax.vmap(lambda k: _init_layer(cfg, spec, k))(keys)
+        stack.append(stacked)
+    params["stack"] = tuple(stack)
+    return params
+
+
+def param_count(cfg: ModelConfig) -> int:
+    """Exact parameter count via eval_shape (no allocation)."""
+    shapes = jax.eval_shape(lambda k: init_params(cfg, k),
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    return sum(int(math.prod(s.shape)) for s in jax.tree.leaves(shapes))
+
+
+# --------------------------------------------------------------------------
+# Per-layer schedules (window, rope theta) as scan data
+# --------------------------------------------------------------------------
+def layer_schedules(cfg: ModelConfig):
+    L, P = cfg.num_layers, cfg.layers_per_period
+    win, theta = [], []
+    for l in range(L):
+        spec = cfg.pattern[l % P]
+        if spec.mixer == "attention" and cfg.attention is not None:
+            if cfg.window_pattern is not None:
+                w = cfg.window_pattern[l % len(cfg.window_pattern)]
+            else:
+                w = cfg.attention.window
+            if cfg.rope_theta_pattern is not None:
+                th = cfg.rope_theta_pattern[l % len(cfg.rope_theta_pattern)]
+            else:
+                th = cfg.attention.rope_theta
+        else:
+            w, th = 0, 1.0
+        win.append(w)
+        theta.append(th)
+    win = jnp.asarray(win, jnp.int32).reshape(cfg.num_periods, P)
+    theta = jnp.asarray(theta, jnp.float32).reshape(cfg.num_periods, P)
+    return win, theta
+
+
+# --------------------------------------------------------------------------
+# Forward (train / prefill)
+# --------------------------------------------------------------------------
+def _apply_layer(cfg, spec, p, h, positions, window, theta, mode,
+                 collect_cache):
+    """One layer; returns (h, aux, cache_entry)."""
+    aux = jnp.zeros((), jnp.float32)
+    cache = None
+    if spec.mixer == "attention":
+        # homogeneous window schedules expose a static value so the Pallas
+        # flash kernel (mask-specialized) can serve as the production path
+        static_win = (cfg.attention.window if cfg.window_pattern is None
+                      else None)
+        y, (k, v) = attn.self_attention(cfg.attention, p["attn"],
+                                        rmsnorm(h, p["norm1"], cfg.norm_eps),
+                                        positions, window, theta,
+                                        cfg.norm_eps,
+                                        static_window=static_win)
+        if collect_cache:
+            cache = {"k": k, "v": v}
+        h = h + y
+    elif spec.mixer == "mamba":
+        x_in = rmsnorm(h, p["norm1"], cfg.norm_eps)
+        if collect_cache:
+            y, st = _mamba_with_state(cfg, p["mamba"], x_in)
+            cache = st
+        else:
+            y = mam.mamba_forward(cfg.mamba, p["mamba"], x_in)
+        h = h + y
+    elif spec.mixer == "rwkv6":
+        x_in = rmsnorm(h, p["norm1"], cfg.norm_eps)
+        if collect_cache:
+            y, (shift, S) = rwkv.rwkv6_forward(cfg.rwkv6, p["rwkv"], x_in,
+                                               return_state=True)
+            cache = {"att_shift": shift, "wkv": S}
+        else:
+            y = rwkv.rwkv6_forward(cfg.rwkv6, p["rwkv"], x_in)
+        h = h + y
+
+    hn = rmsnorm(h, p["norm2"], cfg.norm_eps)
+    if spec.ffn == "dense":
+        h = h + mlp(p["mlp"], hn, cfg.act)
+    elif spec.ffn == "moe":
+        y, aux = moe_mod.moe_forward(cfg.moe, p["moe"], hn, cfg.act,
+                                     mode=mode, with_aux=(mode == "train"))
+        h = h + y
+    elif spec.ffn == "rwkv_ffn":
+        if collect_cache:
+            y, shift = rwkv.rwkv_ffn_forward(p["rwkvffn"], hn,
+                                             return_state=True)
+            cache = dict(cache or {}, ffn_shift=shift)
+        else:
+            y = rwkv.rwkv_ffn_forward(p["rwkvffn"], hn)
+        h = h + y
+    return h, aux, cache
+
+
+def _mamba_with_state(cfg, p, x):
+    """Run the mamba layer AND return its final (conv, ssm) state for
+    prefill→decode handoff: recompute the state from the last d_conv inputs
+    and a full scan (prefill is not latency-critical for state extraction)."""
+    y = mam.mamba_forward(cfg.mamba, p, x)
+    # final conv window: last (d_conv - 1) post-in_proj activations
+    d_in = cfg.mamba.expand * cfg.d_model
+    h = jnp.einsum("btd,de->bte", x, p["in_proj"])[..., :d_in]
+    K = cfg.mamba.d_conv
+    conv_state = h[:, -(K - 1):, :]
+    ssm = _mamba_final_state(cfg, p, x)
+    return y, {"conv": conv_state, "ssm": ssm}
+
+
+def _mamba_final_state(cfg, p, x):
+    """Final SSM state after consuming x (scan carrying only the state)."""
+    mcfg = cfg.mamba
+    d_in = mcfg.expand * cfg.d_model
+    h = jnp.einsum("btd,de->bte", x, p["in_proj"])[..., :d_in]
+    hc = mam._causal_conv(h, p["conv_w"], p["conv_b"])
+    hc = jax.nn.silu(hc)
+    dt_low = jnp.einsum("bte,er->btr", hc, p["x_dt"])
+    dt = jnp.einsum("btr,re->bte", dt_low, p["dt_proj"]).astype(jnp.float32)
+    dt = jax.nn.softplus(dt + p["dt_bias"])
+    Bm = jnp.einsum("bte,en->btn", hc, p["x_b"]).astype(jnp.float32)
+    Cm = jnp.einsum("bte,en->btn", hc, p["x_c"]).astype(jnp.float32)
+    a = -jnp.exp(p["a_log"])
+    xf = hc.astype(jnp.float32)
+
+    def step(s, t):
+        dt_t, B_t, x_t = t
+        da = jnp.exp(dt_t[..., None] * a)
+        s = s * da + (dt_t * x_t)[..., None] * B_t[:, None, :]
+        return s, None
+
+    B = x.shape[0]
+    s0 = jnp.zeros((B, d_in, mcfg.d_state), jnp.float32)
+    ts = (dt.swapaxes(0, 1), Bm.swapaxes(0, 1), xf.swapaxes(0, 1))
+    s, _ = jax.lax.scan(step, s0, ts)
+    return s
+
+
+def forward_hidden(cfg: ModelConfig, params, x, positions, mode: str = "train",
+                   collect_cache: bool = False):
+    """x: (B, S, D) embeddings -> (h, aux_total, cache|None)."""
+    win, theta = layer_schedules(cfg)
+
+    def period_fn(carry, xs):
+        h, aux = carry
+        # the carry crosses the remat boundary sequence-sharded (seqcarry
+        # rule); gather it for the layer body, re-shard before returning.
+        h = sh.shard(h, "batch", "seq", "dmodel")
+        stack_j, win_j, theta_j = xs
+        caches = []
+        for j, spec in enumerate(cfg.pattern):
+            h, a, c = _apply_layer(cfg, spec, stack_j[j], h, positions,
+                                   win_j[j], theta_j[j], mode, collect_cache)
+            aux = aux + a
+            caches.append(c)
+        h = sh.shard(h, "batch", "seqcarry", "dmodel")
+        return (h, aux), tuple(caches) if collect_cache else None
+
+    body = period_fn
+    if cfg.remat != "none" and mode == "train":
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if cfg.remat == "dots" else None)
+        body = jax.checkpoint(period_fn, policy=policy,
+                              prevent_cse=False)
+
+    (h, aux), caches = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                    (params["stack"], win, theta))
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    return h, aux, caches
+
+
+def embed_inputs(cfg: ModelConfig, params, batch):
+    if cfg.input_kind == "frames":
+        x = batch["frames"].astype(dtype_of(cfg.dtype))
+    else:
+        x = embed(params["embed"], batch["tokens"], cfg.embed_scale,
+                  cfg.d_model)
+    return x
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    """Next-token CE (+ MoE aux).  batch: tokens (B,S), labels (B,S),
+    optional mask (B,S)."""
+    x = embed_inputs(cfg, params, batch)
+    B, S, _ = x.shape
+    positions = jnp.arange(S, dtype=jnp.int32)
+    h, aux, _ = forward_hidden(cfg, params, x, positions, mode="train")
+    loss = chunked_xent(cfg, params["embed"], h, batch["labels"],
+                        batch.get("mask"))
+    # aux comes back summed over layers; report/penalize the per-MoE-layer mean
+    n_moe = sum(1 for i in range(cfg.num_layers)
+                if cfg.pattern[i % cfg.layers_per_period].ffn == "moe")
+    aux = aux / max(1, n_moe)
+    coef = cfg.moe.router_aux_coef if cfg.moe else 0.0
+    total = loss + coef * aux
+    return total, {"ce": loss, "aux": aux}
+
+
+# --------------------------------------------------------------------------
+# Prefill
+# --------------------------------------------------------------------------
+def prefill(cfg: ModelConfig, params, tokens):
+    """tokens (B, S) -> (last-token logits (B, V), cache at length S)."""
+    x = embed(params["embed"], tokens, cfg.embed_scale, cfg.d_model)
+    B, S, _ = x.shape
+    positions = jnp.arange(S, dtype=jnp.int32)
+    h, _, caches = forward_hidden(cfg, params, x, positions, mode="prefill",
+                                  collect_cache=True)
+    logits = unembed_logits(params["embed"], h[:, -1], cfg.tie_embeddings)
+    cache = {"stack": caches,
+             "len": jnp.full((B,), S, jnp.int32)}
+    return logits, cache
+
+
+# --------------------------------------------------------------------------
+# Decode
+# --------------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    """Empty decode cache sized for ``max_seq`` total positions."""
+    dtype = dtype_of(cfg.dtype)
+    entries = []
+    for spec in cfg.pattern:
+        n = cfg.num_periods
+        if spec.mixer == "attention":
+            a = cfg.attention
+            shape = (n, batch, max_seq, a.num_kv_heads, a.head_dim)
+            e = {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+        elif spec.mixer == "mamba":
+            st = mam.mamba_decode_init(cfg.mamba, cfg.d_model, batch, dtype)
+            e = jax.tree.map(lambda v: jnp.broadcast_to(v, (n,) + v.shape), st)
+        elif spec.mixer == "rwkv6":
+            st = rwkv.rwkv6_decode_init(cfg.rwkv6, cfg.d_model, batch, dtype)
+            e = {"att_shift": jnp.broadcast_to(st["att_shift"],
+                                               (n,) + st["att_shift"].shape),
+                 "wkv": jnp.broadcast_to(st["wkv"], (n,) + st["wkv"].shape)}
+            if spec.ffn == "rwkv_ffn":
+                e["ffn_shift"] = jnp.broadcast_to(
+                    st["ffn_shift"], (n,) + st["ffn_shift"].shape)
+        else:
+            e = {}
+        entries.append(e)
+    return {"stack": tuple(entries),
+            "len": jnp.zeros((batch,), jnp.int32)}
+
+
+def _decode_layer(cfg, spec, p, c, h, new_len, window, theta):
+    """One layer, one token.  h: (B, 1, D).  Returns (h, cache')."""
+    B = h.shape[0]
+    if spec.mixer == "attention":
+        hn = rmsnorm(h, p["norm1"], cfg.norm_eps)
+        k, v = attn.decode_project_kv(cfg.attention, p["attn"], hn, new_len,
+                                      theta, cfg.norm_eps)
+        # cache insert happens inside the CP kernel (local scatter on the
+        # owning shard; masked-write fallback without a mesh) — a global
+        # per-row scatter forces GSPMD to replicate the cache (§Perf C).
+        y, ck, cv = attn.decode_attention_cp(
+            cfg.attention, p["attn"], hn, c["k"], c["v"], k, v, new_len,
+            window, theta, cfg.norm_eps)
+        h = h + y
+        c = {"k": ck, "v": cv}
+    elif spec.mixer == "mamba":
+        hn = rmsnorm(h, p["norm1"], cfg.norm_eps)
+        y, c = mam.mamba_decode_step(cfg.mamba, p["mamba"], hn, c)
+        h = h + y
+    elif spec.mixer == "rwkv6":
+        hn = rmsnorm(h, p["norm1"], cfg.norm_eps)
+        y, (shift, S) = rwkv.rwkv6_forward(
+            cfg.rwkv6, p["rwkv"], hn, shift_state=c["att_shift"],
+            wkv_state=c["wkv"], return_state=True)
+        h = h + y
+        c = dict(c, att_shift=shift, wkv=S)
+
+    hn = rmsnorm(h, p["norm2"], cfg.norm_eps)
+    if spec.ffn == "dense":
+        h = h + mlp(p["mlp"], hn, cfg.act)
+    elif spec.ffn == "moe":
+        y, _ = moe_mod.moe_forward(cfg.moe, p["moe"], hn, cfg.act,
+                                   mode="decode", with_aux=False)
+        h = h + y
+    elif spec.ffn == "rwkv_ffn":
+        y, shift = rwkv.rwkv_ffn_forward(p["rwkvffn"], hn, return_state=True)
+        h = h + y
+        c = dict(c, ffn_shift=shift)
+    return h, c
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens):
+    """tokens (B, 1) -> (logits (B, V), cache')."""
+    x = embed(params["embed"], tokens, cfg.embed_scale, cfg.d_model)
+    new_len = cache["len"] + 1                               # (B,)
+    win, theta = layer_schedules(cfg)
+    theta = theta  # (periods, P)
+
+    def body(h, xs):
+        stack_j, cache_j, win_j, theta_j = xs
+        new_caches = []
+        for j, spec in enumerate(cfg.pattern):
+            h, cj = _decode_layer(cfg, spec, stack_j[j], cache_j[j], h,
+                                  new_len, win_j[j], theta_j[j])
+            new_caches.append(cj)
+        return h, tuple(new_caches)
+
+    h, new_stack = jax.lax.scan(
+        body, x, (params["stack"], cache["stack"], win, theta))
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    logits = unembed_logits(params["embed"], h[:, 0], cfg.tie_embeddings)
+    return logits, {"stack": new_stack, "len": new_len}

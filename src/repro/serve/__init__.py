@@ -1,0 +1,7 @@
+"""Serving: slot-based decode engine + window-driven continuous batching."""
+
+from .engine import DecodeEngine, Request, SimulatedEngine
+from .scheduler import ContinuousBatcher, SchedStats
+
+__all__ = ["DecodeEngine", "SimulatedEngine", "Request",
+           "ContinuousBatcher", "SchedStats"]

@@ -1,0 +1,190 @@
+"""Slot-based decode engine: prefill → KV-resident standby → active decode.
+
+The engine is the resource the paper's spinning window governs at serving
+time (DESIGN.md §3.2).  Request lifecycle:
+
+    queued (cold)   — no device state, no cost, pays prefill on promotion
+    standby (hot)   — PREFILLED AHEAD: KV cache resident, zero-latency entry
+    active          — occupies a decode slot, one token per engine step
+    done
+
+``standby`` is the sleep→spin transition made concrete: a standby request
+has already paid its wake-up latency (prefill) *before* a slot frees, so the
+handoff is immediate — exactly like the woken thread that joins the spinning
+window before the lock is released.  Holding standby KV is the resource
+cost; the :class:`~repro.core.window.SpinningWindow` in
+:mod:`repro.serve.scheduler` tunes how many to keep.
+
+The engine below runs the *real* jitted model (tiny configs on CPU in tests
+and examples).  :class:`SimulatedEngine` exposes the same interface with a
+cost model for large-scale scheduler benchmarks.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import models
+from repro.configs.base import ModelConfig
+
+
+# --------------------------------------------------------------------------
+# Requests
+# --------------------------------------------------------------------------
+@dataclass
+class Request:
+    rid: int
+    prompt: list            # token ids
+    max_new_tokens: int
+    arrived_at: float = 0.0
+    generated: list = field(default_factory=list)
+    # bookkeeping for metrics
+    t_prefill_start: float = -1.0
+    t_first_token: float = -1.0
+    t_done: float = -1.0
+
+    @property
+    def done(self) -> bool:
+        return len(self.generated) >= self.max_new_tokens
+
+
+# --------------------------------------------------------------------------
+# Real engine
+# --------------------------------------------------------------------------
+class DecodeEngine:
+    """Batched decode over ``max_slots`` sequences with insertable KV.
+
+    prefill(tokens)           -> (next_token, cache_1)      [one sequence]
+    insert(slot, cache_1, n)  -> write a prefilled sequence into the batch
+    step()                    -> one greedy token for every occupied slot
+    evict(slot)               -> free the slot
+    """
+
+    def __init__(self, cfg: ModelConfig, params, max_slots: int,
+                 max_seq: int):
+        self.cfg = cfg
+        self.params = params
+        self.max_slots = max_slots
+        self.max_seq = max_seq
+        self.cache = models.init_cache(cfg, max_slots, max_seq)
+        self.occupied = np.zeros(max_slots, bool)
+        self.slot_req: list[Request | None] = [None] * max_slots
+
+        self._prefill = jax.jit(
+            lambda p, toks: models.prefill(cfg, p, {"tokens": toks}))
+        self._decode = jax.jit(
+            lambda p, cache, toks: models.decode_step(cfg, p, cache, toks))
+        self._tokens = np.zeros((max_slots, 1), np.int32)
+
+    # -- prefill one request (B=1), outside the batch -----------------------
+    def prefill(self, prompt: list):
+        toks = jnp.asarray(prompt, jnp.int32)[None, :]
+        logits, cache1 = self._prefill(self.params, toks)
+        next_tok = int(jnp.argmax(logits[0]))
+        return next_tok, cache1
+
+    # -- slot management ----------------------------------------------------
+    def insert(self, slot: int, cache1, prompt_len: int, first_token: int,
+               req: Request) -> None:
+        assert not self.occupied[slot]
+
+        def put(big, small):
+            if small is None or big is None:
+                return big
+            # big: (periods, max_slots, ...); small: (periods, 1, ...)
+            if small.ndim >= 3 and small.shape[1] == 1:
+                pad = [(0, 0)] * small.ndim
+                if small.ndim >= 3 and big.shape[2] != small.shape[2]:
+                    pad[2] = (0, big.shape[2] - small.shape[2])
+                    small = jnp.pad(small, pad)
+                return jax.lax.dynamic_update_slice_in_dim(
+                    big, small.astype(big.dtype), slot, axis=1)
+            return big
+
+        self.cache["stack"] = jax.tree.map(put, self.cache["stack"],
+                                           cache1["stack"])
+        self.cache["len"] = self.cache["len"].at[slot].set(prompt_len)
+        self.occupied[slot] = True
+        self.slot_req[slot] = req
+        self._tokens[slot, 0] = first_token
+        req.generated.append(first_token)
+
+    def evict(self, slot: int) -> None:
+        self.occupied[slot] = False
+        self.slot_req[slot] = None
+        self.cache["len"] = self.cache["len"].at[slot].set(0)
+
+    def free_slots(self) -> list[int]:
+        return [i for i in range(self.max_slots) if not self.occupied[i]]
+
+    # -- one decode step over the whole batch -------------------------------
+    def step(self) -> list[tuple[int, int]]:
+        """Decode one token for every occupied slot.  Returns
+        [(slot, token)] for occupied slots."""
+        if not self.occupied.any():
+            return []
+        toks = jnp.asarray(self._tokens)
+        logits, self.cache = self._decode(self.params, self.cache, toks)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        out = []
+        # un-occupied slots decoded garbage; mask them out and rewind lens
+        lens = np.array(self.cache["len"])
+        for i in range(self.max_slots):
+            if self.occupied[i]:
+                tok = int(nxt[i])
+                self._tokens[i, 0] = tok
+                self.slot_req[i].generated.append(tok)
+                out.append((i, tok))
+            else:
+                lens[i] = 0
+        self.cache["len"] = jnp.asarray(lens)
+        return out
+
+
+# --------------------------------------------------------------------------
+# Simulated engine: same interface, synthetic timing (for sched benchmarks)
+# --------------------------------------------------------------------------
+class SimulatedEngine:
+    """Cost model: prefill takes ``prefill_cost`` seconds of engine time,
+    a decode step takes ``step_cost(n_active)`` seconds.  Tokens are fake."""
+
+    def __init__(self, max_slots: int, prefill_cost: float = 5e-3,
+                 step_base: float = 1e-3, step_per_slot: float = 1e-4):
+        self.max_slots = max_slots
+        self.prefill_cost = prefill_cost
+        self.step_base = step_base
+        self.step_per_slot = step_per_slot
+        self.occupied = np.zeros(max_slots, bool)
+        self.slot_req: list[Request | None] = [None] * max_slots
+        self.now = 0.0
+
+    def prefill(self, prompt: list):
+        self.now += self.prefill_cost
+        return 0, {"sim": True}
+
+    def insert(self, slot, cache1, prompt_len, first_token, req: Request):
+        assert not self.occupied[slot]
+        self.occupied[slot] = True
+        self.slot_req[slot] = req
+        req.generated.append(first_token)
+
+    def evict(self, slot):
+        self.occupied[slot] = False
+        self.slot_req[slot] = None
+
+    def free_slots(self):
+        return [i for i in range(self.max_slots) if not self.occupied[i]]
+
+    def step(self):
+        n = int(self.occupied.sum())
+        self.now += self.step_base + self.step_per_slot * n
+        out = []
+        for i in range(self.max_slots):
+            if self.occupied[i]:
+                self.slot_req[i].generated.append(0)
+                out.append((i, 0))
+        return out

@@ -1,0 +1,103 @@
+"""Per-architecture parallelism profiles — the table the perf loop edits.
+
+Profiles resolve to :class:`~repro.sharding.specs.MeshRules`:
+
+* **train** — DP over (pod, data); TP over model (heads/ffn/vocab/expert);
+  FSDP (ZeRO-3 weights + optimizer state) over data; for deep/wide models
+  the scan carry (the residual stream saved by remat between layers) is
+  additionally sequence-sharded over model (``seqcarry``) — Megatron-SP
+  style, 16x less activation checkpoint memory.
+  For archs whose head count does not divide the model axis (gemma3: 8H,
+  qwen2.5: 40H, whisper: 20H on a 16-way axis) attention is instead
+  **context-parallel**: K/V sequence-sharded (``kvseq``), softmax combined
+  with partial max/sum (flash-decode style) by GSPMD.
+* **serve** — KV caches sequence-sharded over model (flash-decode);
+  weights replicated over data for low latency, except ≥30 B-param models
+  which FSDP weights over data (ZeRO-inference) to fit HBM.
+
+``overrides`` lets the hillclimb re-shard a cell without touching code:
+``--set seqcarry=model --set fsdp=pod,data``.
+"""
+
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+
+from .specs import MeshRules
+
+
+def _axis_size(mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
+
+
+def train_rules(cfg: ModelConfig, mesh, overrides: dict | None = None
+                ) -> MeshRules:
+    model_sz = _axis_size(mesh, "model")
+    heads_divisible = (cfg.attention is not None
+                       and cfg.attention.num_heads % model_sz == 0)
+    # deep/wide models: shard the remat'd scan carry over model (seq dim)
+    big_carry = cfg.d_model * cfg.num_layers >= 80_000
+    rules = MeshRules(
+        batch=("pod", "data"),
+        seq=None,
+        seqcarry="model" if big_carry else None,
+        kvseq=None if (heads_divisible or cfg.attention is None)
+        else "model",
+        heads="model",
+        kvheads="model",
+        dmodel=None,
+        ffn="model",
+        vocab="model",
+        expert="model",
+        fsdp=("data",),
+    )
+    if overrides:
+        rules = rules.with_overrides(**overrides)
+    return rules
+
+
+def serve_rules(cfg: ModelConfig, mesh, overrides: dict | None = None
+                ) -> MeshRules:
+    from repro import models
+    # >=2.5B: replicated weights crowd out the KV cache on 16 GB chips
+    # (qwen2.5 decode_32k measured 34.9 GiB/dev with replicated weights;
+    # stablelm's MHA cache needs the params sharded too).  Below that the
+    # per-layer gather latency isn't worth the <2 GB saved.
+    big = models.param_count(cfg) >= 2.5e9
+    rules = MeshRules(
+        batch=("pod", "data"),
+        seq=None,
+        seqcarry=None,
+        kvseq="model",
+        heads="model",
+        kvheads="model",
+        dmodel=None,
+        ffn="model",
+        vocab="model",
+        expert="model",
+        fsdp=("data",) if big else None,
+    )
+    if overrides:
+        rules = rules.with_overrides(**overrides)
+    return rules
+
+
+def rules_for(cfg: ModelConfig, mesh, step: str,
+              overrides: dict | None = None) -> MeshRules:
+    if step == "train":
+        return train_rules(cfg, mesh, overrides).restrict(mesh)
+    return serve_rules(cfg, mesh, overrides).restrict(mesh)
+
+
+def parse_rule_overrides(pairs: list[str]) -> dict:
+    """['seqcarry=model', 'fsdp=pod,data', 'kvseq='] -> kwargs dict."""
+    out: dict = {}
+    for p in pairs:
+        k, _, v = p.partition("=")
+        if not v:
+            out[k] = None
+        elif "," in v:
+            out[k] = tuple(x for x in v.split(",") if x)
+        else:
+            out[k] = v
+    return out

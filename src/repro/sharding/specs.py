@@ -1,0 +1,338 @@
+"""Logical-axis sharding rules (GSPMD) for the whole framework.
+
+Model code annotates activations/params with *logical* axis names; this
+module resolves them to physical mesh axes.  Keeping the mapping in one
+place lets the perf loop re-shard the entire model by editing a rule table
+instead of touching model code (DESIGN.md §4).
+
+Logical axes:
+
+    batch    — global batch                (data parallel)
+    seq      — sequence (activations)      (sequence parallel, long-context)
+    kvseq    — KV-cache sequence           (decode-time SP)
+    heads    — attention heads             (tensor parallel)
+    kvheads  — KV heads                    (TP when divisible, else replicated)
+    dmodel   — residual/model dim          (usually unsharded for activations)
+    ffn      — MLP hidden dim              (tensor parallel)
+    vocab    — embedding/logits vocab dim  (tensor parallel)
+    expert   — MoE experts                 (expert parallel)
+    fsdp     — parameter FSDP shards       (maps onto the data axis)
+
+A rule value may be a mesh-axis name, a tuple of names, or None.
+"""
+
+from __future__ import annotations
+
+import re
+import threading
+from contextlib import contextmanager
+from dataclasses import dataclass, field, replace
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class MeshRules:
+    """Resolution table: logical axis -> physical mesh axis (or axes)."""
+
+    batch: tuple | str | None = ("pod", "data")
+    seq: tuple | str | None = None
+    # the scan-carry residual stream (what remat stores between layers);
+    # sharding it over "model" is Megatron-SP-style sequence parallelism
+    seqcarry: tuple | str | None = None
+    kvseq: tuple | str | None = "model"
+    heads: tuple | str | None = "model"
+    kvheads: tuple | str | None = "model"
+    dmodel: tuple | str | None = None
+    ffn: tuple | str | None = "model"
+    vocab: tuple | str | None = "model"
+    expert: tuple | str | None = "model"
+    fsdp: tuple | str | None = None          # set to ("pod","data") for FSDP
+
+    def resolve(self, logical: str | None):
+        if logical is None:
+            return None
+        return getattr(self, logical)
+
+    def with_overrides(self, **kw) -> "MeshRules":
+        return replace(self, **kw)
+
+    def strip(self, axis: str) -> "MeshRules":
+        """Remove one physical axis from every rule (e.g. 'pod' when it is
+        manualized by an enclosing shard_map)."""
+        kw = {}
+        for fld in self.__dataclass_fields__:
+            axes = getattr(self, fld)
+            if axes is None:
+                continue
+            if isinstance(axes, str):
+                kw[fld] = None if axes == axis else axes
+            else:
+                kept = tuple(a for a in axes if a != axis)
+                kw[fld] = (kept if len(kept) > 1
+                           else (kept[0] if kept else None))
+        return replace(self, **kw)
+
+    def restrict(self, mesh: "Mesh") -> "MeshRules":
+        """Drop references to axes the mesh does not have (e.g. 'pod' on a
+        single-pod mesh)."""
+        kw = {}
+        for fld in self.__dataclass_fields__:
+            axes = getattr(self, fld)
+            if axes is None:
+                continue
+            if isinstance(axes, str):
+                kw[fld] = axes if axes in mesh.axis_names else None
+            else:
+                kept = tuple(a for a in axes if a in mesh.axis_names)
+                kw[fld] = (kept if len(kept) > 1
+                           else (kept[0] if kept else None))
+        return replace(self, **kw)
+
+
+# --------------------------------------------------------------------------
+# Thread-local sharding context.  When no mesh is installed (CPU smoke tests)
+# every annotation is the identity, so model code runs unmodified.
+# --------------------------------------------------------------------------
+class _Ctx(threading.local):
+    def __init__(self):
+        self.mesh: Mesh | None = None
+        self.rules: MeshRules | None = None
+
+
+_CTX = _Ctx()
+
+
+@contextmanager
+def use_mesh(mesh: Mesh, rules: MeshRules):
+    """Install (mesh, rules); valid mesh-axis names are checked eagerly."""
+    for fld in rules.__dataclass_fields__:
+        axes = rules.resolve(fld)
+        if axes is None:
+            continue
+        for ax in (axes,) if isinstance(axes, str) else axes:
+            if ax not in mesh.axis_names:
+                raise ValueError(
+                    f"rule {fld}={axes!r} references unknown mesh axis {ax!r}"
+                    f" (mesh has {mesh.axis_names})")
+    prev = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh, _CTX.rules = mesh, rules
+    try:
+        yield
+    finally:
+        _CTX.mesh, _CTX.rules = prev
+
+
+def current_mesh() -> Mesh | None:
+    return _CTX.mesh
+
+
+def current_rules() -> MeshRules:
+    return _CTX.rules if _CTX.rules is not None else MeshRules()
+
+
+def active() -> bool:
+    return _CTX.mesh is not None
+
+
+def _dim_ok(dim_size: int, axes, mesh: Mesh) -> bool:
+    """Only shard a dimension the mesh divides evenly (e.g. 8 kv-heads on a
+    16-way model axis -> replicate instead)."""
+    if axes is None:
+        return False
+    n = 1
+    for ax in (axes,) if isinstance(axes, str) else axes:
+        n *= mesh.shape[ax]
+    return dim_size % n == 0 and dim_size >= n
+
+
+def logical_to_spec(shape: tuple[int, ...], logical: tuple[str | None, ...],
+                    mesh: Mesh, rules: MeshRules) -> P:
+    """Resolve logical axes to a PartitionSpec, dropping non-divisible dims
+    and axes already consumed by an earlier dimension."""
+    assert len(shape) == len(logical), (shape, logical)
+    used: set[str] = set()
+    out = []
+    for size, name in zip(shape, logical):
+        axes = rules.resolve(name)
+        if axes is not None and not isinstance(axes, str):
+            axes = tuple(a for a in axes if a in mesh.axis_names)
+            axes = axes or None
+        if isinstance(axes, str) and axes not in mesh.axis_names:
+            axes = None
+        # an axis may appear in only one dim of a spec
+        if axes is not None:
+            flat = (axes,) if isinstance(axes, str) else tuple(axes)
+            if any(a in used for a in flat) or not _dim_ok(size, flat, mesh):
+                axes = None
+            else:
+                used.update(flat)
+                axes = flat[0] if len(flat) == 1 else tuple(flat)
+        out.append(axes)
+    return P(*out)
+
+
+def shard(x: jax.Array, *logical: str | None) -> jax.Array:
+    """Annotate an activation with logical axes (identity without a mesh)."""
+    if not active() or not hasattr(x, "ndim"):
+        return x
+    if x.ndim != len(logical):
+        raise ValueError(f"rank {x.ndim} vs logical {logical}")
+    spec = logical_to_spec(x.shape, logical, _CTX.mesh, _CTX.rules)
+    if all(a is None for a in spec):
+        # no axis resolved: leave the tensor unconstrained (a P(None,...)
+        # constraint would FORCE replication)
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_CTX.mesh, spec))
+
+
+def named_sharding(*axes) -> NamedSharding:
+    assert active()
+    return NamedSharding(_CTX.mesh, P(*axes))
+
+
+# --------------------------------------------------------------------------
+# Parameter sharding: path-pattern -> logical axes, resolved against shapes.
+# Patterns are regexes over the '/'-joined pytree path.  First match wins.
+# --------------------------------------------------------------------------
+#: (regex, logical axes per dim — trailing dims matched right-aligned)
+PARAM_RULES: list[tuple[str, tuple]] = [
+    # embeddings / lm head: shard the vocab dim
+    (r"embed/tok$",            ("vocab", "fsdp")),
+    (r"lm_head$",              ("fsdp", "vocab")),
+    (r"pos_embed$",            (None, None)),
+    # attention projections (stacked layers get an extra leading dim)
+    (r"(attn|self_attn|cross_attn)/wq$",   ("fsdp", "heads", None)),
+    (r"(attn|self_attn|cross_attn)/wk$",   ("fsdp", "kvheads", None)),
+    (r"(attn|self_attn|cross_attn)/wv$",   ("fsdp", "kvheads", None)),
+    (r"(attn|self_attn|cross_attn)/wo$",   ("heads", None, "fsdp")),
+    (r"(attn|self_attn|cross_attn)/(bq)$", ("heads", None)),
+    (r"(attn|self_attn|cross_attn)/(bk|bv)$", ("kvheads", None)),
+    (r"(attn|self_attn|cross_attn)/(bo)$", (None,)),
+    # dense mlp
+    (r"mlp/w_(in|gate)$",      ("fsdp", "ffn")),
+    (r"mlp/w_out$",            ("ffn", "fsdp")),
+    (r"mlp/b_(in|gate)$",      ("ffn",)),
+    (r"mlp/b_out$",            (None,)),
+    # MoE: experts on the leading dim
+    (r"moe/router$",           ("fsdp", None)),
+    (r"moe/w_(in|gate)$",      ("expert", "fsdp", "ffn")),
+    (r"moe/w_out$",            ("expert", "ffn", "fsdp")),
+    # mamba
+    (r"mamba/in_proj$",        ("fsdp", "ffn")),
+    (r"mamba/conv_w$",         (None, "ffn")),
+    (r"mamba/conv_b$",         ("ffn",)),
+    (r"mamba/(x_dt|x_b|x_c)$", ("ffn", None)),
+    (r"mamba/dt_proj$",        (None, "ffn")),
+    (r"mamba/dt_bias$",        ("ffn",)),
+    (r"mamba/a_log$",          ("ffn", None)),
+    (r"mamba/d$",              ("ffn",)),
+    (r"mamba/out_proj$",       ("ffn", "fsdp")),
+    (r"mamba/norm$",           ("ffn",)),
+    # rwkv6
+    (r"rwkv/(w_r|w_k|w_v|w_g)$",  ("fsdp", "ffn")),
+    (r"rwkv/w_o$",             ("ffn", "fsdp")),
+    (r"rwkv/(mu_.*|w0|ddlerp_.*)$", None),      # small mixing vectors
+    (r"rwkv/(lora_.*)$",       None),
+    (r"rwkv/ln_(w|b)$",        (None,)),
+    (r"rwkvffn/w_k$",          ("fsdp", "ffn")),
+    (r"rwkvffn/w_v$",          ("ffn", "fsdp")),
+    (r"rwkvffn/w_r$",          ("fsdp", None)),
+    (r"rwkvffn/mu_.*$",        None),
+    # norms & scalars: replicate
+    (r".*(norm|ln)[^/]*$",     None),
+    (r".*", None),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_logical_axes(path_str: str, ndim: int) -> tuple:
+    """Match PARAM_RULES; right-align the logical axes to the array rank
+    (stacked-layer params carry extra leading dims which stay unsharded,
+    except FSDP which may claim the stack dim via rule override)."""
+    for pat, logical in PARAM_RULES:
+        if re.search(pat, path_str):
+            if logical is None:
+                return (None,) * ndim
+            logical = tuple(logical)
+            if len(logical) > ndim:      # un-stacked variant (e.g. biases)
+                logical = logical[-ndim:]
+            pad = (None,) * (ndim - len(logical))
+            return pad + logical
+    return (None,) * ndim
+
+
+def param_specs(params_shape, mesh: Mesh, rules: MeshRules):
+    """PartitionSpec pytree for a parameter pytree of ShapeDtypeStructs."""
+
+    def one(path, leaf):
+        logical = param_logical_axes(_path_str(path), len(leaf.shape))
+        return logical_to_spec(leaf.shape, logical, mesh, rules)
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def param_shardings(params_shape, mesh: Mesh, rules: MeshRules):
+    specs = param_specs(params_shape, mesh, rules)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+# --------------------------------------------------------------------------
+# Decode-cache sharding: KV caches sequence-sharded (flash-decode), SSM /
+# linear-attention states sharded over their channel dims.
+# --------------------------------------------------------------------------
+CACHE_RULES: list[tuple[str, tuple]] = [
+    # attention KV: (periods, B, S, KV, hd) — (^|/) also catches the
+    # enc-dec cache whose k/v live at the pytree root (dry-run §Perf B.1:
+    # the missing anchor replicated whisper's 43 GB cache per device)
+    (r"(^|/)(k|v)$",        (None, "batch", "kvseq", "kvheads", None)),
+    # whisper cross-attention KV: (L, B, enc_seq, KV, hd)
+    (r"enc_kv",             (None, "batch", None, "kvheads", None)),
+    # mamba: conv (periods, B, K-1, d_in), ssm (periods, B, d_in, N)
+    (r"/conv$",             (None, "batch", None, "ffn")),
+    (r"/ssm$",              (None, "batch", "ffn", None)),
+    # rwkv6: wkv (periods, B, H, hd, hd); shifts (periods, B, D)
+    (r"/wkv$",              (None, "batch", "heads", None, None)),
+    (r"_shift$",            (None, "batch", None)),
+    (r"/len$",              ("batch",)),
+    (r".*",                 None),
+]
+
+
+def cache_logical_axes(path_str: str, ndim: int) -> tuple:
+    for pat, logical in CACHE_RULES:
+        if re.search(pat, path_str):
+            if logical is None:
+                return (None,) * ndim
+            logical = tuple(logical)
+            if len(logical) > ndim:
+                logical = logical[-ndim:]
+            return (None,) * (ndim - len(logical)) + logical
+    return (None,) * ndim
+
+
+def cache_specs(cache_shape, mesh: Mesh, rules: MeshRules):
+    def one(path, leaf):
+        logical = cache_logical_axes(_path_str(path), len(leaf.shape))
+        return logical_to_spec(leaf.shape, logical, mesh, rules)
+
+    return jax.tree_util.tree_map_with_path(one, cache_shape)
+
+
+def tree_shardings(specs, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda s: isinstance(s, P))

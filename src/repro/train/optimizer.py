@@ -1,0 +1,252 @@
+"""Optimizers from scratch (no optax): AdamW and Adafactor, pytree-based.
+
+Both are written so that *optimizer state inherits the parameter sharding*
+(ZeRO-1/3 falls out of the dry-run's param shardings: every state leaf has the
+same shape as — or a reduced shape derived from — its parameter, so GSPMD
+propagates the sharding).  Adafactor is the memory-lean choice for the
+≥100 B-parameter architectures (jamba-398b, qwen3-moe-235b): factored second
+moments are O(rows + cols) instead of O(rows·cols), and master weights are
+optional.
+
+API (mirrors the optax triple, but plain functions):
+
+    opt = make_optimizer(tcfg)              # tcfg: TrainConfig
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params, step)
+    params = apply_updates(params, updates)
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------------------
+# Config
+# --------------------------------------------------------------------------
+@dataclass(frozen=True)
+class TrainConfig:
+    optimizer: str = "adamw"            # adamw | adafactor | sgd
+    learning_rate: float = 3e-4
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    weight_decay: float = 0.01
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    grad_clip_norm: float = 1.0
+    # adafactor
+    factored: bool = True
+    master_weights: bool = False        # fp32 master copy (off: update in-place)
+    # gradient accumulation (microbatches per optimizer step)
+    grad_accum: int = 1
+    # dtype of the accumulation buffer: float32 (exact) or bfloat16 (saves
+    # 2 bytes/param of HBM on memory-bound frontier-scale train cells)
+    accum_dtype: str = "float32"
+    # int8 error-feedback gradient compression on the cross-pod all-reduce
+    dp_compression: str = "none"        # none | int8
+    seed: int = 0
+
+
+# --------------------------------------------------------------------------
+# LR schedule: linear warmup -> cosine decay to min_lr_ratio
+# --------------------------------------------------------------------------
+def lr_schedule(tcfg: TrainConfig, step):
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(1.0, (step + 1.0) / max(1, tcfg.warmup_steps))
+    prog = jnp.clip((step - tcfg.warmup_steps)
+                    / max(1, tcfg.decay_steps - tcfg.warmup_steps), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    scale = tcfg.min_lr_ratio + (1.0 - tcfg.min_lr_ratio) * cos
+    return tcfg.learning_rate * warm * scale
+
+
+# --------------------------------------------------------------------------
+# Global-norm clipping
+# --------------------------------------------------------------------------
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+# --------------------------------------------------------------------------
+# Optimizer protocol
+# --------------------------------------------------------------------------
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable           # (grads, state, params, step) -> (updates, state)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(
+        lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype), params,
+        updates)
+
+
+# --------------------------------------------------------------------------
+# AdamW
+# --------------------------------------------------------------------------
+def make_adamw(tcfg: TrainConfig) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "count": jnp.zeros((), jnp.int32),
+                "grad_norm": jnp.zeros((), jnp.float32),
+                "lr": jnp.zeros((), jnp.float32)}
+
+    def update(grads, state, params, step):
+        grads, gnorm = clip_by_global_norm(grads, tcfg.grad_clip_norm)
+        count = state["count"] + 1
+        b1, b2 = tcfg.b1, tcfg.b2
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g,
+                         state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g),
+                         state["v"], grads)
+        c1 = 1.0 - b1 ** count.astype(jnp.float32)
+        c2 = 1.0 - b2 ** count.astype(jnp.float32)
+        lr = lr_schedule(tcfg, step)
+
+        def upd(m_, v_, p):
+            mhat = m_ / c1
+            vhat = v_ / c2
+            u = mhat / (jnp.sqrt(vhat) + tcfg.eps)
+            if tcfg.weight_decay and p.ndim >= 2:   # no decay on norms/bias
+                u = u + tcfg.weight_decay * p.astype(jnp.float32)
+            return -lr * u
+
+        updates = jax.tree.map(upd, m, v, params)
+        return updates, {"m": m, "v": v, "count": count,
+                         "grad_norm": gnorm, "lr": lr}
+
+    return Optimizer(init=init, update=update)
+
+
+# --------------------------------------------------------------------------
+# Adafactor (Shazeer & Stern 2018): factored v, no m by default, relative
+# update scale.  State per matrix param: v_row (rows,), v_col (cols,).
+# --------------------------------------------------------------------------
+def _factored_dims(shape):
+    """Return (row_axis, col_axis) for factoring, or None for <2D params.
+    The two largest trailing dims are factored (stacked-layer leading dims
+    are treated as batch dims of independent factorizations)."""
+    if len(shape) < 2:
+        return None
+    return len(shape) - 2, len(shape) - 1
+
+
+def make_adafactor(tcfg: TrainConfig) -> Optimizer:
+    decay = 0.8  # beta2 schedule exponent: 1 - t^-0.8 (paper default)
+
+    def init(params):
+        def leaf(p):
+            dims = _factored_dims(p.shape) if tcfg.factored else None
+            if dims is None:
+                return {"v": jnp.zeros(p.shape, jnp.float32)}
+            r, c = dims
+            # v_row: drop col axis; v_col: drop row axis
+            row_shape = tuple(s for i, s in enumerate(p.shape) if i != c)
+            col_shape = tuple(s for i, s in enumerate(p.shape) if i != r)
+            return {"v_row": jnp.zeros(row_shape, jnp.float32),
+                    "v_col": jnp.zeros(col_shape, jnp.float32)}
+
+        st = {"v": jax.tree.map(leaf, params),
+              "count": jnp.zeros((), jnp.int32),
+              "grad_norm": jnp.zeros((), jnp.float32),
+              "lr": jnp.zeros((), jnp.float32)}
+        if tcfg.master_weights:
+            st["master"] = jax.tree.map(
+                lambda p: p.astype(jnp.float32), params)
+        return st
+
+    def update(grads, state, params, step):
+        grads, gnorm = clip_by_global_norm(grads, tcfg.grad_clip_norm)
+        count = state["count"] + 1
+        t = count.astype(jnp.float32)
+        beta2 = 1.0 - t ** (-decay)
+        lr = lr_schedule(tcfg, step)
+
+        def leaf(g, v, p):
+            g2 = jnp.square(g) + 1e-30
+            dims = _factored_dims(p.shape) if tcfg.factored else None
+            if dims is None:
+                v_new = beta2 * v["v"] + (1 - beta2) * g2
+                u = g * jax.lax.rsqrt(v_new + tcfg.eps)
+                new_v = {"v": v_new}
+            else:
+                r, c = dims
+                vr = beta2 * v["v_row"] + (1 - beta2) * jnp.mean(g2, axis=c)
+                vc = beta2 * v["v_col"] + (1 - beta2) * jnp.mean(g2, axis=r)
+                # rank-1 reconstruction: v ~= vr vc / mean(vr)
+                denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), 1e-30)
+                vhat = (jnp.expand_dims(vr / denom, c)
+                        * jnp.expand_dims(vc, r))
+                u = g * jax.lax.rsqrt(vhat + tcfg.eps)
+                new_v = {"v_row": vr, "v_col": vc}
+            # update clipping (adafactor d=1.0)
+            rms_u = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+            u = u / jnp.maximum(1.0, rms_u)
+            # relative step scale
+            p_scale = jnp.maximum(
+                jnp.sqrt(jnp.mean(jnp.square(p.astype(jnp.float32)))), 1e-3)
+            upd = -lr * p_scale * u
+            if tcfg.weight_decay and p.ndim >= 2:
+                upd = upd - lr * tcfg.weight_decay * p.astype(jnp.float32)
+            return upd, new_v
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_v = treedef.flatten_up_to(state["v"])
+        flat_p = jax.tree.leaves(params)
+        outs = [leaf(g, v, p) for g, v, p in zip(flat_g, flat_v, flat_p)]
+        updates = treedef.unflatten([o[0] for o in outs])
+        new_v = treedef.unflatten([o[1] for o in outs])
+        new_state = {"v": new_v, "count": count,
+                     "grad_norm": gnorm, "lr": lr}
+        if tcfg.master_weights:
+            master = jax.tree.map(lambda mp, u: mp + u,
+                                  state["master"], updates)
+            new_state["master"] = master
+            updates = jax.tree.map(
+                lambda mp, p: mp - p.astype(jnp.float32), master, params)
+        return updates, new_state
+
+    return Optimizer(init=init, update=update)
+
+
+# --------------------------------------------------------------------------
+# SGD (tests / ablations)
+# --------------------------------------------------------------------------
+def make_sgd(tcfg: TrainConfig) -> Optimizer:
+    def init(params):
+        return {"count": jnp.zeros((), jnp.int32),
+                "grad_norm": jnp.zeros((), jnp.float32),
+                "lr": jnp.zeros((), jnp.float32)}
+
+    def update(grads, state, params, step):
+        grads, gnorm = clip_by_global_norm(grads, tcfg.grad_clip_norm)
+        lr = lr_schedule(tcfg, step)
+        updates = jax.tree.map(lambda g: -lr * g, grads)
+        return updates, {"count": state["count"] + 1,
+                         "grad_norm": gnorm, "lr": lr}
+
+    return Optimizer(init=init, update=update)
+
+
+def make_optimizer(tcfg: TrainConfig) -> Optimizer:
+    return {"adamw": make_adamw, "adafactor": make_adafactor,
+            "sgd": make_sgd}[tcfg.optimizer](tcfg)

@@ -1,0 +1,195 @@
+"""train_step / eval_step builders.
+
+``make_train_step(cfg, tcfg)`` returns a pure function
+
+    train_step(state, batch) -> (state', metrics)
+
+where ``state = {"params", "opt", "step"}``.  Features:
+
+* gradient accumulation (``tcfg.grad_accum`` microbatches via ``lax.scan``) —
+  the memory lever for the hillclimb;
+* optional **int8 error-feedback compression** of the cross-pod gradient
+  all-reduce (``tcfg.dp_compression="int8"``): per-pod gradients are computed
+  under ``shard_map`` over the ``pod`` axis, quantized to int8 with a per-leaf
+  scale, psummed in int8-widened-to-int32, dequantized, and the quantization
+  residual is carried in the optimizer state and added back next step.  This
+  cuts DCN gradient traffic 4x (bf16 -> int8/int32 mix) at equal fixed-point
+  of the optimizer — the classic 1-bit-Adam/EF-SGD trick adapted to pods;
+* loss/grads in the model's compute dtype, reductions in fp32.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro import models
+from repro.configs.base import ModelConfig
+
+from .optimizer import TrainConfig, apply_updates, make_optimizer
+
+
+def init_state(cfg: ModelConfig, tcfg: TrainConfig, key):
+    params = models.init_params(cfg, key)
+    opt = make_optimizer(tcfg)
+    state = {"params": params, "opt": opt.init(params),
+             "step": jnp.zeros((), jnp.int32)}
+    if tcfg.dp_compression == "int8":
+        state["ef"] = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return state
+
+
+def _split_microbatches(batch, n: int):
+    """(B, ...) -> (n, B/n, ...) for every leaf.
+
+    The microbatch (B/n) must stay divisible by the batch-sharding degree,
+    or GSPMD silently replicates the whole batch per device (measured: ~15x
+    per-device FLOPs on the 512-chip mesh — EXPERIMENTS §Perf iteration 4).
+    """
+    from repro.sharding import specs as sh
+    mesh, rules = sh.current_mesh(), sh.current_rules()
+    if mesh is not None:
+        axes = rules.resolve("batch")
+        axes = (axes,) if isinstance(axes, str) else (axes or ())
+        dp = 1
+        for a in axes:
+            if a in mesh.axis_names:
+                dp *= mesh.shape[a]
+        b = jax.tree.leaves(batch)[0].shape[0]
+        if (b // n) % dp != 0:
+            raise ValueError(
+                f"microbatch {b}//{n}={b//n} not divisible by the "
+                f"batch-sharding degree {dp}; lower grad_accum")
+    def re(x):
+        return x.reshape((n, x.shape[0] // n) + x.shape[1:])
+    return jax.tree.map(re, batch)
+
+
+def _grads_plain(cfg, params, batch, accum: int,
+                 accum_dtype: str = "float32"):
+    """Standard grads (GSPMD inserts all data-parallel reductions)."""
+    def loss(p, b):
+        return models.loss_fn(cfg, p, b)
+
+    if accum <= 1:
+        (l, metrics), grads = jax.value_and_grad(loss, has_aux=True)(
+            params, batch)
+        return l, metrics, grads
+
+    micro = _split_microbatches(batch, accum)
+    adt = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[accum_dtype]
+
+    def body(carry, mb):
+        g_acc, l_acc, a_acc = carry
+        (l, metrics), g = jax.value_and_grad(loss, has_aux=True)(params, mb)
+        g_acc = jax.tree.map(
+            lambda a, b_: a + b_.astype(adt), g_acc, g)
+        return (g_acc, l_acc + l, a_acc + metrics["aux"]), None
+
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, adt), params)
+    (grads, l_tot, aux_tot), _ = jax.lax.scan(
+        body, (zeros, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        micro)
+    inv = 1.0 / accum
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * inv, grads)
+    return l_tot * inv, {"ce": l_tot * inv, "aux": aux_tot * inv}, grads
+
+
+# --------------------------------------------------------------------------
+# int8 error-feedback compressed cross-pod gradient reduction
+# --------------------------------------------------------------------------
+def _quantized_psum(g, axis: str):
+    """int8 stochastic-free quantized psum of a fp32 leaf over ``axis``."""
+    scale = jnp.max(jnp.abs(g)) / 127.0
+    scale = jax.lax.pmax(jnp.maximum(scale, 1e-12), axis)
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    total = jax.lax.psum(q.astype(jnp.int32), axis)
+    n = jax.lax.psum(jnp.ones((), jnp.float32), axis)
+    deq = total.astype(jnp.float32) * scale / n
+    residual = g - q.astype(jnp.float32) * scale   # local quantization error
+    return deq, residual
+
+
+def _grads_compressed(cfg, params, batch, ef, accum: int, pod_axis: str):
+    """Per-pod grads under shard_map + int8 EF psum across pods.
+
+    Called *inside* an outer shard_map over the pod axis with params
+    replicated and batch split on its leading dim.
+    """
+    l, metrics, grads = _grads_plain(cfg, params, batch, accum)  # noqa: E501 (compressed path keeps f32)
+    grads = jax.tree.map(lambda g, e: g.astype(jnp.float32) + e, grads, ef)
+    # flatten-unflatten (a tree.map with tuple leaves would mistake the
+    # params 'stack' tuple for a (deq, res) pair)
+    flat, treedef = jax.tree.flatten(grads)
+    pairs = [_quantized_psum(g, axis=pod_axis) for g in flat]
+    deq = treedef.unflatten([p[0] for p in pairs])
+    res = treedef.unflatten([p[1] for p in pairs])
+    l = jax.lax.pmean(l, pod_axis)
+    metrics = jax.tree.map(lambda m: jax.lax.pmean(m, pod_axis), metrics)
+    return l, metrics, deq, res
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig):
+    opt = make_optimizer(tcfg)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if tcfg.dp_compression == "int8":
+            from repro.sharding import specs as sh
+            mesh = sh.current_mesh()
+            assert mesh is not None and "pod" in mesh.axis_names, (
+                "int8 DP compression needs a 'pod' mesh axis")
+            from jax.sharding import PartitionSpec as P
+            rep = P()                    # params replicated across pods
+            bspec = jax.tree.map(lambda _: P("pod"), batch)
+            pspec = jax.tree.map(lambda _: rep, params)
+            efspec = jax.tree.map(lambda _: rep, state["ef"])
+
+            # inside the pod-manual region the model runs WITHOUT sharding
+            # annotations: XLA 0.8's partitioner check-fails on GSPMD
+            # constraints under a partially-manual mesh; the jit-level
+            # in_shardings still drive data/model propagation.
+            from repro.sharding.specs import MeshRules
+            inner_rules = MeshRules(**{
+                f: None for f in MeshRules.__dataclass_fields__})
+
+            def body(p, b, e):
+                with sh.use_mesh(mesh, inner_rules):
+                    return _grads_compressed(cfg, p, b, e,
+                                             tcfg.grad_accum, "pod")
+
+            loss, metrics, grads, ef = jax.shard_map(
+                body, mesh=mesh, axis_names={"pod"},
+                in_specs=(pspec, bspec, efspec),
+                out_specs=(P(), jax.tree.map(lambda _: P(), {
+                    "ce": 0, "aux": 0}), pspec, efspec),
+                check_vma=False)(params, batch, state["ef"])
+        else:
+            loss, metrics, grads = _grads_plain(cfg, params, batch,
+                                                tcfg.grad_accum,
+                                                tcfg.accum_dtype)
+            ef = None
+
+        updates, opt_state = opt.update(grads, state["opt"], params,
+                                        state["step"])
+        new_params = apply_updates(params, updates)
+        new_state = {"params": new_params, "opt": opt_state,
+                     "step": state["step"] + 1}
+        if ef is not None:
+            new_state["ef"] = ef
+        out_metrics = {"loss": loss, **metrics,
+                       "grad_norm": opt_state.get("grad_norm", 0.0),
+                       "lr": opt_state.get("lr", 0.0)}
+        return new_state, out_metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig):
+    def eval_step(params, batch):
+        loss, metrics = models.loss_fn(cfg, params, batch)
+        return {"loss": loss, **metrics}
+    return eval_step

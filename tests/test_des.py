@@ -1,0 +1,174 @@
+"""DES validation of the paper's claims (Fig. 1 exact, Fig. 3 trends).
+
+Slot units: CS duration == wake-up latency == 1.0 (the paper's Fig. 1
+scenario: "critical section duration is equal to the time required by a
+thread to be awaken and CPU-rescheduled"), 3 threads on 3 cores, one CS
+each.
+"""
+
+import pytest
+
+from repro.core.des import LockSim, simulate
+from repro.core.oracle import FixedOracle
+
+
+def _fig1(lock, **lock_kwargs):
+    sim = LockSim(
+        lock, threads=3, cores=3, cs=(1.0, 1.0), ncs=(0.0, 0.0),
+        wake_latency=1.0, seed=1, record_timeline=True,
+        max_cs_per_thread=1, lock_kwargs=dict(lock_kwargs, alpha=0.0),
+    )
+    return sim.run(target_cs=3)
+
+
+# ---------------------------------------------------------------------------
+# Fig. 1 — exact slot accounting
+# ---------------------------------------------------------------------------
+def test_fig1_spin_lock():
+    """Fig. 1a: 3 slots for CSes + 3 slots of spinning (50% waste)."""
+    r = _fig1("ttas")
+    assert r.completed_cs == 3
+    assert r.t_end == pytest.approx(3.0)
+    assert r.spin_cpu == pytest.approx(3.0)
+    assert r.wake_count == 0
+
+
+def test_fig1_sleep_lock():
+    """Fig. 1b: 5 slots for 3 CSes (40% throughput drop), 2 wake slots."""
+    r = _fig1("sleep")
+    assert r.completed_cs == 3
+    assert r.t_end == pytest.approx(5.0)
+    assert r.spin_cpu == pytest.approx(0.0)
+    assert r.wake_count == 2
+    # paper: "overall throughput is 40% worse than the spin lock"
+    spin = _fig1("ttas")
+    assert r.throughput / spin.throughput == pytest.approx(0.6)
+
+
+def test_fig1_mutable_lock():
+    """Fig. 1c: spin-lock latency (3 slots) with only 2 wasted slots
+    (1 spin + 1 masked wake)."""
+    r = _fig1("mutable", initial_sws=2, oracle=FixedOracle())
+    assert r.completed_cs == 3
+    assert r.t_end == pytest.approx(3.0)      # same latency as the spin lock
+    assert r.spin_cpu == pytest.approx(1.0)   # one thread spun one slot
+    assert r.wake_count == 1                  # wake masked by T2's CS
+
+
+# ---------------------------------------------------------------------------
+# Conservation / sanity across all disciplines
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("lock", ["tas", "ttas", "mcs", "sleep", "adaptive",
+                                  "mutable"])
+@pytest.mark.parametrize("threads", [1, 2, 8, 24])
+def test_progress_and_conservation(lock, threads):
+    r = simulate(lock, threads=threads, cores=8, target_cs=500, seed=3)
+    assert r.completed_cs >= 500
+    assert r.t_end > 0
+    assert r.spin_cpu >= 0
+    if lock in ("tas", "ttas", "mcs"):
+        assert r.wake_count == 0
+
+
+def test_mutable_sws_bounded_and_adaptive():
+    r = simulate("mutable", threads=16, cores=8, cs=(0, 3.7e-6),
+                 ncs=(0, 3.7e-6), wake_latency=5e-6, target_cs=3000, seed=7)
+    assert r.sws_trace, "oracle never sampled"
+    assert all(1 <= s <= 8 for _, s in r.sws_trace)
+    # with wake latency > CS length the window must have grown beyond 1
+    assert max(s for _, s in r.sws_trace) > 1
+
+
+# ---------------------------------------------------------------------------
+# Fig. 3 trends (paper's quantitative claims, DES with the paper's setup:
+# 20 cores, wake-up latency ~5us)
+# ---------------------------------------------------------------------------
+THREADS = [2, 4, 8, 16, 24, 32, 40]
+SHORT = (0.0, 3.7e-6)
+LONG = (0.0, 366e-6)
+
+
+def _grid(lock, cs, ncs, target=1500):
+    return {n: simulate(lock, threads=n, cores=20, cs=cs, ncs=ncs,
+                        wake_latency=5e-6, target_cs=target, seed=11)
+            for n in THREADS}
+
+
+def _avg_ratio_to_optimal(grids, lock):
+    """Right-hand column of Fig. 3: mean over thread counts of
+    throughput(lock)/max_throughput(that thread count)."""
+    ratios = []
+    for n in THREADS:
+        best = max(g[n].throughput for g in grids.values())
+        ratios.append(grids[lock][n].throughput / best)
+    return sum(ratios) / len(ratios)
+
+
+@pytest.fixture(scope="module")
+def short_short_grids():
+    return {k: _grid(k, SHORT, SHORT) for k in
+            ("ttas", "mcs", "sleep", "adaptive", "mutable")}
+
+
+def test_fig3_short_cs_mutlock_beats_static_expectation(short_short_grids):
+    """Paper Fig. 3c: MUTLOCK's average ratio-to-optimal exceeds PT-EXP
+    (the expected value of an a-priori coin flip between spin and sleep)."""
+    g = short_short_grids
+    mut = _avg_ratio_to_optimal(g, "mutable")
+    spin = _avg_ratio_to_optimal(g, "ttas")
+    slp = _avg_ratio_to_optimal(g, "sleep")
+    pt_exp = (spin + slp) / 2
+    assert mut > pt_exp, f"mutable {mut:.3f} <= PT-EXP {pt_exp:.3f}"
+
+
+def test_fig3_short_cs_spin_wins_without_timesharing(short_short_grids):
+    """Paper Fig. 3a: spin locking is the best option with no time-sharing;
+    sleep locks pay wake-up latency (-25% for PT-MUTEX at low counts)."""
+    g = short_short_grids
+    for n in (2, 4, 8, 16):
+        assert g["ttas"][n].throughput >= 0.95 * g["sleep"][n].throughput
+
+
+def test_fig3_short_cs_sleep_saves_cpu(short_short_grids):
+    """Paper Fig. 3b: mutexes reduce sync CPU by ~an order of magnitude."""
+    g = short_short_grids
+    n = 40  # heavy oversubscription
+    assert g["sleep"][n].spin_cpu < 0.2 * g["ttas"][n].spin_cpu
+
+
+def test_fig3_long_cs_mutable_saves_cpu_order_of_magnitude():
+    """Paper Fig. 3e: with long CSes and thread counts above 10, MUTLOCK
+    spends ~10x less CPU in synchronization than spin locks."""
+    mut = simulate("mutable", threads=16, cores=20, cs=LONG, ncs=SHORT,
+                   wake_latency=5e-6, target_cs=800, seed=5)
+    spin = simulate("ttas", threads=16, cores=20, cs=LONG, ncs=SHORT,
+                    wake_latency=5e-6, target_cs=800, seed=5)
+    assert mut.spin_cpu < 0.15 * spin.spin_cpu, (
+        f"mutable sync CPU {mut.spin_cpu:.4f} not <<"
+        f" spin {spin.spin_cpu:.4f}")
+
+
+def test_fig3_long_cs_mutable_throughput_stable():
+    """Paper Fig. 3d: pure spin degrades as threads grow (coherence
+    pressure on the holder); MUTLOCK stays within a bounded loss."""
+    mut = {n: simulate("mutable", threads=n, cores=20, cs=LONG, ncs=SHORT,
+                       wake_latency=5e-6, target_cs=800, seed=5)
+           for n in (4, 16)}
+    spin = {n: simulate("ttas", threads=n, cores=20, cs=LONG, ncs=SHORT,
+                        wake_latency=5e-6, target_cs=800, seed=5)
+            for n in (4, 16)}
+    spin_drop = spin[16].throughput / spin[4].throughput
+    mut_drop = mut[16].throughput / mut[4].throughput
+    assert mut_drop > spin_drop, (
+        f"mutable should degrade less: {mut_drop:.3f} vs {spin_drop:.3f}")
+
+
+def test_fig3_low_contention_all_equal():
+    """Paper Fig. 3g: short CS + long NCS -> low contention -> all locks
+    within ~15% of each other (<= core count threads)."""
+    res = {k: simulate(k, threads=8, cores=20, cs=SHORT, ncs=LONG,
+                       wake_latency=5e-6, target_cs=800, seed=9)
+           for k in ("ttas", "sleep", "mutable")}
+    best = max(r.throughput for r in res.values())
+    for k, r in res.items():
+        assert r.throughput > 0.85 * best, f"{k} off by >15% at low contention"

@@ -1,0 +1,70 @@
+"""Property-based DES invariants (hypothesis): for ANY lock discipline,
+thread count, core count, CS/NCS regime and seed —
+
+  * progress: the target number of critical sections completes,
+  * mutual exclusion: the model asserts a single holder internally,
+  * conservation: completed CSes == sum of per-thread counts,
+  * windows: the mutable model's sws stays within [1, max].
+"""
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.des import LockSim, simulate
+
+LOCKS = ["tas", "ttas", "mcs", "sleep", "adaptive", "mutable"]
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    lock=st.sampled_from(LOCKS),
+    threads=st.integers(1, 12),
+    cores=st.integers(1, 24),
+    cs_hi=st.floats(1e-7, 1e-4),
+    ncs_hi=st.floats(1e-7, 1e-4),
+    wake=st.floats(1e-7, 5e-5),
+    seed=st.integers(0, 2**16),
+)
+def test_des_progress_and_conservation(lock, threads, cores, cs_hi, ncs_hi,
+                                       wake, seed):
+    sim = LockSim(lock, threads, cores, (0.0, cs_hi), (0.0, ncs_hi), wake,
+                  seed=seed)
+    res = sim.run(target_cs=60)
+    assert res.completed_cs >= 60
+    assert res.completed_cs == sum(t.cs_done for t in sim.tasks)
+    assert res.t_end > 0
+    assert res.spin_cpu >= 0.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    threads=st.integers(2, 16),
+    cores=st.integers(2, 24),
+    initial=st.integers(1, 8),
+    k=st.integers(1, 20),
+    seed=st.integers(0, 2**16),
+)
+def test_mutable_window_bounds(threads, cores, initial, k, seed):
+    from repro.core.oracle import EvalSWS
+    sim = LockSim("mutable", threads, cores, (0.0, 2e-6), (0.0, 2e-6), 5e-6,
+                  seed=seed,
+                  lock_kwargs={"initial_sws": min(initial, cores),
+                               "oracle": EvalSWS(k=k)})
+    res = sim.run(target_cs=150)
+    assert res.completed_cs >= 150
+    for _, sws in res.sws_trace:
+        assert 1 <= sws <= sim.model.max
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**16), threads=st.integers(2, 10))
+def test_mutable_thc_returns_to_idle(seed, threads):
+    """After the run drains, the model's thread count is consistent: no
+    phantom waiters (lost wake-ups would strand thc > 0 with idle tasks)."""
+    sim = LockSim("mutable", threads, 8, (0.0, 3e-6), (0.0, 3e-6), 4e-6,
+                  seed=seed, max_cs_per_thread=5)
+    res = sim.run(target_cs=5 * threads)
+    assert res.completed_cs == 5 * threads
+    # every task retired; nobody left sleeping/waking/spinning
+    from repro.core.des import DONE
+    assert all(t.state == DONE for t in sim.tasks)
+    assert sim.model.thc == 0

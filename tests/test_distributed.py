@@ -1,0 +1,134 @@
+"""Distributed-path tests on a small forced-device-count mesh.
+
+Device count is locked at first backend init, so these run in a
+subprocess with ``--xla_force_host_platform_device_count=8``.
+"""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import base as cbase
+from repro.configs.catalog import tiny
+from repro.configs.inputs import concrete_batch
+from repro.launch.mesh import make_test_mesh
+from repro.sharding import profiles, specs as sh
+from repro.train import TrainConfig, init_state, make_train_step
+
+assert len(jax.devices()) == 8
+
+# ---- 1. sharded tiny train step numerically matches single-device ---------
+cfg = tiny(cbase.get_config("llama3.2-1b"))
+tcfg = TrainConfig(warmup_steps=2, decay_steps=20, seed=0)
+batch = concrete_batch(cfg, 8, 32, jax.random.PRNGKey(1))
+
+state0 = init_state(cfg, tcfg, jax.random.PRNGKey(0))
+ref_state, ref_metrics = jax.jit(make_train_step(cfg, tcfg))(
+    jax.tree.map(lambda x: x, state0), batch)
+ref_loss = float(ref_metrics["loss"])
+
+mesh = make_test_mesh(data=2, model=2, pod=2)
+rules = profiles.rules_for(cfg, mesh, "train")
+state_shape = jax.eval_shape(lambda k: init_state(cfg, tcfg, k),
+                             jax.ShapeDtypeStruct((2,), jnp.uint32))
+shardings = sh.tree_shardings(sh.param_specs(state_shape, mesh, rules), mesh)
+step_fn = make_train_step(cfg, tcfg)
+
+def wrapped(s, b):
+    with sh.use_mesh(mesh, rules):
+        return step_fn(s, b)
+
+jitted = jax.jit(wrapped, in_shardings=(shardings, None),
+                 out_shardings=(shardings, None))
+state0b = init_state(cfg, tcfg, jax.random.PRNGKey(0))
+state0b = jax.device_put(state0b, shardings)
+sh_state, sh_metrics = jitted(state0b, batch)
+sh_loss = float(sh_metrics["loss"])
+assert abs(sh_loss - ref_loss) < 5e-2, (sh_loss, ref_loss)
+for a, b in zip(jax.tree.leaves(ref_state["params"]),
+                jax.tree.leaves(sh_state["params"])):
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32), atol=3e-2,
+                               rtol=3e-2)
+print("SHARDED_TRAIN_OK", sh_loss)
+
+# ---- 2. int8 EF compressed cross-pod grads track uncompressed -------------
+tcfg_c = TrainConfig(warmup_steps=2, decay_steps=20, seed=0,
+                     dp_compression="int8")
+state_c = init_state(cfg, tcfg_c, jax.random.PRNGKey(0))
+state_c = jax.device_put(
+    state_c, sh.tree_shardings(sh.param_specs(
+        jax.eval_shape(lambda k: init_state(cfg, tcfg_c, k),
+                       jax.ShapeDtypeStruct((2,), jnp.uint32)),
+        mesh, rules), mesh))
+step_c = make_train_step(cfg, tcfg_c)
+
+def wrapped_c(s, b):
+    with sh.use_mesh(mesh, rules):
+        return step_c(s, b)
+
+state_c1, mc = jax.jit(wrapped_c)(state_c, batch)
+lc = float(mc["loss"])
+assert abs(lc - ref_loss) < 5e-2, (lc, ref_loss)
+# parameters after one compressed step stay close to the exact ones
+errs = [float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                              - b.astype(jnp.float32))))
+        for a, b in zip(jax.tree.leaves(ref_state["params"]),
+                        jax.tree.leaves(state_c1["params"]))]
+assert max(errs) < 5e-2, max(errs)
+print("COMPRESSED_OK", lc, max(errs))
+
+# ---- 3. decode with CP flash-decode matches unsharded ---------------------
+from repro import models
+params = ref_state["params"]
+cache = models.init_cache(cfg, 8, max_seq=16)
+tok = jnp.full((8, 1), 3, jnp.int32)
+logits_ref, cache_ref = jax.jit(
+    lambda p, c, t: models.decode_step(cfg, p, c, t))(params, cache, tok)
+
+srules = profiles.rules_for(cfg, mesh, "decode")
+cache_sh = sh.tree_shardings(
+    sh.cache_specs(jax.eval_shape(
+        lambda: models.init_cache(cfg, 8, 16)), mesh, srules), mesh)
+params_sh = sh.tree_shardings(
+    sh.param_specs(jax.eval_shape(
+        lambda k: models.init_params(cfg, k),
+        jax.ShapeDtypeStruct((2,), jnp.uint32)), mesh, srules), mesh)
+
+def dwrap(p, c, t):
+    with sh.use_mesh(mesh, srules):
+        return models.decode_step(cfg, p, c, t)
+
+logits_sh, _ = jax.jit(dwrap, in_shardings=(params_sh, cache_sh, None),
+                       out_shardings=(None, cache_sh))(
+    jax.device_put(params, params_sh),
+    jax.device_put(cache, cache_sh), tok)
+np.testing.assert_allclose(np.asarray(logits_ref, np.float32),
+                           np.asarray(logits_sh, np.float32),
+                           atol=5e-2, rtol=5e-2)
+print("CP_DECODE_OK")
+"""
+
+
+@pytest.mark.slow
+def test_distributed_paths_8dev():
+    env = dict(os.environ, PYTHONPATH="src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=540,
+                         cwd=os.path.dirname(os.path.dirname(
+                             os.path.abspath(__file__))))
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr[-3000:]}"
+    assert "SHARDED_TRAIN_OK" in out.stdout
+    assert "COMPRESSED_OK" in out.stdout
+    assert "CP_DECODE_OK" in out.stdout

@@ -1,0 +1,163 @@
+"""Per-kernel allclose vs the pure-jnp oracle (ref.py), interpret mode.
+
+Sweeps shapes (incl. non-multiples of the block sizes) and dtypes, plus the
+feature matrix of the flash kernel (causal x window x softcap x GQA).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.mamba_scan import mamba_scan
+from repro.kernels.rmsnorm import rmsnorm
+from repro.kernels.rwkv6_scan import rwkv6_scan
+
+RNG = np.random.default_rng(42)
+
+
+def _tol(dt):
+    return dict(atol=3e-2, rtol=3e-2) if dt == jnp.bfloat16 \
+        else dict(atol=3e-5, rtol=3e-5)
+
+
+# --------------------------------------------------------------------------
+# flash attention
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "BH,BKV,Sq,Sk,hd,causal,window,softcap",
+    [
+        (4, 2, 256, 256, 64, True, 0, 0.0),     # GQA causal
+        (4, 4, 128, 384, 64, True, 0, 0.0),     # cross-length
+        (2, 1, 200, 200, 32, True, 64, 0.0),    # sliding window + padding
+        (2, 2, 256, 256, 64, False, 0, 0.0),    # bidirectional (encoder)
+        (4, 2, 256, 256, 128, True, 0, 30.0),   # gemma softcap
+        (1, 1, 96, 512, 64, True, 128, 0.0),    # window > q extent
+    ])
+def test_flash_attention(BH, BKV, Sq, Sk, hd, causal, window, softcap,
+                         dtype):
+    q = jnp.asarray(RNG.standard_normal((BH, Sq, hd)), dtype)
+    k = jnp.asarray(RNG.standard_normal((BKV, Sk, hd)), dtype)
+    v = jnp.asarray(RNG.standard_normal((BKV, Sk, hd)), dtype)
+    got = flash_attention(q, k, v, causal=causal, window=window,
+                          softcap=softcap)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                   softcap=softcap)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_flash_attention_block_shapes():
+    """Result is block-size independent."""
+    q = jnp.asarray(RNG.standard_normal((2, 256, 64)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((2, 256, 64)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((2, 256, 64)), jnp.float32)
+    a = flash_attention(q, k, v, block_q=128, block_k=128)
+    b = flash_attention(q, k, v, block_q=64, block_k=256)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               atol=2e-5, rtol=2e-5)
+
+
+# --------------------------------------------------------------------------
+# rwkv6 scan
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("T,chunk", [(96, 32), (64, 64), (130, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rwkv6_scan(T, chunk, dtype):
+    BH, n = 3, 16
+    r = jnp.asarray(RNG.standard_normal((BH, T, n)), dtype)
+    k = jnp.asarray(RNG.standard_normal((BH, T, n)), dtype)
+    v = jnp.asarray(RNG.standard_normal((BH, T, n)), dtype)
+    w = jnp.asarray(RNG.uniform(0.6, 0.999, (BH, T, n)), jnp.float32)
+    u = jnp.asarray(RNG.standard_normal((BH, n)), jnp.float32)
+    y, sT = rwkv6_scan(r, k, v, w, u, chunk=chunk)
+    yr, sr = ref.rwkv6_scan_ref(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), **_tol(dtype))
+    np.testing.assert_allclose(np.asarray(sT), np.asarray(sr), **_tol(dtype))
+
+
+def test_rwkv6_scan_initial_state():
+    BH, T, n = 2, 32, 8
+    r, k, v = (jnp.asarray(RNG.standard_normal((BH, T, n)), jnp.float32)
+               for _ in range(3))
+    w = jnp.asarray(RNG.uniform(0.8, 0.99, (BH, T, n)), jnp.float32)
+    u = jnp.asarray(RNG.standard_normal((BH, n)), jnp.float32)
+    s0 = jnp.asarray(RNG.standard_normal((BH, n, n)), jnp.float32)
+    y, sT = rwkv6_scan(r, k, v, w, u, s0, chunk=16)
+    yr, sr = ref.rwkv6_scan_ref(r, k, v, w, u, s0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               atol=3e-5, rtol=3e-5)
+    np.testing.assert_allclose(np.asarray(sT), np.asarray(sr),
+                               atol=3e-5, rtol=3e-5)
+
+
+# --------------------------------------------------------------------------
+# mamba scan
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("B,T,d,N,chunk,block_d",
+                         [(2, 64, 32, 8, 32, 16),
+                          (1, 100, 48, 16, 64, 32),   # padding both dims
+                          (2, 32, 16, 4, 32, 16)])
+def test_mamba_scan(B, T, d, N, chunk, block_d):
+    dt = jnp.asarray(RNG.uniform(1e-3, 0.1, (B, T, d)), jnp.float32)
+    x = jnp.asarray(RNG.standard_normal((B, T, d)), jnp.float32)
+    Bm = jnp.asarray(RNG.standard_normal((B, T, N)), jnp.float32)
+    Cm = jnp.asarray(RNG.standard_normal((B, T, N)), jnp.float32)
+    a = -jnp.asarray(RNG.uniform(0.5, 4.0, (d, N)), jnp.float32)
+    y = mamba_scan(dt, x, Bm, Cm, a, chunk=chunk, block_d=block_d)
+    yr = ref.mamba_scan_ref(dt, x, Bm, Cm, a)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               atol=3e-5, rtol=3e-5)
+
+
+# --------------------------------------------------------------------------
+# rmsnorm
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("shape", [(4, 7, 128), (3, 256), (1000, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm(shape, dtype):
+    x = jnp.asarray(RNG.standard_normal(shape), dtype)
+    w = jnp.asarray(RNG.standard_normal(shape[-1]) * 0.1, jnp.float32)
+    got = rmsnorm(x, w)
+    want = ref.rmsnorm_ref(x, w)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+# --------------------------------------------------------------------------
+# kernel oracles vs MODEL paths (ties the two stacks together)
+# --------------------------------------------------------------------------
+def test_model_attention_matches_kernel_ref():
+    from repro.configs.base import AttentionConfig
+    from repro.models.attention import attend_qchunk
+    B, S, H, KV, hd = 2, 256, 4, 2, 32
+    acfg = AttentionConfig(num_heads=H, num_kv_heads=KV, head_dim=hd)
+    q = jnp.asarray(RNG.standard_normal((B, S, H, hd)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((B, S, KV, hd)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((B, S, KV, hd)), jnp.float32)
+    pos = jnp.arange(S, dtype=jnp.int32)
+    got = attend_qchunk(acfg, q, k, v, pos, pos, window=0, q_chunk=64)
+    qk = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    kk = k.transpose(0, 2, 1, 3).reshape(B * KV, S, hd)
+    vk = v.transpose(0, 2, 1, 3).reshape(B * KV, S, hd)
+    want = ref.flash_attention_ref(qk, kk, vk).reshape(
+        B, H, S, hd).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=3e-5, rtol=3e-5)
+
+
+def test_model_wkv_matches_kernel_ref():
+    from repro.models.rwkv6 import _wkv_chunk_scan
+    B, T, D, n = 2, 64, 32, 16
+    r, k, v = (jnp.asarray(RNG.standard_normal((B, T, D)), jnp.float32)
+               for _ in range(3))
+    w = jnp.asarray(RNG.uniform(0.7, 0.99, (B, T, D)), jnp.float32)
+    u = jnp.asarray(RNG.standard_normal(D), jnp.float32)
+    got = _wkv_chunk_scan(r, k, v, w, u, head_dim=n, chunk=16)
+    from repro.kernels import ops
+    want, _ = ops.wkv(r, k, v, w, u, head_dim=n)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=3e-5, rtol=3e-5)

