@@ -6,11 +6,14 @@
 |------------|------------------------|-------------------------|
 | fig1       | Fig. 1 timelines       | benchmarks.lockbench    |
 | fig3       | Fig. 3 lockbench grid  | benchmarks.lockbench    |
+| sweep      | Fig. 3 grid + scenario | benchmarks.sweep (xdes) |
 | phold      | Fig. 4 PHOLD/PDES      | benchmarks.phold        |
 | sched      | §3 technique on TPU    | benchmarks.sched_bench  |
 | roofline   | EXPERIMENTS §Roofline  | benchmarks.roofline     |
 
 Artifacts land in reports/*.json; a summary CSV is printed at the end.
+``--quick`` runs only the batched xdes sweep at smoke scale (<60 s) —
+the fast signal that the simulation stack works end to end.
 """
 
 from __future__ import annotations
@@ -25,13 +28,34 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="paper-scale sample counts (slower)")
+    ap.add_argument("--quick", action="store_true",
+                    help="batched-sweep smoke only (<60 s)")
     args = ap.parse_args(argv)
     os.makedirs("reports", exist_ok=True)
     t0 = time.time()
     summary: list[tuple[str, object]] = []
 
+    if args.quick:
+        print("=" * 72)
+        print("[quick] batched xdes sweep smoke (fig3 grid + scenarios)")
+        print("=" * 72)
+        from benchmarks import sweep
+        sw = sweep.main(["--quick"])
+        for claim, ok in sw["fig3"]["claims"].items():
+            summary.append((f"sweep.fig3.{claim}", ok))
+        summary.append(("sweep.scenario.mutable.mean_ratio",
+                        round(sw["scenario"]["mean_ratio_to_best"]
+                              ["mutable"], 3)))
+        print("\n" + "=" * 72)
+        print(f"quick smoke done in {time.time()-t0:.0f}s — summary CSV")
+        print("=" * 72)
+        print("name,value")
+        for k, v in summary:
+            print(f"{k},{v}")
+        return
+
     print("=" * 72)
-    print("[1/5] lockbench fig1 (paper Fig. 1 timelines)")
+    print("[1/7] lockbench fig1 (paper Fig. 1 timelines)")
     print("=" * 72)
     from benchmarks import lockbench
     f1 = lockbench.fig1()
@@ -43,7 +67,7 @@ def main(argv=None) -> None:
                     f1["mutable"]["makespan_slots"]))
 
     print("\n" + "=" * 72)
-    print("[2/5] lockbench fig3 (paper Fig. 3 grid, DES @ 20 cores)")
+    print("[2/7] lockbench fig3 (paper Fig. 3 grid, DES @ 20 cores)")
     print("=" * 72)
     f3 = lockbench.fig3(target_cs=2000 if args.full else 1000)
     for regime, data in f3.items():
@@ -54,7 +78,17 @@ def main(argv=None) -> None:
         json.dump({"fig1": f1, "fig3": f3}, f, indent=1)
 
     print("\n" + "=" * 72)
-    print("[3/5] PHOLD on share-everything PDES (paper Fig. 4)")
+    print("[3/7] batched xdes sweep (fig3 grid + 1000-config scenarios)")
+    print("=" * 72)
+    from benchmarks import sweep
+    sw = sweep.main(["--target-cs", "250" if args.full else "150"])
+    for claim, ok in sw["fig3"]["claims"].items():
+        summary.append((f"sweep.fig3.{claim}", ok))
+    for lock, r in sw["scenario"]["mean_ratio_to_best"].items():
+        summary.append((f"sweep.scenario.{lock}.mean_ratio", round(r, 3)))
+
+    print("\n" + "=" * 72)
+    print("[4/7] PHOLD on share-everything PDES (paper Fig. 4)")
     print("=" * 72)
     from benchmarks import phold
     ph = phold.run_phold(n_events=3000 if args.full else 1500)
@@ -66,7 +100,7 @@ def main(argv=None) -> None:
                             locks["mutable"]["speedup"]))
 
     print("\n" + "=" * 72)
-    print("[4/5] serving-window scheduler (the technique on TPU batches)")
+    print("[5/7] serving-window scheduler (the technique on TPU batches)")
     print("=" * 72)
     from benchmarks import sched_bench
     sb = sched_bench.main(["--requests", "400" if args.full else "250"])
@@ -77,7 +111,7 @@ def main(argv=None) -> None:
                         round(agg["avg_standby"], 2)))
 
     print("\n" + "=" * 72)
-    print("[5/6] oracle ablation (paper §5 future work)")
+    print("[6/7] oracle ablation (paper §5 future work)")
     print("=" * 72)
     from benchmarks import oracle_ablation
     oa = oracle_ablation.main(["--target-cs",
@@ -87,7 +121,7 @@ def main(argv=None) -> None:
                         round(row["mean_ratio_to_opt"], 3)))
 
     print("\n" + "=" * 72)
-    print("[6/6] roofline tables from dry-run artifacts")
+    print("[7/7] roofline tables from dry-run artifacts")
     print("=" * 72)
     from benchmarks import roofline
     text = roofline.summarize()

@@ -26,7 +26,6 @@ import os
 
 import numpy as np
 
-from repro.core.oracle import EvalSWS, FixedOracle
 from repro.serve import ContinuousBatcher, Request, SimulatedEngine
 
 
@@ -49,16 +48,7 @@ def run_policy(policy: str, max_slots: int = 16, max_standby: int = 16,
                n_requests: int = 400, seed: int = 0) -> dict:
     eng = SimulatedEngine(max_slots=max_slots, prefill_cost=8e-3,
                           step_base=2e-3, step_per_slot=2e-4)
-    if policy == "mutable":
-        oracle, init = EvalSWS(k=10), 1
-    elif policy == "zero":
-        oracle, init = FixedOracle(), 0
-    elif policy == "max":
-        oracle, init = FixedOracle(), max_standby
-    else:
-        raise ValueError(policy)
-    bat = ContinuousBatcher(eng, max_standby=max_standby, initial=init,
-                            oracle=oracle)
+    bat = ContinuousBatcher.from_policy(eng, policy, max_standby=max_standby)
     reqs = bursty_workload(n_requests, seed)
     i = 0
     while i < len(reqs) or not bat.idle():

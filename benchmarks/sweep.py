@@ -1,0 +1,181 @@
+"""Batched lock-simulation sweeps on the xdes engine (one device program).
+
+Two artifacts:
+
+* ``fig3`` — the paper's Fig. 3 grid (4 regimes x 5 locks x 8 thread
+  counts x seeds) as ONE ``jax.jit``-compiled call, summarized exactly like
+  ``benchmarks.lockbench.fig3`` (avg throughput, ratio-to-optimum, PT-EXP)
+  and checked against the paper's qualitative claims C2-C4.
+* ``scenario`` — a beyond-paper sweep (default 200 scenarios x 5 locks =
+  1000 configurations, again one call): random machines/workloads sampling
+  the adaptive-spin design space, answering "which discipline wins where"
+  and "how far from the per-scenario optimum is a blind static choice vs
+  the mutable lock" — the experiment the sequential DES made impractical.
+
+    PYTHONPATH=src python -m benchmarks.sweep [--quick] [--backend pallas]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.configs.catalog import (LOCK_DISCIPLINES, LOCK_REGIMES,
+                                   LOCK_THREADS, lock_fig3_grid,
+                                   lock_scenario_sweep)
+from repro.core import xdes
+
+
+# --------------------------------------------------------------------------
+# Fig. 3 grid, batched
+# --------------------------------------------------------------------------
+def fig3_batched(target_cs: int = 250, seeds=(0, 1), backend: str = "ref",
+                 verbose: bool = True) -> dict:
+    configs = lock_fig3_grid(seeds=seeds)
+    t0 = time.time()
+    res = xdes.simulate_batch(configs, target_cs=target_cs, backend=backend)
+    wall = time.time() - t0
+
+    thr = res.throughput.reshape(len(LOCK_REGIMES), len(LOCK_DISCIPLINES),
+                                 len(LOCK_THREADS), len(seeds)).mean(-1)
+    cpu = res.sync_cpu_per_cs.reshape(thr.shape[0], thr.shape[1],
+                                      thr.shape[2], len(seeds)).mean(-1)
+
+    out: dict = {"meta": {"backend": backend, "n_configs": len(configs),
+                          "n_steps": res.n_steps, "wall_s": round(wall, 2)}}
+    for ri, regime in enumerate(LOCK_REGIMES):
+        rows = {
+            lock: [{"threads": int(tc), "throughput": float(thr[ri, li, ti]),
+                    "sync_cpu_per_cs": float(cpu[ri, li, ti])}
+                   for ti, tc in enumerate(LOCK_THREADS)]
+            for li, lock in enumerate(LOCK_DISCIPLINES)
+        }
+        opt = thr[ri].max(axis=0)                  # optimum per thread count
+        avg_opt = float(opt.mean())
+        summary = {}
+        for li, lock in enumerate(LOCK_DISCIPLINES):
+            avg = float(thr[ri, li].mean())
+            summary[lock] = {"avg_throughput": avg,
+                             "ratio_to_opt": avg / avg_opt}
+        pt_exp = 0.5 * (summary["ttas"]["avg_throughput"]
+                        + summary["sleep"]["avg_throughput"])
+        summary["pt-exp"] = {"avg_throughput": pt_exp,
+                             "ratio_to_opt": pt_exp / avg_opt}
+        out[regime] = {"rows": rows, "summary": summary}
+        if verbose:
+            print(f"\n=== {regime} (xdes, {backend}) ===")
+            print(f"{'lock':>10} {'avg thr (cs/s)':>16} {'ratio':>7}")
+            for lock in list(LOCK_DISCIPLINES) + ["pt-exp"]:
+                s = summary[lock]
+                print(f"{lock:>10} {s['avg_throughput']:16.0f} "
+                      f"{s['ratio_to_opt']:7.3f}")
+
+    out["claims"] = _check_claims(out)
+    if verbose:
+        print(f"\nfig3 batched: {len(configs)} configs x {res.n_steps} "
+              f"steps in {wall:.1f}s -> claims {out['claims']}")
+    return out
+
+
+def _check_claims(f3: dict) -> dict:
+    """The paper's qualitative orderings (C2-C4) on the batched results."""
+    ss = f3["cs_short_ncs_short"]["summary"]
+    ls = f3["cs_long_ncs_short"]["summary"]
+    lo = f3["cs_short_ncs_long"]["summary"]
+    # C2: short CS — mutable within ~12% of optimum and above PT-EXP.
+    c2 = (ss["mutable"]["ratio_to_opt"] > ss["pt-exp"]["ratio_to_opt"]
+          and ss["mutable"]["ratio_to_opt"] > 0.85)
+    # C3: long CS — mutable within ~15% of optimum while spin CPU is cut
+    # by >= 5x vs TTAS at 20 threads (checked on per-thread rows).
+    rows = f3["cs_long_ncs_short"]["rows"]
+    i20 = list(LOCK_THREADS).index(20)
+    ttas_cpu = rows["ttas"][i20]["sync_cpu_per_cs"]
+    mut_cpu = max(rows["mutable"][i20]["sync_cpu_per_cs"], 1e-12)
+    c3 = (ls["mutable"]["ratio_to_opt"] > 0.8 and ttas_cpu / mut_cpu >= 5.0)
+    # C4: low contention — every lock within ~12% of every other.
+    ratios = [lo[l]["ratio_to_opt"] for l in LOCK_DISCIPLINES]
+    c4 = min(ratios) > 0.85
+    return {"C2": bool(c2), "C3": bool(c3), "C4": bool(c4),
+            "ttas_over_mutable_cpu_at_20t": round(ttas_cpu / mut_cpu, 1)}
+
+
+# --------------------------------------------------------------------------
+# Beyond-paper scenario sweep
+# --------------------------------------------------------------------------
+def scenario(n_scenarios: int = 200, target_cs: int = 150,
+             backend: str = "ref", seed: int = 0,
+             verbose: bool = True) -> dict:
+    locks = list(LOCK_DISCIPLINES)
+    configs = lock_scenario_sweep(n_scenarios=n_scenarios, seed=seed,
+                                  locks=locks)
+    t0 = time.time()
+    res = xdes.simulate_batch(configs, target_cs=target_cs, backend=backend)
+    wall = time.time() - t0
+
+    thr = res.throughput.reshape(n_scenarios, len(locks))
+    cpu = res.sync_cpu_per_cs.reshape(n_scenarios, len(locks))
+    best = thr.max(axis=1)
+    win = thr.argmax(axis=1)
+    ratio = thr / np.maximum(best[:, None], 1e-30)
+
+    out = {
+        "meta": {"backend": backend, "n_configs": len(configs),
+                 "n_steps": res.n_steps, "wall_s": round(wall, 2),
+                 "configs_per_s": round(len(configs) / max(wall, 1e-9), 1)},
+        "wins": {lock: int((win == i).sum())
+                 for i, lock in enumerate(locks)},
+        "mean_ratio_to_best": {lock: float(ratio[:, i].mean())
+                               for i, lock in enumerate(locks)},
+        "p10_ratio_to_best": {lock: float(np.percentile(ratio[:, i], 10))
+                              for i, lock in enumerate(locks)},
+        "mean_sync_cpu_per_cs_us": {lock: float(cpu[:, i].mean() * 1e6)
+                                    for i, lock in enumerate(locks)},
+    }
+    if verbose:
+        print(f"\nscenario sweep: {len(configs)} configs x {res.n_steps} "
+              f"steps in {wall:.1f}s "
+              f"({out['meta']['configs_per_s']} cfg/s)")
+        print(f"{'lock':>10} {'wins':>6} {'mean ratio':>11} "
+              f"{'p10 ratio':>10} {'cpu/cs (µs)':>12}")
+        for i, lock in enumerate(locks):
+            print(f"{lock:>10} {out['wins'][lock]:6d} "
+                  f"{out['mean_ratio_to_best'][lock]:11.3f} "
+                  f"{out['p10_ratio_to_best'][lock]:10.3f} "
+                  f"{out['mean_sync_cpu_per_cs_us'][lock]:12.2f}")
+    return out
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smoke-scale batches (<60 s total)")
+    ap.add_argument("--backend", choices=("ref", "pallas"), default="ref")
+    ap.add_argument("--scenarios", type=int, default=200)
+    ap.add_argument("--target-cs", type=int, default=250)
+    ap.add_argument("--out", default="reports/sweep.json")
+    args = ap.parse_args(argv)
+
+    if args.quick:
+        f3 = fig3_batched(target_cs=60, seeds=(0,), backend=args.backend)
+        sc = scenario(n_scenarios=40, target_cs=50, backend=args.backend)
+    else:
+        f3 = fig3_batched(target_cs=args.target_cs, backend=args.backend)
+        sc = scenario(n_scenarios=args.scenarios,
+                      target_cs=args.target_cs, backend=args.backend)
+
+    results = {"fig3": f3, "scenario": sc}
+    out_dir = os.path.dirname(args.out)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=1)
+    print(f"\nwrote {args.out}")
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -1,4 +1,5 @@
-"""The 10 assigned architectures (exact configs from the assignment grid).
+"""The 10 assigned architectures (exact configs from the assignment grid)
+plus the lock-simulation sweep specs consumed by ``benchmarks/sweep.py``.
 
 Sources are public literature / HF configs as tagged in the assignment; each
 function returns the FULL config.  ``tiny(cfg)`` derives the reduced-config
@@ -9,6 +10,8 @@ dims) — full configs are only ever lowered via the dry-run.
 from __future__ import annotations
 
 import dataclasses
+
+from repro.core.policy import SimConfig
 
 from .base import (AttentionConfig, LayerSpec, MambaConfig, ModelConfig,
                    MoEConfig, RWKV6Config, register)
@@ -200,3 +203,76 @@ def tiny(cfg: ModelConfig) -> ModelConfig:
         kw["encoder_layers"] = 2
         kw["encoder_seq"] = 16
     return dataclasses.replace(cfg, **kw)
+
+
+# --------------------------------------------------------------------------
+# Lock-simulation sweep specs (paper Fig. 3 + beyond-paper scenario sweep).
+# Each spec is a list of repro.core.policy.SimConfig rows; benchmarks/
+# sweep.py encodes a spec to struct-of-arrays form and simulates the whole
+# batch in one jit-compiled repro.core.xdes call.
+# --------------------------------------------------------------------------
+LOCK_SHORT = (0.0, 3.7e-6)        # paper §4: uniform [0, 3.7) µs
+LOCK_LONG = (0.0, 366e-6)         # uniform [0, 366) µs
+LOCK_WAKE = 8e-6                  # order of a futex wake
+LOCK_CORES = 20                   # the paper's test machine
+LOCK_THREADS = (2, 4, 8, 12, 16, 20, 26, 32)
+LOCK_DISCIPLINES = ("ttas", "mcs", "sleep", "adaptive", "mutable")
+LOCK_REGIMES = {
+    "cs_short_ncs_short": (LOCK_SHORT, LOCK_SHORT),   # Fig 3(a-c)
+    "cs_long_ncs_short": (LOCK_LONG, LOCK_SHORT),     # Fig 3(d-f)
+    "cs_short_ncs_long": (LOCK_SHORT, LOCK_LONG),     # Fig 3(g-i)
+    "cs_long_ncs_long": (LOCK_LONG, LOCK_LONG),       # Fig 3(j-l)
+}
+
+
+def lock_fig3_grid(seeds=(0, 1)) -> list[SimConfig]:
+    """The full Fig. 3 grid as one flat batch: regimes x locks x thread
+    counts x seeds (row order matches the nested loops, so consumers can
+    reshape to (regime, lock, threads, seed))."""
+    return [
+        SimConfig(lock, threads=tc, cores=LOCK_CORES, cs=cs, ncs=ncs,
+                  wake_latency=LOCK_WAKE, seed=seed)
+        for cs, ncs in LOCK_REGIMES.values()
+        for lock in LOCK_DISCIPLINES
+        for tc in LOCK_THREADS
+        for seed in seeds
+    ]
+
+
+def lock_scenario_sweep(n_scenarios: int = 200, seed: int = 0,
+                        locks=LOCK_DISCIPLINES) -> list[SimConfig]:
+    """Beyond-paper scenario sweep: ``n_scenarios`` random machines/
+    workloads, each simulated under every discipline (default 200 x 5 =
+    1000 configurations).  Samples the adaptive-spin design space named in
+    PAPERS.md: CS/NCS lengths log-uniform across the paper's two regimes,
+    wake latency from fast-futex to slow-scheduler, cache-contention
+    strength from uncontended to 4x the paper's default, and over- as well
+    as under-subscribed machines.  The sampled contention multiplies each
+    lock's own ``DEFAULT_ALPHA`` (MCS stays coherence-free, TAS stays the
+    worst) so disciplines keep their hardware character across scenarios."""
+    import numpy as np
+
+    from repro.core.policy import DEFAULT_ALPHA
+
+    rng = np.random.default_rng(seed)
+    out: list[SimConfig] = []
+    for i in range(n_scenarios):
+        threads = int(rng.integers(2, 33))
+        cores = int(rng.integers(2, 33))
+        cs_hi = float(np.exp(rng.uniform(np.log(1e-6), np.log(4e-4))))
+        ncs_hi = float(np.exp(rng.uniform(np.log(1e-6), np.log(4e-4))))
+        wake = float(np.exp(rng.uniform(np.log(2e-6), np.log(5e-5))))
+        contention = float(rng.uniform(0.0, 4.0))
+        for lock in locks:
+            out.append(SimConfig(
+                lock, threads=threads, cores=cores, cs=(0.0, cs_hi),
+                ncs=(0.0, ncs_hi), wake_latency=wake,
+                alpha=contention * DEFAULT_ALPHA[lock], seed=i))
+    return out
+
+
+#: Named sweep registry (mirrors the model-config registry above).
+LOCK_SWEEPS = {
+    "fig3": lock_fig3_grid,
+    "scenario": lock_scenario_sweep,
+}

@@ -11,10 +11,14 @@ Public API:
                              paper's multi-core claims.
 """
 
+from . import policy
 from .atomic import AtomicBool, AtomicU64, pack_lstate, sws_delta, unpack_lstate
 from .baselines import LOCKS, AdaptiveMutex, MCSLock, SleepLock, TASLock, TTASLock
 from .mutlock import MutableLock, MutLockStats, SemSleep, TTASSpin
 from .oracle import AIMDOracle, EvalSWS, FixedOracle, Oracle
+from .policy import (DEFAULT_ALPHA, POLICY_IDS, SimConfig, clamp_delta,
+                     encode_configs, eval_sws_delta, latch_wuc,
+                     release_quota, should_sleep_on_arrival, wake_correction)
 from .waitpolicy import MutableWait
 from .window import SpinningWindow
 
@@ -39,4 +43,8 @@ __all__ = [
     "SpinningWindow", "MutableWait",
     "TASLock", "TTASLock", "MCSLock", "SleepLock", "AdaptiveMutex",
     "LOCKS", "ALL_LOCKS", "make_lock",
+    "policy", "SimConfig", "encode_configs",
+    "POLICY_IDS", "DEFAULT_ALPHA",
+    "eval_sws_delta", "clamp_delta", "wake_correction",
+    "latch_wuc", "release_quota", "should_sleep_on_arrival",
 ]

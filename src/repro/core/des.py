@@ -34,11 +34,12 @@ from __future__ import annotations
 import random
 from dataclasses import dataclass, field
 
+from . import policy
 from .oracle import EvalSWS, Oracle
 
-# thread states
-NCS, CS, SPIN, SLEEP, WAKING, DONE = range(6)
-STATE_NAMES = ["NCS", "CS", "SPIN", "SLEEP", "WAKING", "DONE"]
+# thread states (shared integer encoding: see repro.core.policy)
+from .policy import CS, DONE, NCS, SPIN, STATE_NAMES, WAKING
+from .policy import SLEEP_ST as SLEEP  # noqa: N811 (DES-local alias)
 
 
 @dataclass
@@ -135,7 +136,7 @@ class SpinModel(_LockModel):
     """TTAS-style: every waiter spins; release hands to a random spinner."""
 
     name = "ttas"
-    default_alpha = 0.02
+    default_alpha = policy.DEFAULT_ALPHA["ttas"]
 
     def on_arrive(self, t):
         if self.holder is None:
@@ -156,14 +157,14 @@ class SpinModel(_LockModel):
 
 class TASModel(SpinModel):
     name = "tas"
-    default_alpha = 0.05
+    default_alpha = policy.DEFAULT_ALPHA["tas"]
 
 
 class MCSModel(_LockModel):
     """FIFO queue lock; waiters spin on private lines (alpha = 0)."""
 
     name = "mcs"
-    default_alpha = 0.0
+    default_alpha = policy.DEFAULT_ALPHA["mcs"]
 
     def __init__(self, sim, alpha=None):
         super().__init__(sim, alpha)
@@ -190,7 +191,7 @@ class SleepModel(_LockModel):
     """Benaphore / pthread-mutex default: always sleep when contended."""
 
     name = "sleep"
-    default_alpha = 0.0
+    default_alpha = policy.DEFAULT_ALPHA["sleep"]
 
     def on_arrive(self, t):
         if self.holder is None:
@@ -215,7 +216,7 @@ class AdaptiveModel(_LockModel):
     """glibc adaptive: spin for a fixed budget, then sleep.  No sleep->spin."""
 
     name = "adaptive"
-    default_alpha = 0.02
+    default_alpha = policy.DEFAULT_ALPHA["adaptive"]
 
     def __init__(self, sim, spin_budget: float = 2e-6, alpha=None):
         super().__init__(sim, alpha)
@@ -253,7 +254,7 @@ class MutableModel(_LockModel):
     transitions + EvalSWS oracle + C1/C2 wake-up-count corrections."""
 
     name = "mutable"
-    default_alpha = 0.02
+    default_alpha = policy.DEFAULT_ALPHA["mutable"]
 
     def __init__(self, sim, initial_sws: int = 1, max_sws: int | None = None,
                  oracle: Oracle | None = None, alpha=None):
@@ -267,7 +268,7 @@ class MutableModel(_LockModel):
     def on_arrive(self, t):
         thc_pre, self.thc = self.thc, self.thc + 1       # A4: FAD(+1)
         t.slept = t.spun = False
-        if thc_pre >= self.sws:                          # A7: outside SW
+        if policy.should_sleep_on_arrival(thc_pre, self.sws):  # A7
             t.slept = True                               # A8
             self._sleep(t)                               # A9
         elif self.holder is None:                        # A11: spn_obj free
@@ -281,38 +282,22 @@ class MutableModel(_LockModel):
         self._enter_cs(t)
         self.sim.res.sws_trace.append((self.sim.now, self.sws))
         delta = self.oracle.eval_sws(t.spun, t.slept, self.sws)  # A12
-        if self.sws + delta < 1:                         # A16: clamp low
-            delta = 1 - self.sws
-        if self.sws + delta > self.max:                  # A17: clamp high
-            delta = self.max - self.sws
+        delta = policy.clamp_delta(self.sws, delta, 1, self.max)  # A16-A17
         if delta:                                        # A18
             sws_pre, self.sws = self.sws, self.sws + delta       # A20
-            thc = self.thc                               # A21
-            if delta < 0 and thc > self.sws:             # A25: C2
-                tmp = thc - self.sws                     # A26
-            elif delta > 0 and thc > sws_pre:            # A27: C1
-                tmp = thc - sws_pre                      # A28
-            else:
-                tmp = 0                                  # A30
-            sign = 1 if delta > 0 else -1                # A24
-            self.wuc += sign * min(abs(delta), tmp)      # A32-A33
+            # A21-A33: C1/C2 correction from the shared policy core.
+            self.wuc += policy.wake_correction(delta, self.thc, sws_pre)
 
     def on_release(self, t):
-        if self.wuc >= 0:                                # R2
-            r_wuc, self.wuc = self.wuc, 0                # R3-R4
-        else:
-            self.wuc += 1                                # R7: C2 suppression
-            r_wuc = -1                                   # R6
+        r_wuc, self.wuc = policy.latch_wuc(self.wuc)     # R2-R7
         thc_pre, self.thc = self.thc, self.thc - 1       # R9: FAD(-1)
         self.holder = None                               # R10: spn unlock
         sp = self.spinners()
         if sp:                                           # spn handoff
             self._acquired(self.sim.rng.choice(sp))
-        if r_wuc < 0:                                    # R11-R12
-            return
-        if thc_pre > self.sws:                           # R16: sleepers exist
-            r_wuc += 1                                   # R17: sleep->spin
-        self._wake_some(r_wuc)                           # R19-R21
+        # R11-R17: the handoff's _acquired may have resized the window, so
+        # the R16 check reads the post-handoff sws (same order as before).
+        self._wake_some(policy.release_quota(r_wuc, thc_pre, self.sws))
 
     def on_wake_complete(self, t):
         # The sleep->spin transition: the woken thread joins the window.

@@ -27,6 +27,7 @@ import threading
 import time
 from dataclasses import dataclass, field
 
+from . import policy
 from .atomic import AtomicBool, AtomicU64, pack_lstate, sws_delta, unpack_lstate
 from .oracle import EvalSWS, Oracle
 
@@ -165,43 +166,23 @@ class MutableLock:
         delta = self.oracle.eval_sws(spun, slept, sws)   # A12
         if sws != unpack_lstate(self.lstate.load())[0]:  # A13: sws changed
             return                                       # A14: concurrently
-        # A16-A17: clamp so 1 <= sws + delta <= max
-        if sws + delta < 1:
-            delta = 1 - sws
-        if sws + delta > self.max:
-            delta = self.max - sws
+        delta = policy.clamp_delta(sws, delta, 1, self.max)  # A16-A17
         if delta != 0:                                   # A18
             lstate_pre = self.lstate.fetch_add(sws_delta(delta))  # A19-A20
             sws_pre, thc = unpack_lstate(lstate_pre)     # A21-A22
-            sws_post = sws_pre + delta
-            if delta < 0 and thc > sws_post:             # A25: C2 (shrink,
-                tmp = thc - sws_post                     # A26: spinners > SW)
-            elif delta > 0 and thc > sws_pre:            # A27: C1 (grow,
-                tmp = thc - sws_pre                      # A28: sleepers exist)
-            else:
-                tmp = 0                                  # A30
-            sign = 1 if delta > 0 else -1                # A24
-            tmp = sign * min(abs(delta), tmp)            # A32
-            self.wuc += tmp                              # A33
+            # A23-A33: C1/C2 correction from the shared policy core.
+            self.wuc += policy.wake_correction(delta, thc, sws_pre)
 
     # -- Algorithm 1: RELEASE ---------------------------------------------
     def release(self) -> None:
         if self._holder != threading.get_ident():
             raise RuntimeError("release() by non-holder thread")
         self._holder = None
-        if self.wuc >= 0:                                # R2
-            r_wuc = self.wuc                             # R3
-            self.wuc = 0                                 # R4
-        else:                                            # C2 suppression
-            self.wuc += 1                                # R7
-            r_wuc = -1                                   # R6
+        r_wuc, self.wuc = policy.latch_wuc(self.wuc)     # R2-R7
         lstate_pre = self.lstate.fetch_add(-1)           # R9: thc -= 1
         self.spn_obj.unlock()                            # R10
-        if r_wuc < 0:                                    # R11: suppressed
-            return                                       # R12
         sws, thc_pre = unpack_lstate(lstate_pre)         # R14-R15
-        if thc_pre > sws:                                # R16: sleepers exist
-            r_wuc += 1                                   # R17: sleep->spin
+        r_wuc = policy.release_quota(r_wuc, thc_pre, sws)  # R11-R17
         while r_wuc > 0:                                 # R19
             cnt = self.slp_obj.wake_up(r_wuc)            # R20
             r_wuc -= cnt                                 # R21

@@ -22,6 +22,8 @@ from __future__ import annotations
 
 from typing import Protocol
 
+from .policy import eval_sws_delta
+
 
 class Oracle(Protocol):
     """Signed window variation computed at lock-acquire time."""
@@ -50,17 +52,12 @@ class EvalSWS:
         self.shrink_events = 0
 
     def eval_sws(self, spun: bool, slept: bool, sws: int) -> int:
-        self.cnt += 1                      # E2
-        delta = 0                          # E3
-        if slept and not spun:             # E4: late wake-up detected
-            delta = sws                    # E5: double the window
-            self.cnt = 0                   # E6
-            self.grow_events += 1
-        elif self.cnt >= self.k:           # E7 (>= guards lost updates)
-            delta = -1                     # E8
-            self.cnt = 0                   # E9
-            self.shrink_events += 1
-        return delta                       # E11
+        # E2-E11 live in the shared policy core (repro.core.policy), where
+        # the batched backend applies the same rule elementwise.
+        delta, self.cnt = eval_sws_delta(spun, slept, sws, self.cnt, self.k)
+        self.grow_events += delta > 0
+        self.shrink_events += delta < 0
+        return delta
 
 
 class FixedOracle:

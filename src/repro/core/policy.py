@@ -1,0 +1,267 @@
+"""Shared lock-policy core — the paper's Algorithm 1 as pure functions.
+
+Before this module, the window state machine lived in four places: the
+event-driven DES (:mod:`repro.core.des`), the threaded lock
+(:mod:`repro.core.mutlock`), the single-controller window
+(:mod:`repro.core.window` / :mod:`repro.serve.scheduler`), and — implicitly
+— any batched backend.  This module extracts the policy *decisions* as pure
+functions of small integer state so one implementation drives all of them,
+including the array-programming backend (:mod:`repro.core.xdes`), where the
+same functions are applied elementwise over thousands of configurations.
+
+Every function here is branch-light, allocation-free, and valid on plain
+Python ints **and** on numpy/jax integer arrays (the callers pick the
+``where`` combinator; the scalar forms below use ``if`` for readability and
+are the reference semantics).
+
+Line-number comments (A*, R*, E*) refer to Algorithm 1 in the paper.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+# --------------------------------------------------------------------------
+# Thread states — shared by the event-driven DES, the batched simulator and
+# the Pallas step kernel (one integer encoding everywhere).
+# --------------------------------------------------------------------------
+NCS, CS, SPIN, SLEEP_ST, WAKING, DONE = range(6)
+STATE_NAMES = ("NCS", "CS", "SPIN", "SLEEP", "WAKING", "DONE")
+
+# --------------------------------------------------------------------------
+# Discipline ids — shared by the DES model registry, the batched simulator's
+# integer encoding, and the Pallas kernel.
+# --------------------------------------------------------------------------
+TAS, TTAS, MCS, SLEEP, ADAPTIVE, MUTABLE = range(6)
+
+POLICY_IDS = {
+    "tas": TAS,
+    "ttas": TTAS,
+    "mcs": MCS,
+    "sleep": SLEEP,
+    "adaptive": ADAPTIVE,
+    "mutable": MUTABLE,
+}
+POLICY_NAMES = {v: k for k, v in POLICY_IDS.items()}
+
+#: Hardware-contention coefficient per discipline (paper §2): the CS
+#: holder's progress rate is divided by ``1 + alpha * n_spinners``.  MCS
+#: spins on private cache lines (no coherency pressure); TAS hammers the
+#: lock word with RMWs (worst); TTAS/adaptive/mutable read-spin (mild).
+DEFAULT_ALPHA = {
+    "tas": 0.05,
+    "ttas": 0.02,
+    "mcs": 0.0,
+    "sleep": 0.0,
+    "adaptive": 0.02,
+    "mutable": 0.02,
+}
+
+#: Which disciplines hand the lock to a spinner on release (all but the
+#: pure sleep lock) and which ever park a thread (all but the pure spin
+#: locks).  The batched backend reads these as masks over policy ids.
+HANDOFF_POLICIES = frozenset({TAS, TTAS, MCS, ADAPTIVE, MUTABLE})
+SLEEPING_POLICIES = frozenset({SLEEP, ADAPTIVE, MUTABLE})
+
+#: glibc-style default spin budget (CPU-seconds) for the adaptive mutex.
+DEFAULT_SPIN_BUDGET = 2e-6
+
+
+# --------------------------------------------------------------------------
+# EvalSWS — the paper's oracle (E1-E12) as a pure function
+# --------------------------------------------------------------------------
+def eval_sws_delta(spun: bool, slept: bool, sws: int, cnt: int,
+                   k: int) -> tuple[int, int]:
+    """One EvalSWS observation.  Returns ``(delta, cnt')``.
+
+    ``cnt`` counts consecutive acquisitions without a late wake-up; a late
+    wake-up (``slept and not spun``) doubles the window (E4-E6), ``k`` clean
+    acquisitions shrink it by one (E7-E9).
+    """
+    cnt = cnt + 1                      # E2
+    if slept and not spun:             # E4: late wake-up detected
+        return sws, 0                  # E5-E6: double, reset counter
+    if cnt >= k:                       # E7 (>= guards lost updates)
+        return -1, 0                   # E8-E9
+    return 0, cnt                      # E3/E11
+
+
+def clamp_delta(sws: int, delta: int, lo: int, hi: int) -> int:
+    """A16-A17: clamp so that ``lo <= sws + delta <= hi``."""
+    if sws + delta < lo:
+        delta = lo - sws
+    if sws + delta > hi:
+        delta = hi - sws
+    return delta
+
+
+# --------------------------------------------------------------------------
+# Arrival / release decisions (A7, R2-R21)
+# --------------------------------------------------------------------------
+def should_sleep_on_arrival(thc_pre: int, sws: int) -> bool:
+    """A7: a thread arriving at index ``thc_pre`` (holder at 0) sleeps iff
+    it lands outside the spinning window."""
+    return thc_pre >= sws
+
+
+def wake_correction(delta: int, thc: int, sws_pre: int) -> int:
+    """C1/C2 wake-up-count correction (A23-A33), the signed increment to
+    ``wuc`` after a resize ``sws_pre -> sws_pre + delta``.
+
+    C1 (grow with sleepers, A27-A28): threads that went to sleep because
+    the window was full would now fit — wake up to ``delta`` of them.
+    C2 (shrink with excess spinners, A25-A26): more threads are inside the
+    window than it now holds — suppress up to ``-delta`` future wake-ups.
+
+    The same arithmetic serves the single-controller window
+    (:meth:`repro.core.window.SpinningWindow.observe`), where the return
+    value is the number of cold items to promote (>0) or hot items to let
+    drain (<0).
+    """
+    sws_post = sws_pre + delta
+    if delta < 0 and thc > sws_post:             # A25: C2
+        tmp = thc - sws_post                     # A26
+    elif delta > 0 and thc > sws_pre:            # A27: C1
+        tmp = thc - sws_pre                      # A28
+    else:
+        tmp = 0                                  # A30
+    sign = 1 if delta > 0 else -1                # A24
+    return sign * min(abs(delta), tmp)           # A32
+
+
+def latch_wuc(wuc: int) -> tuple[int, int]:
+    """RELEASE lines R2-R7: latch the wake-up count at release time.
+
+    Returns ``(r_wuc, wuc')``.  ``r_wuc < 0`` means this release is
+    suppressed by a pending C2 correction (R6-R7, R11-R12) and must issue
+    no wake-up at all.  Latching happens *before* the lock is handed off /
+    unlocked, so corrections appended by the next acquirer belong to the
+    next release.
+    """
+    if wuc >= 0:                                 # R2
+        return wuc, 0                            # R3-R4
+    return -1, wuc + 1                           # R6-R7: C2 suppression
+
+
+def release_quota(r_wuc: int, thc_pre: int, sws: int) -> int:
+    """RELEASE lines R11-R17: permits actually issued by this release.
+
+    ``r_wuc`` is the latched value from :func:`latch_wuc`; ``thc_pre`` the
+    thread count before the releaser's decrement (R9/R14); ``sws`` the
+    window at R16 (post-handoff).  Adds the +1 sleep->spin promotion when
+    sleepers exist (R16-R17); a suppressed release issues nothing.
+    """
+    if r_wuc < 0:                                # R11-R12
+        return 0
+    if thc_pre > sws:                            # R16: sleepers exist
+        r_wuc += 1                               # R17: sleep->spin
+    return r_wuc                                 # R19
+
+
+# --------------------------------------------------------------------------
+# Scenario description — the unit of the batched sweep
+# --------------------------------------------------------------------------
+@dataclass(frozen=True)
+class SimConfig:
+    """One ``(lock, threads, cores, cs, ncs, wake_latency, alpha)`` cell.
+
+    The event-driven DES consumes these through :func:`repro.core.des.
+    simulate`; the batched backend encodes a list of them into
+    struct-of-arrays form (:func:`encode_configs`) and simulates all of
+    them in one device program.
+    """
+
+    lock: str
+    threads: int
+    cores: int
+    cs: tuple[float, float]
+    ncs: tuple[float, float]
+    wake_latency: float = 8e-6
+    alpha: float | None = None          # None -> DEFAULT_ALPHA[lock]
+    sws_init: int = 1
+    sws_max: int | None = None          # None -> cores (paper default)
+    k: int = 10
+    spin_budget: float = DEFAULT_SPIN_BUDGET
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.lock not in POLICY_IDS:
+            raise ValueError(f"unknown lock {self.lock!r}; "
+                             f"options: {sorted(POLICY_IDS)}")
+        if self.threads < 1 or self.cores < 1:
+            raise ValueError("threads and cores must be >= 1")
+
+    # -- derived quantities shared by both backends -----------------------
+    @property
+    def alpha_eff(self) -> float:
+        return DEFAULT_ALPHA[self.lock] if self.alpha is None else self.alpha
+
+    @property
+    def sws_max_eff(self) -> int:
+        return self.cores if self.sws_max is None else self.sws_max
+
+    @property
+    def sws_start(self) -> int:
+        """Initial window per discipline under the unified A7 rule:
+        spin/adaptive disciplines never sleep on arrival (window = threads),
+        the sleep lock parks every waiter (window = 1), the mutable lock
+        starts at ``sws_init``."""
+        pid = POLICY_IDS[self.lock]
+        if pid == SLEEP:
+            return 1
+        if pid == MUTABLE:
+            return max(1, min(self.sws_init, self.sws_max_eff))
+        return self.threads                     # tas/ttas/mcs/adaptive
+
+    def des_kwargs(self) -> dict:
+        """Keyword form consumed by :func:`repro.core.des.simulate`."""
+        kw: dict = {}
+        if self.alpha is not None:
+            kw["alpha"] = self.alpha
+        if self.lock == "mutable":
+            kw.update(initial_sws=self.sws_init, max_sws=self.sws_max)
+        if self.lock == "adaptive":
+            kw["spin_budget"] = self.spin_budget
+        return kw
+
+
+#: Column order of the struct-of-arrays encoding (see encode_configs).
+CONFIG_FIELDS = (
+    "policy", "threads", "cores", "cs_lo", "cs_hi", "ncs_lo", "ncs_hi",
+    "wake", "alpha", "sws_init", "sws_max", "k", "spin_budget", "seed",
+)
+
+
+def encode_configs(configs) -> dict:
+    """Encode a list of :class:`SimConfig` as struct-of-arrays (numpy).
+
+    The result is the array program's input: every column has length
+    ``len(configs)``; dtypes are int32 for discrete fields and float32 for
+    durations/rates.  ``policy`` uses the shared ids above, so the batched
+    simulator and the Pallas kernel can branch with ``where`` masks.
+    """
+    import numpy as np
+
+    configs = list(configs)
+    if not configs:
+        raise ValueError("empty config batch")
+
+    def col(fn, dtype):
+        return np.asarray([fn(c) for c in configs], dtype=dtype)
+
+    return {
+        "policy": col(lambda c: POLICY_IDS[c.lock], np.int32),
+        "threads": col(lambda c: c.threads, np.int32),
+        "cores": col(lambda c: c.cores, np.float32),
+        "cs_lo": col(lambda c: c.cs[0], np.float32),
+        "cs_hi": col(lambda c: c.cs[1], np.float32),
+        "ncs_lo": col(lambda c: c.ncs[0], np.float32),
+        "ncs_hi": col(lambda c: c.ncs[1], np.float32),
+        "wake": col(lambda c: c.wake_latency, np.float32),
+        "alpha": col(lambda c: c.alpha_eff, np.float32),
+        "sws_init": col(lambda c: c.sws_start, np.int32),
+        "sws_max": col(lambda c: max(c.sws_max_eff, c.sws_start), np.int32),
+        "k": col(lambda c: c.k, np.int32),
+        "spin_budget": col(lambda c: c.spin_budget, np.float32),
+        "seed": col(lambda c: c.seed, np.uint32),
+    }

@@ -23,6 +23,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 
 from .oracle import EvalSWS, Oracle
+from .policy import clamp_delta, wake_correction
 
 
 @dataclass
@@ -73,10 +74,7 @@ class SpinningWindow:
         delta = self.oracle.eval_sws(spun=not late_wake, slept=late_wake,
                                      sws=self.sws)
         # Clamp exactly as Algorithm 1 lines A16-A17 (low bound = min_size).
-        if self.sws + delta < self.min:
-            delta = self.min - self.sws
-        if self.sws + delta > self.max:
-            delta = self.max - self.sws
+        delta = clamp_delta(self.sws, delta, self.min, self.max)
         if delta == 0:
             self.stats.history.append(self.sws)
             return 0
@@ -84,9 +82,6 @@ class SpinningWindow:
         self.stats.grows += delta > 0
         self.stats.shrinks += delta < 0
         self.stats.history.append(self.sws)
-        # C1/C2 corrections (Algorithm 1 lines A23-A33), single-controller:
-        if delta > 0 and occupancy > sws_pre:        # C1: cold items exist
-            return min(delta, occupancy - sws_pre)
-        if delta < 0 and occupancy > self.sws:       # C2: hot overflow
-            return -min(-delta, occupancy - self.sws)
-        return 0
+        # C1/C2 corrections (A23-A33): same arithmetic as the lock's wuc,
+        # applied immediately since one controller drives the window.
+        return wake_correction(delta, occupancy, sws_pre)

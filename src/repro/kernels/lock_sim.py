@@ -1,0 +1,99 @@
+"""Pallas kernel for the batched lock simulator's per-step GPS update.
+
+This is the hot inner loop of :mod:`repro.core.xdes`: for thousands of
+``(lock, threads, cores, cs, ncs, wake_latency, alpha)`` configurations at
+once, compute each configuration's runnable count, the generalized-
+processor-sharing rate ``min(1, cores/n_runnable)``, the cache-contention
+slowdown of the CS holder (``1/(1 + alpha·n_spinners)``, paper §2), and
+advance remaining work / burn spin CPU — one VMEM-resident pass over the
+``(configs, threads)`` state block instead of the six separate HBM round
+trips an unfused lowering makes.
+
+Rows are configurations (grid-parallel); the thread axis stays whole in
+VMEM (T ≤ 128 lanes after padding — a few KB per row).  The pure-jnp
+oracle is :func:`repro.kernels.ref.lock_sim_step_ref`; tests pin
+kernel == ref, and :mod:`repro.core.xdes` treats the two as swappable
+backends.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.policy import CS, NCS, SPIN
+
+from .pallas_compat import CompilerParams
+
+LANE = 128          # TPU lane width: thread axis is padded to this
+
+
+def _kernel(state_ref, rem_ref, alpha_ref, cores_ref, dt_ref, budget_ref,
+            rem_out_ref, burn_out_ref):
+    st = state_ref[...]                                       # (bc, T) int32
+    rem = rem_ref[...]                                        # (bc, T) f32
+    is_cs = st == CS
+    is_ncs = st == NCS
+    is_spin = st == SPIN
+    n_run = jnp.sum((is_cs | is_ncs | is_spin).astype(jnp.float32),
+                    axis=-1, keepdims=True)                   # (bc, 1)
+    n_spin = jnp.sum(is_spin.astype(jnp.float32), axis=-1, keepdims=True)
+    cores = cores_ref[...]                                    # (bc, 1)
+    rate = jnp.minimum(1.0, cores / jnp.maximum(n_run, 1.0))
+    holder_rate = rate / (1.0 + alpha_ref[...] * n_spin)
+    dt = dt_ref[...]                                          # (bc, 1)
+    d_rate = dt * rate
+    burn = jnp.where(is_spin, d_rate, 0.0)
+    dec = (jnp.where(is_cs, dt * holder_rate, 0.0)
+           + jnp.where(is_ncs, d_rate, 0.0)
+           + jnp.where(budget_ref[...] > 0, burn, 0.0))
+    rem_out_ref[...] = rem - dec
+    burn_out_ref[...] = jnp.sum(burn, axis=-1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("block_configs", "interpret"))
+def lock_sim_step(tstate, rem, alpha, cores, dt, has_budget, *,
+                  block_configs: int = 256, interpret: bool = True):
+    """Pallas-fused GPS advance; signature mirrors ``lock_sim_step_ref``.
+
+    tstate: (C, T) int32; rem: (C, T) f32; alpha/cores/dt: (C,) f32;
+    has_budget: (C,) bool.  Returns ``(rem', spin_burn)``.
+    """
+    C, T = tstate.shape
+    bc = min(block_configs, C)
+    pc = (-C) % bc
+    pt = (-T) % LANE
+    # Pad threads to the lane width with DONE-state slots (no rate effect)
+    # and configs to the block size.
+    st2 = jnp.pad(tstate, ((0, pc), (0, pt)), constant_values=5)  # DONE
+    rem2 = jnp.pad(rem, ((0, pc), (0, pt)))
+    col = lambda v, dt_: jnp.pad(v.astype(dt_), (0, pc))[:, None]
+    nc = (C + pc) // bc
+
+    rem_new, burn = pl.pallas_call(
+        _kernel,
+        grid=(nc,),
+        in_specs=[
+            pl.BlockSpec((bc, T + pt), lambda i: (i, 0)),
+            pl.BlockSpec((bc, T + pt), lambda i: (i, 0)),
+            pl.BlockSpec((bc, 1), lambda i: (i, 0)),
+            pl.BlockSpec((bc, 1), lambda i: (i, 0)),
+            pl.BlockSpec((bc, 1), lambda i: (i, 0)),
+            pl.BlockSpec((bc, 1), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bc, T + pt), lambda i: (i, 0)),
+            pl.BlockSpec((bc, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((C + pc, T + pt), jnp.float32),
+            jax.ShapeDtypeStruct((C + pc, 1), jnp.float32),
+        ],
+        interpret=interpret,
+        compiler_params=CompilerParams(dimension_semantics=("parallel",)),
+    )(st2, rem2, col(alpha, jnp.float32), col(cores, jnp.float32),
+      col(dt, jnp.float32), col(has_budget, jnp.int32))
+    return rem_new[:C, :T], burn[:C, 0]

@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+from .pallas_compat import CompilerParams
 
 
 def _kernel(dt_ref, x_ref, b_ref, c_ref, a_ref, y_ref, s_ref, *,
@@ -89,7 +90,7 @@ def mamba_scan(dt, x, Bm, Cm, a, *, chunk: int = 64, block_d: int = 128,
         out_shape=jax.ShapeDtypeStruct((B, Tp, dp), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bd, N), jnp.float32)],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
     )(dt, x, Bm, Cm, a)
     return y[:, :T, :d]

@@ -1,0 +1,17 @@
+"""Version-robust aliases for the Pallas TPU API.
+
+The pinned JAX exposes TPU compiler parameters as
+``pltpu.TPUCompilerParams``; newer releases renamed it to
+``pltpu.CompilerParams`` (and deprecated the old name).  Every kernel
+imports :data:`CompilerParams` from here so the repo tracks either
+spelling without per-module try/except blocks.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")
+
+__all__ = ["CompilerParams"]

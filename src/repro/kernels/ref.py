@@ -79,3 +79,35 @@ def rmsnorm_ref(x, w, eps: float = 1e-6):
     var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
     return (xf * jax.lax.rsqrt(var + eps)
             * (1.0 + w.astype(jnp.float32))).astype(x.dtype)
+
+
+def lock_sim_step_ref(tstate, rem, alpha, cores, dt, has_budget):
+    """One generalized-processor-sharing advance of the batched lock sim.
+
+    The hot inner update of :mod:`repro.core.xdes` (paper §2 model): every
+    runnable thread advances at rate ``min(1, cores / n_runnable)``; the CS
+    holder is additionally slowed by cache-coherency pressure
+    ``1 / (1 + alpha * n_spinners)``; spinners burn CPU, and the adaptive
+    discipline's spinners consume their spin budget.
+
+    tstate: (C, T) int32 thread states (repro.core.policy encoding);
+    rem:    (C, T) f32 remaining work (CS/NCS) or spin budget (adaptive);
+    alpha, cores, dt: (C,) f32; has_budget: (C,) bool.
+    Returns ``(rem', spin_burn)`` with spin_burn (C,) f32 — the CPU-seconds
+    burnt spinning this step (the paper's sync-waste metric).
+    """
+    from repro.core.policy import CS, NCS, SPIN
+
+    is_cs = tstate == CS
+    is_ncs = tstate == NCS
+    is_spin = tstate == SPIN
+    n_run = jnp.sum(is_cs | is_ncs | is_spin, axis=-1).astype(jnp.float32)
+    n_spin = jnp.sum(is_spin, axis=-1).astype(jnp.float32)
+    rate = jnp.minimum(1.0, cores / jnp.maximum(n_run, 1.0))
+    holder_rate = rate / (1.0 + alpha * n_spin)
+    d_rate = dt * rate
+    burn = jnp.where(is_spin, d_rate[:, None], 0.0)
+    dec = (jnp.where(is_cs, (dt * holder_rate)[:, None], 0.0)
+           + jnp.where(is_ncs, d_rate[:, None], 0.0)
+           + jnp.where(has_budget[:, None], burn, 0.0))
+    return rem - dec, jnp.sum(burn, axis=-1)

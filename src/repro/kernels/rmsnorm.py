@@ -13,7 +13,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from .pallas_compat import CompilerParams
 
 
 def _kernel(x_ref, w_ref, o_ref, *, eps: float):
@@ -51,7 +51,7 @@ def rmsnorm(x, w, *, eps: float = 1e-6, block_rows: int = 256,
         out_specs=pl.BlockSpec((bm, D), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((rows + pr, D), x.dtype),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel",)),
     )(x2, w)
     return out[:rows].reshape(shape)

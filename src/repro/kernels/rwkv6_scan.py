@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+from .pallas_compat import CompilerParams
 
 
 def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, sT_ref,
@@ -100,7 +101,7 @@ def rwkv6_scan(r, k, v, w, u, s0=None, *, chunk: int = 64,
         ],
         scratch_shapes=[pltpu.VMEM((n, n), jnp.float32)],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
     )(r, k, v, w, u, s0)
     return y[:, :T], sT

@@ -27,6 +27,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import AttentionConfig
 from repro.sharding import specs as sh
+from repro.sharding.compat import shard_map
 
 from .layers import apply_rope, fan_in_init, rmsnorm, zeros
 
@@ -411,7 +412,7 @@ def decode_attention_cp(acfg: AttentionConfig, params, x, cache_k, cache_v,
         return out.reshape(Bl, 1, H, hd).astype(q.dtype), k, v
 
     kvspec = kv_axes[0] if len(kv_axes) == 1 else kv_axes
-    out, ck, cv = jax.shard_map(
+    out, ck, cv = shard_map(
         body, mesh=mesh,
         in_specs=(P(bspec, None, None, None),
                   P(bspec, kvspec, None, None),

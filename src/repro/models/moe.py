@@ -30,6 +30,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import MoEConfig
 from repro.sharding import specs as sh
+from repro.sharding.compat import shard_map
 
 from .layers import act_fn, fan_in_init
 
@@ -235,7 +236,7 @@ def moe_ep(mcfg: MoEConfig, params, x, act: str, with_aux: bool = True):
 
     wanted = {k: params[k] for k in ("router", "w_gate", "w_in", "w_out")}
     specs_in = {k: w_specs[k] for k in wanted}
-    out, aux = jax.shard_map(
+    out, aux = shard_map(
         body, mesh=mesh, in_specs=(specs_in, x_spec),
         out_specs=(x_spec, P()), check_vma=False)(wanted, x)
     if mcfg.shared_d_ff:
@@ -289,7 +290,7 @@ def moe_decode(mcfg: MoEConfig, params, x, act: str):
         return out.astype(xl.dtype).reshape(Bl, Sl, D)
 
     wanted = {k: params[k] for k in ("router", "w_gate", "w_in", "w_out")}
-    out = jax.shard_map(body, mesh=mesh, in_specs=(w_specs, x_spec),
+    out = shard_map(body, mesh=mesh, in_specs=(w_specs, x_spec),
                         out_specs=x_spec, check_vma=False)(wanted, x)
     if mcfg.shared_d_ff:
         from .layers import mlp

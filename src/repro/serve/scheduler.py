@@ -81,6 +81,30 @@ class ContinuousBatcher:
         self.standby: deque[tuple[Request, object, int]] = deque()
         self.stats = SchedStats()
 
+    @classmethod
+    def from_policy(cls, engine, policy: str, max_standby: int | None = None,
+                    k: int = 10) -> "ContinuousBatcher":
+        """Build a batcher from a named admission policy.
+
+        ``mutable`` — the paper's EvalSWS window (self-tuned standby pool);
+        ``sleep``/``zero`` — never keep standby (pure sleep-lock analogue);
+        ``spin``/``max`` — standby pool pinned at the maximum (pure
+        spin-lock analogue).  Mirrors the lock registry in
+        :mod:`repro.core.policy` so benchmarks and serving configs name
+        disciplines consistently.
+        """
+        cap = max(1, engine.max_slots) if max_standby is None else max_standby
+        if policy == "mutable":
+            return cls(engine, max_standby=cap, initial=1, oracle=EvalSWS(k=k))
+        if policy in ("sleep", "zero"):
+            return cls(engine, max_standby=cap, initial=0,
+                       oracle=FixedOracle())
+        if policy in ("spin", "max"):
+            return cls(engine, max_standby=cap, initial=cap,
+                       oracle=FixedOracle())
+        raise ValueError(f"unknown admission policy {policy!r}; "
+                         "options: mutable|sleep|zero|spin|max")
+
     # -- client API ---------------------------------------------------------
     def submit(self, req: Request) -> None:
         self.queue.append(req)

@@ -27,6 +27,7 @@ import jax.numpy as jnp
 
 from repro import models
 from repro.configs.base import ModelConfig
+from repro.sharding.compat import shard_map
 
 from .optimizer import TrainConfig, apply_updates, make_optimizer
 
@@ -161,7 +162,7 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig):
                     return _grads_compressed(cfg, p, b, e,
                                              tcfg.grad_accum, "pod")
 
-            loss, metrics, grads, ef = jax.shard_map(
+            loss, metrics, grads, ef = shard_map(
                 body, mesh=mesh, axis_names={"pod"},
                 in_specs=(pspec, bspec, efspec),
                 out_specs=(P(), jax.tree.map(lambda _: P(), {

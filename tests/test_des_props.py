@@ -7,6 +7,11 @@ thread count, core count, CS/NCS regime and seed —
   * windows: the mutable model's sws stays within [1, max].
 """
 
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="dev-only dependency (requirements-dev.txt)")
+
 from hypothesis import given, settings, strategies as st
 
 from repro.core.des import LockSim, simulate

@@ -1,0 +1,129 @@
+"""The shared policy core (repro.core.policy): the pure functions must be
+exactly the semantics the class-based layers implement, since the DES, the
+threaded lock, the serving window and the batched xdes backend all consume
+them.  Checked here: EvalSWS equivalence against the stateful oracle,
+clamp/correction/release laws, and the SimConfig encoding."""
+
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import policy as P
+from repro.core.oracle import EvalSWS
+from repro.core.window import SpinningWindow
+
+
+def test_eval_sws_delta_matches_stateful_oracle():
+    rng = random.Random(0)
+    oracle = EvalSWS(k=7)
+    cnt = 0
+    sws = 1
+    for _ in range(500):
+        spun = rng.random() < 0.6
+        slept = rng.random() < 0.4
+        want = oracle.eval_sws(spun, slept, sws)
+        got, cnt = P.eval_sws_delta(spun, slept, sws, cnt, 7)
+        assert got == want
+        assert cnt == oracle.cnt
+        sws = max(1, sws + got)
+
+
+def test_eval_sws_grow_and_shrink():
+    # late wake-up doubles; K clean rounds shrink by one
+    delta, cnt = P.eval_sws_delta(spun=False, slept=True, sws=4, cnt=3, k=10)
+    assert (delta, cnt) == (4, 0)
+    delta, cnt = P.eval_sws_delta(spun=True, slept=False, sws=4, cnt=9, k=10)
+    assert (delta, cnt) == (-1, 0)
+    delta, cnt = P.eval_sws_delta(spun=True, slept=True, sws=4, cnt=0, k=10)
+    assert (delta, cnt) == (0, 1)      # slept AND spun is not a late wake
+
+
+def test_clamp_delta_bounds():
+    for sws in range(1, 12):
+        for delta in range(-12, 13):
+            c = P.clamp_delta(sws, delta, 1, 8)
+            assert 1 <= sws + c <= 8
+            # clamp only ever moves the delta toward the bounds
+            assert abs(c) <= abs(delta) or (sws + delta < 1
+                                            or sws + delta > 8)
+
+
+def test_wake_correction_c1_c2_laws():
+    # C1: grow with sleepers — wake at most delta, at most the sleepers
+    assert P.wake_correction(delta=2, thc=6, sws_pre=3) == 2   # 3 sleepers
+    assert P.wake_correction(delta=4, thc=5, sws_pre=3) == 2   # only 2 exist
+    assert P.wake_correction(delta=2, thc=3, sws_pre=3) == 0   # none outside
+    # C2: shrink with excess spinners — suppress at most -delta, at most
+    # the overflow past the new window
+    assert P.wake_correction(delta=-2, thc=6, sws_pre=5) == -2  # 3 excess
+    assert P.wake_correction(delta=-3, thc=4, sws_pre=5) == -2  # 2 excess
+    assert P.wake_correction(delta=-2, thc=2, sws_pre=5) == 0   # fits
+    # magnitude law holds for arbitrary states
+    rng = random.Random(1)
+    for _ in range(300):
+        delta = rng.randint(-6, 6)
+        if delta == 0:
+            continue
+        thc, sws_pre = rng.randint(0, 20), rng.randint(1, 12)
+        corr = P.wake_correction(delta, thc, sws_pre)
+        assert abs(corr) <= abs(delta)
+        assert corr * delta >= 0         # same sign (or zero)
+
+
+def test_latch_and_release_quota():
+    # clean release: ship the pending corrections + the R16 promotion
+    r, wuc = P.latch_wuc(3)
+    assert (r, wuc) == (3, 0)
+    assert P.release_quota(r, thc_pre=5, sws=2) == 4     # +1: sleepers exist
+    assert P.release_quota(r, thc_pre=2, sws=2) == 3     # no sleepers
+    # C2-suppressed release: no wake at all, debt shrinks by one
+    r, wuc = P.latch_wuc(-2)
+    assert (r, wuc) == (-1, -1)
+    assert P.release_quota(r, thc_pre=9, sws=1) == 0
+
+
+def test_arrival_rule():
+    assert not P.should_sleep_on_arrival(thc_pre=0, sws=1)   # holder slot
+    assert P.should_sleep_on_arrival(thc_pre=1, sws=1)
+    assert not P.should_sleep_on_arrival(thc_pre=3, sws=4)
+    assert P.should_sleep_on_arrival(thc_pre=4, sws=4)
+
+
+def test_window_observe_consumes_same_correction():
+    """The single-controller window must report exactly wake_correction."""
+    win = SpinningWindow(max_size=8, initial=4)
+    # force a grow via a late wake with 6 occupants (2 outside the window)
+    corr = win.observe(late_wake=True, occupancy=6)
+    assert win.sws == 8
+    assert corr == P.wake_correction(4, 6, 4)
+
+
+def test_sim_config_encoding_roundtrip():
+    cfgs = [
+        P.SimConfig("mutable", threads=8, cores=4, cs=(0, 2e-6),
+                    ncs=(0, 1e-6), sws_init=2),
+        P.SimConfig("ttas", threads=3, cores=20, cs=(1e-6, 1e-6),
+                    ncs=(0, 4e-6), alpha=0.07),
+        P.SimConfig("sleep", threads=16, cores=2, cs=(0, 9e-6),
+                    ncs=(0, 9e-6)),
+        P.SimConfig("adaptive", threads=5, cores=5, cs=(0, 2e-6),
+                    ncs=(0, 2e-6), spin_budget=5e-6),
+    ]
+    arrs = P.encode_configs(cfgs)
+    assert set(arrs) == set(P.CONFIG_FIELDS)
+    assert arrs["policy"].tolist() == [P.MUTABLE, P.TTAS, P.SLEEP,
+                                       P.ADAPTIVE]
+    # unified A7 window encoding: spin/adaptive never sleep on arrival,
+    # the sleep lock parks every waiter, mutable starts at sws_init
+    assert arrs["sws_init"].tolist() == [2, 3, 1, 5]
+    np.testing.assert_allclose(arrs["alpha"],
+                               [0.02, 0.07, 0.0, 0.02], atol=1e-7)
+    assert arrs["spin_budget"][3] == np.float32(5e-6)
+
+
+def test_sim_config_validation():
+    with pytest.raises(ValueError):
+        P.SimConfig("nope", threads=2, cores=2, cs=(0, 1e-6), ncs=(0, 1e-6))
+    with pytest.raises(ValueError):
+        P.SimConfig("ttas", threads=0, cores=2, cs=(0, 1e-6), ncs=(0, 1e-6))

@@ -12,6 +12,11 @@ Invariants checked:
   and mutual exclusion for arbitrary workload draws.
 """
 
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="dev-only dependency (requirements-dev.txt)")
+
 import hypothesis.strategies as st
 from hypothesis import given, settings
 
