@@ -1,18 +1,29 @@
 """Oracle ablation — the paper's future work ("study other approaches to
-resize the spinning window"), §5.
+resize the spinning window", §5), run as ONE batched xdes call.
 
-Same DES, same mutable-lock state machine, different EvalSWS replacements:
+Four SWS-adaptation families (see ``docs/oracles.md`` for rules and
+provenance), each swept over its ``(K, sws_max)`` tuning grid on every
+random scenario of the adaptive-spin design space:
 
-    paper   — double on late wake-up, −1 after K clean (K=10)
-    paper-k3/k30 — K sensitivity (paper: K trades late-wake probability
-              ~1/(K+1) against hardware contention)
-    aimd    — +1 on late wake-up, halve after K clean (opposite bias:
-              favors CPU savings over latency)
-    fixed1 / fixed-cores — no adaptation (static windows)
+    paper   — EvalSWS: double on late wake-up, -1 after K clean (E1-E12)
+    aimd    — +1 on late wake-up, halve after K clean (Fissile-style
+              backoff splitting: favors CPU savings over latency)
+    fixed   — no adaptation: window pinned at the retrial budget K
+              (glibc ``spin_count`` cap / Oracle RDBMS ``_spin_count``)
+    history — EWMA of the late-wake rate (glibc adaptive-mutex smoothing);
+              grow above 2x the 1/(K+1) target, shrink below half
 
-Reported per oracle: throughput ratio to the per-cell optimum and spin
-CPU per CS, averaged over the paper's four CS/NCS regimes at 8/16/20/26
-threads.
+The whole ``(oracle, K, sws_max) x scenario`` product is simulated by a
+single jit-compiled :func:`repro.core.xdes.simulate_batch` program (no
+per-cell Python loop — the sequential-DES version of this benchmark ran
+for minutes per family).  Artifacts, also emitted by ``benchmarks/run.py``:
+
+* ``reports/oracle_ablation.json`` — full per-variant / per-family stats
+* ``reports/oracle_phase_diagram.csv`` — which family wins per workload
+  bucket (CS length x subscription x wake latency)
+* ``reports/oracle_phase_diagram.md`` — the same as a readable report
+
+    PYTHONPATH=src python -m benchmarks.oracle_ablation [--quick]
 """
 
 from __future__ import annotations
@@ -21,76 +32,96 @@ import argparse
 import json
 import os
 
-from repro.core.des import simulate
-from repro.core.oracle import AIMDOracle, EvalSWS, FixedOracle
-
-SHORT = (0.0, 3.7e-6)
-LONG = (0.0, 366e-6)
-REGIMES = {"ss": (SHORT, SHORT), "ls": (LONG, SHORT),
-           "sl": (SHORT, LONG), "ll": (LONG, LONG)}
-THREADS = [8, 16, 20, 26]
-CORES = 20
-WAKE = 8e-6
-
-ORACLES = {
-    "paper":   lambda: {"oracle": EvalSWS(k=10)},
-    "paper-k3":  lambda: {"oracle": EvalSWS(k=3)},
-    "paper-k30": lambda: {"oracle": EvalSWS(k=30)},
-    "aimd":    lambda: {"oracle": AIMDOracle(k=10)},
-    "fixed1":  lambda: {"oracle": FixedOracle(), "initial_sws": 1},
-    "fixed-cores": lambda: {"oracle": FixedOracle(), "initial_sws": CORES},
-}
+from benchmarks import sweep
 
 
-def run(target_cs: int = 1200, seeds=(0, 1)) -> dict:
-    out = {}
-    for name, mk in ORACLES.items():
-        thr_sum = cpu_sum = 0.0
-        cells = 0
-        per_regime = {}
-        for rname, (cs, ncs) in REGIMES.items():
-            best = {}
-            for tc in THREADS:
-                thr = cpu = 0.0
-                for seed in seeds:
-                    r = simulate("mutable", tc, cores=CORES, cs=cs, ncs=ncs,
-                                 wake_latency=WAKE, target_cs=target_cs,
-                                 seed=seed, lock_kwargs=mk())
-                    thr += r.throughput / len(seeds)
-                    cpu += r.sync_cpu_per_cs / len(seeds)
-                best[tc] = (thr, cpu)
-            per_regime[rname] = best
-        out[name] = per_regime
-    # normalize: per (regime, tc) optimum across oracles
-    table = {}
-    for name in ORACLES:
-        ratios, cpus = [], []
-        for rname in REGIMES:
-            for tc in THREADS:
-                opt = max(out[o][rname][tc][0] for o in ORACLES)
-                ratios.append(out[name][rname][tc][0] / opt)
-                cpus.append(out[name][rname][tc][1])
-        table[name] = {"mean_ratio_to_opt": sum(ratios) / len(ratios),
-                       "mean_sync_cpu_us": 1e6 * sum(cpus) / len(cpus)}
-    return table
+def write_phase_diagram(result: dict, reports_dir: str = "reports",
+                        stem: str = "oracle_phase_diagram") -> tuple[str, str]:
+    """Render the oracle grid's phase diagram to ``<stem>.csv`` and
+    ``<stem>.md`` under ``reports_dir``.  Returns the two paths."""
+    os.makedirs(reports_dir, exist_ok=True)
+    fam_names = list(result["families"])
+
+    csv_path = os.path.join(reports_dir, stem + ".csv")
+    with open(csv_path, "w") as f:
+        f.write("cs,subscription,wake,n,winner,win_share,"
+                + ",".join(f"wins_{n}" for n in fam_names) + "\n")
+        for cell in result["phase"]:
+            f.write(f"{cell['cs']},{cell['sub']},{cell['wake']},"
+                    f"{cell['n']},{cell['winner']},{cell['win_share']},"
+                    + ",".join(str(cell["wins_by_family"][n])
+                               for n in fam_names) + "\n")
+
+    md_path = os.path.join(reports_dir, stem + ".md")
+    meta = result["meta"]
+    with open(md_path, "w") as f:
+        f.write("# Oracle phase diagram — which SWS oracle wins where\n\n")
+        f.write(f"{meta['n_scenarios']} random scenarios x "
+                f"{meta['n_variants']} (oracle, K, sws_max) variants = "
+                f"{meta['n_configs']} mutable-lock configurations, one "
+                f"batched xdes call ({meta['backend']} backend, "
+                f"{meta['n_steps']} steps, {meta['wall_s']}s wall).\n\n"
+                "Update rules and tuning guidance: docs/oracles.md.\n\n")
+        f.write("## Family summary (best tuning per scenario)\n\n")
+        f.write("| family | wins | best-tuned mean ratio-to-best "
+                "| mean spin CPU/CS (µs) |\n|---|---|---|---|\n")
+        for name, row in result["families"].items():
+            f.write(f"| {name} | {row['wins']} "
+                    f"| {row['best_tuned_mean_ratio']:.3f} "
+                    f"| {row['mean_sync_cpu_per_cs_us']:.2f} |\n")
+        f.write("\n## Phase diagram\n\nBuckets: CS length (short ≤ 10 µs "
+                "< mid ≤ 100 µs < long), subscription (threads vs cores), "
+                "wake latency (fast ≤ 10 µs < slow).\n\n")
+        f.write("| CS | subscription | wake | n | winning family "
+                "| win share |\n|---|---|---|---|---|---|\n")
+        for cell in result["phase"]:
+            f.write(f"| {cell['cs']} | {cell['sub']} | {cell['wake']} "
+                    f"| {cell['n']} | {cell['winner']} "
+                    f"| {cell['win_share']:.2f} |\n")
+        f.write("\n## Variant detail\n\n| variant | wins | mean ratio "
+                "| p10 ratio | spin CPU/CS (µs) | mean final SWS |\n"
+                "|---|---|---|---|---|---|\n")
+        for v in sorted(result["variants"],
+                        key=lambda v: -v["mean_ratio_to_best"]):
+            f.write(f"| {v['name']} | {v['wins']} "
+                    f"| {v['mean_ratio_to_best']:.3f} "
+                    f"| {v['p10_ratio_to_best']:.3f} "
+                    f"| {v['mean_sync_cpu_per_cs_us']:.2f} "
+                    f"| {v['mean_final_sws']:.1f} |\n")
+    return csv_path, md_path
 
 
 def main(argv=None) -> dict:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--target-cs", type=int, default=1200)
+    ap.add_argument("--quick", action="store_true",
+                    help="smoke-scale grid (<30 s)")
+    ap.add_argument("--scenarios", type=int, default=None,
+                    help="default: 200 (24 with --quick)")
+    ap.add_argument("--target-cs", type=int, default=None,
+                    help="default: 150 (40 with --quick)")
+    ap.add_argument("--backend", choices=("ref", "pallas"), default="ref")
+    ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="reports/oracle_ablation.json")
     args = ap.parse_args(argv)
-    table = run(args.target_cs)
-    print(f"{'oracle':>12} {'ratio-to-opt':>13} {'sync CPU/CS (µs)':>17}")
-    for name, row in sorted(table.items(),
-                            key=lambda kv: -kv[1]["mean_ratio_to_opt"]):
-        print(f"{name:>12} {row['mean_ratio_to_opt']:13.3f} "
-              f"{row['mean_sync_cpu_us']:17.1f}")
-    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+
+    if args.quick:
+        result = sweep.oracle_grid(n_scenarios=args.scenarios or 24,
+                                   target_cs=args.target_cs or 40,
+                                   backend=args.backend, seed=args.seed,
+                                   ks=(3, 10), sws_maxes=(None,))
+    else:
+        result = sweep.oracle_grid(n_scenarios=args.scenarios or 200,
+                                   target_cs=args.target_cs or 150,
+                                   backend=args.backend, seed=args.seed)
+
+    # all three artifacts (JSON + CSV + MD) land in the same directory
+    out_dir = os.path.dirname(args.out) or "."
+    os.makedirs(out_dir, exist_ok=True)
     with open(args.out, "w") as f:
-        json.dump(table, f, indent=1)
-    print(f"wrote {args.out}")
-    return table
+        json.dump(result, f, indent=1)
+    csv_path, md_path = write_phase_diagram(result, out_dir)
+    print(f"wrote {args.out}, {csv_path}, {md_path}")
+    return result
 
 
 if __name__ == "__main__":

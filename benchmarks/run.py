@@ -9,10 +9,12 @@
 | sweep      | Fig. 3 grid + scenario | benchmarks.sweep (xdes) |
 | phold      | Fig. 4 PHOLD/PDES      | benchmarks.phold        |
 | sched      | §3 technique on TPU    | benchmarks.sched_bench  |
+| oracle     | §5 oracle families     | benchmarks.oracle_ablation (xdes) |
 | roofline   | EXPERIMENTS §Roofline  | benchmarks.roofline     |
 
-Artifacts land in reports/*.json; a summary CSV is printed at the end.
-``--quick`` runs only the batched xdes sweep at smoke scale (<60 s) —
+Artifacts land in reports/* (JSON plus the oracle phase-diagram CSV and
+markdown); a summary CSV is printed at the end.  ``--quick`` runs only the
+batched xdes sweep and the oracle-family grid at smoke scale (~1 min) —
 the fast signal that the simulation stack works end to end.
 """
 
@@ -46,6 +48,14 @@ def main(argv=None) -> None:
         summary.append(("sweep.scenario.mutable.mean_ratio",
                         round(sw["scenario"]["mean_ratio_to_best"]
                               ["mutable"], 3)))
+        print("\n" + "=" * 72)
+        print("[quick] oracle-family grid smoke (phase-diagram report)")
+        print("=" * 72)
+        from benchmarks import oracle_ablation
+        oa = oracle_ablation.main(["--quick"])
+        for fam, row in oa["families"].items():
+            summary.append((f"oracle.{fam}.best_tuned_ratio",
+                            round(row["best_tuned_mean_ratio"], 3)))
         print("\n" + "=" * 72)
         print(f"quick smoke done in {time.time()-t0:.0f}s — summary CSV")
         print("=" * 72)
@@ -111,14 +121,16 @@ def main(argv=None) -> None:
                         round(agg["avg_standby"], 2)))
 
     print("\n" + "=" * 72)
-    print("[6/7] oracle ablation (paper §5 future work)")
+    print("[6/7] oracle-family grid (paper §5 future work, batched xdes)")
     print("=" * 72)
     from benchmarks import oracle_ablation
-    oa = oracle_ablation.main(["--target-cs",
-                               "1200" if args.full else "800"])
-    for name, row in oa.items():
-        summary.append((f"oracle.{name}.ratio",
-                        round(row["mean_ratio_to_opt"], 3)))
+    oa = oracle_ablation.main(
+        ["--scenarios", "200" if args.full else "100",
+         "--target-cs", "150" if args.full else "100"])
+    for fam, row in oa["families"].items():
+        summary.append((f"oracle.{fam}.wins", row["wins"]))
+        summary.append((f"oracle.{fam}.best_tuned_ratio",
+                        round(row["best_tuned_mean_ratio"], 3)))
 
     print("\n" + "=" * 72)
     print("[7/7] roofline tables from dry-run artifacts")

@@ -11,6 +11,9 @@ Two artifacts:
   the adaptive-spin design space, answering "which discipline wins where"
   and "how far from the per-scenario optimum is a blind static choice vs
   the mutable lock" — the experiment the sequential DES made impractical.
+* ``oracle_grid`` — the SWS-oracle ablation (4 families x K x sws_max x
+  scenarios, one call), consumed by ``benchmarks/oracle_ablation.py``
+  which renders it into the phase-diagram report (see docs/oracles.md).
 
     PYTHONPATH=src python -m benchmarks.sweep [--quick] [--backend pallas]
 """
@@ -24,8 +27,11 @@ import time
 
 import numpy as np
 
-from repro.configs.catalog import (LOCK_DISCIPLINES, LOCK_REGIMES,
-                                   LOCK_THREADS, lock_fig3_grid,
+from repro.configs.catalog import (LOCK_DISCIPLINES, LOCK_ORACLE_KS,
+                                   LOCK_ORACLE_SWS_MAX, LOCK_ORACLES,
+                                   LOCK_REGIMES, LOCK_THREADS,
+                                   lock_fig3_grid, lock_oracle_sweep,
+                                   lock_oracle_variants,
                                    lock_scenario_sweep)
 from repro.core import xdes
 
@@ -146,6 +152,116 @@ def scenario(n_scenarios: int = 200, target_cs: int = 150,
                   f"{out['mean_ratio_to_best'][lock]:11.3f} "
                   f"{out['p10_ratio_to_best'][lock]:10.3f} "
                   f"{out['mean_sync_cpu_per_cs_us'][lock]:12.2f}")
+    return out
+
+
+# --------------------------------------------------------------------------
+# Oracle-family ablation grid
+# --------------------------------------------------------------------------
+def _bucket_scenarios(configs, n_variants: int) -> list[dict]:
+    """Coarse workload features per scenario (row 0 of each variant block):
+    the phase-diagram axes of the oracle report."""
+    feats = []
+    for s in range(len(configs) // n_variants):
+        c = configs[s * n_variants]
+        feats.append({
+            "cs": ("short" if c.cs[1] <= 1e-5
+                   else "mid" if c.cs[1] <= 1e-4 else "long"),
+            "sub": "under" if c.threads <= c.cores else "over",
+            "wake": "fast" if c.wake_latency <= 1e-5 else "slow",
+        })
+    return feats
+
+
+def oracle_grid(n_scenarios: int = 200, target_cs: int = 150,
+                backend: str = "ref", seed: int = 0,
+                oracles=LOCK_ORACLES, ks=LOCK_ORACLE_KS,
+                sws_maxes=LOCK_ORACLE_SWS_MAX, verbose: bool = True) -> dict:
+    """The full ``(oracle, K, sws_max) x scenario`` product as ONE
+    jit-compiled :func:`repro.core.xdes.simulate_batch` call (no per-cell
+    Python loop), summarized three ways:
+
+    * per variant — wins, mean/p10 throughput ratio to the per-scenario
+      best variant, spin CPU per CS;
+    * per family — wins of its best-tuned variant and the ratio a
+      per-scenario best tuning of that family achieves;
+    * phase diagram — which family wins in each (CS-length x
+      subscription x wake-latency) workload bucket, the "which oracle
+      wins where" artifact rendered by ``benchmarks/oracle_ablation.py``.
+    """
+    variants = lock_oracle_variants(oracles, ks, sws_maxes)
+    configs = lock_oracle_sweep(n_scenarios=n_scenarios, seed=seed,
+                                oracles=oracles, ks=ks, sws_maxes=sws_maxes)
+    V = len(variants)
+    t0 = time.time()
+    res = xdes.simulate_batch(configs, target_cs=target_cs, backend=backend)
+    wall = time.time() - t0
+
+    thr = res.throughput.reshape(n_scenarios, V)
+    cpu = res.sync_cpu_per_cs.reshape(n_scenarios, V)
+    sws = res.final_sws.reshape(n_scenarios, V)
+    best = np.maximum(thr.max(axis=1), 1e-30)
+    ratio = thr / best[:, None]
+    win = thr.argmax(axis=1)
+
+    def vname(v):
+        m = "cores" if v["sws_max"] is None else v["sws_max"]
+        return f"{v['oracle']}-k{v['k']}-m{m}"
+
+    out_variants = [{
+        "name": vname(v), "oracle": v["oracle"], "k": v["k"],
+        "sws_max": v["sws_max"], "wins": int((win == i).sum()),
+        "mean_ratio_to_best": float(ratio[:, i].mean()),
+        "p10_ratio_to_best": float(np.percentile(ratio[:, i], 10)),
+        "mean_sync_cpu_per_cs_us": float(cpu[:, i].mean() * 1e6),
+        "mean_final_sws": float(sws[:, i].mean()),
+    } for i, v in enumerate(variants)]
+
+    fam_names = list(dict.fromkeys(v["oracle"] for v in variants))
+    fam_cols = {f: [i for i, v in enumerate(variants) if v["oracle"] == f]
+                for f in fam_names}
+    win_fam = np.asarray([variants[i]["oracle"] for i in win])
+    families = {f: {
+        "wins": int((win_fam == f).sum()),
+        # ratio achieved by the best tuning of this family per scenario
+        "best_tuned_mean_ratio": float(ratio[:, cols].max(axis=1).mean()),
+        "mean_sync_cpu_per_cs_us": float(cpu[:, cols].mean() * 1e6),
+    } for f, cols in fam_cols.items()}
+
+    feats = _bucket_scenarios(configs, V)
+    cells: dict[tuple, dict] = {}
+    for s, ft in enumerate(feats):
+        key = (ft["cs"], ft["sub"], ft["wake"])
+        cell = cells.setdefault(key, {f: 0 for f in fam_names})
+        cell[win_fam[s]] += 1
+    phase = []
+    for (cs_b, sub_b, wake_b), counts in sorted(cells.items()):
+        n = sum(counts.values())
+        winner = max(counts, key=counts.get)
+        phase.append({"cs": cs_b, "sub": sub_b, "wake": wake_b, "n": n,
+                      "winner": winner,
+                      "win_share": round(counts[winner] / n, 3),
+                      "wins_by_family": counts})
+
+    out = {
+        "meta": {"backend": backend, "n_scenarios": n_scenarios,
+                 "n_variants": V, "n_configs": len(configs),
+                 "n_steps": res.n_steps, "wall_s": round(wall, 2),
+                 "configs_per_s": round(len(configs) / max(wall, 1e-9), 1)},
+        "variants": out_variants,
+        "families": families,
+        "phase": phase,
+    }
+    if verbose:
+        print(f"\noracle grid: {len(configs)} configs ({n_scenarios} "
+              f"scenarios x {V} variants) x {res.n_steps} steps "
+              f"in {wall:.1f}s ({out['meta']['configs_per_s']} cfg/s)")
+        print(f"{'family':>9} {'wins':>5} {'best-tuned ratio':>17} "
+              f"{'cpu/cs (µs)':>12}")
+        for f, row in families.items():
+            print(f"{f:>9} {row['wins']:5d} "
+                  f"{row['best_tuned_mean_ratio']:17.3f} "
+                  f"{row['mean_sync_cpu_per_cs_us']:12.2f}")
     return out
 
 

@@ -239,40 +239,115 @@ def lock_fig3_grid(seeds=(0, 1)) -> list[SimConfig]:
     ]
 
 
+def sample_scenarios(n_scenarios: int, seed: int = 0) -> list[dict]:
+    """Draw ``n_scenarios`` random machines/workloads from the adaptive-
+    spin design space named in PAPERS.md: CS/NCS lengths log-uniform across
+    the paper's two regimes, wake latency from fast-futex to slow-
+    scheduler, cache-contention strength from uncontended to 4x the paper's
+    default, and over- as well as under-subscribed machines.  The draw
+    order is part of the contract (seeds are stable across sweeps)."""
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n_scenarios):
+        out.append(dict(
+            threads=int(rng.integers(2, 33)),
+            cores=int(rng.integers(2, 33)),
+            cs_hi=float(np.exp(rng.uniform(np.log(1e-6), np.log(4e-4)))),
+            ncs_hi=float(np.exp(rng.uniform(np.log(1e-6), np.log(4e-4)))),
+            wake=float(np.exp(rng.uniform(np.log(2e-6), np.log(5e-5)))),
+            contention=float(rng.uniform(0.0, 4.0)),
+            seed=i,
+        ))
+    return out
+
+
 def lock_scenario_sweep(n_scenarios: int = 200, seed: int = 0,
                         locks=LOCK_DISCIPLINES) -> list[SimConfig]:
     """Beyond-paper scenario sweep: ``n_scenarios`` random machines/
-    workloads, each simulated under every discipline (default 200 x 5 =
-    1000 configurations).  Samples the adaptive-spin design space named in
-    PAPERS.md: CS/NCS lengths log-uniform across the paper's two regimes,
-    wake latency from fast-futex to slow-scheduler, cache-contention
-    strength from uncontended to 4x the paper's default, and over- as well
-    as under-subscribed machines.  The sampled contention multiplies each
-    lock's own ``DEFAULT_ALPHA`` (MCS stays coherence-free, TAS stays the
-    worst) so disciplines keep their hardware character across scenarios."""
-    import numpy as np
-
+    workloads (:func:`sample_scenarios`), each simulated under every
+    discipline (default 200 x 5 = 1000 configurations).  The sampled
+    contention multiplies each lock's own ``DEFAULT_ALPHA`` (MCS stays
+    coherence-free, TAS stays the worst) so disciplines keep their
+    hardware character across scenarios."""
     from repro.core.policy import DEFAULT_ALPHA
 
-    rng = np.random.default_rng(seed)
-    out: list[SimConfig] = []
-    for i in range(n_scenarios):
-        threads = int(rng.integers(2, 33))
-        cores = int(rng.integers(2, 33))
-        cs_hi = float(np.exp(rng.uniform(np.log(1e-6), np.log(4e-4))))
-        ncs_hi = float(np.exp(rng.uniform(np.log(1e-6), np.log(4e-4))))
-        wake = float(np.exp(rng.uniform(np.log(2e-6), np.log(5e-5))))
-        contention = float(rng.uniform(0.0, 4.0))
-        for lock in locks:
-            out.append(SimConfig(
-                lock, threads=threads, cores=cores, cs=(0.0, cs_hi),
-                ncs=(0.0, ncs_hi), wake_latency=wake,
-                alpha=contention * DEFAULT_ALPHA[lock], seed=i))
+    return [
+        SimConfig(lock, threads=sc["threads"], cores=sc["cores"],
+                  cs=(0.0, sc["cs_hi"]), ncs=(0.0, sc["ncs_hi"]),
+                  wake_latency=sc["wake"],
+                  alpha=sc["contention"] * DEFAULT_ALPHA[lock],
+                  seed=sc["seed"])
+        for sc in sample_scenarios(n_scenarios, seed)
+        for lock in locks
+    ]
+
+
+# -- oracle-family ablation grid -------------------------------------------
+#: Default (oracle, K, sws_max) product axes of the oracle sweep.  ``K`` is
+#: the family's knob (shrink period for paper/aimd/history, retrial budget
+#: for fixed); ``sws_max`` None means the machine's core count (the paper
+#: default).  4 x 3 x 2 = 24 combinations, 23 variants per scenario after
+#: duplicate-trajectory pruning (see lock_oracle_variants).
+LOCK_ORACLES = ("paper", "aimd", "fixed", "history")
+LOCK_ORACLE_KS = (3, 10, 30)
+LOCK_ORACLE_SWS_MAX = (None, 8)
+
+
+def lock_oracle_variants(oracles=LOCK_ORACLES, ks=LOCK_ORACLE_KS,
+                         sws_maxes=LOCK_ORACLE_SWS_MAX) -> list[dict]:
+    """The flat ``(oracle, K, sws_max)`` product (variant-axis order of
+    :func:`lock_oracle_sweep` rows).
+
+    The ``fixed`` family pins the window at ``min(K, sws_max)``, so two
+    fixed variants with the same explicit cap and ``K >= cap`` are the
+    same trajectory — only the first is kept (ties would otherwise skew
+    the win counts toward the lower-indexed duplicate)."""
+    out, seen_fixed = [], set()
+    for o in oracles:
+        for k in ks:
+            for m in sws_maxes:
+                if o == "fixed" and m is not None:
+                    pin = min(k, m)
+                    if (pin, m) in seen_fixed:
+                        continue
+                    seen_fixed.add((pin, m))
+                out.append(dict(oracle=o, k=k, sws_max=m))
     return out
+
+
+def lock_oracle_sweep(n_scenarios: int = 200, seed: int = 0,
+                      oracles=LOCK_ORACLES, ks=LOCK_ORACLE_KS,
+                      sws_maxes=LOCK_ORACLE_SWS_MAX) -> list[SimConfig]:
+    """Oracle-family ablation: every ``(oracle, K, sws_max)`` variant of
+    the mutable lock on every random scenario — the ablation space of the
+    glibc/Oracle-RDBMS retrial families (PAPERS.md) as one flat batch for
+    a single :func:`repro.core.xdes.simulate_batch` call.
+
+    Row order is scenario-major, variant-minor (reshape to
+    ``(n_scenarios, n_variants)``); scenarios are drawn by
+    :func:`sample_scenarios` with the same seed contract as
+    :func:`lock_scenario_sweep`, so oracle results are comparable
+    scenario-by-scenario with the discipline sweep."""
+    from repro.core.policy import DEFAULT_ALPHA
+
+    variants = lock_oracle_variants(oracles, ks, sws_maxes)
+    return [
+        SimConfig("mutable", threads=sc["threads"], cores=sc["cores"],
+                  cs=(0.0, sc["cs_hi"]), ncs=(0.0, sc["ncs_hi"]),
+                  wake_latency=sc["wake"],
+                  alpha=sc["contention"] * DEFAULT_ALPHA["mutable"],
+                  seed=sc["seed"], oracle=v["oracle"], k=v["k"],
+                  sws_max=v["sws_max"])
+        for sc in sample_scenarios(n_scenarios, seed)
+        for v in variants
+    ]
 
 
 #: Named sweep registry (mirrors the model-config registry above).
 LOCK_SWEEPS = {
     "fig3": lock_fig3_grid,
     "scenario": lock_scenario_sweep,
+    "oracle": lock_oracle_sweep,
 }

@@ -15,10 +15,12 @@ from . import policy
 from .atomic import AtomicBool, AtomicU64, pack_lstate, sws_delta, unpack_lstate
 from .baselines import LOCKS, AdaptiveMutex, MCSLock, SleepLock, TASLock, TTASLock
 from .mutlock import MutableLock, MutLockStats, SemSleep, TTASSpin
-from .oracle import AIMDOracle, EvalSWS, FixedOracle, Oracle
-from .policy import (DEFAULT_ALPHA, POLICY_IDS, SimConfig, clamp_delta,
-                     encode_configs, eval_sws_delta, latch_wuc,
-                     release_quota, should_sleep_on_arrival, wake_correction)
+from .oracle import (AIMDOracle, EvalSWS, FixedBudgetOracle, FixedOracle,
+                     HistoryOracle, Oracle, make_oracle)
+from .policy import (DEFAULT_ALPHA, ORACLE_IDS, POLICY_IDS, SimConfig,
+                     clamp_delta, encode_configs, eval_sws_delta, latch_wuc,
+                     oracle_update, release_quota, should_sleep_on_arrival,
+                     wake_correction)
 from .waitpolicy import MutableWait
 from .window import SpinningWindow
 
@@ -39,12 +41,13 @@ def make_lock(kind: str = "mutable", **kwargs):
 __all__ = [
     "AtomicBool", "AtomicU64", "pack_lstate", "unpack_lstate", "sws_delta",
     "MutableLock", "MutLockStats", "SemSleep", "TTASSpin",
-    "EvalSWS", "FixedOracle", "AIMDOracle", "Oracle",
+    "EvalSWS", "FixedOracle", "AIMDOracle", "FixedBudgetOracle",
+    "HistoryOracle", "Oracle", "make_oracle",
     "SpinningWindow", "MutableWait",
     "TASLock", "TTASLock", "MCSLock", "SleepLock", "AdaptiveMutex",
     "LOCKS", "ALL_LOCKS", "make_lock",
     "policy", "SimConfig", "encode_configs",
-    "POLICY_IDS", "DEFAULT_ALPHA",
-    "eval_sws_delta", "clamp_delta", "wake_correction",
+    "POLICY_IDS", "DEFAULT_ALPHA", "ORACLE_IDS",
+    "eval_sws_delta", "oracle_update", "clamp_delta", "wake_correction",
     "latch_wuc", "release_quota", "should_sleep_on_arrival",
 ]

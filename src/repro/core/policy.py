@@ -68,6 +68,30 @@ DEFAULT_SPIN_BUDGET = 2e-6
 
 
 # --------------------------------------------------------------------------
+# Oracle family ids — shared by the threaded oracles (repro.core.oracle),
+# the batched simulator's integer encoding, and the standalone oracle
+# kernels (repro.kernels.lock_sim / repro.kernels.ref).  See docs/oracles.md
+# for the update rules and provenance of each family.
+# --------------------------------------------------------------------------
+ORACLE_EVALSWS, ORACLE_AIMD, ORACLE_FIXED, ORACLE_HISTORY = range(4)
+
+ORACLE_IDS = {
+    "paper": ORACLE_EVALSWS,       # EvalSWS E1-E12: double / -1
+    "aimd": ORACLE_AIMD,           # +1 on late wake, halve after K clean
+    "fixed": ORACLE_FIXED,         # glibc/Oracle-RDBMS fixed retrial budget
+    "history": ORACLE_HISTORY,     # EWMA of the late-wake rate
+}
+ORACLE_NAMES = {v: k for k, v in ORACLE_IDS.items()}
+
+#: Q8.8-style fixed point for the history oracle's EWMA state: ``ewma`` is
+#: the late-wake rate scaled by EWMA_ONE, smoothed with weight 1/2**EWMA_SHIFT
+#: per acquisition (glibc's adaptive mutex smooths its spin count the same
+#: way: ``__spins += (cnt - __spins) / 8``).
+EWMA_ONE = 256
+EWMA_SHIFT = 3
+
+
+# --------------------------------------------------------------------------
 # EvalSWS — the paper's oracle (E1-E12) as a pure function
 # --------------------------------------------------------------------------
 def eval_sws_delta(spun: bool, slept: bool, sws: int, cnt: int,
@@ -93,6 +117,96 @@ def clamp_delta(sws: int, delta: int, lo: int, hi: int) -> int:
     if sws + delta > hi:
         delta = hi - sws
     return delta
+
+
+# --------------------------------------------------------------------------
+# Oracle family rows — branch-free, integer-state pure functions.
+#
+# Every row has the same shape: ``(spun, slept, sws, cnt, ewma, k)`` in,
+# ``(delta, cnt', ewma')`` out, where ``delta`` is the *unclamped* window
+# variation (the caller applies A16-A17 via :func:`clamp_delta` /
+# ``jnp.clip``), ``cnt`` is the clean-acquisition counter and ``ewma`` the
+# history oracle's fixed-point late-wake rate (unused state passes through
+# unchanged).  Selection is arithmetic (``flag * a + (1-flag) * b``), never
+# ``if``, so the SAME code runs on plain Python ints (threaded oracles in
+# :mod:`repro.core.oracle`), numpy arrays, and traced jax values inside the
+# batched simulator's scan step — one implementation, bit-identical
+# everywhere.  ``spun``/``slept`` must arrive as 0/1 integers (or boolean
+# arrays); :func:`oracle_update` normalizes them.
+# --------------------------------------------------------------------------
+def oracle_evalsws_row(spun, slept, sws, cnt, ewma, k):
+    """Paper EvalSWS (E1-E12): double on a late wake-up, -1 after ``k``
+    clean acquisitions.  Branch-free form of :func:`eval_sws_delta`."""
+    cnt1 = cnt + 1                                    # E2
+    late = slept * (1 - spun)                         # E4
+    hitk = (cnt1 >= k) * (1 - late)                   # E7 (late wins)
+    delta = late * sws + hitk * (-1)                  # E5 / E8
+    cnt1 = (1 - late) * (1 - hitk) * cnt1             # E6 / E9 / E11
+    return delta, cnt1, ewma
+
+
+def oracle_aimd_row(spun, slept, sws, cnt, ewma, k):
+    """Additive-increase / multiplicative-decrease (Fissile-style backoff
+    splitting): +1 on a late wake-up, halve after ``k`` clean rounds — the
+    opposite bias to the paper (favors small windows / CPU savings)."""
+    cnt1 = cnt + 1
+    late = slept * (1 - spun)
+    hitk = (cnt1 >= k) * (1 - late)
+    delta = late * 1 + hitk * (-(sws // 2))
+    cnt1 = (1 - late) * (1 - hitk) * cnt1
+    return delta, cnt1, ewma
+
+
+def oracle_fixed_row(spun, slept, sws, cnt, ewma, k):
+    """Fixed-budget retrial (glibc ``spin_count`` cap / Oracle RDBMS
+    ``_spin_count``, Nikolaev 2012): the window is pinned at the budget
+    ``k`` — no adaptation, spin slots are a constant retrial allowance.
+    ``delta`` drives ``sws`` to ``k`` (the A16-A17 clamp caps it at
+    ``sws_max``)."""
+    return k - sws, cnt * 0, ewma
+
+
+def oracle_history_row(spun, slept, sws, cnt, ewma, k):
+    """History-based: an EWMA of the late-wake indicator (fixed point,
+    :data:`EWMA_ONE` = rate 1.0, smoothing 1/2**:data:`EWMA_SHIFT` — the
+    glibc adaptive-mutex smoothing rule applied to the paper's late-wake
+    signal).  Grow (double) when the smoothed rate exceeds twice the
+    paper's target rate 1/(k+1); shrink by one when it falls below half
+    the target.  Reacts slower than EvalSWS but is robust to one-off
+    wake-latency spikes."""
+    late = slept * (1 - spun)
+    ewma1 = ewma + ((late * EWMA_ONE - ewma) >> EWMA_SHIFT)
+    target = EWMA_ONE // (k + 1)
+    grow = (ewma1 > 2 * target) * 1
+    shrink = (2 * ewma1 < target) * (1 - grow)
+    delta = grow * sws + shrink * (-1)
+    return delta, cnt * 0, ewma1
+
+
+#: Row functions indexed by oracle id (the dispatch order of oracle_update).
+ORACLE_ROWS = (oracle_evalsws_row, oracle_aimd_row, oracle_fixed_row,
+               oracle_history_row)
+
+
+def oracle_update(oracle_id, spun, slept, sws, cnt, ewma, k):
+    """Dispatch one oracle observation by ``oracle_id``.
+
+    Arithmetic select over :data:`ORACLE_ROWS`, so it is valid on scalars
+    and arrays alike; inside the batched simulator ``oracle_id`` is a
+    per-config int32 column and every row is evaluated elementwise with the
+    winner chosen by mask — branch-free, one fused program.  Returns
+    ``(delta, cnt', ewma')`` with ``delta`` unclamped (apply A16-A17).
+    """
+    spun = spun * 1
+    slept = slept * 1
+    delta = cnt1 = ewma1 = 0
+    for oid, row in enumerate(ORACLE_ROWS):
+        sel = (oracle_id == oid) * 1
+        d, c, e = row(spun, slept, sws, cnt, ewma, k)
+        delta = delta + sel * d
+        cnt1 = cnt1 + sel * c
+        ewma1 = ewma1 + sel * e
+    return delta, cnt1, ewma1
 
 
 # --------------------------------------------------------------------------
@@ -183,6 +297,7 @@ class SimConfig:
     k: int = 10
     spin_budget: float = DEFAULT_SPIN_BUDGET
     seed: int = 0
+    oracle: str = "paper"               # SWS adaptation family (ORACLE_IDS)
 
     def __post_init__(self):
         if self.lock not in POLICY_IDS:
@@ -190,6 +305,9 @@ class SimConfig:
                              f"options: {sorted(POLICY_IDS)}")
         if self.threads < 1 or self.cores < 1:
             raise ValueError("threads and cores must be >= 1")
+        if self.oracle not in ORACLE_IDS:
+            raise ValueError(f"unknown oracle {self.oracle!r}; "
+                             f"options: {sorted(ORACLE_IDS)}")
 
     # -- derived quantities shared by both backends -----------------------
     @property
@@ -219,7 +337,10 @@ class SimConfig:
         if self.alpha is not None:
             kw["alpha"] = self.alpha
         if self.lock == "mutable":
-            kw.update(initial_sws=self.sws_init, max_sws=self.sws_max)
+            from .oracle import make_oracle
+
+            kw.update(initial_sws=self.sws_init, max_sws=self.sws_max,
+                      oracle=make_oracle(self.oracle, k=self.k))
         if self.lock == "adaptive":
             kw["spin_budget"] = self.spin_budget
         return kw
@@ -229,6 +350,7 @@ class SimConfig:
 CONFIG_FIELDS = (
     "policy", "threads", "cores", "cs_lo", "cs_hi", "ncs_lo", "ncs_hi",
     "wake", "alpha", "sws_init", "sws_max", "k", "spin_budget", "seed",
+    "oracle",
 )
 
 
@@ -264,4 +386,5 @@ def encode_configs(configs) -> dict:
         "k": col(lambda c: c.k, np.int32),
         "spin_budget": col(lambda c: c.spin_budget, np.float32),
         "seed": col(lambda c: c.seed, np.uint32),
+        "oracle": col(lambda c: ORACLE_IDS[c.oracle], np.int32),
     }

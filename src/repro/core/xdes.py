@@ -13,9 +13,11 @@ burn) is a swappable backend: the pure-XLA reference
 (:func:`repro.kernels.lock_sim.lock_sim_step`).
 
 Model fidelity: same state machine, same policy decisions (shared pure
-functions in :mod:`repro.core.policy` — A7 arrival rule, EvalSWS, A16-A17
-clamps, C1/C2 corrections, R2-R21 release quotas, banked wake permits),
-same metrics (throughput, spin-CPU per CS, wake count).  The differences
+functions in :mod:`repro.core.policy` — A7 arrival rule, the four SWS
+adaptation oracle families (paper EvalSWS / AIMD / fixed-budget / history,
+dispatched per config by the ``oracle`` column, see ``docs/oracles.md``),
+A16-A17 clamps, C1/C2 corrections, R2-R21 release quotas, banked wake
+permits), same metrics (throughput, spin-CPU per CS, wake count).  The differences
 are (a) time is quantized to ``dt`` instead of exact event times, and
 (b) simultaneous events inside one step resolve in thread-id order instead
 of RNG order.  Equivalence tests pin xdes against the Python DES on the
@@ -67,7 +69,7 @@ def _uniform(seed, tid, ctr):
 # device program.
 # --------------------------------------------------------------------------
 def _transitions(st, rem, wake_at, slept, spun, ctr,
-                 sws, cnt, wuc, permits, completed, wake_count,
+                 sws, cnt, ewma, wuc, permits, completed, wake_count,
                  now2, prm):
     T = st.shape[0]
     tid = jnp.arange(T, dtype=jnp.int32)
@@ -103,17 +105,16 @@ def _transitions(st, rem, wake_at, slept, spun, ctr,
         return (st, wake_at, permits - n_grant, wake_count + n_grant,
                 slept | mask, jnp.where(mask, _INF, rem))
 
-    def oracle_acquire(happened, winner_oh, thc, sws, cnt, wuc):
-        """A12-A33 at an acquisition: EvalSWS, clamp, C1/C2 correction —
-        the array form of the scalar functions in repro.core.policy."""
+    def oracle_acquire(happened, winner_oh, thc, sws, cnt, ewma, wuc):
+        """A12-A33 at an acquisition: oracle family dispatch (EvalSWS /
+        AIMD / fixed-budget / history, selected by the per-config
+        ``oracle`` id), clamp, C1/C2 correction — the array form of the
+        scalar functions in repro.core.policy."""
         do = happened & is_mut
         spun_w = (spun & winner_oh).any()
         slept_w = (slept & winner_oh).any()
-        cnt1 = cnt + 1                                        # E2
-        late = slept_w & ~spun_w                              # E4
-        hitk = cnt1 >= prm["k"]                               # E7
-        delta = jnp.where(late, sws, jnp.where(hitk, -1, 0))  # E5/E8
-        cnt2 = jnp.where(late | hitk, 0, cnt1)                # E6/E9
+        delta, cnt2, ewma2 = P.oracle_update(                 # E2-E11
+            prm["oracle"], spun_w, slept_w, sws, cnt, ewma, prm["k"])
         delta = jnp.clip(delta, 1 - sws, prm["sws_max"] - sws)  # A16-A17
         sws2 = sws + delta                                    # A20
         tmp = jnp.where((delta < 0) & (thc > sws2), thc - sws2,       # C2
@@ -121,7 +122,7 @@ def _transitions(st, rem, wake_at, slept, spun, ctr,
                                   0))                                 # C1
         corr = jnp.sign(delta) * jnp.minimum(jnp.abs(delta), tmp)  # A32
         return (jnp.where(do, sws2, sws), jnp.where(do, cnt2, cnt),
-                jnp.where(do, wuc + corr, wuc))
+                jnp.where(do, ewma2, ewma), jnp.where(do, wuc + corr, wuc))
 
     # -- adaptive spin-budget exhaustion -> sleep (DES stage order) --------
     exhausted = (st == P.SPIN) & is_adp & (rem <= REM_EPS)
@@ -137,8 +138,8 @@ def _transitions(st, rem, wake_at, slept, spun, ctr,
     st = jnp.where(winA, P.CS, st)
     # the sleep->spin transition's payoff: a woken thread that finds the
     # lock free acquired "slept and not spun" -> EvalSWS doubles the window
-    sws, cnt, wuc = oracle_acquire(winA.any(), winA, thc_of(st),
-                                   sws, cnt, wuc)
+    sws, cnt, ewma, wuc = oracle_acquire(winA.any(), winA, thc_of(st),
+                                         sws, cnt, ewma, wuc)
     losers = due & ~winA
     to_spin = losers & is_mut          # woken into the spinning window
     st = jnp.where(to_spin, P.SPIN, st)
@@ -166,8 +167,8 @@ def _transitions(st, rem, wake_at, slept, spun, ctr,
     cs_valB, ctr = draw_into(winB, prm["cs_lo"], prm["cs_hi"], ctr)
     rem = jnp.where(winB, cs_valB, rem)
     st = jnp.where(winB, P.CS, st)
-    sws, cnt, wuc = oracle_acquire(can_handoff, winB, thc_pre - 1,
-                                   sws, cnt, wuc)
+    sws, cnt, ewma, wuc = oracle_acquire(can_handoff, winB, thc_pre - 1,
+                                         sws, cnt, ewma, wuc)
     # wake quota: mutable R11-R21; sleep/adaptive wake one when anyone is
     # parked (DES `sleepers() or any_waking()`), adaptive only if no
     # spinner took the handoff
@@ -205,8 +206,8 @@ def _transitions(st, rem, wake_at, slept, spun, ctr,
     cs_valC, ctr = draw_into(winC, prm["cs_lo"], prm["cs_hi"], ctr)
     rem = jnp.where(winC, cs_valC, rem)
     st = jnp.where(winC, P.CS, st)
-    sws, cnt, wuc = oracle_acquire(winC.any(), winC, thc_base + 1,
-                                   sws, cnt, wuc)
+    sws, cnt, ewma, wuc = oracle_acquire(winC.any(), winC, thc_base + 1,
+                                         sws, cnt, ewma, wuc)
     to_spinC = nonsleep & ~winC
     st = jnp.where(to_spinC, P.SPIN, st)
     spun = spun | to_spinC
@@ -216,14 +217,14 @@ def _transitions(st, rem, wake_at, slept, spun, ctr,
         sleeps, st, wake_at, permits, wake_count, slept, rem)
 
     return (st, rem, wake_at, slept, spun, ctr,
-            sws, cnt, wuc, permits, completed, wake_count)
+            sws, cnt, ewma, wuc, permits, completed, wake_count)
 
 
 _vtransitions = jax.vmap(
     _transitions,
-    in_axes=((0,) * 12) + (0, {k: 0 for k in (
+    in_axes=((0,) * 13) + (0, {k: 0 for k in (
         "policy", "threads", "dt", "wake", "cs_lo", "cs_hi", "ncs_lo",
-        "ncs_hi", "k", "sws_max", "spin_budget", "seed")},))
+        "ncs_hi", "k", "sws_max", "spin_budget", "seed", "oracle")},))
 
 
 # --------------------------------------------------------------------------
@@ -237,7 +238,7 @@ def _simulate(arrs, n_steps: int, T: int, backend: str = "ref"):
     has_budget = arrs["policy"] == P.ADAPTIVE
     prm = {k: arrs[k] for k in (
         "policy", "threads", "dt", "wake", "cs_lo", "cs_hi", "ncs_lo",
-        "ncs_hi", "k", "sws_max", "spin_budget", "seed")}
+        "ncs_hi", "k", "sws_max", "spin_budget", "seed", "oracle")}
 
     if backend == "ref":
         from repro.kernels.ref import lock_sim_step_ref as step1
@@ -266,6 +267,7 @@ def _simulate(arrs, n_steps: int, T: int, backend: str = "ref"):
         ctr0 + 1,                                             # ctr
         arrs["sws_init"].astype(jnp.int32),                   # sws
         jnp.zeros((C,), jnp.int32),                           # cnt
+        jnp.zeros((C,), jnp.int32),                           # ewma
         jnp.zeros((C,), jnp.int32),                           # wuc
         jnp.zeros((C,), jnp.int32),                           # permits
         jnp.zeros((C,), jnp.int32),                           # completed
@@ -274,20 +276,20 @@ def _simulate(arrs, n_steps: int, T: int, backend: str = "ref"):
     )
 
     def body(carry, i):
-        (st, rem, wake_at, slept, spun, ctr, sws, cnt, wuc, permits,
+        (st, rem, wake_at, slept, spun, ctr, sws, cnt, ewma, wuc, permits,
          completed, wake_count, spin_cpu) = carry
         now2 = (i.astype(jnp.float32) + 1.0) * arrs["dt"]
         rem, burn = advance(st, rem)
         spin_cpu = spin_cpu + burn
-        (st, rem, wake_at, slept, spun, ctr, sws, cnt, wuc, permits,
+        (st, rem, wake_at, slept, spun, ctr, sws, cnt, ewma, wuc, permits,
          completed, wake_count) = _vtransitions(
-            st, rem, wake_at, slept, spun, ctr, sws, cnt, wuc, permits,
-            completed, wake_count, now2, prm)
-        return (st, rem, wake_at, slept, spun, ctr, sws, cnt, wuc,
+            st, rem, wake_at, slept, spun, ctr, sws, cnt, ewma, wuc,
+            permits, completed, wake_count, now2, prm)
+        return (st, rem, wake_at, slept, spun, ctr, sws, cnt, ewma, wuc,
                 permits, completed, wake_count, spin_cpu), None
 
     final, _ = jax.lax.scan(body, state0, jnp.arange(n_steps))
-    (st, rem, wake_at, slept, spun, ctr, sws, cnt, wuc, permits,
+    (st, rem, wake_at, slept, spun, ctr, sws, cnt, ewma, wuc, permits,
      completed, wake_count, spin_cpu) = final
     return {
         "completed": completed,

@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.policy import CS, NCS, SPIN
+from repro.core.policy import CS, NCS, SPIN, oracle_update
 
 from .pallas_compat import CompilerParams
 
@@ -97,3 +97,55 @@ def lock_sim_step(tstate, rem, alpha, cores, dt, has_budget, *,
     )(st2, rem2, col(alpha, jnp.float32), col(cores, jnp.float32),
       col(dt, jnp.float32), col(has_budget, jnp.int32))
     return rem_new[:C, :T], burn[:C, 0]
+
+
+# --------------------------------------------------------------------------
+# Fused SWS-oracle observation: one elementwise pass over (C,) config
+# vectors evaluating every oracle family row (paper EvalSWS / AIMD /
+# fixed-budget / history, repro.core.policy.ORACLE_ROWS) and selecting by
+# oracle id, A16-A17 clamp included.  This is the building block for
+# moving the scan body's transition stage into the kernel (scalar-prefetch
+# grid over configs); the batched simulator evaluates the same rows today
+# via repro.core.policy inside its vmapped transition step, and tests pin
+# kernel == ref == scalar rows bit-identically.
+# --------------------------------------------------------------------------
+def _oracle_kernel(oid_ref, spun_ref, slept_ref, sws_ref, cnt_ref,
+                   ewma_ref, k_ref, smax_ref,
+                   delta_out_ref, cnt_out_ref, ewma_out_ref):
+    sws = sws_ref[...]
+    delta, cnt1, ewma1 = oracle_update(
+        oid_ref[...], spun_ref[...], slept_ref[...], sws,
+        cnt_ref[...], ewma_ref[...], k_ref[...])
+    delta_out_ref[...] = jnp.clip(delta, 1 - sws, smax_ref[...] - sws)
+    cnt_out_ref[...] = cnt1
+    ewma_out_ref[...] = ewma1
+
+
+@functools.partial(jax.jit, static_argnames=("block_configs", "interpret"))
+def oracle_step(oracle_id, spun, slept, sws, cnt, ewma, k, sws_max, *,
+                block_configs: int = 1024, interpret: bool = True):
+    """Pallas-fused oracle observation; signature mirrors
+    :func:`repro.kernels.ref.oracle_update_ref`.
+
+    All inputs ``(C,)``: ``oracle_id/sws/cnt/ewma/k/sws_max`` int32,
+    ``spun``/``slept`` bool or 0/1 int32.  Returns ``(delta, cnt', ewma')``
+    int32 with the A16-A17 clamp applied to ``delta``.
+    """
+    C = oracle_id.shape[0]
+    bc = min(block_configs, C)
+    pc = (-C) % bc
+    nc = (C + pc) // bc
+    col = lambda v: jnp.pad(v.astype(jnp.int32), (0, pc))[:, None]
+    spec = pl.BlockSpec((bc, 1), lambda i: (i, 0))
+
+    delta, cnt1, ewma1 = pl.pallas_call(
+        _oracle_kernel,
+        grid=(nc,),
+        in_specs=[spec] * 8,
+        out_specs=[spec] * 3,
+        out_shape=[jax.ShapeDtypeStruct((C + pc, 1), jnp.int32)] * 3,
+        interpret=interpret,
+        compiler_params=CompilerParams(dimension_semantics=("parallel",)),
+    )(col(oracle_id), col(spun), col(slept), col(sws), col(cnt),
+      col(ewma), col(k), col(sws_max))
+    return delta[:C, 0], cnt1[:C, 0], ewma1[:C, 0]

@@ -111,3 +111,22 @@ def lock_sim_step_ref(tstate, rem, alpha, cores, dt, has_budget):
            + jnp.where(is_ncs, d_rate[:, None], 0.0)
            + jnp.where(has_budget[:, None], burn, 0.0))
     return rem - dec, jnp.sum(burn, axis=-1)
+
+
+def oracle_update_ref(oracle_id, spun, slept, sws, cnt, ewma, k, sws_max):
+    """Batched SWS-oracle observation over ``(C,)`` config vectors.
+
+    Pure-jnp reference for the fused Pallas kernel
+    :func:`repro.kernels.lock_sim.oracle_step`: one observation of every
+    oracle family row (:data:`repro.core.policy.ORACLE_ROWS` — paper
+    EvalSWS, AIMD, fixed-budget retrial, history EWMA) dispatched by
+    ``oracle_id``, with the A16-A17 clamp applied.  All inputs int32
+    except ``spun``/``slept`` (bool or 0/1 int32).  Returns
+    ``(delta, cnt', ewma')`` with ``1 <= sws + delta <= sws_max``.
+    """
+    from repro.core.policy import oracle_update
+
+    delta, cnt1, ewma1 = oracle_update(oracle_id, spun, slept, sws, cnt,
+                                       ewma, k)
+    delta = jnp.clip(delta, 1 - sws, sws_max - sws)
+    return delta, cnt1, ewma1

@@ -1,0 +1,213 @@
+"""Oracle-family parity: the threaded Oracle classes (repro.core.oracle),
+the vectorized policy rows (repro.core.policy.ORACLE_ROWS / oracle_update),
+the standalone oracle kernels (repro.kernels), and the batched simulator's
+per-config dispatch must all implement the SAME update rules —
+bit-identically, since the phase-diagram report compares families across
+backends."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import policy as P
+from repro.core.oracle import (AIMDOracle, EvalSWS, FixedBudgetOracle,
+                               HistoryOracle, make_oracle)
+from repro.core.policy import SimConfig
+
+FAMILIES = sorted(P.ORACLE_IDS)
+
+
+# --------------------------------------------------------------------------
+# Threaded class vs vectorized row
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("name", FAMILIES)
+@pytest.mark.parametrize("k", [1, 3, 10])
+def test_threaded_oracle_matches_vectorized_row(name, k):
+    """N independent randomized (spun, slept) streams: stepping N threaded
+    oracles one by one must equal one jnp array step over the batch —
+    identical (delta, cnt, ewma) trajectories, every step."""
+    N, steps = 8, 250
+    rng = np.random.default_rng(hash((name, k)) % 2**32)
+    spun_seq = rng.integers(0, 2, (steps, N)).astype(np.int32)
+    slept_seq = rng.integers(0, 2, (steps, N)).astype(np.int32)
+
+    oid = P.ORACLE_IDS[name]
+    threaded = [make_oracle(name, k=k) for _ in range(N)]
+    sws_t = [1] * N
+
+    oid_v = jnp.full((N,), oid, jnp.int32)
+    sws_v = jnp.ones((N,), jnp.int32)
+    cnt_v = jnp.zeros((N,), jnp.int32)
+    ewma_v = jnp.zeros((N,), jnp.int32)
+    k_v = jnp.full((N,), k, jnp.int32)
+
+    for t in range(steps):
+        deltas = [o.eval_sws(bool(spun_seq[t, i]), bool(slept_seq[t, i]),
+                             sws_t[i]) for i, o in enumerate(threaded)]
+        dv, cnt_v, ewma_v = P.oracle_update(
+            oid_v, jnp.asarray(spun_seq[t]), jnp.asarray(slept_seq[t]),
+            sws_v, cnt_v, ewma_v, k_v)
+        assert np.asarray(dv).tolist() == deltas, (name, t)
+        assert np.asarray(cnt_v).tolist() == [o.cnt for o in threaded]
+        assert np.asarray(ewma_v).tolist() == [o.ewma for o in threaded]
+        # both sides apply the same A16-A17 clamp (max window 16)
+        sws_t = [sws + P.clamp_delta(sws, d, 1, 16)
+                 for sws, d in zip(sws_t, deltas)]
+        dv = jnp.clip(dv, 1 - sws_v, 16 - sws_v)
+        sws_v = sws_v + dv
+        assert np.asarray(sws_v).tolist() == sws_t
+
+
+def test_row_functions_match_scalar_reference():
+    """The branch-free EvalSWS row equals the readable scalar reference
+    (eval_sws_delta) on its full small-state space."""
+    for spun in (0, 1):
+        for slept in (0, 1):
+            for sws in (1, 2, 7):
+                for cnt in range(0, 12):
+                    for k in (1, 5, 10):
+                        want = P.eval_sws_delta(bool(spun), bool(slept),
+                                                sws, cnt, k)
+                        d, c, e = P.oracle_evalsws_row(spun, slept, sws,
+                                                       cnt, 0, k)
+                        assert (d, c) == want
+                        assert e == 0
+
+
+def test_family_semantics():
+    # paper: doubling on a late wake, -1 after k clean
+    o = EvalSWS(k=3)
+    assert o.eval_sws(spun=False, slept=True, sws=4) == 4
+    assert [o.eval_sws(True, False, 4) for _ in range(3)] == [0, 0, -1]
+    # aimd: +1 on late wake, halve after k clean
+    a = AIMDOracle(k=2)
+    assert a.eval_sws(spun=False, slept=True, sws=8) == 1
+    assert [a.eval_sws(True, False, 8) for _ in range(2)] == [0, -4]
+    # fixed: always drives the window to the budget
+    f = FixedBudgetOracle(k=6)
+    assert f.eval_sws(True, False, 1) == 5
+    assert f.eval_sws(False, True, 10) == -4
+    # history: EWMA ramps up under sustained late wakes, decays when clean
+    h = HistoryOracle(k=10)
+    deltas = [h.eval_sws(spun=False, slept=True, sws=2) for _ in range(4)]
+    assert h.ewma > 2 * (P.EWMA_ONE // 11)
+    assert any(d > 0 for d in deltas)
+    for _ in range(40):
+        h.eval_sws(spun=True, slept=False, sws=8)
+    assert h.ewma < P.EWMA_ONE // 11 // 2 + 1
+    assert h.eval_sws(spun=True, slept=False, sws=8) == -1
+
+
+# --------------------------------------------------------------------------
+# Standalone oracle kernel (Pallas) vs XLA ref vs scalar rows
+# --------------------------------------------------------------------------
+def test_oracle_kernel_matches_ref_and_rows():
+    from repro.kernels.lock_sim import oracle_step
+    from repro.kernels.ref import oracle_update_ref
+
+    rng = np.random.default_rng(7)
+    C = 203                               # non-multiple of the block size
+    oid = rng.integers(0, 4, C).astype(np.int32)
+    spun = rng.integers(0, 2, C).astype(np.int32)
+    slept = rng.integers(0, 2, C).astype(np.int32)
+    sws = rng.integers(1, 33, C).astype(np.int32)
+    cnt = rng.integers(0, 12, C).astype(np.int32)
+    ewma = rng.integers(0, P.EWMA_ONE + 1, C).astype(np.int32)
+    k = rng.integers(1, 31, C).astype(np.int32)
+    smax = rng.integers(1, 33, C).astype(np.int32)
+
+    d_ref, c_ref, e_ref = oracle_update_ref(oid, spun, slept, sws, cnt,
+                                            ewma, k, smax)
+    d_pal, c_pal, e_pal = oracle_step(oid, spun, slept, sws, cnt, ewma,
+                                      k, smax, block_configs=64)
+    np.testing.assert_array_equal(np.asarray(d_ref), np.asarray(d_pal))
+    np.testing.assert_array_equal(np.asarray(c_ref), np.asarray(c_pal))
+    np.testing.assert_array_equal(np.asarray(e_ref), np.asarray(e_pal))
+
+    for i in range(C):
+        d, c, e = P.ORACLE_ROWS[oid[i]](int(spun[i]), int(slept[i]),
+                                        int(sws[i]), int(cnt[i]),
+                                        int(ewma[i]), int(k[i]))
+        d = P.clamp_delta(int(sws[i]), int(d), 1, int(smax[i]))
+        assert (d, c, e) == (int(d_ref[i]), int(c_ref[i]), int(e_ref[i]))
+
+
+# --------------------------------------------------------------------------
+# Batched simulator: per-config oracle dispatch, backend bit-identity
+# --------------------------------------------------------------------------
+def _oracle_cfgs():
+    return [SimConfig("mutable", threads=6, cores=6, cs=(0.0, 3.7e-6),
+                      ncs=(0.0, 3.7e-6), wake_latency=8e-6,
+                      oracle=o, k=k)
+            for o in FAMILIES for k in (3, 10)]
+
+
+def test_pallas_backend_bit_identical_on_oracle_rows():
+    from repro.core import xdes
+
+    cfgs = _oracle_cfgs()
+    r_ref = xdes.simulate_batch(cfgs, n_steps=300, backend="ref")
+    r_pal = xdes.simulate_batch(cfgs, n_steps=300, backend="pallas")
+    np.testing.assert_array_equal(r_ref.completed, r_pal.completed)
+    np.testing.assert_array_equal(r_ref.final_sws, r_pal.final_sws)
+    np.testing.assert_array_equal(r_ref.wake_count, r_pal.wake_count)
+    np.testing.assert_allclose(r_ref.spin_cpu, r_pal.spin_cpu, rtol=1e-5)
+
+
+def test_fixed_oracle_pins_window_at_budget():
+    from repro.core import xdes
+
+    cfgs = [SimConfig("mutable", threads=8, cores=8, cs=(0.0, 3.7e-6),
+                      ncs=(0.0, 3.7e-6), oracle="fixed", k=k,
+                      sws_max=m)
+            for k in (2, 5, 30) for m in (None, 4)]
+    res = xdes.simulate_batch(cfgs, n_steps=400)
+    want = [min(k, m if m else 8) for k in (2, 5, 30) for m in (None, 4)]
+    assert res.final_sws.tolist() == want
+
+
+def test_oracle_families_all_make_progress():
+    from repro.core import xdes
+
+    res = xdes.simulate_batch(_oracle_cfgs(), target_cs=80)
+    assert (res.completed >= 60).all(), res.completed
+    assert (res.final_sws >= 1).all() and (res.final_sws <= 6).all()
+
+
+# --------------------------------------------------------------------------
+# Config plumbing
+# --------------------------------------------------------------------------
+def test_sim_config_oracle_encoding():
+    cfgs = [SimConfig("mutable", threads=2, cores=2, cs=(0, 1e-6),
+                      ncs=(0, 1e-6), oracle=o) for o in FAMILIES]
+    arrs = P.encode_configs(cfgs)
+    assert arrs["oracle"].tolist() == [P.ORACLE_IDS[o] for o in FAMILIES]
+    with pytest.raises(ValueError):
+        SimConfig("mutable", threads=2, cores=2, cs=(0, 1e-6),
+                  ncs=(0, 1e-6), oracle="nope")
+
+
+def test_des_kwargs_builds_matching_threaded_oracle():
+    cfg = SimConfig("mutable", threads=4, cores=4, cs=(0, 1e-6),
+                    ncs=(0, 1e-6), oracle="aimd", k=7)
+    kw = cfg.des_kwargs()
+    assert isinstance(kw["oracle"], AIMDOracle)
+    assert kw["oracle"].k == 7
+
+
+def test_oracle_grid_catalog_shape():
+    from repro.configs.catalog import (lock_oracle_sweep,
+                                       lock_oracle_variants)
+
+    variants = lock_oracle_variants()
+    cfgs = lock_oracle_sweep(n_scenarios=5)
+    assert len(cfgs) == 5 * len(variants)
+    # scenario-major, variant-minor: every variant block shares its machine
+    V = len(variants)
+    for s in range(5):
+        block = cfgs[s * V:(s + 1) * V]
+        assert len({(c.threads, c.cores, c.cs, c.wake_latency)
+                    for c in block}) == 1
+        assert [(c.oracle, c.k, c.sws_max) for c in block] \
+            == [(v["oracle"], v["k"], v["sws_max"]) for v in variants]
