@@ -1,5 +1,9 @@
 """lockbench — the paper's synthetic benchmark (Fig. 1 timelines + Fig. 3
-grid), reproduced on the deterministic DES (and optionally real threads).
+grid).  The Fig. 3 grid runs on the batched xdes engine by default (one
+device call via ``benchmarks.sweep.fig3_batched``); the original per-cell
+event-driven loop survives behind ``--engine des`` as the legacy exactness
+reference.  Fig. 1 stays event-driven (a 3-thread deterministic timeline).
+Real-thread mode is optional.
 
 Fig. 3 regimes (paper §4): CS and NCS lengths uniform in [0, 3.7)µs (short)
 or [0, 366)µs (long); 2x2 grid.  Metrics per (lock, thread count):
@@ -92,7 +96,19 @@ def fig1(verbose: bool = True) -> dict:
 # --------------------------------------------------------------------------
 # Fig. 3 grid
 # --------------------------------------------------------------------------
-def fig3(target_cs: int = 2000, seeds=(0, 1), verbose: bool = True) -> dict:
+def fig3(target_cs: int = 400, seeds=(0, 1), verbose: bool = True,
+         engine: str = "xdes") -> dict:
+    """The Fig. 3 grid.  ``engine="xdes"`` (default) runs the whole grid
+    as ONE batched device call through ``benchmarks.sweep.fig3_batched``;
+    ``engine="des"`` is the legacy per-cell event-driven loop (exact event
+    times, minutes of Python) kept as the exactness reference."""
+    if engine == "xdes":
+        from benchmarks.sweep import fig3_batched
+
+        f3 = fig3_batched(target_cs=target_cs, seeds=seeds, verbose=verbose)
+        return {k: v for k, v in f3.items() if k in REGIMES}
+    if engine != "des":
+        raise ValueError(f"unknown engine {engine!r} (xdes|des)")
     out: dict = {}
     for regime, (cs, ncs) in REGIMES.items():
         rows = {}
@@ -178,20 +194,32 @@ def real_threads(n_threads: int = 4, iters: int = 300,
 
 
 def main(argv=None) -> dict:
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        description="lockbench: Fig. 1 timelines + Fig. 3 grid.  fig3 runs "
+                    "on the batched xdes engine by default; --engine des "
+                    "selects the LEGACY per-cell event-driven Python loop "
+                    "(exact event times, much slower — kept as the "
+                    "exactness reference).  fig1 always uses the DES: it "
+                    "is a 3-thread deterministic timeline, not a sweep.")
     ap.add_argument("--fig1", action="store_true")
     ap.add_argument("--fig3", action="store_true")
     ap.add_argument("--threads", action="store_true")
-    ap.add_argument("--target-cs", type=int, default=2000)
+    ap.add_argument("--engine", choices=("xdes", "des"), default="xdes",
+                    help="fig3 engine: batched xdes (default) or the "
+                         "legacy per-cell DES loop")
+    ap.add_argument("--target-cs", type=int, default=None,
+                    help="CS samples per cell (default: 400 xdes / "
+                         "2000 des)")
     ap.add_argument("--out", default="reports/lockbench.json")
     args = ap.parse_args(argv)
     run_all = not (args.fig1 or args.fig3 or args.threads)
+    target_cs = args.target_cs or (400 if args.engine == "xdes" else 2000)
 
     results = {}
     if args.fig1 or run_all:
         results["fig1"] = fig1()
     if args.fig3 or run_all:
-        results["fig3"] = fig3(target_cs=args.target_cs)
+        results["fig3"] = fig3(target_cs=target_cs, engine=args.engine)
     if args.threads or run_all:
         results["real_threads"] = real_threads()
     os.makedirs(os.path.dirname(args.out), exist_ok=True)

@@ -132,7 +132,13 @@ def run_phold(locks=("ttas", "sleep", "adaptive", "mutable",
 
 
 def main(argv=None) -> dict:
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        description="[legacy] PHOLD on a share-everything PDES with REAL "
+                    "Python threads (paper Fig. 4).  Kept as the "
+                    "wall-clock artifact; it cannot batch (real threads, "
+                    "GIL).  For simulation-scale discipline comparisons "
+                    "use the batched engine instead: benchmarks.sweep / "
+                    "benchmarks.discipline_diagram.")
     ap.add_argument("--events", type=int, default=1500)
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--out", default="reports/phold.json")

@@ -5,17 +5,19 @@
 | benchmark  | paper artifact         | module                  |
 |------------|------------------------|-------------------------|
 | fig1       | Fig. 1 timelines       | benchmarks.lockbench    |
-| fig3       | Fig. 3 lockbench grid  | benchmarks.lockbench    |
+| fig3       | Fig. 3 lockbench grid  | benchmarks.lockbench (xdes; --engine des legacy) |
 | sweep      | Fig. 3 grid + scenario | benchmarks.sweep (xdes) |
 | phold      | Fig. 4 PHOLD/PDES      | benchmarks.phold        |
 | sched      | §3 technique on TPU    | benchmarks.sched_bench  |
 | oracle     | §5 oracle families     | benchmarks.oracle_ablation (xdes) |
+| discipline | discipline x oracle map| benchmarks.discipline_diagram (sharded xdes) |
 | roofline   | EXPERIMENTS §Roofline  | benchmarks.roofline     |
 
-Artifacts land in reports/* (JSON plus the oracle phase-diagram CSV and
-markdown); a summary CSV is printed at the end.  ``--quick`` runs only the
-batched xdes sweep and the oracle-family grid at smoke scale (~1 min) —
-the fast signal that the simulation stack works end to end.
+Artifacts land in reports/* (JSON plus the oracle and discipline
+phase-diagram CSV/markdown); a summary CSV is printed at the end.
+``--quick`` runs the batched xdes sweep, the oracle-family grid and the
+discipline x oracle diagram at smoke scale (~1-2 min) — the fast signal
+that the simulation stack works end to end.
 """
 
 from __future__ import annotations
@@ -57,6 +59,13 @@ def main(argv=None) -> None:
             summary.append((f"oracle.{fam}.best_tuned_ratio",
                             round(row["best_tuned_mean_ratio"], 3)))
         print("\n" + "=" * 72)
+        print("[quick] discipline x oracle diagram smoke (sharded xdes)")
+        print("=" * 72)
+        from benchmarks import discipline_diagram
+        dd = discipline_diagram.main(["--quick"])
+        for disc, row in dd["disciplines"].items():
+            summary.append((f"discipline.{disc}.wins", row["wins"]))
+        print("\n" + "=" * 72)
         print(f"quick smoke done in {time.time()-t0:.0f}s — summary CSV")
         print("=" * 72)
         print("name,value")
@@ -65,7 +74,7 @@ def main(argv=None) -> None:
         return
 
     print("=" * 72)
-    print("[1/7] lockbench fig1 (paper Fig. 1 timelines)")
+    print("[1/8] lockbench fig1 (paper Fig. 1 timelines)")
     print("=" * 72)
     from benchmarks import lockbench
     f1 = lockbench.fig1()
@@ -77,9 +86,9 @@ def main(argv=None) -> None:
                     f1["mutable"]["makespan_slots"]))
 
     print("\n" + "=" * 72)
-    print("[2/7] lockbench fig3 (paper Fig. 3 grid, DES @ 20 cores)")
+    print("[2/8] lockbench fig3 (paper Fig. 3 grid, batched xdes engine)")
     print("=" * 72)
-    f3 = lockbench.fig3(target_cs=2000 if args.full else 1000)
+    f3 = lockbench.fig3(target_cs=400 if args.full else 200)
     for regime, data in f3.items():
         for lock in ("mutable", "pt-exp"):
             summary.append((f"fig3.{regime}.{lock}.ratio",
@@ -88,7 +97,7 @@ def main(argv=None) -> None:
         json.dump({"fig1": f1, "fig3": f3}, f, indent=1)
 
     print("\n" + "=" * 72)
-    print("[3/7] batched xdes sweep (fig3 grid + 1000-config scenarios)")
+    print("[3/8] batched xdes sweep (fig3 grid + 1000-config scenarios)")
     print("=" * 72)
     from benchmarks import sweep
     sw = sweep.main(["--target-cs", "250" if args.full else "150"])
@@ -98,7 +107,7 @@ def main(argv=None) -> None:
         summary.append((f"sweep.scenario.{lock}.mean_ratio", round(r, 3)))
 
     print("\n" + "=" * 72)
-    print("[4/7] PHOLD on share-everything PDES (paper Fig. 4)")
+    print("[4/8] PHOLD on share-everything PDES (paper Fig. 4)")
     print("=" * 72)
     from benchmarks import phold
     ph = phold.run_phold(n_events=3000 if args.full else 1500)
@@ -110,7 +119,7 @@ def main(argv=None) -> None:
                             locks["mutable"]["speedup"]))
 
     print("\n" + "=" * 72)
-    print("[5/7] serving-window scheduler (the technique on TPU batches)")
+    print("[5/8] serving-window scheduler (the technique on TPU batches)")
     print("=" * 72)
     from benchmarks import sched_bench
     sb = sched_bench.main(["--requests", "400" if args.full else "250"])
@@ -121,7 +130,7 @@ def main(argv=None) -> None:
                         round(agg["avg_standby"], 2)))
 
     print("\n" + "=" * 72)
-    print("[6/7] oracle-family grid (paper §5 future work, batched xdes)")
+    print("[6/8] oracle-family grid (paper §5 future work, batched xdes)")
     print("=" * 72)
     from benchmarks import oracle_ablation
     oa = oracle_ablation.main(
@@ -133,7 +142,18 @@ def main(argv=None) -> None:
                         round(row["best_tuned_mean_ratio"], 3)))
 
     print("\n" + "=" * 72)
-    print("[7/7] roofline tables from dry-run artifacts")
+    print("[7/8] discipline x oracle diagram (sharded batched xdes)")
+    print("=" * 72)
+    from benchmarks import discipline_diagram
+    dd = discipline_diagram.main(
+        [] if args.full else ["--scenarios", "100", "--target-cs", "100"])
+    for disc, row in dd["disciplines"].items():
+        summary.append((f"discipline.{disc}.wins", row["wins"]))
+        summary.append((f"discipline.{disc}.best_variant_ratio",
+                        round(row["best_variant_mean_ratio"], 3)))
+
+    print("\n" + "=" * 72)
+    print("[8/8] roofline tables from dry-run artifacts")
     print("=" * 72)
     from benchmarks import roofline
     text = roofline.summarize()

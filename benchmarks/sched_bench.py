@@ -65,11 +65,38 @@ def run_policy(policy: str, max_slots: int = 16, max_standby: int = 16,
     return s
 
 
+def xdes_sweep(n_scenarios: int = 100, target_cs: int = 150,
+               backend: str = "ref") -> dict:
+    """The same zero/max/mutable ablation driven THROUGH xdes: slot/standby
+    dynamics encoded on the SimConfig row schema
+    (:class:`repro.serve.SchedScenario`) and swept on-device as one
+    batched call — scheduler policies ride the same engine as the lock
+    disciplines."""
+    from repro.serve import sample_sched_scenarios, xdes_policy_sweep
+
+    return xdes_policy_sweep(sample_sched_scenarios(n_scenarios),
+                             target_cs=target_cs, backend=backend,
+                             verbose=True)
+
+
 def main(argv=None) -> dict:
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=400)
+    ap.add_argument("--xdes", action="store_true",
+                    help="run the ablation through the batched xdes engine "
+                         "(one device call) instead of the step-level "
+                         "engine simulator")
+    ap.add_argument("--scenarios", type=int, default=100,
+                    help="scenario count for --xdes")
     ap.add_argument("--out", default="reports/sched_bench.json")
     args = ap.parse_args(argv)
+    if args.xdes:
+        out = xdes_sweep(n_scenarios=args.scenarios)
+        os.makedirs(os.path.dirname(args.out), exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(out, f, indent=1)
+        print(f"wrote {args.out}")
+        return out["policies"]
     out = {}
     print(f"{'policy':>8} {'late-handoff':>13} {'avg standby':>12} "
           f"{'avg queue':>10} {'makespan':>9}")

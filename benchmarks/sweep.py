@@ -14,6 +14,14 @@ Two artifacts:
 * ``oracle_grid`` — the SWS-oracle ablation (4 families x K x sws_max x
   scenarios, one call), consumed by ``benchmarks/oracle_ablation.py``
   which renders it into the phase-diagram report (see docs/oracles.md).
+* ``discipline_grid`` — the full discipline x oracle diagram (every
+  DISCIPLINE_ROW x every ORACLE_ROW x scenarios, one call), consumed by
+  ``benchmarks/discipline_diagram.py`` (see docs/disciplines.md).
+
+Every batched call auto-shards its config axis over all visible devices
+(``repro.core.xdes.simulate_batch(shard=...)``, ``shard_map`` through the
+version-robust shim in ``repro/sharding/compat.py``) — on a multi-device
+host the same entry points sweep 10-100k configurations.
 
     PYTHONPATH=src python -m benchmarks.sweep [--quick] [--backend pallas]
 """
@@ -27,11 +35,12 @@ import time
 
 import numpy as np
 
-from repro.configs.catalog import (LOCK_DISCIPLINES, LOCK_ORACLE_KS,
-                                   LOCK_ORACLE_SWS_MAX, LOCK_ORACLES,
-                                   LOCK_REGIMES, LOCK_THREADS,
-                                   lock_fig3_grid, lock_oracle_sweep,
-                                   lock_oracle_variants,
+from repro.configs.catalog import (LOCK_DISCIPLINE_SET, LOCK_DISCIPLINES,
+                                   LOCK_ORACLE_KS, LOCK_ORACLE_SWS_MAX,
+                                   LOCK_ORACLES, LOCK_REGIMES, LOCK_THREADS,
+                                   lock_discipline_sweep,
+                                   lock_discipline_variants, lock_fig3_grid,
+                                   lock_oracle_sweep, lock_oracle_variants,
                                    lock_scenario_sweep)
 from repro.core import xdes
 
@@ -261,6 +270,107 @@ def oracle_grid(n_scenarios: int = 200, target_cs: int = 150,
         for f, row in families.items():
             print(f"{f:>9} {row['wins']:5d} "
                   f"{row['best_tuned_mean_ratio']:17.3f} "
+                  f"{row['mean_sync_cpu_per_cs_us']:12.2f}")
+    return out
+
+
+# --------------------------------------------------------------------------
+# Discipline x oracle diagram grid
+# --------------------------------------------------------------------------
+def discipline_grid(n_scenarios: int = 200, target_cs: int = 150,
+                    backend: str = "ref", seed: int = 0,
+                    disciplines=LOCK_DISCIPLINE_SET, oracles=LOCK_ORACLES,
+                    shard: bool | None = None, verbose: bool = True) -> dict:
+    """The full ``(discipline, oracle) x scenario`` product — every row of
+    ``DISCIPLINE_ROWS`` crossed with every ``ORACLE_ROWS`` family — as ONE
+    (sharded) jit-compiled :func:`repro.core.xdes.simulate_batch` call,
+    summarized three ways:
+
+    * per variant — wins, mean/p10 throughput ratio to the per-scenario
+      best variant, spin CPU per CS, fairness spread;
+    * per discipline — wins of its best variant and the ratio its
+      best-oracle tuning achieves per scenario;
+    * phase diagram — which (discipline, oracle) wins in each (CS-length
+      x subscription x wake-latency) workload bucket: the "which lock
+      wins where" artifact rendered by ``benchmarks/discipline_diagram.py``.
+    """
+    variants = lock_discipline_variants(disciplines, oracles)
+    configs = lock_discipline_sweep(n_scenarios=n_scenarios, seed=seed,
+                                    disciplines=disciplines, oracles=oracles)
+    V = len(variants)
+    t0 = time.time()
+    res = xdes.simulate_batch(configs, target_cs=target_cs, backend=backend,
+                              shard=shard)
+    wall = time.time() - t0
+
+    thr = res.throughput.reshape(n_scenarios, V)
+    cpu = res.sync_cpu_per_cs.reshape(n_scenarios, V)
+    best = np.maximum(thr.max(axis=1), 1e-30)
+    ratio = thr / best[:, None]
+    win = thr.argmax(axis=1)
+
+    def vname(v):
+        return (f"{v['lock']}/{v['oracle']}"
+                if v["lock"] == "mutable" else v["lock"])
+
+    out_variants = [{
+        "name": vname(v), "lock": v["lock"], "oracle": v["oracle"],
+        "wins": int((win == i).sum()),
+        "mean_ratio_to_best": float(ratio[:, i].mean()),
+        "p10_ratio_to_best": float(np.percentile(ratio[:, i], 10)),
+        "mean_sync_cpu_per_cs_us": float(cpu[:, i].mean() * 1e6),
+    } for i, v in enumerate(variants)]
+
+    disc_names = list(dict.fromkeys(v["lock"] for v in variants))
+    disc_cols = {d: [i for i, v in enumerate(variants) if v["lock"] == d]
+                 for d in disc_names}
+    win_disc = np.asarray([variants[i]["lock"] for i in win])
+    by_discipline = {d: {
+        "wins": int((win_disc == d).sum()),
+        "best_variant_mean_ratio": float(ratio[:, cols].max(axis=1).mean()),
+        "mean_sync_cpu_per_cs_us": float(cpu[:, cols].mean() * 1e6),
+    } for d, cols in disc_cols.items()}
+
+    feats = _bucket_scenarios(configs, V)
+    win_name = np.asarray([out_variants[i]["name"] for i in win])
+    cells: dict[tuple, dict] = {}
+    for s, ft in enumerate(feats):
+        key = (ft["cs"], ft["sub"], ft["wake"])
+        cell = cells.setdefault(key, {})
+        cell[win_name[s]] = cell.get(win_name[s], 0) + 1
+    phase = []
+    for (cs_b, sub_b, wake_b), counts in sorted(cells.items()):
+        n = sum(counts.values())
+        winner = max(counts, key=counts.get)
+        phase.append({"cs": cs_b, "sub": sub_b, "wake": wake_b, "n": n,
+                      "winner": winner,
+                      "win_share": round(counts[winner] / n, 3),
+                      "wins_by_variant": counts})
+
+    import jax
+
+    out = {
+        "meta": {"backend": backend, "n_scenarios": n_scenarios,
+                 "n_variants": V, "n_configs": len(configs),
+                 "n_steps": res.n_steps, "wall_s": round(wall, 2),
+                 "n_devices": len(jax.devices()),
+                 "sharded": bool(shard) if shard is not None
+                 else len(jax.devices()) > 1,
+                 "configs_per_s": round(len(configs) / max(wall, 1e-9), 1)},
+        "variants": out_variants,
+        "disciplines": by_discipline,
+        "phase": phase,
+    }
+    if verbose:
+        print(f"\ndiscipline grid: {len(configs)} configs ({n_scenarios} "
+              f"scenarios x {V} variants) x {res.n_steps} steps in "
+              f"{wall:.1f}s on {out['meta']['n_devices']} device(s) "
+              f"({out['meta']['configs_per_s']} cfg/s)")
+        print(f"{'discipline':>10} {'wins':>5} {'best-variant ratio':>19} "
+              f"{'cpu/cs (µs)':>12}")
+        for d, row in by_discipline.items():
+            print(f"{d:>10} {row['wins']:5d} "
+                  f"{row['best_variant_mean_ratio']:19.3f} "
                   f"{row['mean_sync_cpu_per_cs_us']:12.2f}")
     return out
 

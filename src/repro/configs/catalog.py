@@ -345,9 +345,60 @@ def lock_oracle_sweep(n_scenarios: int = 200, seed: int = 0,
     ]
 
 
+# -- discipline x oracle diagram grid --------------------------------------
+#: Discipline axis of the full "which lock wins where" diagram: every
+#: DISCIPLINE_ROW is represented (spin via ttas+mcs, sleep, adaptive,
+#: mutable, and the FIFO/MCS ticket-handoff row).
+LOCK_DISCIPLINE_SET = ("ttas", "mcs", "fifo", "sleep", "adaptive", "mutable")
+
+
+def lock_discipline_variants(disciplines=LOCK_DISCIPLINE_SET,
+                             oracles=LOCK_ORACLES) -> list[dict]:
+    """The ``(discipline, oracle)`` variant axis of the discipline diagram.
+
+    Only *windowed* discipline rows (``DISCIPLINE_ROWS[...].windowed``,
+    i.e. the mutable lock) read the oracle column, so non-windowed
+    disciplines appear once — sweeping their oracle would duplicate
+    trajectories and skew win counts toward the lower-indexed copy (the
+    same pruning rule as :func:`lock_oracle_variants`)."""
+    from repro.core.policy import POLICY_IDS, POLICY_ROW
+
+    out = []
+    for d in disciplines:
+        fams = oracles if POLICY_ROW[POLICY_IDS[d]].windowed else oracles[:1]
+        for o in fams:
+            out.append(dict(lock=d, oracle=o))
+    return out
+
+
+def lock_discipline_sweep(n_scenarios: int = 200, seed: int = 0,
+                          disciplines=LOCK_DISCIPLINE_SET,
+                          oracles=LOCK_ORACLES) -> list[SimConfig]:
+    """The full discipline x oracle diagram grid as one flat batch for a
+    single (sharded) :func:`repro.core.xdes.simulate_batch` call.
+
+    Row order is scenario-major, variant-minor (reshape to
+    ``(n_scenarios, n_variants)``); scenarios follow the
+    :func:`sample_scenarios` seed contract, so every sweep family sees the
+    same machines scenario-by-scenario."""
+    from repro.core.policy import DEFAULT_ALPHA
+
+    variants = lock_discipline_variants(disciplines, oracles)
+    return [
+        SimConfig(v["lock"], threads=sc["threads"], cores=sc["cores"],
+                  cs=(0.0, sc["cs_hi"]), ncs=(0.0, sc["ncs_hi"]),
+                  wake_latency=sc["wake"],
+                  alpha=sc["contention"] * DEFAULT_ALPHA[v["lock"]],
+                  seed=sc["seed"], oracle=v["oracle"])
+        for sc in sample_scenarios(n_scenarios, seed)
+        for v in variants
+    ]
+
+
 #: Named sweep registry (mirrors the model-config registry above).
 LOCK_SWEEPS = {
     "fig3": lock_fig3_grid,
     "scenario": lock_scenario_sweep,
     "oracle": lock_oracle_sweep,
+    "discipline": lock_discipline_sweep,
 }

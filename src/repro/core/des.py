@@ -187,6 +187,17 @@ class MCSModel(_LockModel):
         raise AssertionError("mcs never sleeps")
 
 
+class FIFOModel(MCSModel):
+    """True-MCS ticket handoff: waiters join a numbered queue and the lock
+    is granted strictly in arrival order — no barging.  The event-driven
+    twin of the batched engine's ``fifo`` discipline row (which implements
+    the same order with per-thread tickets); parity between the two is
+    pinned by tests/test_disciplines.py."""
+
+    name = "fifo"
+    default_alpha = policy.DEFAULT_ALPHA["fifo"]
+
+
 class SleepModel(_LockModel):
     """Benaphore / pthread-mutex default: always sleep when contended."""
 
@@ -314,6 +325,7 @@ _MODELS = {
     "tas": TASModel,
     "ttas": SpinModel,
     "mcs": MCSModel,
+    "fifo": FIFOModel,
     "sleep": SleepModel,
     "adaptive": AdaptiveModel,
     "mutable": MutableModel,

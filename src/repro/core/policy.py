@@ -30,9 +30,11 @@ STATE_NAMES = ("NCS", "CS", "SPIN", "SLEEP", "WAKING", "DONE")
 
 # --------------------------------------------------------------------------
 # Discipline ids — shared by the DES model registry, the batched simulator's
-# integer encoding, and the Pallas kernel.
+# integer encoding, and the Pallas kernel.  ``fifo`` is the true-MCS
+# handoff discipline: waiters take numbered tickets and the lock is granted
+# strictly in ticket (arrival) order — no barging.
 # --------------------------------------------------------------------------
-TAS, TTAS, MCS, SLEEP, ADAPTIVE, MUTABLE = range(6)
+TAS, TTAS, MCS, SLEEP, ADAPTIVE, MUTABLE, FIFO = range(7)
 
 POLICY_IDS = {
     "tas": TAS,
@@ -41,13 +43,15 @@ POLICY_IDS = {
     "sleep": SLEEP,
     "adaptive": ADAPTIVE,
     "mutable": MUTABLE,
+    "fifo": FIFO,
 }
 POLICY_NAMES = {v: k for k, v in POLICY_IDS.items()}
 
 #: Hardware-contention coefficient per discipline (paper §2): the CS
 #: holder's progress rate is divided by ``1 + alpha * n_spinners``.  MCS
 #: spins on private cache lines (no coherency pressure); TAS hammers the
-#: lock word with RMWs (worst); TTAS/adaptive/mutable read-spin (mild).
+#: lock word with RMWs (worst); TTAS/adaptive/mutable read-spin (mild);
+#: FIFO inherits MCS's private-line spinning.
 DEFAULT_ALPHA = {
     "tas": 0.05,
     "ttas": 0.02,
@@ -55,13 +59,8 @@ DEFAULT_ALPHA = {
     "sleep": 0.0,
     "adaptive": 0.02,
     "mutable": 0.02,
+    "fifo": 0.0,
 }
-
-#: Which disciplines hand the lock to a spinner on release (all but the
-#: pure sleep lock) and which ever park a thread (all but the pure spin
-#: locks).  The batched backend reads these as masks over policy ids.
-HANDOFF_POLICIES = frozenset({TAS, TTAS, MCS, ADAPTIVE, MUTABLE})
-SLEEPING_POLICIES = frozenset({SLEEP, ADAPTIVE, MUTABLE})
 
 #: glibc-style default spin budget (CPU-seconds) for the adaptive mutex.
 DEFAULT_SPIN_BUDGET = 2e-6
@@ -273,6 +272,161 @@ def release_quota(r_wuc: int, thc_pre: int, sws: int) -> int:
 
 
 # --------------------------------------------------------------------------
+# Discipline rows — the waiting discipline as data, mirroring ORACLE_ROWS.
+#
+# A row describes ONE waiting discipline as (a) four 0/1 capability flags
+# and (b) two elementwise decision functions.  Flags and functions are
+# branch-free integer arithmetic, valid on plain Python ints, numpy arrays
+# and traced jax values alike — exactly the contract of the oracle rows —
+# so the SAME row drives the event-driven DES models, the batched
+# transition engine (repro.kernels.ref.lock_transitions_ref) and its
+# Pallas twin.  Adding a discipline is ~20 lines: one row here, one DES
+# model for parity testing, one POLICY_IDS entry.
+#
+#   handoff       release grants the lock to a waiting spinner
+#   fifo_grant    grant order is the arrival ticket, not the thread id
+#   budget_spin   spinners consume a finite CPU budget, then park (glibc)
+#   wake_to_spin  a woken thread that finds the lock taken joins the
+#                 spinners (the mutable lock's sleep->spin transition)
+#   repark        a woken thread that finds the lock taken parks again
+#                 (the sleep/adaptive barging rule); disciplines that
+#                 never park set both wake_to_spin and repark to 0
+#   windowed      the discipline runs the SWS oracle + C1/C2 corrections
+#
+#   arrival_sleeps(rank, thc_pre, sws, holder_free) -> 0/1
+#       whether the rank-th simultaneous arrival parks (A7 for the
+#       mutable window; the sleep lock barges only when rank==0 finds
+#       the lock free; spin disciplines never park on arrival).
+#   quota(r_wuc, thc_pre, sws, n_parked, handoff_taken) -> int >= 0
+#       wake permits issued by a release (R11-R17 for the mutable lock;
+#       wake-one for sleep/adaptive; none for pure spin/FIFO).
+# --------------------------------------------------------------------------
+@dataclass(frozen=True)
+class DisciplineRow:
+    name: str
+    policy_ids: tuple
+    handoff: int
+    fifo_grant: int
+    budget_spin: int
+    wake_to_spin: int
+    repark: int
+    windowed: int
+    arrival_sleeps: object     # callable, elementwise (see module comment)
+    quota: object              # callable, elementwise
+
+
+def _arrive_never(rank, thc_pre, sws, holder_free):
+    return rank * 0
+
+
+def _arrive_sleep_lock(rank, thc_pre, sws, holder_free):
+    # Barge iff this is the first arrival of the step and the lock is free.
+    return 1 - (rank == 0) * holder_free
+
+
+def _arrive_window(rank, thc_pre, sws, holder_free):
+    # A7: arriving at index thc_pre (holder at 0) outside the window parks.
+    return (thc_pre >= sws) * 1
+
+
+def _quota_zero(r_wuc, thc_pre, sws, n_parked, handoff_taken):
+    return r_wuc * 0
+
+
+def _quota_wake_one(r_wuc, thc_pre, sws, n_parked, handoff_taken):
+    return (n_parked > 0) * 1
+
+
+def _quota_wake_one_no_handoff(r_wuc, thc_pre, sws, n_parked, handoff_taken):
+    return (n_parked > 0) * (1 - handoff_taken)
+
+
+def _quota_mutable(r_wuc, thc_pre, sws, n_parked, handoff_taken):
+    # R11-R17: a suppressed release (r_wuc < 0) issues nothing; otherwise
+    # the latched count plus the sleep->spin promotion when sleepers exist.
+    return (r_wuc >= 0) * (r_wuc + (thc_pre > sws))
+
+
+DISCIPLINE_ROWS = {
+    "spin": DisciplineRow(
+        name="spin", policy_ids=(TAS, TTAS, MCS),
+        handoff=1, fifo_grant=0, budget_spin=0, wake_to_spin=0, repark=0,
+        windowed=0, arrival_sleeps=_arrive_never, quota=_quota_zero),
+    "sleep": DisciplineRow(
+        name="sleep", policy_ids=(SLEEP,),
+        handoff=0, fifo_grant=0, budget_spin=0, wake_to_spin=0, repark=1,
+        windowed=0, arrival_sleeps=_arrive_sleep_lock, quota=_quota_wake_one),
+    "adaptive": DisciplineRow(
+        name="adaptive", policy_ids=(ADAPTIVE,),
+        handoff=1, fifo_grant=0, budget_spin=1, wake_to_spin=0, repark=1,
+        windowed=0, arrival_sleeps=_arrive_never,
+        quota=_quota_wake_one_no_handoff),
+    "mutable": DisciplineRow(
+        name="mutable", policy_ids=(MUTABLE,),
+        handoff=1, fifo_grant=0, budget_spin=0, wake_to_spin=1, repark=0,
+        windowed=1, arrival_sleeps=_arrive_window, quota=_quota_mutable),
+    "fifo": DisciplineRow(
+        name="fifo", policy_ids=(FIFO,),
+        handoff=1, fifo_grant=1, budget_spin=0, wake_to_spin=0, repark=0,
+        windowed=0, arrival_sleeps=_arrive_never, quota=_quota_zero),
+}
+
+#: policy id -> row (every POLICY_IDS entry must be claimed by one row).
+POLICY_ROW = {pid: row for row in DISCIPLINE_ROWS.values()
+              for pid in row.policy_ids}
+assert sorted(POLICY_ROW) == sorted(POLICY_IDS.values()), \
+    "every policy id must map to exactly one discipline row"
+
+#: Derived views over the rows: which disciplines hand the lock to a
+#: spinner on release, and which ever park a thread.  A new row updates
+#: these automatically.
+HANDOFF_POLICIES = frozenset(pid for pid, row in POLICY_ROW.items()
+                             if row.handoff)
+SLEEPING_POLICIES = frozenset(pid for pid, row in POLICY_ROW.items()
+                              if row.repark or row.windowed)
+
+
+def _dispatch_rows(policy_id, fn):
+    """Masked arithmetic select of ``fn(row)`` over DISCIPLINE_ROWS —
+    the discipline twin of :func:`oracle_update`'s dispatch loop."""
+    out = 0
+    for row in DISCIPLINE_ROWS.values():
+        sel = 0
+        for pid in row.policy_ids:
+            sel = sel + (policy_id == pid) * 1
+        out = out + sel * fn(row)
+    return out
+
+
+def discipline_flags(policy_id):
+    """Per-config capability flags ``(handoff, fifo_grant, budget_spin,
+    wake_to_spin, repark, windowed)`` as 0/1 values, dispatched by policy
+    id.  Valid on scalars and integer arrays (arithmetic select, no
+    ``if``)."""
+    return tuple(_dispatch_rows(policy_id, lambda r, a=attr: getattr(r, a))
+                 for attr in ("handoff", "fifo_grant", "budget_spin",
+                              "wake_to_spin", "repark", "windowed"))
+
+
+def discipline_arrival_sleeps(policy_id, rank, thc_pre, sws, holder_free):
+    """0/1: does the ``rank``-th simultaneous arrival park?  Elementwise
+    over threads; ``holder_free`` is 0/1."""
+    return _dispatch_rows(
+        policy_id, lambda r: r.arrival_sleeps(rank, thc_pre, sws,
+                                              holder_free))
+
+
+def discipline_release_quota(policy_id, r_wuc, thc_pre, sws, n_parked,
+                             handoff_taken):
+    """Wake permits issued by a release under each discipline's rule
+    (the array form of :func:`release_quota` plus the sleep/adaptive
+    wake-one rules).  ``handoff_taken`` is 0/1."""
+    return _dispatch_rows(
+        policy_id, lambda r: r.quota(r_wuc, thc_pre, sws, n_parked,
+                                     handoff_taken))
+
+
+# --------------------------------------------------------------------------
 # Scenario description — the unit of the batched sweep
 # --------------------------------------------------------------------------
 @dataclass(frozen=True)
@@ -329,7 +483,7 @@ class SimConfig:
             return 1
         if pid == MUTABLE:
             return max(1, min(self.sws_init, self.sws_max_eff))
-        return self.threads                     # tas/ttas/mcs/adaptive
+        return self.threads                     # tas/ttas/mcs/adaptive/fifo
 
     def des_kwargs(self) -> dict:
         """Keyword form consumed by :func:`repro.core.des.simulate`."""

@@ -5,27 +5,33 @@ one Python loop per ``(lock, threads, cores, cs, ncs)`` cell, so the Fig. 3
 grid (5 locks x 8 thread counts x 4 regimes x seeds) runs sequentially for
 minutes.  This module simulates *thousands of configurations in one device
 program*: a generalized-processor-sharing step on a fixed timestep, rolled
-out with ``lax.scan`` and batched over configurations with ``vmap``.  The
-hot per-step update (runnable counts, GPS rate, the paper §2 cache-
-contention slowdown ``1/(1 + alpha*n_spinners)``, work advance, spin-CPU
-burn) is a swappable backend: the pure-XLA reference
-(:func:`repro.kernels.ref.lock_sim_step_ref`) or the fused Pallas kernel
-(:func:`repro.kernels.lock_sim.lock_sim_step`).
+out with ``lax.scan`` over (C, T) state blocks.  BOTH stages of the step
+are swappable kernel backends, pinned bit-identical by tests:
 
-Model fidelity: same state machine, same policy decisions (shared pure
-functions in :mod:`repro.core.policy` — A7 arrival rule, the four SWS
-adaptation oracle families (paper EvalSWS / AIMD / fixed-budget / history,
-dispatched per config by the ``oracle`` column, see ``docs/oracles.md``),
-A16-A17 clamps, C1/C2 corrections, R2-R21 release quotas, banked wake
-permits), same metrics (throughput, spin-CPU per CS, wake count).  The differences
-are (a) time is quantized to ``dt`` instead of exact event times, and
-(b) simultaneous events inside one step resolve in thread-id order instead
-of RNG order.  Equivalence tests pin xdes against the Python DES on the
-paper's four regimes (qualitative claims C2-C4).
+* GPS advance — :func:`repro.kernels.ref.lock_sim_step_ref` (XLA) or the
+  fused Pallas kernel :func:`repro.kernels.lock_sim.lock_sim_step`;
+* transitions — :func:`repro.kernels.ref.lock_transitions_ref` (XLA) or
+  :func:`repro.kernels.lock_sim.lock_transitions_step` (Pallas grid over
+  config blocks).
+
+Model fidelity: same state machine, same policy decisions — every waiting
+discipline is a row in :data:`repro.core.policy.DISCIPLINE_ROWS` (spin,
+sleep, adaptive, mutable, FIFO/MCS ticket handoff) and every SWS oracle a
+row in ``ORACLE_ROWS``, both dispatched per config by integer columns, so
+one batch mixes disciplines and oracle families freely.  The differences
+from the DES are (a) time is quantized to ``dt`` instead of exact event
+times, and (b) simultaneous events inside one step resolve in thread-id
+order instead of RNG order.  Equivalence tests pin xdes against the Python
+DES on the paper's four regimes (qualitative claims C2-C4) and per-row.
 
 Threads are array slots: state ``(configs, max_threads)`` int32 plus small
-per-config integers (sws, cnt, wuc, permits) — exactly the array-encodable
-policy state :mod:`repro.core.policy` defines.
+per-config integers (sws, cnt, wuc, permits, next-ticket) — exactly the
+array-encodable policy state :mod:`repro.core.policy` defines.
+
+Scale: :func:`simulate_batch` shards the batch over every visible device
+with ``shard_map`` (config axis, fully manual) when more than one device
+is attached — 10-100k-config sweeps split across a host's accelerators
+with no change to the calling code.
 """
 
 from __future__ import annotations
@@ -38,266 +44,125 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.ref import NO_TICKET, REM_EPS, counter_uniform  # noqa: F401
+
 from . import policy as P
 
-#: Residual work (CPU-seconds) under which a CS/NCS counts as finished.
-REM_EPS = 1e-9
 #: Hard cap on scan length (compile + runtime guard).
 MAX_STEPS = 200_000
 _INF = np.float32(np.inf)
 
-
-# --------------------------------------------------------------------------
-# Counter-based RNG: durations are drawn per (config, thread, event) from a
-# splitmix-style avalanche, so the whole rollout is deterministic and
-# needs no threaded PRNG state through scan.
-# --------------------------------------------------------------------------
-def _uniform(seed, tid, ctr):
-    x = seed ^ (tid.astype(jnp.uint32) * jnp.uint32(0x9E3779B9)) \
-        ^ ((ctr + jnp.uint32(1)) * jnp.uint32(0x85EBCA6B))
-    x = x ^ (x >> 16)
-    x = x * jnp.uint32(0x7FEB352D)
-    x = x ^ (x >> 15)
-    x = x * jnp.uint32(0x846CA68B)
-    x = x ^ (x >> 16)
-    return x.astype(jnp.float32) * jnp.float32(2.0 ** -32)
+#: Context columns threaded to the transition kernels each step.
+_PRM_FIELDS = ("policy", "threads", "dt", "wake", "cs_lo", "cs_hi",
+               "ncs_lo", "ncs_hi", "k", "sws_max", "spin_budget", "seed",
+               "oracle")
 
 
 # --------------------------------------------------------------------------
-# Per-config transition logic (vmapped over configs).  Shapes: (T,) arrays
-# and scalars; every branch is a `where` so the whole step is one fused
-# device program.
+# The rollout: lax.scan over steps; each step = GPS advance + transitions,
+# both behind the swappable kernel boundary.
 # --------------------------------------------------------------------------
-def _transitions(st, rem, wake_at, slept, spun, ctr,
-                 sws, cnt, ewma, wuc, permits, completed, wake_count,
-                 now2, prm):
-    T = st.shape[0]
-    tid = jnp.arange(T, dtype=jnp.int32)
-    active = tid < prm["threads"]
-    p = prm["policy"]
-    is_mut = p == P.MUTABLE
-    is_slp = p == P.SLEEP
-    is_adp = p == P.ADAPTIVE
-    teps = prm["dt"] * jnp.float32(1e-3)
-
-    def first_oh(mask):
-        """One-hot of the lowest-tid True (all-False rows stay all-False)."""
-        return (tid == jnp.argmax(mask)) & mask.any()
-
-    def thc_of(s):
-        """Algorithm 1's thc: holder + every waiter (CS/SPIN/SLEEP/WAKING)."""
-        return jnp.sum((active & (s >= P.CS) & (s <= P.WAKING))
-                       .astype(jnp.int32))
-
-    def draw_into(mask, lo, hi, c):
-        val = lo + _uniform(prm["seed"], tid, c) * (hi - lo)
-        return val, jnp.where(mask, c + jnp.uint32(1), c)
-
-    def park(mask, st, wake_at, permits, wake_count, slept, rem):
-        """DES ``_sleep``: park, absorbing banked permits (semaphore law —
-        an absorbed permit still pays the park/unpark round trip)."""
-        rank = jnp.cumsum(mask.astype(jnp.int32)) - 1
-        grant = mask & (rank < permits)
-        n_grant = jnp.sum(grant.astype(jnp.int32))
-        st = jnp.where(grant, P.WAKING,
-                       jnp.where(mask, P.SLEEP_ST, st))
-        wake_at = jnp.where(grant, now2 + prm["wake"], wake_at)
-        return (st, wake_at, permits - n_grant, wake_count + n_grant,
-                slept | mask, jnp.where(mask, _INF, rem))
-
-    def oracle_acquire(happened, winner_oh, thc, sws, cnt, ewma, wuc):
-        """A12-A33 at an acquisition: oracle family dispatch (EvalSWS /
-        AIMD / fixed-budget / history, selected by the per-config
-        ``oracle`` id), clamp, C1/C2 correction — the array form of the
-        scalar functions in repro.core.policy."""
-        do = happened & is_mut
-        spun_w = (spun & winner_oh).any()
-        slept_w = (slept & winner_oh).any()
-        delta, cnt2, ewma2 = P.oracle_update(                 # E2-E11
-            prm["oracle"], spun_w, slept_w, sws, cnt, ewma, prm["k"])
-        delta = jnp.clip(delta, 1 - sws, prm["sws_max"] - sws)  # A16-A17
-        sws2 = sws + delta                                    # A20
-        tmp = jnp.where((delta < 0) & (thc > sws2), thc - sws2,       # C2
-                        jnp.where((delta > 0) & (thc > sws), thc - sws,
-                                  0))                                 # C1
-        corr = jnp.sign(delta) * jnp.minimum(jnp.abs(delta), tmp)  # A32
-        return (jnp.where(do, sws2, sws), jnp.where(do, cnt2, cnt),
-                jnp.where(do, ewma2, ewma), jnp.where(do, wuc + corr, wuc))
-
-    # -- adaptive spin-budget exhaustion -> sleep (DES stage order) --------
-    exhausted = (st == P.SPIN) & is_adp & (rem <= REM_EPS)
-    st, wake_at, permits, wake_count, slept, rem = park(
-        exhausted, st, wake_at, permits, wake_count, slept, rem)
-
-    # -- wake completions --------------------------------------------------
-    due = (st == P.WAKING) & (wake_at <= now2 + teps)
-    holder_free = ~(st == P.CS).any()
-    winA = first_oh(due) & holder_free
-    cs_val, ctr = draw_into(winA, prm["cs_lo"], prm["cs_hi"], ctr)
-    rem = jnp.where(winA, cs_val, rem)
-    st = jnp.where(winA, P.CS, st)
-    # the sleep->spin transition's payoff: a woken thread that finds the
-    # lock free acquired "slept and not spun" -> EvalSWS doubles the window
-    sws, cnt, ewma, wuc = oracle_acquire(winA.any(), winA, thc_of(st),
-                                         sws, cnt, ewma, wuc)
-    losers = due & ~winA
-    to_spin = losers & is_mut          # woken into the spinning window
-    st = jnp.where(to_spin, P.SPIN, st)
-    spun = spun | to_spin
-    rem = jnp.where(to_spin, _INF, rem)
-    to_park = losers & (is_slp | is_adp)   # barged: park again
-    st, wake_at, permits, wake_count, slept, rem = park(
-        to_park, st, wake_at, permits, wake_count, slept, rem)
-
-    # -- CS completion / release ------------------------------------------
-    holder_done = (st == P.CS) & (rem <= REM_EPS)
-    rel = holder_done.any()
-    completed = completed + rel.astype(jnp.int32)
-    thc_pre = thc_of(st)                                   # R14 (pre-FAD)
-    do_latch = rel & is_mut
-    r_wuc = jnp.where(do_latch & (wuc >= 0), wuc, -1)      # R2-R6
-    wuc = jnp.where(do_latch, jnp.where(wuc >= 0, 0, wuc + 1), wuc)  # R4/R7
-    ncs_val, ctr = draw_into(holder_done, prm["ncs_lo"], prm["ncs_hi"], ctr)
-    rem = jnp.where(holder_done, ncs_val, rem)
-    st = jnp.where(holder_done, P.NCS, st)                 # R9-R10
-    # spn handoff: lowest-tid spinner wins (DES picks at random)
-    spinners = st == P.SPIN
-    can_handoff = rel & ~is_slp & spinners.any()
-    winB = first_oh(spinners) & can_handoff
-    cs_valB, ctr = draw_into(winB, prm["cs_lo"], prm["cs_hi"], ctr)
-    rem = jnp.where(winB, cs_valB, rem)
-    st = jnp.where(winB, P.CS, st)
-    sws, cnt, ewma, wuc = oracle_acquire(can_handoff, winB, thc_pre - 1,
-                                         sws, cnt, ewma, wuc)
-    # wake quota: mutable R11-R21; sleep/adaptive wake one when anyone is
-    # parked (DES `sleepers() or any_waking()`), adaptive only if no
-    # spinner took the handoff
-    n_parked = jnp.sum(((st == P.SLEEP_ST) | (st == P.WAKING))
-                       .astype(jnp.int32))
-    quota_mut = jnp.where(r_wuc < 0, 0,
-                          r_wuc + (thc_pre > sws).astype(jnp.int32))
-    quota_one = (n_parked > 0).astype(jnp.int32)
-    quota = jnp.where(is_mut, quota_mut,
-                      jnp.where(is_slp | (is_adp & ~can_handoff),
-                                quota_one, 0))
-    quota = jnp.where(rel, quota, 0)
-    sleepers = st == P.SLEEP_ST
-    rank_s = jnp.cumsum(sleepers.astype(jnp.int32)) - 1
-    sel = sleepers & (rank_s < quota)
-    n_sel = jnp.sum(sel.astype(jnp.int32))
-    st = jnp.where(sel, P.WAKING, st)
-    wake_at = jnp.where(sel, now2 + prm["wake"], wake_at)
-    wake_count = wake_count + n_sel
-    permits = permits + (quota - n_sel)    # park-free permits are banked
-
-    # -- arrivals (NCS finished) ------------------------------------------
-    arr = (st == P.NCS) & (rem <= REM_EPS) & active
-    thc_base = thc_of(st)
-    rank_a = jnp.cumsum(arr.astype(jnp.int32)) - 1
-    thc_pre_i = thc_base + rank_a                          # A4 per arrival
-    slept = jnp.where(arr, False, slept)                   # A3
-    spun = jnp.where(arr, False, spun)
-    holder_free2 = ~(st == P.CS).any()
-    # A7 for window disciplines; the pure sleep lock barges when free
-    sleeps = arr & jnp.where(is_slp, ~((rank_a == 0) & holder_free2),
-                             thc_pre_i >= sws)
-    nonsleep = arr & ~sleeps
-    winC = first_oh(nonsleep) & holder_free2
-    cs_valC, ctr = draw_into(winC, prm["cs_lo"], prm["cs_hi"], ctr)
-    rem = jnp.where(winC, cs_valC, rem)
-    st = jnp.where(winC, P.CS, st)
-    sws, cnt, ewma, wuc = oracle_acquire(winC.any(), winC, thc_base + 1,
-                                         sws, cnt, ewma, wuc)
-    to_spinC = nonsleep & ~winC
-    st = jnp.where(to_spinC, P.SPIN, st)
-    spun = spun | to_spinC
-    rem = jnp.where(to_spinC,
-                    jnp.where(is_adp, prm["spin_budget"], _INF), rem)
-    st, wake_at, permits, wake_count, slept, rem = park(
-        sleeps, st, wake_at, permits, wake_count, slept, rem)
-
-    return (st, rem, wake_at, slept, spun, ctr,
-            sws, cnt, ewma, wuc, permits, completed, wake_count)
+def _step_backends(backend: str):
+    if backend == "ref":
+        from repro.kernels.ref import lock_sim_step_ref, lock_transitions_ref
+        return lock_sim_step_ref, lock_transitions_ref
+    if backend == "pallas":
+        from repro.kernels.lock_sim import lock_sim_step, lock_transitions_step
+        return lock_sim_step, lock_transitions_step
+    raise ValueError(f"unknown backend {backend!r} (ref|pallas)")
 
 
-_vtransitions = jax.vmap(
-    _transitions,
-    in_axes=((0,) * 13) + (0, {k: 0 for k in (
-        "policy", "threads", "dt", "wake", "cs_lo", "cs_hi", "ncs_lo",
-        "ncs_hi", "k", "sws_max", "spin_budget", "seed", "oracle")},))
-
-
-# --------------------------------------------------------------------------
-# The rollout: lax.scan over steps, vmap over configs
-# --------------------------------------------------------------------------
-@functools.partial(jax.jit, static_argnames=("n_steps", "T", "backend"))
-def _simulate(arrs, n_steps: int, T: int, backend: str = "ref"):
+def _simulate_core(arrs, n_steps: int, T: int, backend: str = "ref"):
     C = arrs["policy"].shape[0]
     tid = jnp.arange(T, dtype=jnp.int32)[None, :]
     active = tid < arrs["threads"][:, None]
-    has_budget = arrs["policy"] == P.ADAPTIVE
-    prm = {k: arrs[k] for k in (
-        "policy", "threads", "dt", "wake", "cs_lo", "cs_hi", "ncs_lo",
-        "ncs_hi", "k", "sws_max", "spin_budget", "seed", "oracle")}
-
-    if backend == "ref":
-        from repro.kernels.ref import lock_sim_step_ref as step1
-        advance = lambda st, rem: step1(st, rem, arrs["alpha"],
-                                        arrs["cores"], arrs["dt"],
-                                        has_budget)
-    elif backend == "pallas":
-        from repro.kernels.lock_sim import lock_sim_step
-        advance = lambda st, rem: lock_sim_step(st, rem, arrs["alpha"],
-                                                arrs["cores"], arrs["dt"],
-                                                has_budget)
-    else:
-        raise ValueError(f"unknown backend {backend!r} (ref|pallas)")
+    _, _, budget_f, _, _, _ = P.discipline_flags(arrs["policy"])
+    has_budget = budget_f > 0
+    advance, transitions = _step_backends(backend)
 
     # initial state: every thread in NCS with a fresh draw
     ctr0 = jnp.zeros((C, T), jnp.uint32)
-    u0 = _uniform(arrs["seed"][:, None], jnp.broadcast_to(tid, (C, T)), ctr0)
+    u0 = counter_uniform(arrs["seed"][:, None],
+                         jnp.broadcast_to(tid, (C, T)), ctr0)
     rem0 = arrs["ncs_lo"][:, None] + u0 * (arrs["ncs_hi"]
                                            - arrs["ncs_lo"])[:, None]
     state0 = (
         jnp.where(active, P.NCS, P.DONE).astype(jnp.int32),   # st
         jnp.where(active, rem0, _INF),                        # rem
         jnp.full((C, T), _INF),                               # wake_at
-        jnp.zeros((C, T), bool),                              # slept
-        jnp.zeros((C, T), bool),                              # spun
+        jnp.zeros((C, T), jnp.int32),                         # slept
+        jnp.zeros((C, T), jnp.int32),                         # spun
         ctr0 + 1,                                             # ctr
+        jnp.full((C, T), NO_TICKET, jnp.int32),               # ticket
+        jnp.zeros((C, T), jnp.int32),                         # completed_pt
         arrs["sws_init"].astype(jnp.int32),                   # sws
         jnp.zeros((C,), jnp.int32),                           # cnt
         jnp.zeros((C,), jnp.int32),                           # ewma
         jnp.zeros((C,), jnp.int32),                           # wuc
         jnp.zeros((C,), jnp.int32),                           # permits
+        jnp.zeros((C,), jnp.int32),                           # nticket
         jnp.zeros((C,), jnp.int32),                           # completed
         jnp.zeros((C,), jnp.int32),                           # wake_count
         jnp.zeros((C,), jnp.float32),                         # spin_cpu
     )
+    prm = tuple(arrs[f] for f in _PRM_FIELDS)
 
     def body(carry, i):
-        (st, rem, wake_at, slept, spun, ctr, sws, cnt, ewma, wuc, permits,
-         completed, wake_count, spin_cpu) = carry
+        state, spin_cpu = carry[:-1], carry[-1]
+        st, rem = state[0], state[1]
         now2 = (i.astype(jnp.float32) + 1.0) * arrs["dt"]
-        rem, burn = advance(st, rem)
-        spin_cpu = spin_cpu + burn
-        (st, rem, wake_at, slept, spun, ctr, sws, cnt, ewma, wuc, permits,
-         completed, wake_count) = _vtransitions(
-            st, rem, wake_at, slept, spun, ctr, sws, cnt, ewma, wuc,
-            permits, completed, wake_count, now2, prm)
-        return (st, rem, wake_at, slept, spun, ctr, sws, cnt, ewma, wuc,
-                permits, completed, wake_count, spin_cpu), None
+        rem, burn = advance(st, rem, arrs["alpha"], arrs["cores"],
+                            arrs["dt"], has_budget)
+        state = transitions(st, rem, *state[2:], now2, *prm)
+        return (*state, spin_cpu + burn), None
 
     final, _ = jax.lax.scan(body, state0, jnp.arange(n_steps))
-    (st, rem, wake_at, slept, spun, ctr, sws, cnt, ewma, wuc, permits,
-     completed, wake_count, spin_cpu) = final
+    (st, rem, wake_at, slept, spun, ctr, ticket, completed_pt,
+     sws, cnt, ewma, wuc, permits, nticket, completed, wake_count,
+     spin_cpu) = final
     return {
         "completed": completed,
+        "completed_per_thread": completed_pt,
         "spin_cpu": spin_cpu,
         "wake_count": wake_count,
         "final_sws": sws,
         "t_end": n_steps * arrs["dt"],
     }
+
+
+_simulate = functools.partial(jax.jit, static_argnames=("n_steps", "T",
+                                                        "backend"))(
+    _simulate_core)
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_fn(n_steps: int, T: int, backend: str, n_dev: int):
+    """jit(shard_map(core)) over a 1-d ``configs`` device mesh — every
+    config is independent, so the mapping is fully manual (no collectives)
+    and results are bit-identical to the unsharded call."""
+    from jax.sharding import Mesh, PartitionSpec
+
+    from repro.sharding.compat import shard_map
+
+    mesh = Mesh(np.asarray(jax.devices()[:n_dev]), ("configs",))
+    spec = PartitionSpec("configs")
+
+    def run(arrs):
+        return _simulate_core(arrs, n_steps=n_steps, T=T, backend=backend)
+
+    return jax.jit(shard_map(run, mesh=mesh, in_specs=(spec,),
+                             out_specs=spec))
+
+
+def _simulate_sharded(arrs, n_steps: int, T: int, backend: str):
+    n_dev = len(jax.devices())
+    C = arrs["policy"].shape[0]
+    pad = (-C) % n_dev
+    if pad:            # pad with copies of the last row, sliced off below
+        arrs = {k: np.concatenate([v, np.repeat(v[-1:], pad, axis=0)])
+                for k, v in arrs.items()}
+    out = _sharded_fn(n_steps, T, backend, n_dev)(arrs)
+    return {k: v[:C] for k, v in out.items()}
 
 
 # --------------------------------------------------------------------------
@@ -338,6 +203,7 @@ class BatchResult:
     spin_cpu: np.ndarray
     wake_count: np.ndarray
     final_sws: np.ndarray
+    completed_per_thread: np.ndarray    # (C, T) per-slot CS counts
 
     @property
     def throughput(self) -> np.ndarray:
@@ -346,6 +212,12 @@ class BatchResult:
     @property
     def sync_cpu_per_cs(self) -> np.ndarray:
         return self.spin_cpu / np.maximum(self.completed, 1)
+
+    def fairness_spread(self, i: int) -> int:
+        """Max-min completed-CS spread across config ``i``'s threads —
+        ~0/1 under FIFO ticket grants, unbounded under barging locks."""
+        per = self.completed_per_thread[i, :self.configs[i].threads]
+        return int(per.max() - per.min())
 
     def row(self, i: int) -> dict:
         return {
@@ -361,14 +233,22 @@ class BatchResult:
 
 def simulate_batch(configs, *, target_cs: int = 300, n_steps: int | None = None,
                    dt=None, backend: str = "ref",
-                   max_threads: int | None = None) -> BatchResult:
+                   max_threads: int | None = None,
+                   shard: bool | None = None) -> BatchResult:
     """Simulate every :class:`repro.core.policy.SimConfig` in ``configs``
     in ONE jit-compiled device call.
 
     All configurations share the scan length; each carries its own ``dt``,
     so heterogeneous regimes (µs spin cells next to 100µs-CS cells) batch
-    together without resolution loss.  ``backend="pallas"`` routes the
-    per-step GPS update through :mod:`repro.kernels.lock_sim`.
+    together without resolution loss.  ``backend="pallas"`` routes both
+    per-step stages through :mod:`repro.kernels.lock_sim`.
+
+    ``shard=None`` (auto) splits the config axis across all visible
+    devices via ``shard_map`` whenever more than one is attached;
+    ``shard=True`` forces the sharded path (a 1-device mesh on
+    single-device hosts), ``shard=False`` disables it.  Sharded and
+    unsharded results are bit-identical (configs are independent; the
+    mapping is fully manual).
     """
     configs = list(configs)
     arrs = P.encode_configs(configs)
@@ -393,10 +273,14 @@ def simulate_batch(configs, *, target_cs: int = 300, n_steps: int | None = None,
     T = max_threads or int(arrs["threads"].max())
     if T < int(arrs["threads"].max()):
         raise ValueError("max_threads smaller than widest config")
-    out = _simulate(arrs, n_steps=int(n_steps), T=int(T), backend=backend)
+    if shard is None:
+        shard = len(jax.devices()) > 1
+    run = _simulate_sharded if shard else _simulate
+    out = run(arrs, n_steps=int(n_steps), T=int(T), backend=backend)
     out = {k: np.asarray(v) for k, v in out.items()}
     return BatchResult(configs=configs, n_steps=int(n_steps), backend=backend,
                        dt=dt, t_end=out["t_end"], completed=out["completed"],
                        spin_cpu=out["spin_cpu"],
                        wake_count=out["wake_count"],
-                       final_sws=out["final_sws"])
+                       final_sws=out["final_sws"],
+                       completed_per_thread=out["completed_per_thread"])

@@ -1,19 +1,25 @@
-"""Pallas kernel for the batched lock simulator's per-step GPS update.
+"""Pallas kernels for the batched lock simulator's per-step update.
 
-This is the hot inner loop of :mod:`repro.core.xdes`: for thousands of
-``(lock, threads, cores, cs, ncs, wake_latency, alpha)`` configurations at
-once, compute each configuration's runnable count, the generalized-
-processor-sharing rate ``min(1, cores/n_runnable)``, the cache-contention
-slowdown of the CS holder (``1/(1 + alpha·n_spinners)``, paper §2), and
-advance remaining work / burn spin CPU — one VMEM-resident pass over the
-``(configs, threads)`` state block instead of the six separate HBM round
-trips an unfused lowering makes.
+BOTH stages of one :mod:`repro.core.xdes` scan step live here as fused
+kernels, bit-identical to their XLA references in :mod:`repro.kernels.ref`:
+
+* :func:`lock_sim_step` — the GPS advance: runnable counts, the
+  generalized-processor-sharing rate ``min(1, cores/n_runnable)``, the
+  cache-contention slowdown of the CS holder (``1/(1 + alpha·n_spinners)``,
+  paper §2), work advance and spin-CPU burn — one VMEM-resident pass over
+  the ``(configs, threads)`` state block.
+* :func:`lock_transitions_step` — the transition stage (budget exhaustion,
+  wake completions, release/handoff with discipline-row dispatch incl.
+  FIFO ticket grants, arrivals) as a grid over config blocks.  The kernel
+  body IS :func:`repro.kernels.ref.lock_transitions_ref` applied to each
+  block, so ref and Pallas backends share one implementation and stay
+  bit-identical by construction (and by test).
+* :func:`oracle_step` — the standalone fused SWS-oracle observation.
 
 Rows are configurations (grid-parallel); the thread axis stays whole in
-VMEM (T ≤ 128 lanes after padding — a few KB per row).  The pure-jnp
-oracle is :func:`repro.kernels.ref.lock_sim_step_ref`; tests pin
-kernel == ref, and :mod:`repro.core.xdes` treats the two as swappable
-backends.
+VMEM (T ≤ 128 lanes after padding — a few KB per row).  ``interpret=None``
+auto-detects: interpret mode on CPU-only hosts, compiled lowering when a
+GPU/TPU is attached (:func:`repro.kernels.pallas_compat.default_interpret`).
 """
 
 from __future__ import annotations
@@ -26,7 +32,8 @@ from jax.experimental import pallas as pl
 
 from repro.core.policy import CS, NCS, SPIN, oracle_update
 
-from .pallas_compat import CompilerParams
+from .pallas_compat import CompilerParams, resolve_interpret
+from .ref import NO_TICKET, lock_transitions_ref
 
 LANE = 128          # TPU lane width: thread axis is padded to this
 
@@ -56,12 +63,14 @@ def _kernel(state_ref, rem_ref, alpha_ref, cores_ref, dt_ref, budget_ref,
 
 @functools.partial(jax.jit, static_argnames=("block_configs", "interpret"))
 def lock_sim_step(tstate, rem, alpha, cores, dt, has_budget, *,
-                  block_configs: int = 256, interpret: bool = True):
+                  block_configs: int = 256, interpret: bool | None = None):
     """Pallas-fused GPS advance; signature mirrors ``lock_sim_step_ref``.
 
     tstate: (C, T) int32; rem: (C, T) f32; alpha/cores/dt: (C,) f32;
     has_budget: (C,) bool.  Returns ``(rem', spin_burn)``.
+    ``interpret=None`` auto-detects the backend (interpret iff no GPU/TPU).
     """
+    interpret = resolve_interpret(interpret)
     C, T = tstate.shape
     bc = min(block_configs, C)
     pc = (-C) % bc
@@ -123,14 +132,16 @@ def _oracle_kernel(oid_ref, spun_ref, slept_ref, sws_ref, cnt_ref,
 
 @functools.partial(jax.jit, static_argnames=("block_configs", "interpret"))
 def oracle_step(oracle_id, spun, slept, sws, cnt, ewma, k, sws_max, *,
-                block_configs: int = 1024, interpret: bool = True):
+                block_configs: int = 1024, interpret: bool | None = None):
     """Pallas-fused oracle observation; signature mirrors
     :func:`repro.kernels.ref.oracle_update_ref`.
 
     All inputs ``(C,)``: ``oracle_id/sws/cnt/ewma/k/sws_max`` int32,
     ``spun``/``slept`` bool or 0/1 int32.  Returns ``(delta, cnt', ewma')``
     int32 with the A16-A17 clamp applied to ``delta``.
+    ``interpret=None`` auto-detects the backend (interpret iff no GPU/TPU).
     """
+    interpret = resolve_interpret(interpret)
     C = oracle_id.shape[0]
     bc = min(block_configs, C)
     pc = (-C) % bc
@@ -149,3 +160,103 @@ def oracle_step(oracle_id, spun, slept, sws, cnt, ewma, k, sws_max, *,
     )(col(oracle_id), col(spun), col(slept), col(sws), col(cnt),
       col(ewma), col(k), col(sws_max))
     return delta[:C, 0], cnt1[:C, 0], ewma1[:C, 0]
+
+
+# --------------------------------------------------------------------------
+# Fused transition stage: the whole discipline-row state machine (budget
+# exhaustion -> wakes -> release/handoff -> arrivals) as ONE kernel over
+# (block_configs, T) state blocks.  The body is literally
+# repro.kernels.ref.lock_transitions_ref applied per block, so the two
+# backends cannot drift: same code, same dtypes, bit-identical results
+# (padded thread lanes sit in DONE state and padded config rows have
+# threads=0, so neither contributes to any mask or reduction).
+# --------------------------------------------------------------------------
+
+#: (name, dtype, thread-axis pad value) of the 8 (C, T) state arrays, in
+#: the canonical TRANSITION_THREAD_STATE order.
+_THREAD_STATE_SPEC = (
+    ("st", jnp.int32, 5),               # DONE — inert in every mask
+    ("rem", jnp.float32, 0),
+    ("wake_at", jnp.float32, 0),
+    ("slept", jnp.int32, 0),
+    ("spun", jnp.int32, 0),
+    ("ctr", jnp.uint32, 0),
+    ("ticket", jnp.int32, NO_TICKET),
+    ("completed_pt", jnp.int32, 0),
+)
+
+#: dtypes of the 14 per-config context columns (TRANSITION_CONTEXT order).
+_CONTEXT_DTYPES = (
+    jnp.float32,                        # now2
+    jnp.int32, jnp.int32,               # policy, threads
+    jnp.float32, jnp.float32,           # dt, wake
+    jnp.float32, jnp.float32, jnp.float32, jnp.float32,  # cs/ncs lo/hi
+    jnp.int32, jnp.int32,               # k, sws_max
+    jnp.float32,                        # spin_budget
+    jnp.uint32, jnp.int32,              # seed, oracle
+)
+
+_N_THREAD, _N_CONF, _N_CTX = 8, 8, 14
+
+
+def _transitions_kernel(*refs):
+    ins, outs = refs[:_N_THREAD + _N_CONF + _N_CTX], \
+        refs[_N_THREAD + _N_CONF + _N_CTX:]
+    thread = [r[...] for r in ins[:_N_THREAD]]
+    conf = [r[...][:, 0] for r in ins[_N_THREAD:_N_THREAD + _N_CONF]]
+    ctx = [r[...][:, 0] for r in ins[_N_THREAD + _N_CONF:]]
+    out = lock_transitions_ref(*thread, *conf, *ctx)
+    for r, v in zip(outs, out):
+        r[...] = v if v.ndim == 2 else v[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_configs", "interpret"))
+def lock_transitions_step(st, rem, wake_at, slept, spun, ctr, ticket,
+                          completed_pt, sws, cnt, ewma, wuc, permits,
+                          nticket, completed, wake_count,
+                          now2, policy, threads, dt, wake, cs_lo, cs_hi,
+                          ncs_lo, ncs_hi, k, sws_max, spin_budget, seed,
+                          oracle, *, block_configs: int = 256,
+                          interpret: bool | None = None):
+    """Pallas-fused transition stage; signature mirrors
+    :func:`repro.kernels.ref.lock_transitions_ref` and returns the same
+    16 updated state arrays.  ``interpret=None`` auto-detects the backend
+    (interpret iff no GPU/TPU is attached)."""
+    interpret = resolve_interpret(interpret)
+    C, T = st.shape
+    bc = min(block_configs, C)
+    pc = (-C) % bc
+    pt = (-T) % LANE
+    Tp = T + pt
+    nc = (C + pc) // bc
+
+    thread_in = []
+    for arr, (_, dtype, padval) in zip(
+            (st, rem, wake_at, slept, spun, ctr, ticket, completed_pt),
+            _THREAD_STATE_SPEC):
+        thread_in.append(jnp.pad(arr.astype(dtype), ((0, pc), (0, pt)),
+                                 constant_values=padval))
+    conf_in = [jnp.pad(v.astype(jnp.int32), (0, pc))[:, None]
+               for v in (sws, cnt, ewma, wuc, permits, nticket, completed,
+                         wake_count)]
+    ctx_in = [jnp.pad(v.astype(dtype), (0, pc))[:, None]
+              for v, dtype in zip((now2, policy, threads, dt, wake, cs_lo,
+                                   cs_hi, ncs_lo, ncs_hi, k, sws_max,
+                                   spin_budget, seed, oracle),
+                                  _CONTEXT_DTYPES)]
+
+    mat = pl.BlockSpec((bc, Tp), lambda i: (i, 0))
+    colspec = pl.BlockSpec((bc, 1), lambda i: (i, 0))
+    out = pl.pallas_call(
+        _transitions_kernel,
+        grid=(nc,),
+        in_specs=[mat] * _N_THREAD + [colspec] * (_N_CONF + _N_CTX),
+        out_specs=[mat] * _N_THREAD + [colspec] * _N_CONF,
+        out_shape=[jax.ShapeDtypeStruct((C + pc, Tp), s[1])
+                   for s in _THREAD_STATE_SPEC]
+        + [jax.ShapeDtypeStruct((C + pc, 1), jnp.int32)] * _N_CONF,
+        interpret=interpret,
+        compiler_params=CompilerParams(dimension_semantics=("parallel",)),
+    )(*thread_in, *conf_in, *ctx_in)
+    return tuple(v[:C, :T] for v in out[:_N_THREAD]) \
+        + tuple(v[:C, 0] for v in out[_N_THREAD:])

@@ -113,6 +113,223 @@ def lock_sim_step_ref(tstate, rem, alpha, cores, dt, has_budget):
     return rem - dec, jnp.sum(burn, axis=-1)
 
 
+# --------------------------------------------------------------------------
+# The batched lock simulator's transition stage — the (C, T)-block reference
+# behind the swappable kernel boundary.  repro.core.xdes calls either this
+# function or its Pallas twin (repro.kernels.lock_sim.lock_transitions_step,
+# which wraps the SAME body in a grid over config blocks); tests pin the two
+# bit-identical.  All discipline decisions dispatch through
+# repro.core.policy.DISCIPLINE_ROWS, all oracle decisions through
+# ORACLE_ROWS — the engine itself is discipline-agnostic.
+# --------------------------------------------------------------------------
+
+#: Residual work (CPU-seconds) under which a CS/NCS counts as finished.
+REM_EPS = 1e-9
+#: Retired-ticket sentinel (no thread ever draws this many tickets).
+NO_TICKET = 2**31 - 1
+
+#: Canonical argument order of the transition boundary: per-thread (C, T)
+#: state, per-config (C,) state, then the per-config context columns.
+TRANSITION_THREAD_STATE = ("st", "rem", "wake_at", "slept", "spun", "ctr",
+                           "ticket", "completed_pt")
+TRANSITION_CONFIG_STATE = ("sws", "cnt", "ewma", "wuc", "permits", "nticket",
+                           "completed", "wake_count")
+TRANSITION_CONTEXT = ("now2", "policy", "threads", "dt", "wake", "cs_lo",
+                      "cs_hi", "ncs_lo", "ncs_hi", "k", "sws_max",
+                      "spin_budget", "seed", "oracle")
+
+
+def counter_uniform(seed, tid, ctr):
+    """Counter-based RNG: uniform [0,1) per (config, thread, event) from a
+    splitmix-style avalanche — deterministic, stateless, replayable per
+    cell independently of batch composition."""
+    x = seed ^ (tid.astype(jnp.uint32) * jnp.uint32(0x9E3779B9)) \
+        ^ ((ctr + jnp.uint32(1)) * jnp.uint32(0x85EBCA6B))
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x7FEB352D)
+    x = x ^ (x >> 15)
+    x = x * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> 16)
+    return x.astype(jnp.float32) * jnp.float32(2.0 ** -32)
+
+
+def lock_transitions_ref(st, rem, wake_at, slept, spun, ctr, ticket,
+                         completed_pt, sws, cnt, ewma, wuc, permits,
+                         nticket, completed, wake_count,
+                         now2, policy, threads, dt, wake, cs_lo, cs_hi,
+                         ncs_lo, ncs_hi, k, sws_max, spin_budget, seed,
+                         oracle):
+    """One transition step for a (C, T) block of configurations.
+
+    Stages (same order as the event-driven DES resolves a timestep):
+    budget exhaustion -> wake completions -> CS release/handoff ->
+    arrivals.  Per-thread state is int32/f32/uint32 arrays of shape
+    (C, T) (``slept``/``spun`` as 0/1 int32, ``ticket`` int32 with
+    :data:`NO_TICKET` when not queued); per-config state and context are
+    (C,) vectors.  Returns the 16 updated state arrays in the canonical
+    order (:data:`TRANSITION_THREAD_STATE` + :data:`TRANSITION_CONFIG_STATE`).
+    """
+    from repro.core import policy as P
+
+    C, T = st.shape
+    inf = jnp.float32(jnp.inf)
+    tid = jnp.arange(T, dtype=jnp.int32)[None, :]              # (1, T)
+    tidb = jnp.broadcast_to(tid, (C, T))
+    col = lambda v: v[:, None]                                 # (C,) -> (C,1)
+    active = tid < col(threads)
+    (hand_f, fifo_f, budget_f, w2s_f, repark_f,
+     win_f) = P.discipline_flags(policy)
+    teps = dt * jnp.float32(1e-3)
+
+    def first_oh(mask):
+        """One-hot of the lowest-tid True per row (all-False rows stay
+        all-False)."""
+        idx = jnp.argmax(mask, axis=-1, keepdims=True)
+        return (tid == idx) & jnp.any(mask, axis=-1, keepdims=True)
+
+    def thc_of(s):
+        """Algorithm 1's thc: holder + every waiter (CS/SPIN/SLEEP/WAKING),
+        per config."""
+        return jnp.sum((active & (s >= P.CS) & (s <= P.WAKING))
+                       .astype(jnp.int32), axis=-1)
+
+    def draw_into(mask, lo, hi, c):
+        val = col(lo) + counter_uniform(col(seed), tidb, c) * col(hi - lo)
+        return val, jnp.where(mask, c + jnp.uint32(1), c)
+
+    def park(mask, st, wake_at, permits, wake_count, slept, rem):
+        """DES ``_sleep``: park, absorbing banked permits (semaphore law —
+        an absorbed permit still pays the park/unpark round trip)."""
+        rank = jnp.cumsum(mask.astype(jnp.int32), axis=-1) - 1
+        grant = mask & (rank < col(permits))
+        n_grant = jnp.sum(grant.astype(jnp.int32), axis=-1)
+        st = jnp.where(grant, P.WAKING,
+                       jnp.where(mask, P.SLEEP_ST, st))
+        wake_at = jnp.where(grant, col(now2 + wake), wake_at)
+        return (st, wake_at, permits - n_grant, wake_count + n_grant,
+                jnp.where(mask, 1, slept), jnp.where(mask, inf, rem))
+
+    def oracle_acquire(happened, winner_oh, thc, sws, cnt, ewma, wuc):
+        """A12-A33 at an acquisition: oracle family dispatch, A16-A17
+        clamp, C1/C2 correction — windowed disciplines only."""
+        do = happened & (win_f > 0)
+        spun_w = jnp.sum(jnp.where(winner_oh, spun, 0), axis=-1)
+        slept_w = jnp.sum(jnp.where(winner_oh, slept, 0), axis=-1)
+        delta, cnt2, ewma2 = P.oracle_update(                  # E2-E11
+            oracle, spun_w, slept_w, sws, cnt, ewma, k)
+        delta = jnp.clip(delta, 1 - sws, sws_max - sws)        # A16-A17
+        sws2 = sws + delta                                     # A20
+        tmp = jnp.where((delta < 0) & (thc > sws2), thc - sws2,       # C2
+                        jnp.where((delta > 0) & (thc > sws), thc - sws,
+                                  0))                                 # C1
+        corr = jnp.sign(delta) * jnp.minimum(jnp.abs(delta), tmp)  # A32
+        return (jnp.where(do, sws2, sws), jnp.where(do, cnt2, cnt),
+                jnp.where(do, ewma2, ewma), jnp.where(do, wuc + corr, wuc))
+
+    # -- spin-budget exhaustion -> sleep (DES stage order) -----------------
+    exhausted = (st == P.SPIN) & (col(budget_f) > 0) & (rem <= REM_EPS)
+    st, wake_at, permits, wake_count, slept, rem = park(
+        exhausted, st, wake_at, permits, wake_count, slept, rem)
+
+    # -- wake completions --------------------------------------------------
+    due = (st == P.WAKING) & (wake_at <= col(now2 + teps))
+    holder_free = ~jnp.any(st == P.CS, axis=-1, keepdims=True)
+    winA = first_oh(due) & holder_free
+    cs_val, ctr = draw_into(winA, cs_lo, cs_hi, ctr)
+    rem = jnp.where(winA, cs_val, rem)
+    st = jnp.where(winA, P.CS, st)
+    # the sleep->spin transition's payoff: a woken thread that finds the
+    # lock free acquired "slept and not spun" -> EvalSWS doubles the window
+    sws, cnt, ewma, wuc = oracle_acquire(jnp.any(winA, axis=-1), winA,
+                                         thc_of(st), sws, cnt, ewma, wuc)
+    losers = due & ~winA
+    to_spin = losers & (col(w2s_f) > 0)    # woken into the spinning window
+    st = jnp.where(to_spin, P.SPIN, st)
+    spun = jnp.where(to_spin, 1, spun)
+    rem = jnp.where(to_spin, inf, rem)
+    to_park = losers & (col(repark_f) > 0)     # barged: park again
+    st, wake_at, permits, wake_count, slept, rem = park(
+        to_park, st, wake_at, permits, wake_count, slept, rem)
+
+    # -- CS completion / release ------------------------------------------
+    holder_done = (st == P.CS) & (rem <= REM_EPS)
+    rel = jnp.any(holder_done, axis=-1)
+    completed = completed + rel.astype(jnp.int32)
+    completed_pt = completed_pt + holder_done.astype(jnp.int32)
+    thc_pre = thc_of(st)                                   # R14 (pre-FAD)
+    do_latch = rel & (win_f > 0)
+    r_wuc = jnp.where(do_latch & (wuc >= 0), wuc, -1)      # R2-R6
+    wuc = jnp.where(do_latch, jnp.where(wuc >= 0, 0, wuc + 1), wuc)  # R4/R7
+    ncs_val, ctr = draw_into(holder_done, ncs_lo, ncs_hi, ctr)
+    rem = jnp.where(holder_done, ncs_val, rem)
+    st = jnp.where(holder_done, P.NCS, st)                 # R9-R10
+    # handoff: grant priority is the arrival ticket for FIFO rows, the
+    # thread id otherwise (the DES picks a spinner at random)
+    spinners = st == P.SPIN
+    can_handoff = rel & (hand_f > 0) & jnp.any(spinners, axis=-1)
+    key = jnp.where(spinners,
+                    jnp.where(col(fifo_f) > 0, ticket, tidb), NO_TICKET)
+    cand = spinners & (key == jnp.min(key, axis=-1, keepdims=True))
+    winB = first_oh(cand) & col(can_handoff)
+    cs_valB, ctr = draw_into(winB, cs_lo, cs_hi, ctr)
+    rem = jnp.where(winB, cs_valB, rem)
+    st = jnp.where(winB, P.CS, st)
+    sws, cnt, ewma, wuc = oracle_acquire(can_handoff, winB, thc_pre - 1,
+                                         sws, cnt, ewma, wuc)
+    # wake quota: per-discipline rule (R11-R21 for the mutable row,
+    # wake-one for sleep/adaptive, none for pure spin/FIFO)
+    n_parked = jnp.sum(((st == P.SLEEP_ST) | (st == P.WAKING))
+                       .astype(jnp.int32), axis=-1)
+    quota = P.discipline_release_quota(policy, r_wuc, thc_pre, sws,
+                                       n_parked,
+                                       can_handoff.astype(jnp.int32))
+    quota = jnp.where(rel, quota, 0)
+    sleepers = st == P.SLEEP_ST
+    rank_s = jnp.cumsum(sleepers.astype(jnp.int32), axis=-1) - 1
+    sel = sleepers & (rank_s < col(quota))
+    n_sel = jnp.sum(sel.astype(jnp.int32), axis=-1)
+    st = jnp.where(sel, P.WAKING, st)
+    wake_at = jnp.where(sel, col(now2 + wake), wake_at)
+    wake_count = wake_count + n_sel
+    permits = permits + (quota - n_sel)    # park-free permits are banked
+
+    # -- arrivals (NCS finished) ------------------------------------------
+    arr = (st == P.NCS) & (rem <= REM_EPS) & active
+    thc_base = thc_of(st)
+    rank_a = jnp.cumsum(arr.astype(jnp.int32), axis=-1) - 1
+    thc_pre_i = col(thc_base) + rank_a                     # A4 per arrival
+    slept = jnp.where(arr, 0, slept)                       # A3
+    spun = jnp.where(arr, 0, spun)
+    holder_free2 = ~jnp.any(st == P.CS, axis=-1, keepdims=True)
+    sleeps = arr & (P.discipline_arrival_sleeps(
+        col(policy), rank_a, thc_pre_i, col(sws),
+        holder_free2.astype(jnp.int32)) > 0)               # A7 per row
+    nonsleep = arr & ~sleeps
+    winC = first_oh(nonsleep) & holder_free2
+    cs_valC, ctr = draw_into(winC, cs_lo, cs_hi, ctr)
+    rem = jnp.where(winC, cs_valC, rem)
+    st = jnp.where(winC, P.CS, st)
+    sws, cnt, ewma, wuc = oracle_acquire(jnp.any(winC, axis=-1), winC,
+                                         thc_base + 1, sws, cnt, ewma, wuc)
+    to_spinC = nonsleep & ~winC
+    st = jnp.where(to_spinC, P.SPIN, st)
+    spun = jnp.where(to_spinC, 1, spun)
+    rem = jnp.where(to_spinC,
+                    jnp.where(col(budget_f) > 0, col(spin_budget), inf),
+                    rem)
+    # ticket-order bookkeeping: every new spinner takes the next ticket
+    # (rank order within the step); only FIFO rows read them for grants
+    rank_t = jnp.cumsum(to_spinC.astype(jnp.int32), axis=-1) - 1
+    ticket = jnp.where(to_spinC, col(nticket) + rank_t, ticket)
+    nticket = nticket + jnp.sum(to_spinC.astype(jnp.int32), axis=-1)
+    st, wake_at, permits, wake_count, slept, rem = park(
+        sleeps, st, wake_at, permits, wake_count, slept, rem)
+    ticket = jnp.where(st == P.SPIN, ticket, NO_TICKET)    # retire tickets
+
+    return (st, rem, wake_at, slept, spun, ctr, ticket, completed_pt,
+            sws, cnt, ewma, wuc, permits, nticket, completed, wake_count)
+
+
 def oracle_update_ref(oracle_id, spun, slept, sws, cnt, ewma, k, sws_max):
     """Batched SWS-oracle observation over ``(C,)`` config vectors.
 

@@ -1,7 +1,9 @@
 """Serving: slot-based decode engine + window-driven continuous batching."""
 
 from .engine import DecodeEngine, Request, SimulatedEngine
-from .scheduler import ContinuousBatcher, SchedStats
+from .scheduler import (ContinuousBatcher, SchedScenario, SchedStats,
+                        sample_sched_scenarios, xdes_policy_sweep)
 
 __all__ = ["DecodeEngine", "SimulatedEngine", "Request",
-           "ContinuousBatcher", "SchedStats"]
+           "ContinuousBatcher", "SchedStats", "SchedScenario",
+           "sample_sched_scenarios", "xdes_policy_sweep"]

@@ -24,6 +24,7 @@ from collections import deque
 from dataclasses import dataclass, field
 
 from repro.core.oracle import EvalSWS, FixedOracle, Oracle
+from repro.core.policy import SimConfig
 from repro.core.window import SpinningWindow
 
 from .engine import Request
@@ -184,3 +185,122 @@ class ContinuousBatcher:
             self.run_step()
             steps += 1
         return self.stats
+
+
+# --------------------------------------------------------------------------
+# Scheduler-policy ablations through xdes — slot/standby dynamics encoded
+# on the shared SimConfig row schema, so admission policies sweep on-device
+# in the same batched call as the lock disciplines.
+# --------------------------------------------------------------------------
+
+#: Admission policy -> the discipline row that models it (DESIGN.md §3.2
+#: mapping).  ``zero`` = no standby, every handoff pays prefill in the
+#: open (the sleep lock: every waiter parked, wake latency exposed);
+#: ``max`` = every waiting request held hot (the spin lock: every waiter
+#: spinning, prefill always masked, residency maximal); ``mutable`` = the
+#: paper's EvalSWS-tuned standby window.
+SCHED_POLICY_LOCKS = {
+    "zero": "sleep",
+    "sleep": "sleep",
+    "max": "ttas",
+    "spin": "ttas",
+    "mutable": "mutable",
+}
+
+
+@dataclass(frozen=True)
+class SchedScenario:
+    """One serving workload on the shared row schema.
+
+    ``slots`` decode slots serve ``requests`` circulating requests; a slot
+    is held for up to ``decode_s`` seconds per handoff (the CS), a retired
+    request regenerates after up to ``think_s`` (the NCS), and promoting a
+    cold request costs ``prefill_s`` (the OS wake-up latency).  Standby
+    residency maps to spin CPU; cold promotions map to wake-ups.
+    """
+
+    slots: int
+    requests: int
+    decode_s: float = 50e-3
+    think_s: float = 100e-3
+    prefill_s: float = 8e-3
+    seed: int = 0
+
+    def to_sim_config(self, policy: str) -> SimConfig:
+        """Encode this scenario under an admission policy as a SimConfig
+        row — directly batchable with lock-sweep rows."""
+        if policy not in SCHED_POLICY_LOCKS:
+            raise ValueError(f"unknown admission policy {policy!r}; "
+                             f"options: {sorted(SCHED_POLICY_LOCKS)}")
+        return SimConfig(SCHED_POLICY_LOCKS[policy],
+                         threads=self.requests, cores=self.slots,
+                         cs=(0.0, self.decode_s), ncs=(0.0, self.think_s),
+                         wake_latency=self.prefill_s, alpha=0.0,
+                         seed=self.seed)
+
+
+def sample_sched_scenarios(n_scenarios: int, seed: int = 0,
+                           slots=(4, 8, 16)) -> list[SchedScenario]:
+    """Random serving workloads: under- to over-subscribed slot pools,
+    decode/think/prefill times log-uniform across serving-realistic
+    scales.  Stable draw order (the sweep-seed contract of
+    :func:`repro.configs.catalog.sample_scenarios`)."""
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n_scenarios):
+        s = int(rng.choice(slots))
+        out.append(SchedScenario(
+            slots=s,
+            requests=int(rng.integers(s, 4 * s + 1)),
+            decode_s=float(np.exp(rng.uniform(np.log(5e-3), np.log(2e-1)))),
+            think_s=float(np.exp(rng.uniform(np.log(1e-2), np.log(5e-1)))),
+            prefill_s=float(np.exp(rng.uniform(np.log(2e-3), np.log(5e-2)))),
+            seed=i))
+    return out
+
+
+def xdes_policy_sweep(scenarios, policies=("zero", "max", "mutable"), *,
+                      target_cs: int = 150, backend: str = "ref",
+                      shard: bool | None = None, verbose: bool = False) -> dict:
+    """Sweep every admission policy over every serving scenario in ONE
+    batched :func:`repro.core.xdes.simulate_batch` call (scenario-major,
+    policy-minor row order).
+
+    Returns per-policy aggregates in the scheduler's vocabulary:
+    ``handoffs_per_s`` (throughput), ``cold_promotions_per_handoff``
+    (wake-ups per CS — the late-handoff analogue) and
+    ``standby_s_per_handoff`` (spin CPU per CS — hot-pool residency).
+    """
+    import numpy as np
+
+    from repro.core import xdes
+
+    scenarios = list(scenarios)
+    configs = [sc.to_sim_config(p) for sc in scenarios for p in policies]
+    res = xdes.simulate_batch(configs, target_cs=target_cs,
+                              backend=backend, shard=shard)
+    S, Pn = len(scenarios), len(policies)
+    thr = res.throughput.reshape(S, Pn)
+    wake = (res.wake_count / np.maximum(res.completed, 1)).reshape(S, Pn)
+    standby = res.sync_cpu_per_cs.reshape(S, Pn)
+    best = np.maximum(thr.max(axis=1), 1e-30)
+
+    out = {"meta": {"n_scenarios": S, "n_configs": len(configs),
+                    "n_steps": res.n_steps, "backend": res.backend},
+           "policies": {}}
+    for j, p in enumerate(policies):
+        out["policies"][p] = {
+            "handoffs_per_s": float(thr[:, j].mean()),
+            "mean_ratio_to_best": float((thr[:, j] / best).mean()),
+            "cold_promotions_per_handoff": float(wake[:, j].mean()),
+            "standby_s_per_handoff": float(standby[:, j].mean()),
+        }
+        if verbose:
+            r = out["policies"][p]
+            print(f"{p:>8} handoffs/s {r['handoffs_per_s']:9.1f} "
+                  f"ratio {r['mean_ratio_to_best']:5.3f} "
+                  f"cold/handoff {r['cold_promotions_per_handoff']:5.3f} "
+                  f"standby s/handoff {r['standby_s_per_handoff']:.4f}")
+    return out
