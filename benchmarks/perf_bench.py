@@ -1,0 +1,268 @@
+"""Wall-clock microbenchmark of the batched lock simulator — the tracked
+perf trajectory of the xdes engine.
+
+Two suites, every cell timed twice (cold = compile + run, steady = the
+jit-cached second call; throughputs are computed from the steady time):
+
+* ``dispatch`` — a pinned-horizon 1k-config batch (10k too with
+  ``--full-size``) through every (backend, rollout) cell: ``ref``/
+  ``pallas`` x per-step ``scan`` (two kernel dispatches per timestep, the
+  legacy path) vs time-blocked ``blocked`` (one fused dispatch per
+  :data:`repro.core.xdes.DEFAULT_BLOCK_STEPS` timesteps).  Same step
+  count everywhere, early exit off — this isolates the dispatch-count
+  effect and is the stable cell the CI regression gate checks.
+* ``sweep`` — the end-to-end 1k-config scenario sweep at an auto-planned
+  horizon: the legacy path (scan, full horizon, one global scan length)
+  vs the shipped fast path (blocked + early exit + ``bucket_steps``, so
+  a 100µs-CS cell no longer pins a µs-spin cell to its scan length).
+
+Artifact: ``BENCH_xdes.json`` at the repo root is the COMMITTED perf
+baseline; CI re-measures and fails on a >2x throughput regression via
+``--check``.  Ad-hoc runs default to ``reports/bench_xdes.json`` so a
+bare invocation can't clobber the baseline — refresh it deliberately
+with ``--out BENCH_xdes.json`` (full mode, quiet machine).  How to read
+it: docs/performance.md.
+
+    PYTHONPATH=src python -m benchmarks.perf_bench [--quick] [--check]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+#: The regression gate's tolerance: fail if a cell's steady-state
+#: throughput drops below baseline / REGRESSION_FACTOR (CI runners and
+#: dev boxes differ in speed; 2x catches algorithmic regressions without
+#: tripping on machine noise).
+REGRESSION_FACTOR = 2.0
+
+
+def _fmt_s(x) -> str:
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}µs"
+
+
+def _time_twice(fn):
+    """(cold_s, steady_s, result): first call compiles, second hits the
+    jit cache — steady state is what the trajectory tracks."""
+    t0 = time.perf_counter()
+    fn()
+    t1 = time.perf_counter()
+    res = fn()
+    t2 = time.perf_counter()
+    return t1 - t0, t2 - t1, res
+
+
+def dispatch_suite(n_configs: int, n_steps: int, backends=("ref", "pallas"),
+                   verbose: bool = True) -> dict:
+    """Pinned-horizon (backend x rollout) grid on one scenario batch."""
+    from repro.configs.catalog import lock_scenario_sweep
+    from repro.core import xdes
+
+    configs = lock_scenario_sweep(n_scenarios=n_configs // 5)
+    assert len(configs) == n_configs
+    cells = {}
+    for backend in backends:
+        for rollout in ("scan", "blocked"):
+            cold, steady, res = _time_twice(lambda: xdes.simulate_batch(
+                configs, n_steps=n_steps, backend=backend, rollout=rollout))
+            cells[f"{backend}/{rollout}"] = {
+                "n_configs": n_configs, "n_steps": n_steps,
+                "block_steps": (xdes.DEFAULT_BLOCK_STEPS
+                                if rollout == "blocked" else 1),
+                "wall_cold_s": round(cold, 3), "wall_s": round(steady, 3),
+                "cfg_steps_per_s": round(n_configs * n_steps / steady, 1),
+            }
+            if verbose:
+                c = cells[f"{backend}/{rollout}"]
+                print(f"  {backend:>6}/{rollout:<7} cold {_fmt_s(cold):>8} "
+                      f"steady {_fmt_s(steady):>8} "
+                      f"({c['cfg_steps_per_s']:.2e} cfg-steps/s)")
+    return cells
+
+
+def sweep_suite(n_scenarios: int, target_cs: int,
+                verbose: bool = True) -> dict:
+    """End-to-end auto-planned scenario sweep: legacy full-horizon scan vs
+    the shipped fast path (blocked + early exit + bucketing)."""
+    from repro.configs.catalog import lock_scenario_sweep
+    from repro.core import xdes
+
+    configs = lock_scenario_sweep(n_scenarios=n_scenarios)
+    variants = {
+        "legacy": dict(rollout="scan", early_exit=False,
+                       bucket_steps=False),
+        "blocked": dict(rollout="blocked", early_exit=False,
+                        bucket_steps=False),
+        "fast": dict(rollout="blocked", early_exit=True, bucket_steps=True),
+    }
+    cells = {}
+    for name, kw in variants.items():
+        cold, steady, res = _time_twice(lambda: xdes.simulate_batch(
+            configs, target_cs=target_cs, **kw))
+        run = np.asarray(res.steps_run, np.int64)
+        cells[name] = {
+            "n_configs": len(configs), "target_cs": target_cs,
+            "planned_steps": int(res.n_steps),
+            "mean_steps_run": round(float(run.mean()), 1),
+            "executed_cfg_steps": int(run.sum()),
+            "wall_cold_s": round(cold, 3), "wall_s": round(steady, 3),
+            "min_completed": int(res.completed.min()),
+        }
+        if verbose:
+            c = cells[name]
+            print(f"  {name:>8} cold {_fmt_s(cold):>8} steady "
+                  f"{_fmt_s(steady):>8} (mean steps run "
+                  f"{c['mean_steps_run']:.0f} of {c['planned_steps']} "
+                  f"planned, min completed {c['min_completed']})")
+    return cells
+
+
+def _speedups(cells: dict) -> dict:
+    out = {}
+    for backend in ("ref", "pallas"):
+        a, b = cells.get(f"{backend}/scan"), cells.get(f"{backend}/blocked")
+        if a and b:
+            out[f"dispatch/{backend}/blocked_over_scan"] = round(
+                a["wall_s"] / b["wall_s"], 2)
+    return out
+
+
+def summarize(result: dict) -> str:
+    """Markdown perf table (the roofline report's table style, repointed
+    at the xdes trajectory)."""
+    lines = ["### xdes perf trajectory — `BENCH_xdes.json`", "",
+             "| cell | configs | steps | cold | steady | cfg-steps/s |",
+             "|---|---|---|---|---|---|"]
+    for name, c in result["dispatch"].items():
+        lines.append(
+            f"| dispatch {name} | {c['n_configs']} | {c['n_steps']} "
+            f"| {_fmt_s(c['wall_cold_s'])} | {_fmt_s(c['wall_s'])} "
+            f"| {c['cfg_steps_per_s']:.2e} |")
+    for name, c in result["sweep"].items():
+        lines.append(
+            f"| sweep {name} | {c['n_configs']} "
+            f"| {c['mean_steps_run']:.0f}/{c['planned_steps']} "
+            f"| {_fmt_s(c['wall_cold_s'])} | {_fmt_s(c['wall_s'])} | - |")
+    lines += ["", "| speedup | x |", "|---|---|"]
+    for k, v in result["speedups"].items():
+        lines.append(f"| {k} | {v} |")
+    return "\n".join(lines)
+
+
+def check_regression(result: dict, baseline: dict,
+                     factor: float = REGRESSION_FACTOR) -> list[str]:
+    """Compare steady-state throughput of matching dispatch cells against
+    the committed baseline; return the list of failures (empty = pass)."""
+    failures = []
+    base_cells = baseline.get("dispatch", {})
+    for name, cell in result.get("dispatch", {}).items():
+        base = base_cells.get(name)
+        if not base or (base["n_configs"], base["n_steps"]) != (
+                cell["n_configs"], cell["n_steps"]):
+            continue                      # different scale: not comparable
+        if cell["cfg_steps_per_s"] * factor < base["cfg_steps_per_s"]:
+            failures.append(
+                f"{name}: {cell['cfg_steps_per_s']:.2e} cfg-steps/s is "
+                f">{factor}x below baseline "
+                f"{base['cfg_steps_per_s']:.2e}")
+    return failures
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-scale: 1k-config dispatch grid + 200-config "
+                         "sweep (<90 s on CPU)")
+    ap.add_argument("--full-size", action="store_true",
+                    help="add the 10k-config dispatch cell (ref backend)")
+    ap.add_argument("--out", default="reports/bench_xdes.json",
+                    help="output path; pass --out BENCH_xdes.json (repo "
+                         "root) to deliberately refresh the committed "
+                         "baseline the CI gate compares against")
+    ap.add_argument("--check", action="store_true",
+                    help="compare against the committed baseline at "
+                         "--baseline BEFORE overwriting; exit 1 on a "
+                         f">{REGRESSION_FACTOR}x throughput regression")
+    ap.add_argument("--baseline", default="BENCH_xdes.json")
+    args = ap.parse_args(argv)
+
+    baseline = None
+    if args.check:
+        # fail fast: --check with no baseline must not pass silently (a
+        # deleted or misplaced BENCH_xdes.json would disarm the CI gate)
+        if not os.path.exists(args.baseline):
+            raise SystemExit(
+                f"perf check: no baseline at {args.baseline} "
+                f"(refresh it with --out BENCH_xdes.json)")
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+
+    import jax
+
+    from repro.kernels.pallas_compat import default_interpret
+
+    t0 = time.time()
+    print("dispatch suite (pinned horizon, early exit off):")
+    dispatch = dispatch_suite(1000, 384)
+    if args.full_size:
+        print("dispatch suite, 10k configs (ref backend):")
+        dispatch.update({f"10k-{k}": v for k, v in dispatch_suite(
+            10_000, 384, backends=("ref",)).items()})
+
+    print("sweep suite (auto-planned horizon):")
+    sweep = sweep_suite(n_scenarios=40 if args.quick else 200,
+                        target_cs=20 if args.quick else 50)
+
+    result = {
+        "meta": {
+            "platform": jax.default_backend(),
+            "n_devices": len(jax.devices()),
+            "jax": jax.__version__,
+            "pallas_interpret": bool(default_interpret()),
+            "mode": "quick" if args.quick else "full",
+            "wall_total_s": None,
+        },
+        "dispatch": dispatch,
+        "sweep": sweep,
+    }
+    result["speedups"] = _speedups(dispatch)
+    legacy, fast = sweep.get("legacy"), sweep.get("fast")
+    if legacy and fast:
+        result["speedups"]["sweep/fast_over_legacy"] = round(
+            legacy["wall_s"] / fast["wall_s"], 2)
+    result["meta"]["wall_total_s"] = round(time.time() - t0, 1)
+
+    out_dir = os.path.dirname(args.out)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=1)
+        f.write("\n")
+    print(f"\n{summarize(result)}\n\nwrote {args.out} "
+          f"({result['meta']['wall_total_s']}s total)")
+
+    if baseline is not None:
+        failures = check_regression(result, baseline)
+        if failures:
+            print("PERF REGRESSION vs committed baseline:")
+            for line in failures:
+                print(f"  {line}")
+            raise SystemExit(1)
+        print(f"perf check vs {args.baseline}: OK "
+              f"(no cell >{REGRESSION_FACTOR}x below baseline)")
+    return result
+
+
+if __name__ == "__main__":
+    main()

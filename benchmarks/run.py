@@ -11,13 +11,16 @@
 | sched      | §3 technique on TPU    | benchmarks.sched_bench  |
 | oracle     | §5 oracle families     | benchmarks.oracle_ablation (xdes) |
 | discipline | discipline x oracle map| benchmarks.discipline_diagram (sharded xdes) |
-| roofline   | EXPERIMENTS §Roofline  | benchmarks.roofline     |
+| perf       | engine perf trajectory | benchmarks.perf_bench   |
 
 Artifacts land in reports/* (JSON plus the oracle and discipline
-phase-diagram CSV/markdown); a summary CSV is printed at the end.
-``--quick`` runs the batched xdes sweep, the oracle-family grid and the
-discipline x oracle diagram at smoke scale (~1-2 min) — the fast signal
-that the simulation stack works end to end.
+phase-diagram CSV/markdown, and the measured perf trajectory —
+``BENCH_xdes.json`` at the repo root is the committed perf BASELINE,
+refreshed only by an explicit ``perf_bench --out BENCH_xdes.json``); a
+summary CSV is printed at the end.  ``--quick`` runs the batched xdes sweep, the oracle-family grid,
+the discipline x oracle diagram and the perf microbenchmark at smoke
+scale (~2-3 min) — the fast signal that the simulation stack works end
+to end and hasn't slowed down.
 """
 
 from __future__ import annotations
@@ -65,6 +68,17 @@ def main(argv=None) -> None:
         dd = discipline_diagram.main(["--quick"])
         for disc, row in dd["disciplines"].items():
             summary.append((f"discipline.{disc}.wins", row["wins"]))
+        print("\n" + "=" * 72)
+        print("[quick] xdes perf microbenchmark")
+        print("=" * 72)
+        from benchmarks import perf_bench
+        # reports/ output: the repo-root BENCH_xdes.json is the committed
+        # baseline the CI gate compares against — refresh it deliberately
+        # via `perf_bench --full-size --out BENCH_xdes.json`.
+        pb = perf_bench.main(["--quick",
+                              "--out", "reports/bench_xdes_quick.json"])
+        for name, x in pb["speedups"].items():
+            summary.append((f"perf.{name}", x))
         print("\n" + "=" * 72)
         print(f"quick smoke done in {time.time()-t0:.0f}s — summary CSV")
         print("=" * 72)
@@ -153,20 +167,14 @@ def main(argv=None) -> None:
                         round(row["best_variant_mean_ratio"], 3)))
 
     print("\n" + "=" * 72)
-    print("[8/8] roofline tables from dry-run artifacts")
+    print("[8/8] xdes perf microbenchmark (reports/bench_xdes.json)")
     print("=" * 72)
-    from benchmarks import roofline
-    text = roofline.summarize()
-    if text.strip():
-        with open("reports/roofline.md", "w") as f:
-            f.write(text)
-        n_ok = text.count("| ok |")
-        print(f"roofline: {n_ok} compiled cells tabulated "
-              f"-> reports/roofline.md")
-        summary.append(("roofline.cells_ok", n_ok))
-    else:
-        print("no dry-run artifacts found — run "
-              "`python -m repro.launch.dryrun --all` first")
+    from benchmarks import perf_bench
+    pb = perf_bench.main(["--full-size"] if args.full else [])
+    with open("reports/perf_bench.md", "w") as f:
+        f.write(perf_bench.summarize(pb) + "\n")
+    for name, x in pb["speedups"].items():
+        summary.append((f"perf.{name}", x))
 
     print("\n" + "=" * 72)
     print(f"benchmark suite done in {time.time()-t0:.0f}s — summary CSV")

@@ -7,7 +7,8 @@ Two artifacts:
   ``benchmarks.lockbench.fig3`` (avg throughput, ratio-to-optimum, PT-EXP)
   and checked against the paper's qualitative claims C2-C4.
 * ``scenario`` — a beyond-paper sweep (default 200 scenarios x 5 locks =
-  1000 configurations, again one call): random machines/workloads sampling
+  1000 configurations, one call per step-count bucket — see
+  ``repro.core.xdes.plan_buckets``): random machines/workloads sampling
   the adaptive-spin design space, answering "which discipline wins where"
   and "how far from the per-scenario optimum is a blind static choice vs
   the mutable lock" — the experiment the sequential DES made impractical.
@@ -122,13 +123,19 @@ def _check_claims(f3: dict) -> dict:
 # Beyond-paper scenario sweep
 # --------------------------------------------------------------------------
 def scenario(n_scenarios: int = 200, target_cs: int = 150,
-             backend: str = "ref", seed: int = 0,
+             backend: str = "ref", seed: int = 0, bucket: bool = True,
              verbose: bool = True) -> dict:
+    """``bucket=True`` groups the heterogeneous scenarios into power-of-two
+    step-count buckets (:func:`repro.core.xdes.plan_buckets`) — one
+    batched call per bucket instead of pinning every cell to the slowest
+    scenario's scan length.  All five locks of a scenario share its
+    planned step count, so per-scenario comparisons stay consistent."""
     locks = list(LOCK_DISCIPLINES)
     configs = lock_scenario_sweep(n_scenarios=n_scenarios, seed=seed,
                                   locks=locks)
     t0 = time.time()
-    res = xdes.simulate_batch(configs, target_cs=target_cs, backend=backend)
+    res = xdes.simulate_batch(configs, target_cs=target_cs, backend=backend,
+                              bucket_steps=bucket)
     wall = time.time() - t0
 
     thr = res.throughput.reshape(n_scenarios, len(locks))
@@ -382,16 +389,21 @@ def main(argv=None) -> dict:
     ap.add_argument("--backend", choices=("ref", "pallas"), default="ref")
     ap.add_argument("--scenarios", type=int, default=200)
     ap.add_argument("--target-cs", type=int, default=250)
+    ap.add_argument("--no-bucket", action="store_true",
+                    help="run the scenario sweep as one global-horizon "
+                         "batch instead of per-step-count buckets")
     ap.add_argument("--out", default="reports/sweep.json")
     args = ap.parse_args(argv)
 
     if args.quick:
         f3 = fig3_batched(target_cs=60, seeds=(0,), backend=args.backend)
-        sc = scenario(n_scenarios=40, target_cs=50, backend=args.backend)
+        sc = scenario(n_scenarios=40, target_cs=50, backend=args.backend,
+                      bucket=not args.no_bucket)
     else:
         f3 = fig3_batched(target_cs=args.target_cs, backend=args.backend)
         sc = scenario(n_scenarios=args.scenarios,
-                      target_cs=args.target_cs, backend=args.backend)
+                      target_cs=args.target_cs, backend=args.backend,
+                      bucket=not args.no_bucket)
 
     results = {"fig3": f3, "scenario": sc}
     out_dir = os.path.dirname(args.out)

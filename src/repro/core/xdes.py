@@ -4,9 +4,23 @@ The event-driven DES (:mod:`repro.core.des`) is exact but interpreter-bound:
 one Python loop per ``(lock, threads, cores, cs, ncs)`` cell, so the Fig. 3
 grid (5 locks x 8 thread counts x 4 regimes x seeds) runs sequentially for
 minutes.  This module simulates *thousands of configurations in one device
-program*: a generalized-processor-sharing step on a fixed timestep, rolled
-out with ``lax.scan`` over (C, T) state blocks.  BOTH stages of the step
-are swappable kernel backends, pinned bit-identical by tests:
+program*: a generalized-processor-sharing step on a fixed timestep.
+
+The rollout is **time-blocked** (``rollout="blocked"``, the default): a
+chunked ``lax.while_loop`` whose body is ONE fused kernel dispatch per
+``block_steps`` timesteps — GPS advance + oracle update + transitions
+iterated with the whole (C, T) state block resident in VMEM/registers
+(:func:`repro.kernels.ref.lock_sim_block_ref` on the XLA backend, the
+bit-identical Pallas twin :func:`repro.kernels.lock_sim.lock_sim_block` on
+``backend="pallas"``), so the outer loop shrinks from ``n_steps``
+dispatches to ``n_steps / block_steps``.  The loop carries a per-config
+``done = completed >= target_cs`` mask and **exits early** as soon as
+every config has converged (``early_exit``, on by default for
+auto-planned horizons; the executed step count is reported as
+``BatchResult.steps_run``).  ``rollout="scan"`` keeps the legacy
+two-dispatches-per-step ``lax.scan`` — the parity reference the blocked
+path is pinned bit-identical against.  Both per-step stages remain
+swappable kernel backends in the scan path:
 
 * GPS advance — :func:`repro.kernels.ref.lock_sim_step_ref` (XLA) or the
   fused Pallas kernel :func:`repro.kernels.lock_sim.lock_sim_step`;
@@ -29,9 +43,14 @@ per-config integers (sws, cnt, wuc, permits, next-ticket) — exactly the
 array-encodable policy state :mod:`repro.core.policy` defines.
 
 Scale: :func:`simulate_batch` shards the batch over every visible device
-with ``shard_map`` (config axis, fully manual) when more than one device
-is attached — 10-100k-config sweeps split across a host's accelerators
-with no change to the calling code.
+with ``shard_map`` (config axis, manual mapping; the only collective is a
+one-int ``psum`` per block agreeing on early exit) when more than one
+device is attached — 10-100k-config sweeps split across a host's
+accelerators with no change to the calling code.  ``bucket_steps=True``
+additionally groups heterogeneous configs by planned step count
+(power-of-two buckets of :func:`plan_schedule`'s per-config estimate), so
+a 100µs-CS cell no longer pins a µs-spin cell to its scan length.  See
+docs/performance.md for the block-size/early-exit/bucketing trade-offs.
 """
 
 from __future__ import annotations
@@ -50,6 +69,8 @@ from . import policy as P
 
 #: Hard cap on scan length (compile + runtime guard).
 MAX_STEPS = 200_000
+#: Default timesteps fused into one kernel dispatch by the blocked rollout.
+DEFAULT_BLOCK_STEPS = 32
 _INF = np.float32(np.inf)
 
 #: Context columns threaded to the transition kernels each step.
@@ -59,8 +80,10 @@ _PRM_FIELDS = ("policy", "threads", "dt", "wake", "cs_lo", "cs_hi",
 
 
 # --------------------------------------------------------------------------
-# The rollout: lax.scan over steps; each step = GPS advance + transitions,
-# both behind the swappable kernel boundary.
+# The rollout.  Default: a chunked lax.while_loop whose body is ONE fused
+# kernel dispatch per block of timesteps (with target_cs early exit);
+# legacy: lax.scan over steps, two kernel dispatches per step.  Both sit
+# behind the swappable ref/pallas kernel boundary and are bit-identical.
 # --------------------------------------------------------------------------
 def _step_backends(backend: str):
     if backend == "ref":
@@ -72,21 +95,28 @@ def _step_backends(backend: str):
     raise ValueError(f"unknown backend {backend!r} (ref|pallas)")
 
 
-def _simulate_core(arrs, n_steps: int, T: int, backend: str = "ref"):
+def _block_backend(backend: str):
+    if backend == "ref":
+        from repro.kernels.ref import lock_sim_block_ref
+        return lock_sim_block_ref
+    if backend == "pallas":
+        from repro.kernels.lock_sim import lock_sim_block
+        return lock_sim_block
+    raise ValueError(f"unknown backend {backend!r} (ref|pallas)")
+
+
+def _init_state(arrs, T: int):
+    """The 17-array carry (16 transition-state arrays + spin_cpu): every
+    thread starts in NCS with a fresh duration draw."""
     C = arrs["policy"].shape[0]
     tid = jnp.arange(T, dtype=jnp.int32)[None, :]
     active = tid < arrs["threads"][:, None]
-    _, _, budget_f, _, _, _ = P.discipline_flags(arrs["policy"])
-    has_budget = budget_f > 0
-    advance, transitions = _step_backends(backend)
-
-    # initial state: every thread in NCS with a fresh draw
     ctr0 = jnp.zeros((C, T), jnp.uint32)
     u0 = counter_uniform(arrs["seed"][:, None],
                          jnp.broadcast_to(tid, (C, T)), ctr0)
     rem0 = arrs["ncs_lo"][:, None] + u0 * (arrs["ncs_hi"]
                                            - arrs["ncs_lo"])[:, None]
-    state0 = (
+    return (
         jnp.where(active, P.NCS, P.DONE).astype(jnp.int32),   # st
         jnp.where(active, rem0, _INF),                        # rem
         jnp.full((C, T), _INF),                               # wake_at
@@ -105,41 +135,115 @@ def _simulate_core(arrs, n_steps: int, T: int, backend: str = "ref"):
         jnp.zeros((C,), jnp.int32),                           # wake_count
         jnp.zeros((C,), jnp.float32),                         # spin_cpu
     )
-    prm = tuple(arrs[f] for f in _PRM_FIELDS)
 
-    def body(carry, i):
-        state, spin_cpu = carry[:-1], carry[-1]
-        st, rem = state[0], state[1]
-        now2 = (i.astype(jnp.float32) + 1.0) * arrs["dt"]
-        rem, burn = advance(st, rem, arrs["alpha"], arrs["cores"],
-                            arrs["dt"], has_budget)
-        state = transitions(st, rem, *state[2:], now2, *prm)
-        return (*state, spin_cpu + burn), None
 
-    final, _ = jax.lax.scan(body, state0, jnp.arange(n_steps))
+def _out_dict(state, executed, arrs):
     (st, rem, wake_at, slept, spun, ctr, ticket, completed_pt,
      sws, cnt, ewma, wuc, permits, nticket, completed, wake_count,
-     spin_cpu) = final
+     spin_cpu) = state
+    executed = jnp.asarray(executed, jnp.int32)
     return {
         "completed": completed,
         "completed_per_thread": completed_pt,
         "spin_cpu": spin_cpu,
         "wake_count": wake_count,
         "final_sws": sws,
-        "t_end": n_steps * arrs["dt"],
+        "t_end": executed.astype(jnp.float32) * arrs["dt"],
+        "steps_run": jnp.broadcast_to(executed, completed.shape),
     }
 
 
-_simulate = functools.partial(jax.jit, static_argnames=("n_steps", "T",
-                                                        "backend"))(
-    _simulate_core)
+def _simulate_core(arrs, n_steps: int, T: int, backend: str = "ref",
+                   rollout: str = "blocked",
+                   block_steps: int = DEFAULT_BLOCK_STEPS,
+                   target_cs: int = 0, shard_axis: str | None = None):
+    """One device program simulating ``n_steps`` timesteps of every config.
+
+    ``rollout="blocked"``: chunked ``lax.while_loop``, one fused kernel
+    dispatch (:func:`_block_backend`) per ``block_steps`` timesteps; when
+    ``target_cs > 0`` the loop exits at the first block boundary where
+    every config has completed at least ``target_cs`` critical sections
+    (under ``shard_axis`` the exit decision is agreed across devices with
+    a one-int ``psum``, keeping sharded results bit-identical).
+    ``rollout="scan"``: the legacy per-step ``lax.scan`` (two kernel
+    dispatches per step, no early exit) — the parity reference.
+    """
+    C = arrs["policy"].shape[0]
+    _, _, budget_f, _, _, _ = P.discipline_flags(arrs["policy"])
+    has_budget = budget_f > 0
+    state0 = _init_state(arrs, T)
+    prm = tuple(arrs[f] for f in _PRM_FIELDS)
+
+    if rollout == "scan":
+        advance, transitions = _step_backends(backend)
+
+        def body(carry, i):
+            state, spin_cpu = carry[:-1], carry[-1]
+            st, rem = state[0], state[1]
+            now2 = (i.astype(jnp.float32) + 1.0) * arrs["dt"]
+            rem, burn = advance(st, rem, arrs["alpha"], arrs["cores"],
+                                arrs["dt"], has_budget)
+            state = transitions(st, rem, *state[2:], now2, *prm)
+            return (*state, spin_cpu + burn), None
+
+        final, _ = jax.lax.scan(body, state0, jnp.arange(n_steps))
+        return _out_dict(final, n_steps, arrs)
+
+    if rollout != "blocked":
+        raise ValueError(f"unknown rollout {rollout!r} (blocked|scan)")
+
+    block = _block_backend(backend)
+    B = max(1, min(int(block_steps), max(int(n_steps), 1)))
+    n_full, n_rem = divmod(int(n_steps), B)
+
+    def run_block(state, step0, nss):
+        return block(*state, jnp.int32(step0), arrs["alpha"], arrs["cores"],
+                     has_budget, *prm, n_sub_steps=nss)
+
+    def all_done(completed):
+        if target_cs <= 0:
+            return jnp.bool_(False)
+        done = jnp.all(completed >= target_cs)
+        if shard_axis is not None:    # agree across shards: exit globally
+            done = (jax.lax.psum(done.astype(jnp.int32), shard_axis)
+                    == jax.lax.psum(1, shard_axis))
+        return done
+
+    nblk = jnp.int32(0)
+    done = jnp.bool_(False)
+    state = state0
+    if n_full:
+        def cond(c):
+            return (c[-2] < n_full) & jnp.logical_not(c[-1])
+
+        def body(c):
+            s = run_block(c[:-2], c[-2] * B, B)
+            return (*s, c[-2] + 1, all_done(s[14]))
+
+        *state, nblk, done = jax.lax.while_loop(cond, body,
+                                                (*state0, nblk, done))
+        state = tuple(state)
+    executed = nblk * B
+    if n_rem:
+        state = jax.lax.cond(
+            done, lambda s: s,
+            lambda s: run_block(s, n_full * B, n_rem), state)
+        executed = executed + jnp.where(done, 0, n_rem)
+    return _out_dict(state, executed, arrs)
+
+
+_simulate = functools.partial(jax.jit, static_argnames=(
+    "n_steps", "T", "backend", "rollout", "block_steps", "target_cs",
+    "shard_axis"))(_simulate_core)
 
 
 @functools.lru_cache(maxsize=None)
-def _sharded_fn(n_steps: int, T: int, backend: str, n_dev: int):
+def _sharded_fn(n_steps: int, T: int, backend: str, n_dev: int,
+                rollout: str, block_steps: int, target_cs: int):
     """jit(shard_map(core)) over a 1-d ``configs`` device mesh — every
-    config is independent, so the mapping is fully manual (no collectives)
-    and results are bit-identical to the unsharded call."""
+    config is independent, so the mapping is manual (the single collective
+    is the one-int early-exit psum per block, which agrees on the exit
+    step) and results are bit-identical to the unsharded call."""
     from jax.sharding import Mesh, PartitionSpec
 
     from repro.sharding.compat import shard_map
@@ -148,20 +252,29 @@ def _sharded_fn(n_steps: int, T: int, backend: str, n_dev: int):
     spec = PartitionSpec("configs")
 
     def run(arrs):
-        return _simulate_core(arrs, n_steps=n_steps, T=T, backend=backend)
+        return _simulate_core(arrs, n_steps=n_steps, T=T, backend=backend,
+                              rollout=rollout, block_steps=block_steps,
+                              target_cs=target_cs, shard_axis="configs")
 
+    # check_vma=False: the pinned JAX has no replication rule for `while`
+    # (the blocked rollout's chunk loop); replication checking adds no
+    # safety here — every output is config-partitioned, never replicated.
     return jax.jit(shard_map(run, mesh=mesh, in_specs=(spec,),
-                             out_specs=spec))
+                             out_specs=spec, check_vma=False))
 
 
-def _simulate_sharded(arrs, n_steps: int, T: int, backend: str):
+def _simulate_sharded(arrs, n_steps: int, T: int, backend: str,
+                      rollout: str = "blocked",
+                      block_steps: int = DEFAULT_BLOCK_STEPS,
+                      target_cs: int = 0):
     n_dev = len(jax.devices())
     C = arrs["policy"].shape[0]
     pad = (-C) % n_dev
     if pad:            # pad with copies of the last row, sliced off below
         arrs = {k: np.concatenate([v, np.repeat(v[-1:], pad, axis=0)])
                 for k, v in arrs.items()}
-    out = _sharded_fn(n_steps, T, backend, n_dev)(arrs)
+    out = _sharded_fn(n_steps, T, backend, n_dev, rollout, block_steps,
+                      target_cs)(arrs)
     return {k: v[:C] for k, v in out.items()}
 
 
@@ -169,14 +282,16 @@ def _simulate_sharded(arrs, n_steps: int, T: int, backend: str):
 # Scheduling heuristics + public API
 # --------------------------------------------------------------------------
 def plan_schedule(configs, target_cs: int = 300):
-    """Pick per-config ``dt`` and a shared step count.
+    """Pick per-config ``dt`` and per-config planned step counts.
 
     ``dt`` resolves the fastest load-bearing timescale (CS length and wake
     latency — NCS shorter than the CS only shifts arrivals within a step);
-    the step count covers ~``target_cs`` critical sections for the slowest
-    configuration, so every cell completes at least that many.  The count
-    is unclamped — :func:`simulate_batch` caps it at :data:`MAX_STEPS`
-    (with a warning, since capped cells under-sample ``target_cs``).
+    each config's step count covers ~``target_cs`` critical sections for
+    that cell.  Returns ``(dt, steps)``: (C,) float32 timesteps and (C,)
+    int64 planned counts.  Counts are unclamped — :func:`simulate_batch`
+    runs ``steps.max()`` for the whole batch (or per bucket with
+    ``bucket_steps=True``), capped at :data:`MAX_STEPS` with a diagnostic
+    naming the cells the cap under-samples.
     """
     dts, steps = [], []
     for c in configs:
@@ -187,7 +302,47 @@ def plan_schedule(configs, target_cs: int = 300):
                   + 0.25 * c.wake_latency + 2.0 * dt)
         dts.append(dt)
         steps.append(int(np.ceil(target_cs * per_cs / dt)))
-    return np.asarray(dts, np.float32), max(steps)
+    return np.asarray(dts, np.float32), np.asarray(steps, np.int64)
+
+
+def plan_buckets(steps) -> list[np.ndarray]:
+    """Group config indices into power-of-two buckets of planned step
+    count (``ceil(log2(steps))``), ascending.
+
+    Within a bucket the shared scan length (the bucket max) is at most 2x
+    any member's own plan, so a 100µs-CS cell no longer pins a µs-spin
+    cell to its horizon — versus the single global ``steps.max()``, which
+    can overshoot fast cells by orders of magnitude on log-uniform
+    workload sweeps.
+    """
+    ids = np.ceil(np.log2(np.maximum(np.asarray(steps), 1))).astype(int)
+    return [np.nonzero(ids == b)[0] for b in np.unique(ids)]
+
+
+def _warn_undersampled(configs, steps, cap: int, target_cs: int,
+                       bucketed: bool = False) -> None:
+    """Step-cap diagnostic: name which cells under-sample ``target_cs``
+    (count + worst offender) instead of one generic warning."""
+    import warnings
+
+    steps = np.asarray(steps)
+    over = np.nonzero(steps > cap)[0]
+    worst = int(steps.argmax())
+    c = configs[worst]
+    expect = int(target_cs * cap / steps[worst])
+    advice = ("the truncated cells need a shorter horizon (smaller "
+              "target_cs) or a split sweep"
+              if bucketed else
+              "bucket_steps=True keeps fast cells fully sampled; the "
+              "truncated cells need a shorter horizon (smaller "
+              "target_cs) or a split sweep")
+    warnings.warn(
+        f"step cap {cap} truncates {len(over)}/{len(configs)} configs "
+        f"below target_cs={target_cs}; worst offender is config {worst} "
+        f"({c.lock}, threads={c.threads}, cores={c.cores}, "
+        f"cs<={c.cs[1]:.3g}s, ncs<={c.ncs[1]:.3g}s, "
+        f"wake={c.wake_latency:.3g}s): planned {int(steps[worst])} steps, "
+        f"expect ~{expect} completed CS.  {advice}.", stacklevel=3)
 
 
 @dataclass
@@ -204,6 +359,9 @@ class BatchResult:
     wake_count: np.ndarray
     final_sws: np.ndarray
     completed_per_thread: np.ndarray    # (C, T) per-slot CS counts
+    #: (C,) timesteps actually executed per config — less than ``n_steps``
+    #: when early exit fired, and per-bucket under ``bucket_steps=True``.
+    steps_run: np.ndarray | None = None
 
     @property
     def throughput(self) -> np.ndarray:
@@ -231,42 +389,113 @@ class BatchResult:
         }
 
 
+def _simulate_bucketed(configs, buckets, steps, *, target_cs, dt, backend,
+                       max_threads, shard, rollout, block_steps,
+                       early_exit) -> BatchResult:
+    """Run each step-count bucket as its own batched call and stitch the
+    per-config results back into the caller's row order.  ``dt`` and
+    ``steps`` are the (C,) planned arrays — passed down sliced, so the
+    per-bucket calls skip re-planning."""
+    C = len(configs)
+    T = max_threads or max(c.threads for c in configs)
+    parts = []
+    for idx in buckets:
+        parts.append(simulate_batch(
+            [configs[i] for i in idx], target_cs=target_cs,
+            dt=np.asarray(dt)[idx],
+            n_steps=min(int(steps[idx].max()), MAX_STEPS),
+            backend=backend, max_threads=T, shard=shard, rollout=rollout,
+            block_steps=block_steps, early_exit=early_exit,
+            bucket_steps=False))
+    res = BatchResult(
+        configs=configs, n_steps=max(p.n_steps for p in parts),
+        backend=backend,
+        dt=np.empty(C, np.float32), t_end=np.empty(C, np.float32),
+        completed=np.empty(C, np.int32), spin_cpu=np.empty(C, np.float32),
+        wake_count=np.empty(C, np.int32), final_sws=np.empty(C, np.int32),
+        completed_per_thread=np.empty((C, T), np.int32),
+        steps_run=np.empty(C, np.int32))
+    for idx, p in zip(buckets, parts):
+        for f in ("dt", "t_end", "completed", "spin_cpu", "wake_count",
+                  "final_sws", "completed_per_thread", "steps_run"):
+            getattr(res, f)[idx] = getattr(p, f)
+    return res
+
+
 def simulate_batch(configs, *, target_cs: int = 300, n_steps: int | None = None,
                    dt=None, backend: str = "ref",
                    max_threads: int | None = None,
-                   shard: bool | None = None) -> BatchResult:
+                   shard: bool | None = None, rollout: str = "blocked",
+                   block_steps: int | None = None,
+                   early_exit: bool | None = None,
+                   bucket_steps: bool = False) -> BatchResult:
     """Simulate every :class:`repro.core.policy.SimConfig` in ``configs``
-    in ONE jit-compiled device call.
+    in ONE jit-compiled device call (or one per step-count bucket).
 
-    All configurations share the scan length; each carries its own ``dt``,
-    so heterogeneous regimes (µs spin cells next to 100µs-CS cells) batch
-    together without resolution loss.  ``backend="pallas"`` routes both
-    per-step stages through :mod:`repro.kernels.lock_sim`.
+    All configurations in a call share the scan length; each carries its
+    own ``dt``, so heterogeneous regimes (µs spin cells next to 100µs-CS
+    cells) batch together without resolution loss.  ``backend="pallas"``
+    routes the rollout through :mod:`repro.kernels.lock_sim`.
+
+    Rollout and horizon controls (see docs/performance.md):
+
+    * ``rollout="blocked"`` (default) fuses ``block_steps`` timesteps
+      (default :data:`DEFAULT_BLOCK_STEPS`) into one kernel dispatch per
+      loop iteration — bit-identical to ``rollout="scan"``, the legacy
+      two-dispatches-per-step path kept as the parity reference.
+    * ``early_exit`` (default: on iff ``n_steps`` is auto-planned) stops
+      the blocked rollout at the first block boundary where every config
+      has completed ``target_cs`` critical sections;
+      ``BatchResult.steps_run`` records the executed count.  Ignored
+      under ``rollout="scan"``.
+    * ``bucket_steps=True`` groups configs into power-of-two buckets of
+      planned step count (:func:`plan_buckets`) and runs one call per
+      bucket, so slow cells no longer pin fast cells to their horizon.
+      Results per config are identical to a direct call on its bucket.
 
     ``shard=None`` (auto) splits the config axis across all visible
     devices via ``shard_map`` whenever more than one is attached;
     ``shard=True`` forces the sharded path (a 1-device mesh on
     single-device hosts), ``shard=False`` disables it.  Sharded and
     unsharded results are bit-identical (configs are independent; the
-    mapping is fully manual).
+    early-exit decision is agreed across devices).
     """
     configs = list(configs)
+    if dt is None or n_steps is None:
+        auto_dt, steps_arr = plan_schedule(configs, target_cs)
+    if bucket_steps and n_steps is None and len(configs) > 1:
+        buckets = plan_buckets(steps_arr)
+        if len(buckets) > 1:
+            if int(steps_arr.max()) > MAX_STEPS:
+                _warn_undersampled(configs, steps_arr, MAX_STEPS,
+                                   target_cs, bucketed=True)
+            if dt is None:
+                dt = auto_dt
+            else:
+                dt = np.broadcast_to(np.asarray(dt, np.float32),
+                                     (len(configs),)).copy()
+            return _simulate_bucketed(
+                configs, buckets, steps_arr, target_cs=target_cs, dt=dt,
+                backend=backend, max_threads=max_threads, shard=shard,
+                rollout=rollout, block_steps=block_steps,
+                # a bucketed horizon is auto-planned: exit by default
+                early_exit=True if early_exit is None else early_exit)
     arrs = P.encode_configs(configs)
-    auto_dt, auto_steps = plan_schedule(configs, target_cs)
     if dt is None:
         dt = auto_dt
     else:
         dt = np.broadcast_to(np.asarray(dt, np.float32),
                              arrs["policy"].shape).copy()
     if n_steps is None:
+        auto_steps = int(steps_arr.max())
         if auto_steps > MAX_STEPS:
-            import warnings
-
-            warnings.warn(
-                f"auto step count {auto_steps} capped at {MAX_STEPS}: the "
-                f"slowest configs will complete fewer than target_cs="
-                f"{target_cs} critical sections", stacklevel=2)
+            _warn_undersampled(configs, steps_arr, MAX_STEPS, target_cs,
+                               bucketed=bucket_steps)
         n_steps = min(auto_steps, MAX_STEPS)
+        if early_exit is None:
+            early_exit = True
+    elif early_exit is None:
+        early_exit = False       # a pinned horizon means: run exactly it
     if n_steps > MAX_STEPS:
         raise ValueError(f"n_steps={n_steps} exceeds MAX_STEPS={MAX_STEPS}")
     arrs["dt"] = dt
@@ -275,12 +504,17 @@ def simulate_batch(configs, *, target_cs: int = 300, n_steps: int | None = None,
         raise ValueError("max_threads smaller than widest config")
     if shard is None:
         shard = len(jax.devices()) > 1
+    if block_steps is None:
+        block_steps = DEFAULT_BLOCK_STEPS
+    tc = int(target_cs) if (early_exit and rollout == "blocked") else 0
     run = _simulate_sharded if shard else _simulate
-    out = run(arrs, n_steps=int(n_steps), T=int(T), backend=backend)
+    out = run(arrs, n_steps=int(n_steps), T=int(T), backend=backend,
+              rollout=rollout, block_steps=int(block_steps), target_cs=tc)
     out = {k: np.asarray(v) for k, v in out.items()}
     return BatchResult(configs=configs, n_steps=int(n_steps), backend=backend,
                        dt=dt, t_end=out["t_end"], completed=out["completed"],
                        spin_cpu=out["spin_cpu"],
                        wake_count=out["wake_count"],
                        final_sws=out["final_sws"],
-                       completed_per_thread=out["completed_per_thread"])
+                       completed_per_thread=out["completed_per_thread"],
+                       steps_run=out["steps_run"])

@@ -1,13 +1,19 @@
-"""Pallas kernels for the batched lock simulator's per-step update.
+"""Pallas kernels for the batched lock simulator.
 
-BOTH stages of one :mod:`repro.core.xdes` scan step live here as fused
+The stages of one :mod:`repro.core.xdes` timestep live here as fused
 kernels, bit-identical to their XLA references in :mod:`repro.kernels.ref`:
 
-* :func:`lock_sim_step` — the GPS advance: runnable counts, the
+* :func:`lock_sim_block` — the time-blocked rollout kernel (the default
+  engine path): GPS advance + oracle update + transitions iterated for
+  ``n_sub_steps`` timesteps in ONE dispatch, the whole
+  ``(block_configs, T)`` state block staying in VMEM/registers across the
+  inner loop.  The body IS
+  :func:`repro.kernels.ref.lock_sim_block_ref` applied per block.
+* :func:`lock_sim_step` — the standalone GPS advance: runnable counts, the
   generalized-processor-sharing rate ``min(1, cores/n_runnable)``, the
   cache-contention slowdown of the CS holder (``1/(1 + alpha·n_spinners)``,
   paper §2), work advance and spin-CPU burn — one VMEM-resident pass over
-  the ``(configs, threads)`` state block.
+  the ``(configs, threads)`` state block (the legacy per-step scan path).
 * :func:`lock_transitions_step` — the transition stage (budget exhaustion,
   wake completions, release/handoff with discipline-row dispatch incl.
   FIFO ticket grants, arrivals) as a grid over config blocks.  The kernel
@@ -33,7 +39,7 @@ from jax.experimental import pallas as pl
 from repro.core.policy import CS, NCS, SPIN, oracle_update
 
 from .pallas_compat import CompilerParams, resolve_interpret
-from .ref import NO_TICKET, lock_transitions_ref
+from .ref import NO_TICKET, lock_sim_block_ref, lock_transitions_ref
 
 LANE = 128          # TPU lane width: thread axis is padded to this
 
@@ -258,5 +264,99 @@ def lock_transitions_step(st, rem, wake_at, slept, spun, ctr, ticket,
         interpret=interpret,
         compiler_params=CompilerParams(dimension_semantics=("parallel",)),
     )(*thread_in, *conf_in, *ctx_in)
+    return tuple(v[:C, :T] for v in out[:_N_THREAD]) \
+        + tuple(v[:C, 0] for v in out[_N_THREAD:])
+
+
+# --------------------------------------------------------------------------
+# Time-blocked fused simulation kernel: GPS advance + transitions iterated
+# for n_sub_steps timesteps in ONE dispatch, with the (block_configs, T)
+# state block resident in VMEM/registers across the inner fori_loop.  The
+# body is repro.kernels.ref.lock_sim_block_ref applied per block — the
+# same single-implementation trick as lock_transitions_step — so ref and
+# Pallas blocked rollouts are bit-identical by construction (and by test).
+# One dispatch per step-block replaces the legacy two-dispatches-per-step
+# scan: 2*B pad/slice round trips and kernel launches become 1 per block.
+# --------------------------------------------------------------------------
+
+#: dtypes of the 17 per-config context columns of the block kernel
+#: (repro.kernels.ref.BLOCK_CONTEXT order): step0, the GPS advance inputs
+#: (alpha, cores, has_budget), then TRANSITION_CONTEXT minus now2.
+_BLOCK_CTX_DTYPES = (jnp.int32, jnp.float32, jnp.float32,
+                     jnp.int32) + _CONTEXT_DTYPES[1:]
+
+_N_BLOCK_CTX = len(_BLOCK_CTX_DTYPES)
+
+
+def _block_kernel(n_sub_steps, *refs):
+    n_in = _N_THREAD + 1 + _N_CONF + _N_BLOCK_CTX
+    ins, outs = refs[:n_in], refs[n_in:]
+    thread = [r[...] for r in ins[:_N_THREAD]]
+    spin_cpu = ins[_N_THREAD][...][:, 0]
+    conf = [r[...][:, 0] for r in ins[_N_THREAD + 1:_N_THREAD + 1 + _N_CONF]]
+    ctx = [r[...][:, 0] for r in ins[_N_THREAD + 1 + _N_CONF:]]
+    step0, alpha, cores, hb = ctx[:4]
+    out = lock_sim_block_ref(*thread, *conf, spin_cpu, step0, alpha, cores,
+                             hb > 0, *ctx[4:], n_sub_steps=n_sub_steps)
+    for r, v in zip(outs, out):
+        r[...] = v if v.ndim == 2 else v[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("n_sub_steps", "block_configs",
+                                             "interpret"))
+def lock_sim_block(st, rem, wake_at, slept, spun, ctr, ticket,
+                   completed_pt, sws, cnt, ewma, wuc, permits, nticket,
+                   completed, wake_count, spin_cpu,
+                   step0, alpha, cores, has_budget,
+                   policy, threads, dt, wake, cs_lo, cs_hi, ncs_lo, ncs_hi,
+                   k, sws_max, spin_budget, seed, oracle, *,
+                   n_sub_steps: int, block_configs: int = 256,
+                   interpret: bool | None = None):
+    """Pallas time-blocked rollout kernel; signature mirrors
+    :func:`repro.kernels.ref.lock_sim_block_ref` and returns the same 17
+    updated state arrays after ``n_sub_steps`` fused timesteps.  ``step0``
+    (int32 scalar or (C,) vector) is the global index of the block's first
+    step.  ``interpret=None`` auto-detects the backend (interpret iff no
+    GPU/TPU is attached)."""
+    interpret = resolve_interpret(interpret)
+    C, T = st.shape
+    bc = min(block_configs, C)
+    pc = (-C) % bc
+    pt = (-T) % LANE
+    Tp = T + pt
+    nc = (C + pc) // bc
+
+    thread_in = []
+    for arr, (_, dtype, padval) in zip(
+            (st, rem, wake_at, slept, spun, ctr, ticket, completed_pt),
+            _THREAD_STATE_SPEC):
+        thread_in.append(jnp.pad(arr.astype(dtype), ((0, pc), (0, pt)),
+                                 constant_values=padval))
+    cpu_in = jnp.pad(spin_cpu.astype(jnp.float32), (0, pc))[:, None]
+    conf_in = [jnp.pad(v.astype(jnp.int32), (0, pc))[:, None]
+               for v in (sws, cnt, ewma, wuc, permits, nticket, completed,
+                         wake_count)]
+    ctx_in = [jnp.pad(jnp.broadcast_to(jnp.asarray(v, dtype), (C,)),
+                      (0, pc))[:, None]
+              for v, dtype in zip((step0, alpha, cores, has_budget, policy,
+                                   threads, dt, wake, cs_lo, cs_hi, ncs_lo,
+                                   ncs_hi, k, sws_max, spin_budget, seed,
+                                   oracle), _BLOCK_CTX_DTYPES)]
+
+    mat = pl.BlockSpec((bc, Tp), lambda i: (i, 0))
+    colspec = pl.BlockSpec((bc, 1), lambda i: (i, 0))
+    out = pl.pallas_call(
+        functools.partial(_block_kernel, n_sub_steps),
+        grid=(nc,),
+        in_specs=[mat] * _N_THREAD
+        + [colspec] * (1 + _N_CONF + _N_BLOCK_CTX),
+        out_specs=[mat] * _N_THREAD + [colspec] * (_N_CONF + 1),
+        out_shape=[jax.ShapeDtypeStruct((C + pc, Tp), s[1])
+                   for s in _THREAD_STATE_SPEC]
+        + [jax.ShapeDtypeStruct((C + pc, 1), jnp.int32)] * _N_CONF
+        + [jax.ShapeDtypeStruct((C + pc, 1), jnp.float32)],
+        interpret=interpret,
+        compiler_params=CompilerParams(dimension_semantics=("parallel",)),
+    )(*thread_in, cpu_in, *conf_in, *ctx_in)
     return tuple(v[:C, :T] for v in out[:_N_THREAD]) \
         + tuple(v[:C, 0] for v in out[_N_THREAD:])

@@ -330,6 +330,69 @@ def lock_transitions_ref(st, rem, wake_at, slept, spun, ctr, ticket,
             sws, cnt, ewma, wuc, permits, nticket, completed, wake_count)
 
 
+# --------------------------------------------------------------------------
+# Time-blocked fused rollout body: GPS advance + transitions iterated for
+# ``n_sub_steps`` timesteps in ONE call, with the whole (C, T) state block
+# staying in registers/VMEM across the inner loop.  This is the reference
+# twin of the Pallas kernel repro.kernels.lock_sim.lock_sim_block (which
+# applies THIS function per config block), and the body repro.core.xdes
+# drives from its chunked while_loop: the outer rollout shrinks from
+# ``n_steps`` dispatches to ``n_steps / n_sub_steps``.
+# --------------------------------------------------------------------------
+
+#: Context columns of the block boundary, after the per-step state: the GPS
+#: advance inputs, then the transition context minus ``now2`` (recomputed
+#: inside the loop as ``(step0 + s + 1) * dt`` — the exact expression of
+#: the per-step path, so blocked and per-step rollouts are bit-identical).
+BLOCK_CONTEXT = ("step0", "alpha", "cores", "has_budget",
+                 "policy", "threads", "dt", "wake", "cs_lo", "cs_hi",
+                 "ncs_lo", "ncs_hi", "k", "sws_max", "spin_budget", "seed",
+                 "oracle")
+
+
+def lock_sim_block_ref(st, rem, wake_at, slept, spun, ctr, ticket,
+                       completed_pt, sws, cnt, ewma, wuc, permits, nticket,
+                       completed, wake_count, spin_cpu,
+                       step0, alpha, cores, has_budget,
+                       policy, threads, dt, wake, cs_lo, cs_hi,
+                       ncs_lo, ncs_hi, k, sws_max, spin_budget, seed,
+                       oracle, *, n_sub_steps: int):
+    """``n_sub_steps`` fused timesteps for a (C, T) block of configurations.
+
+    Each sub-step is exactly one per-step iteration of the legacy rollout
+    — :func:`lock_sim_step_ref` (GPS advance) followed by
+    :func:`lock_transitions_ref` — with ``now2 = (step0 + s + 1) * dt``
+    computed from the global step index ``step0 + s`` in int32 before the
+    float multiply, and ``spin_cpu`` accumulated inside the loop in the
+    same order as the per-step carry.  Both choices make the blocked
+    rollout bit-identical to the per-step path (pinned by tests).
+
+    State is the 16 transition arrays plus ``spin_cpu`` (C,) f32;
+    ``step0`` is the global index of the first sub-step (int32 scalar or
+    (C,) vector); the remaining context matches
+    :data:`TRANSITION_CONTEXT`/``has_budget`` of the advance.  Returns the
+    17 updated state arrays.
+    """
+
+    def body(s, carry):
+        state, cpu = carry[:-1], carry[-1]
+        st_s, rem_s = state[0], state[1]
+        i = step0 + s
+        now2 = (i.astype(jnp.float32) + 1.0) * dt
+        rem_s, burn = lock_sim_step_ref(st_s, rem_s, alpha, cores, dt,
+                                        has_budget)
+        state = lock_transitions_ref(st_s, rem_s, *state[2:], now2, policy,
+                                     threads, dt, wake, cs_lo, cs_hi,
+                                     ncs_lo, ncs_hi, k, sws_max,
+                                     spin_budget, seed, oracle)
+        return (*state, cpu + burn)
+
+    carry = (st, rem, wake_at, slept, spun, ctr, ticket, completed_pt,
+             sws, cnt, ewma, wuc, permits, nticket, completed, wake_count,
+             spin_cpu)
+    return jax.lax.fori_loop(0, n_sub_steps, body, carry)
+
+
 def oracle_update_ref(oracle_id, spun, slept, sws, cnt, ewma, k, sws_max):
     """Batched SWS-oracle observation over ``(C,)`` config vectors.
 

@@ -14,8 +14,9 @@ traffic / collective bytes via :mod:`repro.launch.hloanalysis`).
     PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
     ... --set seqcarry=model --set fsdp=data,model --tag sp_v2    # hillclimb
 
-Artifacts land in reports/dryrun/<mesh>/<arch>__<shape>[__tag].json and are
-the single source for EXPERIMENTS.md §Dry-run/§Roofline (benchmarks/roofline.py).
+Artifacts land in reports/dryrun/<mesh>/<arch>__<shape>[__tag].json:
+per-cell status, memory analysis, and the roofline terms from
+:mod:`repro.launch.hloanalysis`.
 """
 
 import argparse

@@ -1,0 +1,335 @@
+"""The time-blocked fused rollout: bit-identity against the legacy
+per-step scan (ref and Pallas, randomized mixed-discipline batches),
+early-exit semantics, step-count bucketing, the step-cap diagnostics, and
+the sharded padding path under all of the above."""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import xdes
+from repro.core.policy import SimConfig
+
+SHORT = (0.0, 3.7e-6)
+LONG = (0.0, 366e-6)
+WAKE = 8e-6
+LOCKS = ["ttas", "mcs", "fifo", "sleep", "adaptive", "mutable"]
+ORACLES = ["paper", "aimd", "fixed", "history"]
+
+
+def _mixed_batch(seed=0):
+    """Every discipline row x several oracle families, shapes and regimes
+    mixed, on a deterministic draw — the randomized parity surface."""
+    rng = np.random.default_rng(seed)
+    cfgs = []
+    for i, lock in enumerate(LOCKS):
+        for j, oracle in enumerate(ORACLES[:2] if lock != "mutable"
+                                   else ORACLES):
+            cfgs.append(SimConfig(
+                lock, threads=int(rng.integers(2, 12)),
+                cores=int(rng.integers(2, 12)),
+                cs=SHORT if (i + j) % 2 else LONG,
+                ncs=SHORT if j % 2 else LONG,
+                wake_latency=WAKE, seed=int(rng.integers(0, 1000)),
+                oracle=oracle))
+    return cfgs
+
+
+def _assert_results_equal(a, b, msg=""):
+    np.testing.assert_array_equal(a.completed, b.completed, err_msg=msg)
+    np.testing.assert_array_equal(a.completed_per_thread,
+                                  b.completed_per_thread, err_msg=msg)
+    np.testing.assert_array_equal(a.wake_count, b.wake_count, err_msg=msg)
+    np.testing.assert_array_equal(a.final_sws, b.final_sws, err_msg=msg)
+    np.testing.assert_array_equal(a.spin_cpu, b.spin_cpu, err_msg=msg)
+    np.testing.assert_array_equal(a.t_end, b.t_end, err_msg=msg)
+
+
+# --------------------------------------------------------------------------
+# Blocked rollout == per-step scan, bit for bit
+# --------------------------------------------------------------------------
+def test_block_ref_matches_per_step_composition():
+    """lock_sim_block_ref(B) == B manual (advance; transitions) steps on
+    random state — the kernel-level parity pin."""
+    import jax.numpy as jnp
+
+    from repro.kernels.ref import (NO_TICKET, lock_sim_block_ref,
+                                   lock_sim_step_ref, lock_transitions_ref)
+
+    rng = np.random.default_rng(7)
+    C, T = 17, 9
+    ticket = rng.integers(0, 50, (C, T)).astype(np.int32)
+    ticket[rng.random((C, T)) < 0.5] = NO_TICKET
+    state = [
+        rng.integers(0, 6, (C, T)).astype(np.int32),            # st
+        rng.uniform(-1e-7, 1e-4, (C, T)).astype(np.float32),    # rem
+        rng.uniform(0, 1e-4, (C, T)).astype(np.float32),        # wake_at
+        rng.integers(0, 2, (C, T)).astype(np.int32),            # slept
+        rng.integers(0, 2, (C, T)).astype(np.int32),            # spun
+        rng.integers(0, 1000, (C, T)).astype(np.uint32),        # ctr
+        ticket,
+        rng.integers(0, 30, (C, T)).astype(np.int32),           # cpt
+        rng.integers(1, 9, C).astype(np.int32),                 # sws
+        rng.integers(0, 12, C).astype(np.int32),                # cnt
+        rng.integers(0, 257, C).astype(np.int32),               # ewma
+        rng.integers(-3, 4, C).astype(np.int32),                # wuc
+        rng.integers(0, 3, C).astype(np.int32),                 # permits
+        np.full(C, 60, np.int32),                               # nticket
+        rng.integers(0, 100, C).astype(np.int32),               # completed
+        rng.integers(0, 100, C).astype(np.int32),               # wake_count
+    ]
+    spin_cpu = rng.uniform(0, 1e-3, C).astype(np.float32)
+    alpha = rng.uniform(0.0, 0.2, C).astype(np.float32)
+    cores = rng.integers(1, 12, C).astype(np.float32)
+    has_budget = rng.integers(0, 2, C).astype(bool)
+    ctx = (
+        rng.integers(0, 7, C).astype(np.int32),                 # policy
+        rng.integers(1, T + 1, C).astype(np.int32),             # threads
+        rng.uniform(1e-8, 1e-6, C).astype(np.float32),          # dt
+        np.full(C, WAKE, np.float32),                           # wake
+        np.zeros(C, np.float32),                                # cs_lo
+        rng.uniform(1e-6, 1e-4, C).astype(np.float32),          # cs_hi
+        np.zeros(C, np.float32),                                # ncs_lo
+        rng.uniform(1e-6, 1e-4, C).astype(np.float32),          # ncs_hi
+        rng.integers(1, 31, C).astype(np.int32),                # k
+        rng.integers(12, 20, C).astype(np.int32),                # sws_max
+        np.full(C, 2e-6, np.float32),                           # spin_budget
+        rng.integers(0, 2**31, C).astype(np.uint32),            # seed
+        rng.integers(0, 4, C).astype(np.int32),                 # oracle
+    )
+    dt = ctx[2]
+    B, step0 = 5, 11
+
+    got = lock_sim_block_ref(*state, spin_cpu, step0, alpha, cores,
+                             has_budget, *ctx, n_sub_steps=B)
+
+    want, cpu = list(state), jnp.asarray(spin_cpu)
+    for s in range(B):
+        now2 = (jnp.int32(step0 + s).astype(jnp.float32) + 1.0) * dt
+        rem, burn = lock_sim_step_ref(want[0], want[1], alpha, cores, dt,
+                                      has_budget)
+        want = list(lock_transitions_ref(want[0], rem, *want[2:], now2,
+                                         *ctx))
+        cpu = cpu + burn
+    for name, a, b in zip(("st rem wake_at slept spun ctr ticket cpt sws "
+                           "cnt ewma wuc permits nticket completed "
+                           "wake_count").split(), got[:16], want):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=name)
+    np.testing.assert_array_equal(np.asarray(got[16]), np.asarray(cpu),
+                                  err_msg="spin_cpu")
+
+
+@pytest.mark.parametrize("block_steps", [1, 7, 32, 512])
+def test_blocked_rollout_bit_identical_to_scan(block_steps):
+    cfgs = _mixed_batch()
+    scan = xdes.simulate_batch(cfgs, n_steps=260, rollout="scan")
+    blk = xdes.simulate_batch(cfgs, n_steps=260, rollout="blocked",
+                              block_steps=block_steps)
+    _assert_results_equal(scan, blk, f"block_steps={block_steps}")
+    assert (blk.steps_run == 260).all()     # pinned horizon: no early exit
+
+
+def test_blocked_pallas_bit_identical_to_ref():
+    cfgs = _mixed_batch(seed=3)
+    ref = xdes.simulate_batch(cfgs, n_steps=260, rollout="blocked",
+                              block_steps=32, backend="ref")
+    pal = xdes.simulate_batch(cfgs, n_steps=260, rollout="blocked",
+                              block_steps=32, backend="pallas")
+    _assert_results_equal(ref, pal)
+    scan = xdes.simulate_batch(cfgs, n_steps=260, rollout="scan",
+                               backend="pallas")
+    _assert_results_equal(scan, pal)
+
+
+def test_block_kernel_handles_nonmultiple_blocks():
+    """C not a multiple of block_configs, T not a multiple of the lane
+    width — the padding path of the fused Pallas block kernel."""
+    cfgs = [SimConfig("mutable", threads=t, cores=5, cs=SHORT, ncs=SHORT,
+                      wake_latency=WAKE, seed=t) for t in (2, 3, 5, 9, 11)]
+    ref = xdes.simulate_batch(cfgs, n_steps=200, backend="ref")
+    pal = xdes.simulate_batch(cfgs, n_steps=200, backend="pallas")
+    _assert_results_equal(ref, pal)
+
+
+# --------------------------------------------------------------------------
+# Early exit
+# --------------------------------------------------------------------------
+def test_early_exit_stops_early_and_matches_scan_prefix():
+    cfgs = [SimConfig(lock, threads=4, cores=8, cs=SHORT, ncs=SHORT,
+                      wake_latency=WAKE, seed=i)
+            for i, lock in enumerate(LOCKS)]
+    res = xdes.simulate_batch(cfgs, target_cs=50)
+    assert (res.completed >= 50).all()
+    assert (res.steps_run == res.steps_run[0]).all()
+    executed = int(res.steps_run[0])
+    assert executed < res.n_steps       # the planning margin was skipped
+    # the early-exited state IS the scan state at the executed step count
+    prefix = xdes.simulate_batch(cfgs, n_steps=executed, rollout="scan",
+                                 dt=res.dt)
+    _assert_results_equal(res, prefix)
+
+
+def test_explicit_n_steps_disables_early_exit():
+    cfgs = [SimConfig("ttas", threads=4, cores=8, cs=SHORT, ncs=SHORT,
+                      wake_latency=WAKE)]
+    res = xdes.simulate_batch(cfgs, n_steps=400, target_cs=5)
+    assert (res.steps_run == 400).all()
+    # ... unless explicitly re-enabled
+    res2 = xdes.simulate_batch(cfgs, n_steps=400, target_cs=5,
+                               early_exit=True)
+    assert (res2.steps_run < 400).all() and (res2.completed >= 5).all()
+
+
+def test_early_exit_never_fires_when_targets_not_reached():
+    """A contended cell that cannot reach target_cs keeps the whole batch
+    running to the planned horizon — exactly the fixed-horizon result, so
+    phase-diagram artifacts are unchanged by the default early exit."""
+    cfgs = [SimConfig("ttas", threads=20, cores=2, cs=LONG, ncs=SHORT,
+                      wake_latency=WAKE, alpha=0.1, seed=0),
+            SimConfig("sleep", threads=4, cores=8, cs=SHORT, ncs=SHORT,
+                      wake_latency=WAKE, seed=1)]
+    res = xdes.simulate_batch(cfgs, target_cs=2000)
+    full = xdes.simulate_batch(cfgs, target_cs=2000, early_exit=False)
+    assert (res.steps_run == res.n_steps).all()
+    _assert_results_equal(res, full)
+
+
+# --------------------------------------------------------------------------
+# Bucketing
+# --------------------------------------------------------------------------
+def test_bucketed_matches_per_bucket_direct_runs():
+    rng = np.random.default_rng(5)
+    cfgs = [SimConfig("mutable", threads=int(rng.integers(2, 8)), cores=6,
+                      cs=(0.0, float(hi)), ncs=(0.0, float(hi)),
+                      wake_latency=WAKE, seed=i)
+            for i, hi in enumerate(
+                np.exp(rng.uniform(np.log(1e-6), np.log(4e-4), 12)))]
+    res = xdes.simulate_batch(cfgs, target_cs=40, bucket_steps=True)
+    _, steps = xdes.plan_schedule(cfgs, 40)
+    buckets = xdes.plan_buckets(steps)
+    assert len(buckets) > 1
+    T = max(c.threads for c in cfgs)
+    for idx in buckets:
+        sub = xdes.simulate_batch([cfgs[i] for i in idx], target_cs=40,
+                                  max_threads=T)
+        np.testing.assert_array_equal(res.completed[idx], sub.completed)
+        np.testing.assert_array_equal(res.spin_cpu[idx], sub.spin_cpu)
+        np.testing.assert_array_equal(res.completed_per_thread[idx],
+                                      sub.completed_per_thread)
+        np.testing.assert_array_equal(res.t_end[idx], sub.t_end)
+        np.testing.assert_array_equal(res.steps_run[idx], sub.steps_run)
+    # every cell fully sampled, none pinned to the slowest cell's horizon
+    assert (res.completed >= 40).all()
+    assert res.steps_run.max() > 2 * res.steps_run.min()
+
+
+def test_bucket_plan_shape():
+    steps = np.asarray([100, 120, 250, 4000, 90, 4099])
+    buckets = xdes.plan_buckets(steps)
+    got = sorted(tuple(int(i) for i in b) for b in buckets)
+    assert got == [(0, 1, 4), (2,), (3,), (5,)]
+
+
+# --------------------------------------------------------------------------
+# Step-cap diagnostics
+# --------------------------------------------------------------------------
+def test_step_cap_warning_names_offenders():
+    cfgs = [SimConfig("sleep", threads=4, cores=8, cs=(0.0, 1.0),
+                      ncs=(0.0, 1.0), wake_latency=1e-6, seed=0),
+            SimConfig("ttas", threads=4, cores=8, cs=SHORT, ncs=SHORT,
+                      wake_latency=WAKE, seed=1)]
+    with pytest.warns(UserWarning) as rec:
+        res = xdes.simulate_batch(cfgs, target_cs=300, n_steps=None,
+                                  early_exit=False, block_steps=2048,
+                                  max_threads=4)
+    msg = "\n".join(str(w.message) for w in rec)
+    assert "1/2 configs" in msg                     # how many truncated
+    assert "worst offender is config 0" in msg      # and which one
+    assert "sleep" in msg and "threads=4" in msg
+    assert res.n_steps == xdes.MAX_STEPS
+
+
+# --------------------------------------------------------------------------
+# Sharded padding path: C % n_dev != 0 under blocked + early-exit +
+# bucketed rollouts, bit-identical to shard=False (subprocess mesh, same
+# pattern as tests/test_disciplines.py).
+# --------------------------------------------------------------------------
+_SHARD_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+import numpy as np
+import jax
+from repro.core import xdes
+from repro.core.policy import SimConfig
+
+assert len(jax.devices()) == 4
+SHORT = (0.0, 3.7e-6)
+locks = ["ttas", "fifo", "sleep", "mutable", "adaptive", "mcs"]
+
+# 6 rows pad to 8: pinned horizon, blocked rollout
+cfgs = [SimConfig(l, threads=5, cores=4, cs=SHORT, ncs=SHORT,
+                  wake_latency=8e-6, seed=i) for i, l in enumerate(locks)]
+r1 = xdes.simulate_batch(cfgs, n_steps=300, shard=False)
+r2 = xdes.simulate_batch(cfgs, n_steps=300, shard=True)
+for f in ("completed", "final_sws", "wake_count", "completed_per_thread",
+          "spin_cpu", "t_end", "steps_run"):
+    np.testing.assert_array_equal(getattr(r1, f), getattr(r2, f), err_msg=f)
+
+# early exit: the exit decision must be agreed across shards (psum), so
+# the executed step count — and every value — matches unsharded exactly
+cfgs = [SimConfig(l, threads=4, cores=8, cs=SHORT, ncs=SHORT,
+                  wake_latency=8e-6, seed=i) for i, l in enumerate(locks)]
+e1 = xdes.simulate_batch(cfgs, target_cs=50, shard=False)
+e2 = xdes.simulate_batch(cfgs, target_cs=50, shard=True)
+assert (e1.steps_run < e1.n_steps).all(), "early exit should fire"
+for f in ("completed", "final_sws", "wake_count", "completed_per_thread",
+          "spin_cpu", "t_end", "steps_run"):
+    np.testing.assert_array_equal(getattr(e1, f), getattr(e2, f), err_msg=f)
+
+# bucketed + sharded: each bucket pads independently (sizes 3 and 3)
+rng = np.random.default_rng(2)
+het = [SimConfig("mutable", threads=5, cores=4, cs=(0.0, float(hi)),
+                 ncs=(0.0, float(hi)), wake_latency=8e-6, seed=i)
+       for i, hi in enumerate([3e-6, 2e-4, 5e-6, 3e-4, 8e-6, 1.5e-4])]
+b1 = xdes.simulate_batch(het, target_cs=40, bucket_steps=True, shard=False)
+b2 = xdes.simulate_batch(het, target_cs=40, bucket_steps=True, shard=True)
+assert len(set(b1.steps_run.tolist())) > 1, "expected >1 bucket"
+for f in ("completed", "final_sws", "wake_count", "completed_per_thread",
+          "spin_cpu", "t_end", "steps_run"):
+    np.testing.assert_array_equal(getattr(b1, f), getattr(b2, f), err_msg=f)
+print("SHARDED-BLOCKED-OK", r1.completed.tolist(), int(e1.steps_run[0]))
+"""
+
+
+def test_sharded_padding_blocked_early_exit_bucketed():
+    """Device count is locked at first backend init, so the 4-device mesh
+    runs in a subprocess (same pattern as test_distributed.py)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        filter(None, ["src", env.get("PYTHONPATH")]))
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", _SHARD_SCRIPT],
+                          capture_output=True, text=True, timeout=600,
+                          env=env)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "SHARDED-BLOCKED-OK" in proc.stdout
+
+
+# --------------------------------------------------------------------------
+# Phase-diagram invariance: the new default path (blocked + early exit)
+# reproduces the fixed-horizon scan values on the discipline grid, so
+# regenerating reports/discipline_phase_diagram.csv changes nothing.
+# --------------------------------------------------------------------------
+def test_discipline_grid_values_unchanged_by_default_path():
+    from repro.configs.catalog import lock_discipline_sweep
+
+    cfgs = lock_discipline_sweep(n_scenarios=6)
+    new = xdes.simulate_batch(cfgs, target_cs=25)
+    legacy = xdes.simulate_batch(cfgs, target_cs=25, rollout="scan",
+                                 early_exit=False)
+    _assert_results_equal(new, legacy)
