@@ -11,7 +11,9 @@
 | sched      | §3 technique on TPU    | benchmarks.sched_bench  |
 | oracle     | §5 oracle families     | benchmarks.oracle_ablation (xdes) |
 | discipline | discipline x oracle map| benchmarks.discipline_diagram (sharded xdes) |
+| workload   | workload x lock map    | benchmarks.workload_diagram (sharded xdes) |
 | perf       | engine perf trajectory | benchmarks.perf_bench   |
+| fidelity   | dt-convergence study   | benchmarks.fidelity_study (xdes vs DES; not in --quick/--full, run on demand) |
 
 Artifacts land in reports/* (JSON plus the oracle and discipline
 phase-diagram CSV/markdown, and the measured perf trajectory —
@@ -69,6 +71,14 @@ def main(argv=None) -> None:
         for disc, row in dd["disciplines"].items():
             summary.append((f"discipline.{disc}.wins", row["wins"]))
         print("\n" + "=" * 72)
+        print("[quick] workload x discipline diagram smoke (sharded xdes)")
+        print("=" * 72)
+        from benchmarks import workload_diagram
+        wd = workload_diagram.main(["--quick"])
+        for w, rows in wd["workloads"].items():
+            top = max(rows, key=lambda d: rows[d]["wins"])
+            summary.append((f"workload.{w}.top", top))
+        print("\n" + "=" * 72)
         print("[quick] xdes perf microbenchmark")
         print("=" * 72)
         from benchmarks import perf_bench
@@ -88,7 +98,7 @@ def main(argv=None) -> None:
         return
 
     print("=" * 72)
-    print("[1/8] lockbench fig1 (paper Fig. 1 timelines)")
+    print("[1/9] lockbench fig1 (paper Fig. 1 timelines)")
     print("=" * 72)
     from benchmarks import lockbench
     f1 = lockbench.fig1()
@@ -100,7 +110,7 @@ def main(argv=None) -> None:
                     f1["mutable"]["makespan_slots"]))
 
     print("\n" + "=" * 72)
-    print("[2/8] lockbench fig3 (paper Fig. 3 grid, batched xdes engine)")
+    print("[2/9] lockbench fig3 (paper Fig. 3 grid, batched xdes engine)")
     print("=" * 72)
     f3 = lockbench.fig3(target_cs=400 if args.full else 200)
     for regime, data in f3.items():
@@ -111,7 +121,7 @@ def main(argv=None) -> None:
         json.dump({"fig1": f1, "fig3": f3}, f, indent=1)
 
     print("\n" + "=" * 72)
-    print("[3/8] batched xdes sweep (fig3 grid + 1000-config scenarios)")
+    print("[3/9] batched xdes sweep (fig3 grid + 1000-config scenarios)")
     print("=" * 72)
     from benchmarks import sweep
     sw = sweep.main(["--target-cs", "250" if args.full else "150"])
@@ -121,7 +131,7 @@ def main(argv=None) -> None:
         summary.append((f"sweep.scenario.{lock}.mean_ratio", round(r, 3)))
 
     print("\n" + "=" * 72)
-    print("[4/8] PHOLD on share-everything PDES (paper Fig. 4)")
+    print("[4/9] PHOLD on share-everything PDES (paper Fig. 4)")
     print("=" * 72)
     from benchmarks import phold
     ph = phold.run_phold(n_events=3000 if args.full else 1500)
@@ -133,7 +143,7 @@ def main(argv=None) -> None:
                             locks["mutable"]["speedup"]))
 
     print("\n" + "=" * 72)
-    print("[5/8] serving-window scheduler (the technique on TPU batches)")
+    print("[5/9] serving-window scheduler (the technique on TPU batches)")
     print("=" * 72)
     from benchmarks import sched_bench
     sb = sched_bench.main(["--requests", "400" if args.full else "250"])
@@ -144,7 +154,7 @@ def main(argv=None) -> None:
                         round(agg["avg_standby"], 2)))
 
     print("\n" + "=" * 72)
-    print("[6/8] oracle-family grid (paper §5 future work, batched xdes)")
+    print("[6/9] oracle-family grid (paper §5 future work, batched xdes)")
     print("=" * 72)
     from benchmarks import oracle_ablation
     oa = oracle_ablation.main(
@@ -156,7 +166,7 @@ def main(argv=None) -> None:
                         round(row["best_tuned_mean_ratio"], 3)))
 
     print("\n" + "=" * 72)
-    print("[7/8] discipline x oracle diagram (sharded batched xdes)")
+    print("[7/9] discipline x oracle diagram (sharded batched xdes)")
     print("=" * 72)
     from benchmarks import discipline_diagram
     dd = discipline_diagram.main(
@@ -167,7 +177,20 @@ def main(argv=None) -> None:
                         round(row["best_variant_mean_ratio"], 3)))
 
     print("\n" + "=" * 72)
-    print("[8/8] xdes perf microbenchmark (reports/bench_xdes.json)")
+    print("[8/9] workload x discipline diagram (sharded batched xdes)")
+    print("=" * 72)
+    from benchmarks import workload_diagram
+    wd = workload_diagram.main(
+        [] if args.full else ["--scenarios", "50", "--target-cs", "100"])
+    for w, rows in wd["workloads"].items():
+        top = max(rows, key=lambda d: rows[d]["wins"])
+        summary.append((f"workload.{w}.top", top))
+        summary.append((f"workload.{w}.mutable.best_ratio",
+                        round(rows["mutable"]["best_variant_mean_ratio"],
+                              3)))
+
+    print("\n" + "=" * 72)
+    print("[9/9] xdes perf microbenchmark (reports/bench_xdes.json)")
     print("=" * 72)
     from benchmarks import perf_bench
     pb = perf_bench.main(["--full-size"] if args.full else [])

@@ -66,17 +66,19 @@ def run_policy(policy: str, max_slots: int = 16, max_standby: int = 16,
 
 
 def xdes_sweep(n_scenarios: int = 100, target_cs: int = 150,
-               backend: str = "ref") -> dict:
+               backend: str = "ref", workload: str = "constant") -> dict:
     """The same zero/max/mutable ablation driven THROUGH xdes: slot/standby
     dynamics encoded on the SimConfig row schema
     (:class:`repro.serve.SchedScenario`) and swept on-device as one
     batched call — scheduler policies ride the same engine as the lock
-    disciplines."""
+    disciplines.  ``workload`` selects a hold-time row (e.g. ``bursty``
+    for wave-like admission, ``hetero`` for mixed decode lengths) on the
+    SAME machines as the constant sweep."""
     from repro.serve import sample_sched_scenarios, xdes_policy_sweep
 
-    return xdes_policy_sweep(sample_sched_scenarios(n_scenarios),
-                             target_cs=target_cs, backend=backend,
-                             verbose=True)
+    return xdes_policy_sweep(
+        sample_sched_scenarios(n_scenarios, workload=workload),
+        target_cs=target_cs, backend=backend, verbose=True)
 
 
 def main(argv=None) -> dict:
@@ -88,10 +90,15 @@ def main(argv=None) -> dict:
                          "engine simulator")
     ap.add_argument("--scenarios", type=int, default=100,
                     help="scenario count for --xdes")
+    ap.add_argument("--workload", default="constant",
+                    choices=("constant", "bursty", "hetero", "jitter"),
+                    help="hold-time row for --xdes scenarios "
+                         "(bursty = wave-like admission)")
     ap.add_argument("--out", default="reports/sched_bench.json")
     args = ap.parse_args(argv)
     if args.xdes:
-        out = xdes_sweep(n_scenarios=args.scenarios)
+        out = xdes_sweep(n_scenarios=args.scenarios,
+                         workload=args.workload)
         os.makedirs(os.path.dirname(args.out), exist_ok=True)
         with open(args.out, "w") as f:
             json.dump(out, f, indent=1)

@@ -18,6 +18,9 @@ Two artifacts:
 * ``discipline_grid`` — the full discipline x oracle diagram (every
   DISCIPLINE_ROW x every ORACLE_ROW x scenarios, one call), consumed by
   ``benchmarks/discipline_diagram.py`` (see docs/disciplines.md).
+* ``workload_grid`` — the workload x discipline x oracle diagram (every
+  WORKLOAD_ROW x every discipline variant x scenarios, one call),
+  consumed by ``benchmarks/workload_diagram.py`` (see docs/workloads.md).
 
 Every batched call auto-shards its config axis over all visible devices
 (``repro.core.xdes.simulate_batch(shard=...)``, ``shard_map`` through the
@@ -39,10 +42,10 @@ import numpy as np
 from repro.configs.catalog import (LOCK_DISCIPLINE_SET, LOCK_DISCIPLINES,
                                    LOCK_ORACLE_KS, LOCK_ORACLE_SWS_MAX,
                                    LOCK_ORACLES, LOCK_REGIMES, LOCK_THREADS,
-                                   lock_discipline_sweep,
+                                   LOCK_WORKLOADS, lock_discipline_sweep,
                                    lock_discipline_variants, lock_fig3_grid,
                                    lock_oracle_sweep, lock_oracle_variants,
-                                   lock_scenario_sweep)
+                                   lock_scenario_sweep, lock_workload_sweep)
 from repro.core import xdes
 
 
@@ -379,6 +382,128 @@ def discipline_grid(n_scenarios: int = 200, target_cs: int = 150,
             print(f"{d:>10} {row['wins']:5d} "
                   f"{row['best_variant_mean_ratio']:19.3f} "
                   f"{row['mean_sync_cpu_per_cs_us']:12.2f}")
+    return out
+
+
+# --------------------------------------------------------------------------
+# Workload x discipline x oracle diagram grid
+# --------------------------------------------------------------------------
+def workload_grid(n_scenarios: int = 100, target_cs: int = 150,
+                  backend: str = "ref", seed: int = 0,
+                  workloads=LOCK_WORKLOADS,
+                  disciplines=LOCK_DISCIPLINE_SET, oracles=LOCK_ORACLES,
+                  shard: bool | None = None, verbose: bool = True) -> dict:
+    """The full ``workload x (discipline, oracle) x scenario`` product —
+    every row of ``WORKLOAD_ROWS`` crossed with every discipline-diagram
+    variant — as ONE (sharded) jit-compiled
+    :func:`repro.core.xdes.simulate_batch` call, summarized three ways:
+
+    * per (workload, variant) — wins, mean/p10 throughput ratio to the
+      per-(scenario, workload) best variant, spin CPU per CS;
+    * per workload — which discipline wins how often under that hold-time
+      model, and each discipline's best-variant mean ratio;
+    * phase diagram — which (discipline, oracle) wins in each
+      (workload x CS-length x subscription) bucket: the "which lock wins
+      under which workload" artifact rendered by
+      ``benchmarks/workload_diagram.py``.
+
+    The per-scenario best is taken *within* a workload, so a variant is
+    judged against the other locks under the same workload — never
+    against an easier workload's throughput.
+    """
+    disc_variants = lock_discipline_variants(disciplines, oracles)
+    configs = lock_workload_sweep(n_scenarios=n_scenarios, seed=seed,
+                                  workloads=workloads,
+                                  disciplines=disciplines, oracles=oracles)
+    W, V = len(workloads), len(disc_variants)
+    t0 = time.time()
+    res = xdes.simulate_batch(configs, target_cs=target_cs, backend=backend,
+                              shard=shard)
+    wall = time.time() - t0
+
+    thr = res.throughput.reshape(n_scenarios, W, V)
+    cpu = res.sync_cpu_per_cs.reshape(n_scenarios, W, V)
+    best = np.maximum(thr.max(axis=2), 1e-30)          # (S, W)
+    ratio = thr / best[..., None]
+    win = thr.argmax(axis=2)                           # (S, W)
+
+    def vname(v):
+        return (f"{v['lock']}/{v['oracle']}"
+                if v["lock"] == "mutable" else v["lock"])
+
+    variant_names = [vname(v) for v in disc_variants]
+    out_variants = [{
+        "workload": w, "name": variant_names[i],
+        "lock": disc_variants[i]["lock"],
+        "oracle": disc_variants[i]["oracle"],
+        "wins": int((win[:, wi] == i).sum()),
+        "mean_ratio_to_best": float(ratio[:, wi, i].mean()),
+        "p10_ratio_to_best": float(np.percentile(ratio[:, wi, i], 10)),
+        "mean_sync_cpu_per_cs_us": float(cpu[:, wi, i].mean() * 1e6),
+    } for wi, w in enumerate(workloads) for i in range(V)]
+
+    disc_names = list(dict.fromkeys(v["lock"] for v in disc_variants))
+    disc_cols = {d: [i for i, v in enumerate(disc_variants)
+                     if v["lock"] == d] for d in disc_names}
+    by_workload = {}
+    for wi, w in enumerate(workloads):
+        win_disc = np.asarray([disc_variants[i]["lock"]
+                               for i in win[:, wi]])
+        by_workload[w] = {d: {
+            "wins": int((win_disc == d).sum()),
+            "best_variant_mean_ratio":
+                float(ratio[:, wi, cols].max(axis=1).mean()),
+            "mean_sync_cpu_per_cs_us":
+                float(cpu[:, wi, cols].mean() * 1e6),
+        } for d, cols in disc_cols.items()}
+
+    feats = _bucket_scenarios(configs, W * V)
+    cells: dict[tuple, dict] = {}
+    for s, ft in enumerate(feats):
+        for wi, w in enumerate(workloads):
+            key = (w, ft["cs"], ft["sub"])
+            cell = cells.setdefault(key, {})
+            name = variant_names[win[s, wi]]
+            cell[name] = cell.get(name, 0) + 1
+    phase = []
+    for (w, cs_b, sub_b), counts in sorted(
+            cells.items(), key=lambda kv: (list(workloads).index(kv[0][0]),
+                                           kv[0][1:])):
+        n = sum(counts.values())
+        winner = max(counts, key=counts.get)
+        phase.append({"workload": w, "cs": cs_b, "sub": sub_b, "n": n,
+                      "winner": winner,
+                      "win_share": round(counts[winner] / n, 3),
+                      "wins_by_variant": counts})
+
+    import jax
+
+    out = {
+        "meta": {"backend": backend, "n_scenarios": n_scenarios,
+                 "n_workloads": W, "n_variants": V,
+                 "n_configs": len(configs), "n_steps": res.n_steps,
+                 "wall_s": round(wall, 2),
+                 "n_devices": len(jax.devices()),
+                 "sharded": bool(shard) if shard is not None
+                 else len(jax.devices()) > 1,
+                 "configs_per_s": round(len(configs) / max(wall, 1e-9), 1),
+                 "workloads": list(workloads),
+                 "variant_names": variant_names},
+        "variants": out_variants,
+        "workloads": by_workload,
+        "phase": phase,
+    }
+    if verbose:
+        print(f"\nworkload grid: {len(configs)} configs ({n_scenarios} "
+              f"scenarios x {W} workloads x {V} variants) x {res.n_steps} "
+              f"steps in {wall:.1f}s on {out['meta']['n_devices']} "
+              f"device(s) ({out['meta']['configs_per_s']} cfg/s)")
+        for w in workloads:
+            rows = by_workload[w]
+            top = max(rows, key=lambda d: rows[d]["wins"])
+            print(f"{w:>9}: top discipline {top} "
+                  f"({rows[top]['wins']}/{n_scenarios} wins); "
+                  + " ".join(f"{d}:{r['wins']}" for d, r in rows.items()))
     return out
 
 

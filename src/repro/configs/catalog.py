@@ -395,10 +395,67 @@ def lock_discipline_sweep(n_scenarios: int = 200, seed: int = 0,
     ]
 
 
+# -- workload x discipline x oracle diagram grid ---------------------------
+#: Workload axis of the "which lock wins under which workload" diagram:
+#: every WORKLOAD_ROW (repro.core.policy) is represented.
+LOCK_WORKLOADS = ("constant", "bursty", "hetero", "jitter")
+
+
+def lock_workload_params(sc: dict) -> dict:
+    """Scenario-scaled workload knobs: the bursty ON/OFF cycle is
+    ``16 x (cs_hi + ncs_hi)`` — ~32 mean CS+NCS rounds, since uniform
+    draws average half their hi — so every sweep horizon sees several
+    phases of each thread's duty cycle regardless of the scenario's
+    timescale; spread and burst factors stay at the registry defaults."""
+    return dict(wl_period=16.0 * (sc["cs_hi"] + sc["ncs_hi"]),
+                wl_duty=0.25, wl_burst=8.0, wl_spread=4.0)
+
+
+def lock_workload_variants(workloads=LOCK_WORKLOADS,
+                           disciplines=LOCK_DISCIPLINE_SET,
+                           oracles=LOCK_ORACLES) -> list[dict]:
+    """The ``(workload, discipline, oracle)`` variant axis of the workload
+    diagram: the discipline x oracle variants (windowed-row pruning of
+    :func:`lock_discipline_variants`) replicated under every workload
+    row, workload-major."""
+    return [dict(workload=w, **v)
+            for w in workloads
+            for v in lock_discipline_variants(disciplines, oracles)]
+
+
+def lock_workload_sweep(n_scenarios: int = 100, seed: int = 0,
+                        workloads=LOCK_WORKLOADS,
+                        disciplines=LOCK_DISCIPLINE_SET,
+                        oracles=LOCK_ORACLES) -> list[SimConfig]:
+    """The full workload x discipline x oracle product as one flat batch
+    for a single (sharded) :func:`repro.core.xdes.simulate_batch` call.
+
+    Row order is scenario-major, then workload, then (discipline, oracle)
+    variant — reshape to ``(n_scenarios, n_workloads, n_variants)``.
+    Scenarios follow the :func:`sample_scenarios` seed contract, so every
+    workload row sees the same machines scenario-by-scenario and results
+    are comparable cell-by-cell with the discipline diagram."""
+    from repro.core.policy import DEFAULT_ALPHA
+
+    disc_variants = lock_discipline_variants(disciplines, oracles)
+    return [
+        SimConfig(v["lock"], threads=sc["threads"], cores=sc["cores"],
+                  cs=(0.0, sc["cs_hi"]), ncs=(0.0, sc["ncs_hi"]),
+                  wake_latency=sc["wake"],
+                  alpha=sc["contention"] * DEFAULT_ALPHA[v["lock"]],
+                  seed=sc["seed"], oracle=v["oracle"], workload=w,
+                  **lock_workload_params(sc))
+        for sc in sample_scenarios(n_scenarios, seed)
+        for w in workloads
+        for v in disc_variants
+    ]
+
+
 #: Named sweep registry (mirrors the model-config registry above).
 LOCK_SWEEPS = {
     "fig3": lock_fig3_grid,
     "scenario": lock_scenario_sweep,
     "oracle": lock_oracle_sweep,
     "discipline": lock_discipline_sweep,
+    "workload": lock_workload_sweep,
 }

@@ -27,10 +27,19 @@ The mutable-lock model runs the real :class:`~repro.core.oracle.EvalSWS`
 oracle and the C1/C2 wake-up-count corrections of Algorithm 1 — the DES and
 the threaded implementation share the oracle code, so validating one
 validates the policy of the other.
+
+Workloads: CS/NCS duration draws route through the workload rows of
+:data:`repro.core.policy.WORKLOAD_ROWS` (constant, bursty ON/OFF,
+heterogeneous per-thread scales, Poisson-like jittered arrivals) — this
+module is the event-driven twin the batched engine's workload rows are
+pinned against by randomized parity tests (tests/test_workloads.py).  The
+per-thread phase/scale state is drawn from a dedicated seeded stream, so
+the constant row consumes exactly the pre-workload RNG sequence.
 """
 
 from __future__ import annotations
 
+import math
 import random
 from dataclasses import dataclass, field
 
@@ -350,6 +359,12 @@ class LockSim:
         record_timeline: bool = False,
         max_cs_per_thread: int | None = None,
         lock_kwargs: dict | None = None,
+        workload: str = "constant",
+        wl_period: float = 1e-4,
+        wl_duty: float = 0.25,
+        wl_burst: float = 8.0,
+        wl_spread: float = 4.0,
+        arrival_phase: float = 0.0,
     ):
         self.rng = random.Random(seed)
         self.cores = cores
@@ -362,6 +377,48 @@ class LockSim:
         self.res = SimResult(lock=lock, threads=threads, cores=cores)
         self.record_timeline = record_timeline
         self.max_cs_per_thread = max_cs_per_thread
+        # -- workload rows (the event-driven twin of WORKLOAD_ROWS) --------
+        self.workload = policy.WORKLOAD_IDS[workload]
+        self.wl_period, self.wl_duty = wl_period, wl_duty
+        self.wl_burst, self.wl_spread = wl_burst, wl_spread
+        self.arrival_phase = arrival_phase
+        # persistent per-thread phase/scale from the SAME salted counter
+        # streams as the batched engine (identical realizations per
+        # (seed, tid)), leaving the main RNG sequence untouched so the
+        # constant row matches the pre-workload engine draw for draw
+        u32 = seed & 0xFFFFFFFF
+        self._wl_phase = [
+            policy.counter_uniform_scalar(u32 ^ policy.WL_PHASE_SALT, i)
+            for i in range(threads)]
+        self._wl_tscale = [
+            policy.workload_thread_scale(
+                policy.counter_uniform_scalar(u32 ^ policy.WL_SPREAD_SALT,
+                                              i), wl_spread)
+            for i in range(threads)]
+
+    # -- workload-row hold-time draws ---------------------------------------
+    def draw_cs(self, tid: int) -> float:
+        """One CS duration under the config's workload row (the scalar
+        mirror of :func:`repro.kernels.ref.workload_draw`)."""
+        base = self.rng.uniform(self.cs_lo, self.cs_hi)
+        if self.workload == policy.WL_HETERO:
+            return base * self._wl_tscale[tid]
+        return base
+
+    def draw_ncs(self, tid: int) -> float:
+        """One NCS (arrival-gap) duration under the workload row."""
+        u = self.rng.random()
+        base = self.ncs_lo + u * (self.ncs_hi - self.ncs_lo)
+        if self.workload == policy.WL_BURSTY:
+            gate = policy.workload_off_gate(self.now, self._wl_phase[tid],
+                                            self.wl_period, self.wl_duty)
+            return base * (1.0 + gate * (self.wl_burst - 1.0))
+        if self.workload == policy.WL_HETERO:
+            return base * self._wl_tscale[tid]
+        if self.workload == policy.WL_JITTER:
+            mean = 0.5 * (self.ncs_lo + self.ncs_hi)
+            return -mean * math.log1p(-u)
+        return base
 
     # -- helpers for models -------------------------------------------------
     def any_waking(self) -> bool:
@@ -373,7 +430,7 @@ class LockSim:
 
     def start_cs(self, t: _Task) -> None:
         t.state = CS
-        t.remaining = self.rng.uniform(self.cs_lo, self.cs_hi)
+        t.remaining = self.draw_cs(t.tid)
         self._log(t.tid, "cs_start")
 
     def schedule_wake(self, t: _Task) -> None:
@@ -393,9 +450,14 @@ class LockSim:
 
     # -- main loop ------------------------------------------------------------
     def run(self, target_cs: int = 1000, horizon: float = 1e9) -> SimResult:
+        ncs_mean = 0.5 * (self.ncs_lo + self.ncs_hi)
         for t in self.tasks:
             t.state = NCS
-            t.remaining = self.rng.uniform(self.ncs_lo, self.ncs_hi)
+            # seeded per-thread arrival-order randomization: stagger first
+            # arrivals by up to arrival_phase mean-NCS lengths
+            t.remaining = (self.draw_ncs(t.tid)
+                           + self._wl_phase[t.tid] * self.arrival_phase
+                           * ncs_mean)
 
         while self.res.completed_cs < target_cs and self.now < horizon:
             runnable = [t for t in self.tasks if t.state in (CS, NCS, SPIN)]
@@ -461,7 +523,7 @@ class LockSim:
                         t.state = DONE
                     else:
                         t.state = NCS
-                        t.remaining = self.rng.uniform(self.ncs_lo, self.ncs_hi)
+                        t.remaining = self.draw_ncs(t.tid)
                 elif t.state == NCS:
                     self._log(t.tid, "arrive")
                     self.model.on_arrive(t)

@@ -14,6 +14,25 @@ Python ints **and** on numpy/jax integer arrays (the callers pick the
 ``where`` combinator; the scalar forms below use ``if`` for readability and
 are the reference semantics).
 
+The row-registry contract
+-------------------------
+Three registries make the engine data-driven: :data:`ORACLE_ROWS` (SWS
+adaptation families), :data:`DISCIPLINE_ROWS` (waiting disciplines) and
+:data:`WORKLOAD_ROWS` (hold-time models).  A row is (metadata +) pure
+elementwise functions using only arithmetic and comparisons — no ``if``,
+no transcendentals (callers precompute deviates) — so the SAME function
+body runs on Python scalars, numpy arrays, and traced jax values, and the
+batched engine dispatches rows per config with masked arithmetic selects
+(:func:`oracle_update`, :func:`_dispatch_rows`, :func:`workload_hold`).
+
+To add a row: define its functions here, register it (id + registry
+entry), give it an event-driven twin in :mod:`repro.core.des` for parity
+testing, and — if its decisions need state the kernels don't carry — add
+the state column once in :func:`repro.kernels.ref.lock_transitions_ref`;
+the Pallas backend inherits it automatically because the Pallas kernels
+apply the *same body* per config block (the ref/Pallas bit-identity
+requirement is by construction, and pinned by tests).
+
 Line-number comments (A*, R*, E*) refer to Algorithm 1 in the paper.
 """
 
@@ -427,6 +446,157 @@ def discipline_release_quota(policy_id, r_wuc, thc_pre, sws, n_parked,
 
 
 # --------------------------------------------------------------------------
+# Workload rows — the hold-time model as data, mirroring ORACLE_ROWS and
+# DISCIPLINE_ROWS.
+#
+# The paper evaluates fixed CS/NCS draws; its robustness pitch ("scarce or
+# none knowledge about the actual workload") only shows up under
+# non-stationary workloads.  Every workload is therefore a row: a named,
+# branch-free transformation of the base uniform CS/NCS draw, dispatched
+# per config by an integer id exactly like the oracle and discipline rows.
+#
+# A row's ``hold`` function is pure arithmetic on caller-precomputed
+# inputs, so ONE implementation runs on plain Python floats (the DES twin
+# checks against it), numpy arrays, and traced jax values inside the
+# kernels:
+#
+#   hold(is_ncs, base, expd, gate_off, tscale, burst) -> duration
+#     is_ncs    0/1 static flag: is this an NCS (arrival-gap) draw?
+#     base      the uniform draw  lo + u * (hi - lo)
+#     expd      the exponential deviate  mean_ncs * -log1p(-u)  (same u)
+#     gate_off  0/1: thread is in the OFF phase of its duty cycle
+#     tscale    persistent per-thread scale from the seeded spread
+#     burst     the OFF-phase NCS stretch factor
+#
+# ``gate_off`` and ``tscale`` derive from two persistent per-(config,
+# thread) uniforms drawn from the counter RNG under dedicated salts
+# (WL_PHASE_SALT / WL_SPREAD_SALT), so they are deterministic, replayable,
+# and independent of the event-draw stream.  The dispatch is an arithmetic
+# select; the constant row returns ``base`` untouched, so constant-workload
+# configs are bit-identical to the pre-registry engine.
+# --------------------------------------------------------------------------
+WL_CONSTANT, WL_BURSTY, WL_HETERO, WL_JITTER = range(4)
+
+WORKLOAD_IDS = {
+    "constant": WL_CONSTANT,   # the paper's fixed uniform draws
+    "bursty": WL_BURSTY,       # ON/OFF duty cycle: time-varying NCS
+    "hetero": WL_HETERO,       # per-thread CS/NCS scale from a seeded spread
+    "jitter": WL_JITTER,       # Poisson-like arrivals: exponential NCS
+}
+WORKLOAD_NAMES = {v: k for k, v in WORKLOAD_IDS.items()}
+
+#: Seed salts for the persistent per-thread workload uniforms (XOR-ed into
+#: the config seed so the streams never collide with event draws).
+WL_PHASE_SALT = 0x7F4A7C15     # duty-cycle phase + arrival-order offset
+WL_SPREAD_SALT = 0x6C62272E    # heterogeneous per-thread scale
+
+
+def counter_uniform_scalar(seed: int, tid: int, ctr: int = 0) -> float:
+    """Pure-Python mirror of :func:`repro.kernels.ref.counter_uniform`
+    (same splitmix-style avalanche, mod-2**32 arithmetic), so the DES twin
+    realizes the SAME persistent per-thread workload state — duty-cycle
+    phases, heterogeneity scales, arrival offsets — as the batched engine
+    for a given (seed, tid)."""
+    m = 0xFFFFFFFF
+    x = (seed ^ (tid * 0x9E3779B9) ^ ((ctr + 1) * 0x85EBCA6B)) & m
+    x ^= x >> 16
+    x = (x * 0x7FEB352D) & m
+    x ^= x >> 15
+    x = (x * 0x846CA68B) & m
+    x ^= x >> 16
+    return x * 2.0 ** -32
+
+
+@dataclass(frozen=True)
+class WorkloadRow:
+    name: str
+    wid: int
+    time_varying: int          # 1 iff the row reads the current time
+    hold: object               # callable, elementwise (see module comment)
+
+
+def _hold_constant(is_ncs, base, expd, gate_off, tscale, burst):
+    return base
+
+
+def _hold_bursty(is_ncs, base, expd, gate_off, tscale, burst):
+    # ON/OFF duty cycle as time-varying NCS (Fissile-style contention
+    # burstiness): an OFF-phase thread's arrival gap stretches by `burst`;
+    # CS lengths are untouched.
+    return base * (1 + is_ncs * gate_off * (burst - 1))
+
+
+def _hold_hetero(is_ncs, base, expd, gate_off, tscale, burst):
+    # Heterogeneous threads (mixed decode lengths): every draw scaled by
+    # the thread's persistent log-uniform factor in [1/spread, spread].
+    return base * tscale
+
+
+def _hold_jitter(is_ncs, base, expd, gate_off, tscale, burst):
+    # Poisson-like arrivals: NCS becomes an exponential deviate with the
+    # uniform row's mean, so arrival gaps are memoryless; CS stays uniform.
+    return is_ncs * expd + (1 - is_ncs) * base
+
+
+WORKLOAD_ROWS = {
+    "constant": WorkloadRow("constant", WL_CONSTANT, 0, _hold_constant),
+    "bursty": WorkloadRow("bursty", WL_BURSTY, 1, _hold_bursty),
+    "hetero": WorkloadRow("hetero", WL_HETERO, 0, _hold_hetero),
+    "jitter": WorkloadRow("jitter", WL_JITTER, 0, _hold_jitter),
+}
+assert sorted(r.wid for r in WORKLOAD_ROWS.values()) \
+    == sorted(WORKLOAD_IDS.values())
+
+
+def workload_hold(workload_id, is_ncs, base, expd, gate_off, tscale, burst):
+    """Dispatch one hold-time draw by ``workload_id`` — the workload twin
+    of :func:`oracle_update`'s masked select.  All candidate rows are
+    finite and non-negative, so the arithmetic select is exact: a constant
+    row's output is bit-identical to ``base``."""
+    out = 0.0
+    for row in WORKLOAD_ROWS.values():
+        sel = (workload_id == row.wid) * 1.0
+        out = out + sel * row.hold(is_ncs, base, expd, gate_off, tscale,
+                                   burst)
+    return out
+
+
+def workload_thread_scale(spread_u, spread):
+    """Persistent per-thread multiplier, log-uniform in
+    ``[1/spread, spread]`` from the thread's spread uniform."""
+    return spread ** (2.0 * spread_u - 1.0)
+
+
+def workload_off_gate(now, phase_u, period, duty):
+    """0/1: is a thread with duty-cycle phase ``phase_u`` in the OFF part
+    of its ON/OFF cycle at time ``now``?  The cycle has length ``period``
+    seconds with the first ``duty`` fraction ON; ``phase_u`` staggers the
+    threads so a config's bursts overlap only partially."""
+    pos = (now / period + phase_u) % 1.0
+    return (pos >= duty) * 1.0
+
+
+def workload_mean_scale(cfg) -> tuple[float, float]:
+    """Expected ``(cs, ncs)`` mean-duration multipliers of a config's
+    workload row — the horizon planner's correction
+    (:func:`repro.core.xdes.plan_schedule`): a bursty row stretches the
+    mean arrival gap to ``duty + (1-duty)·burst`` of the base, a hetero
+    row stretches both draws by ``E[s^(2u-1)] = (s - 1/s)/(2 ln s)``;
+    constant and jitter leave the means unchanged.  Exactly 1.0 for the
+    constant row, so constant-workload plans are bit-identical."""
+    import math
+
+    wid = WORKLOAD_IDS[cfg.workload]
+    if wid == WL_BURSTY:
+        return 1.0, cfg.wl_duty + (1.0 - cfg.wl_duty) * cfg.wl_burst
+    if wid == WL_HETERO:
+        s = cfg.wl_spread
+        m = 1.0 if s <= 1.0 else (s - 1.0 / s) / (2.0 * math.log(s))
+        return m, m
+    return 1.0, 1.0
+
+
+# --------------------------------------------------------------------------
 # Scenario description — the unit of the batched sweep
 # --------------------------------------------------------------------------
 @dataclass(frozen=True)
@@ -452,6 +622,13 @@ class SimConfig:
     spin_budget: float = DEFAULT_SPIN_BUDGET
     seed: int = 0
     oracle: str = "paper"               # SWS adaptation family (ORACLE_IDS)
+    workload: str = "constant"          # hold-time model (WORKLOAD_IDS)
+    wl_period: float = 1e-4             # bursty ON/OFF cycle length (s)
+    wl_duty: float = 0.25               # ON fraction of the cycle
+    wl_burst: float = 8.0               # OFF-phase NCS stretch factor
+    wl_spread: float = 4.0              # hetero per-thread scale spread
+    arrival_phase: float = 0.0          # seeded arrival-order offset
+    #                                     (fraction of the mean NCS)
 
     def __post_init__(self):
         if self.lock not in POLICY_IDS:
@@ -462,6 +639,15 @@ class SimConfig:
         if self.oracle not in ORACLE_IDS:
             raise ValueError(f"unknown oracle {self.oracle!r}; "
                              f"options: {sorted(ORACLE_IDS)}")
+        if self.workload not in WORKLOAD_IDS:
+            raise ValueError(f"unknown workload {self.workload!r}; "
+                             f"options: {sorted(WORKLOAD_IDS)}")
+        if self.wl_period <= 0 or not (0.0 < self.wl_duty <= 1.0):
+            raise ValueError("wl_period must be > 0 and wl_duty in (0, 1]")
+        if self.wl_burst < 1.0 or self.wl_spread < 1.0:
+            raise ValueError("wl_burst and wl_spread must be >= 1")
+        if self.arrival_phase < 0.0:
+            raise ValueError("arrival_phase must be >= 0")
 
     # -- derived quantities shared by both backends -----------------------
     @property
@@ -499,12 +685,21 @@ class SimConfig:
             kw["spin_budget"] = self.spin_budget
         return kw
 
+    def workload_kwargs(self) -> dict:
+        """Workload keywords consumed by :class:`repro.core.des.LockSim`
+        (the event-driven twin of the workload rows)."""
+        return dict(workload=self.workload, wl_period=self.wl_period,
+                    wl_duty=self.wl_duty, wl_burst=self.wl_burst,
+                    wl_spread=self.wl_spread,
+                    arrival_phase=self.arrival_phase)
+
 
 #: Column order of the struct-of-arrays encoding (see encode_configs).
 CONFIG_FIELDS = (
     "policy", "threads", "cores", "cs_lo", "cs_hi", "ncs_lo", "ncs_hi",
     "wake", "alpha", "sws_init", "sws_max", "k", "spin_budget", "seed",
-    "oracle",
+    "oracle", "workload", "wl_period", "wl_duty", "wl_burst", "wl_spread",
+    "arrival_phase",
 )
 
 
@@ -541,4 +736,10 @@ def encode_configs(configs) -> dict:
         "spin_budget": col(lambda c: c.spin_budget, np.float32),
         "seed": col(lambda c: c.seed, np.uint32),
         "oracle": col(lambda c: ORACLE_IDS[c.oracle], np.int32),
+        "workload": col(lambda c: WORKLOAD_IDS[c.workload], np.int32),
+        "wl_period": col(lambda c: c.wl_period, np.float32),
+        "wl_duty": col(lambda c: c.wl_duty, np.float32),
+        "wl_burst": col(lambda c: c.wl_burst, np.float32),
+        "wl_spread": col(lambda c: c.wl_spread, np.float32),
+        "arrival_phase": col(lambda c: c.arrival_phase, np.float32),
     }

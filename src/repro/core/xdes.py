@@ -30,13 +30,27 @@ swappable kernel backends in the scan path:
 
 Model fidelity: same state machine, same policy decisions — every waiting
 discipline is a row in :data:`repro.core.policy.DISCIPLINE_ROWS` (spin,
-sleep, adaptive, mutable, FIFO/MCS ticket handoff) and every SWS oracle a
-row in ``ORACLE_ROWS``, both dispatched per config by integer columns, so
-one batch mixes disciplines and oracle families freely.  The differences
-from the DES are (a) time is quantized to ``dt`` instead of exact event
-times, and (b) simultaneous events inside one step resolve in thread-id
-order instead of RNG order.  Equivalence tests pin xdes against the Python
-DES on the paper's four regimes (qualitative claims C2-C4) and per-row.
+sleep, adaptive, mutable, FIFO/MCS ticket handoff), every SWS oracle a
+row in ``ORACLE_ROWS``, and every hold-time model a row in
+``WORKLOAD_ROWS`` (constant, bursty ON/OFF, heterogeneous per-thread
+scales, Poisson-like jittered arrivals — docs/workloads.md), all
+dispatched per config by integer columns, so one batch mixes disciplines,
+oracle families and workloads freely.  The row-registry contract: a new
+row is pure elementwise arithmetic in :mod:`repro.core.policy`, lands in
+the kernels once via :mod:`repro.kernels.ref` (the Pallas twin applies
+the same body per block — ref/Pallas bit-identity is by construction and
+by test), gets an event-driven twin in :mod:`repro.core.des` pinned by
+randomized parity tests, and must preserve the blocked-rollout
+invariants (``now2 = (step0+s+1)*dt`` in int32 index arithmetic,
+``spin_cpu`` accumulated in-loop) so blocked == per-step stays exact.
+The differences from the DES are (a) time is quantized to ``dt`` instead
+of exact event times, and (b) simultaneous events inside one step resolve
+in thread-id order instead of RNG order — reducible via the seeded
+per-thread arrival-phase randomization (``SimConfig.arrival_phase``).
+The quantization-error band is measured by the dt-convergence study
+(``benchmarks/fidelity_study.py``; docs/performance.md "Fidelity").
+Equivalence tests pin xdes against the Python DES on the paper's four
+regimes (qualitative claims C2-C4) and per-row.
 
 Threads are array slots: state ``(configs, max_threads)`` int32 plus small
 per-config integers (sws, cnt, wuc, permits, next-ticket) — exactly the
@@ -63,7 +77,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.ref import NO_TICKET, REM_EPS, counter_uniform  # noqa: F401
+from repro.kernels.ref import (NO_TICKET, REM_EPS,  # noqa: F401
+                               counter_uniform, workload_init_rem)
 
 from . import policy as P
 
@@ -73,10 +88,12 @@ MAX_STEPS = 200_000
 DEFAULT_BLOCK_STEPS = 32
 _INF = np.float32(np.inf)
 
-#: Context columns threaded to the transition kernels each step.
+#: Context columns threaded to the transition kernels each step
+#: (TRANSITION_CONTEXT minus ``now2``, same order).
 _PRM_FIELDS = ("policy", "threads", "dt", "wake", "cs_lo", "cs_hi",
                "ncs_lo", "ncs_hi", "k", "sws_max", "spin_budget", "seed",
-               "oracle")
+               "oracle", "workload", "wl_period", "wl_duty", "wl_burst",
+               "wl_spread")
 
 
 # --------------------------------------------------------------------------
@@ -107,15 +124,19 @@ def _block_backend(backend: str):
 
 def _init_state(arrs, T: int):
     """The 17-array carry (16 transition-state arrays + spin_cpu): every
-    thread starts in NCS with a fresh duration draw."""
+    thread starts in NCS with a fresh workload-row duration draw plus the
+    seeded arrival-order phase offset (:func:`repro.kernels.ref.
+    workload_init_rem`)."""
     C = arrs["policy"].shape[0]
     tid = jnp.arange(T, dtype=jnp.int32)[None, :]
     active = tid < arrs["threads"][:, None]
     ctr0 = jnp.zeros((C, T), jnp.uint32)
-    u0 = counter_uniform(arrs["seed"][:, None],
-                         jnp.broadcast_to(tid, (C, T)), ctr0)
-    rem0 = arrs["ncs_lo"][:, None] + u0 * (arrs["ncs_hi"]
-                                           - arrs["ncs_lo"])[:, None]
+    col = lambda k: arrs[k][:, None]
+    rem0 = workload_init_rem(
+        col("seed"), jnp.broadcast_to(tid, (C, T)), ctr0,
+        col("ncs_lo"), col("ncs_hi"), col("workload"), col("wl_period"),
+        col("wl_duty"), col("wl_burst"), col("wl_spread"),
+        col("arrival_phase"))
     return (
         jnp.where(active, P.NCS, P.DONE).astype(jnp.int32),   # st
         jnp.where(active, rem0, _INF),                        # rem
@@ -284,20 +305,27 @@ def _simulate_sharded(arrs, n_steps: int, T: int, backend: str,
 def plan_schedule(configs, target_cs: int = 300):
     """Pick per-config ``dt`` and per-config planned step counts.
 
-    ``dt`` resolves the fastest load-bearing timescale (CS length and wake
-    latency — NCS shorter than the CS only shifts arrivals within a step);
-    each config's step count covers ~``target_cs`` critical sections for
-    that cell.  Returns ``(dt, steps)``: (C,) float32 timesteps and (C,)
-    int64 planned counts.  Counts are unclamped — :func:`simulate_batch`
-    runs ``steps.max()`` for the whole batch (or per bucket with
+    ``dt`` resolves the fastest load-bearing timescale (the *base* CS
+    length and wake latency — NCS shorter than the CS only shifts
+    arrivals within a step); each config's step count covers
+    ~``target_cs`` critical sections for that cell, with the mean CS/NCS
+    durations corrected for the config's workload row
+    (:func:`repro.core.policy.workload_mean_scale` — a bursty row's
+    effective arrival gap is ``duty + (1-duty)·burst`` times the base, so
+    an uncorrected horizon would under-sample it severalfold).  Returns
+    ``(dt, steps)``: (C,) float32 timesteps and (C,) int64 planned
+    counts.  Counts are unclamped — :func:`simulate_batch` runs
+    ``steps.max()`` for the whole batch (or per bucket with
     ``bucket_steps=True``), capped at :data:`MAX_STEPS` with a diagnostic
     naming the cells the cap under-samples.
     """
     dts, steps = [], []
     for c in configs:
-        cs_m = (c.cs[0] + c.cs[1]) / 2.0
-        ncs_m = (c.ncs[0] + c.ncs[1]) / 2.0
-        dt = min(max(cs_m, 1e-8), max(c.wake_latency, 1e-8)) / 6.0
+        cs_scale, ncs_scale = P.workload_mean_scale(c)
+        cs_b = (c.cs[0] + c.cs[1]) / 2.0
+        cs_m = cs_b * cs_scale
+        ncs_m = (c.ncs[0] + c.ncs[1]) / 2.0 * ncs_scale
+        dt = min(max(cs_b, 1e-8), max(c.wake_latency, 1e-8)) / 6.0
         per_cs = (max(cs_m, (cs_m + ncs_m) / min(c.threads, c.cores)) * 1.35
                   + 0.25 * c.wake_latency + 2.0 * dt)
         dts.append(dt)

@@ -26,6 +26,21 @@ Rows are configurations (grid-parallel); the thread axis stays whole in
 VMEM (T ≤ 128 lanes after padding — a few KB per row).  ``interpret=None``
 auto-detects: interpret mode on CPU-only hosts, compiled lowering when a
 GPU/TPU is attached (:func:`repro.kernels.pallas_compat.default_interpret`).
+
+The row-registry contract: all policy decisions inside these kernels —
+oracle families, waiting disciplines, workload hold-time models — come
+from the registries in :mod:`repro.core.policy` (``ORACLE_ROWS``,
+``DISCIPLINE_ROWS``, ``WORKLOAD_ROWS``), dispatched per config by integer
+columns with masked arithmetic selects.  Adding a row therefore never
+touches this module: the Pallas kernels apply the *ref* bodies per block,
+so a row lands in :mod:`repro.kernels.ref` once and both lowerings stay
+bit-identical by construction.  When changing kernel signatures, update
+the context tuples in lockstep: ``TRANSITION_CONTEXT``/``BLOCK_CONTEXT``
+(ref), ``_CONTEXT_DTYPES``/``_BLOCK_CTX_DTYPES`` (here) and
+``_PRM_FIELDS`` (:mod:`repro.core.xdes`).  Blocked-rollout invariants:
+``now2 = (step0 + s + 1) * dt`` with the step index carried in int32, and
+``spin_cpu`` accumulated inside the inner loop — both required for the
+blocked path to stay bit-identical to the per-step scan.
 """
 
 from __future__ import annotations
@@ -191,7 +206,7 @@ _THREAD_STATE_SPEC = (
     ("completed_pt", jnp.int32, 0),
 )
 
-#: dtypes of the 14 per-config context columns (TRANSITION_CONTEXT order).
+#: dtypes of the 19 per-config context columns (TRANSITION_CONTEXT order).
 _CONTEXT_DTYPES = (
     jnp.float32,                        # now2
     jnp.int32, jnp.int32,               # policy, threads
@@ -200,9 +215,11 @@ _CONTEXT_DTYPES = (
     jnp.int32, jnp.int32,               # k, sws_max
     jnp.float32,                        # spin_budget
     jnp.uint32, jnp.int32,              # seed, oracle
+    jnp.int32,                          # workload
+    jnp.float32, jnp.float32, jnp.float32, jnp.float32,  # wl_* knobs
 )
 
-_N_THREAD, _N_CONF, _N_CTX = 8, 8, 14
+_N_THREAD, _N_CONF, _N_CTX = 8, 8, len(_CONTEXT_DTYPES)
 
 
 def _transitions_kernel(*refs):
@@ -222,7 +239,8 @@ def lock_transitions_step(st, rem, wake_at, slept, spun, ctr, ticket,
                           nticket, completed, wake_count,
                           now2, policy, threads, dt, wake, cs_lo, cs_hi,
                           ncs_lo, ncs_hi, k, sws_max, spin_budget, seed,
-                          oracle, *, block_configs: int = 256,
+                          oracle, workload, wl_period, wl_duty, wl_burst,
+                          wl_spread, *, block_configs: int = 256,
                           interpret: bool | None = None):
     """Pallas-fused transition stage; signature mirrors
     :func:`repro.kernels.ref.lock_transitions_ref` and returns the same
@@ -248,7 +266,8 @@ def lock_transitions_step(st, rem, wake_at, slept, spun, ctr, ticket,
     ctx_in = [jnp.pad(v.astype(dtype), (0, pc))[:, None]
               for v, dtype in zip((now2, policy, threads, dt, wake, cs_lo,
                                    cs_hi, ncs_lo, ncs_hi, k, sws_max,
-                                   spin_budget, seed, oracle),
+                                   spin_budget, seed, oracle, workload,
+                                   wl_period, wl_duty, wl_burst, wl_spread),
                                   _CONTEXT_DTYPES)]
 
     mat = pl.BlockSpec((bc, Tp), lambda i: (i, 0))
@@ -309,7 +328,8 @@ def lock_sim_block(st, rem, wake_at, slept, spun, ctr, ticket,
                    completed, wake_count, spin_cpu,
                    step0, alpha, cores, has_budget,
                    policy, threads, dt, wake, cs_lo, cs_hi, ncs_lo, ncs_hi,
-                   k, sws_max, spin_budget, seed, oracle, *,
+                   k, sws_max, spin_budget, seed, oracle, workload,
+                   wl_period, wl_duty, wl_burst, wl_spread, *,
                    n_sub_steps: int, block_configs: int = 256,
                    interpret: bool | None = None):
     """Pallas time-blocked rollout kernel; signature mirrors
@@ -341,7 +361,9 @@ def lock_sim_block(st, rem, wake_at, slept, spun, ctr, ticket,
               for v, dtype in zip((step0, alpha, cores, has_budget, policy,
                                    threads, dt, wake, cs_lo, cs_hi, ncs_lo,
                                    ncs_hi, k, sws_max, spin_budget, seed,
-                                   oracle), _BLOCK_CTX_DTYPES)]
+                                   oracle, workload, wl_period, wl_duty,
+                                   wl_burst, wl_spread),
+                                  _BLOCK_CTX_DTYPES)]
 
     mat = pl.BlockSpec((bc, Tp), lambda i: (i, 0))
     colspec = pl.BlockSpec((bc, 1), lambda i: (i, 0))

@@ -136,7 +136,8 @@ TRANSITION_CONFIG_STATE = ("sws", "cnt", "ewma", "wuc", "permits", "nticket",
                            "completed", "wake_count")
 TRANSITION_CONTEXT = ("now2", "policy", "threads", "dt", "wake", "cs_lo",
                       "cs_hi", "ncs_lo", "ncs_hi", "k", "sws_max",
-                      "spin_budget", "seed", "oracle")
+                      "spin_budget", "seed", "oracle", "workload",
+                      "wl_period", "wl_duty", "wl_burst", "wl_spread")
 
 
 def counter_uniform(seed, tid, ctr):
@@ -153,12 +154,83 @@ def counter_uniform(seed, tid, ctr):
     return x.astype(jnp.float32) * jnp.float32(2.0 ** -32)
 
 
+# --------------------------------------------------------------------------
+# Workload rows (repro.core.policy.WORKLOAD_ROWS) — the hold-time stage of
+# the kernel boundary.  The helpers below precompute the per-thread
+# workload state (duty-cycle phase, OFF gate, heterogeneity scale) from
+# dedicated counter-RNG streams and feed policy.workload_hold, the masked
+# row dispatch.  The Pallas kernels inherit them by applying the same
+# transition/init bodies per block, so ref and Pallas lowerings of every
+# workload row are bit-identical by construction.
+# --------------------------------------------------------------------------
+def workload_state(seed, tid, now, wl_period, wl_duty, wl_spread):
+    """Per-(config, thread) workload state at time ``now``.
+
+    Returns ``(phase_u, gate_off, tscale)``: the thread's persistent
+    duty-cycle phase uniform, its 0/1 OFF-phase gate at ``now``, and its
+    persistent heterogeneity scale.  ``seed``/``now``/parameter columns
+    broadcast against ``tid``; the two uniforms come from salted counter
+    streams (policy.WL_PHASE_SALT / WL_SPREAD_SALT), so they never collide
+    with the event-draw stream and replay identically per cell."""
+    from repro.core import policy as P
+
+    zero = jnp.uint32(0)
+    phase_u = counter_uniform(seed ^ jnp.uint32(P.WL_PHASE_SALT), tid, zero)
+    spread_u = counter_uniform(seed ^ jnp.uint32(P.WL_SPREAD_SALT), tid,
+                               zero)
+    gate_off = P.workload_off_gate(now, phase_u, wl_period, wl_duty)
+    tscale = P.workload_thread_scale(spread_u, wl_spread)
+    return phase_u, gate_off, tscale
+
+
+def workload_draw(u, lo, hi, is_ncs, workload, gate_off, tscale, wl_burst):
+    """One workload-row hold-time draw from the uniform ``u``.
+
+    ``is_ncs`` is a static 0/1 flag (CS vs NCS/arrival-gap draw); the
+    exponential deviate for the jitter row is only materialized on the NCS
+    path.  The constant row's output is bit-identical to the plain uniform
+    draw ``lo + u * (hi - lo)``.
+
+    The deviate clamps ``u`` below 1: ``counter_uniform`` casts a uint32
+    to float32, which rounds the top ~2**8 values to exactly 1.0
+    (probability ~6e-8 per draw), and ``-log1p(-1.0)`` is +inf — which
+    the masked row dispatch would turn into NaN (``0.0 * inf``) for every
+    non-jitter config.  Clamping caps the deviate at ~16.6 means instead
+    and leaves ``base`` (hence the constant row) untouched."""
+    from repro.core import policy as P
+
+    base = lo + u * (hi - lo)
+    expd = ((0.5 * (lo + hi))
+            * (-jnp.log1p(-jnp.minimum(u, jnp.float32(1.0 - 2.0 ** -24))))
+            if is_ncs else base)
+    return P.workload_hold(workload, is_ncs, base, expd, gate_off, tscale,
+                           wl_burst)
+
+
+def workload_init_rem(seed, tid, ctr0, ncs_lo, ncs_hi, workload, wl_period,
+                      wl_duty, wl_burst, wl_spread, arrival_phase):
+    """The initial per-thread NCS draw (every thread starts in NCS),
+    workload-modulated at ``now = 0``, plus the seeded per-thread
+    arrival-order randomization: first arrivals are staggered by up to
+    ``arrival_phase`` mean-NCS lengths drawn from the phase stream, so
+    simultaneous arrivals no longer resolve in thread-id order.  With the
+    constant row and ``arrival_phase = 0`` this is bit-identical to the
+    plain uniform init draw."""
+    u0 = counter_uniform(seed, tid, ctr0)
+    phase_u, gate_off, tscale = workload_state(seed, tid, 0.0, wl_period,
+                                               wl_duty, wl_spread)
+    rem0 = workload_draw(u0, ncs_lo, ncs_hi, 1, workload, gate_off, tscale,
+                         wl_burst)
+    return rem0 + phase_u * arrival_phase * (0.5 * (ncs_lo + ncs_hi))
+
+
 def lock_transitions_ref(st, rem, wake_at, slept, spun, ctr, ticket,
                          completed_pt, sws, cnt, ewma, wuc, permits,
                          nticket, completed, wake_count,
                          now2, policy, threads, dt, wake, cs_lo, cs_hi,
                          ncs_lo, ncs_hi, k, sws_max, spin_budget, seed,
-                         oracle):
+                         oracle, workload, wl_period, wl_duty, wl_burst,
+                         wl_spread):
     """One transition step for a (C, T) block of configurations.
 
     Stages (same order as the event-driven DES resolves a timestep):
@@ -166,8 +238,11 @@ def lock_transitions_ref(st, rem, wake_at, slept, spun, ctr, ticket,
     arrivals.  Per-thread state is int32/f32/uint32 arrays of shape
     (C, T) (``slept``/``spun`` as 0/1 int32, ``ticket`` int32 with
     :data:`NO_TICKET` when not queued); per-config state and context are
-    (C,) vectors.  Returns the 16 updated state arrays in the canonical
-    order (:data:`TRANSITION_THREAD_STATE` + :data:`TRANSITION_CONFIG_STATE`).
+    (C,) vectors.  Every CS/NCS duration draw dispatches through the
+    workload rows (:func:`workload_draw`; constant rows reproduce the
+    plain uniform draw bit-identically).  Returns the 16 updated state
+    arrays in the canonical order (:data:`TRANSITION_THREAD_STATE` +
+    :data:`TRANSITION_CONFIG_STATE`).
     """
     from repro.core import policy as P
 
@@ -193,8 +268,14 @@ def lock_transitions_ref(st, rem, wake_at, slept, spun, ctr, ticket,
         return jnp.sum((active & (s >= P.CS) & (s <= P.WAKING))
                        .astype(jnp.int32), axis=-1)
 
-    def draw_into(mask, lo, hi, c):
-        val = col(lo) + counter_uniform(col(seed), tidb, c) * col(hi - lo)
+    wl_phase_u, wl_gate_off, wl_tscale = workload_state(
+        col(seed), tidb, col(now2), col(wl_period), col(wl_duty),
+        col(wl_spread))
+
+    def draw_into(mask, lo, hi, c, is_ncs=0):
+        u = counter_uniform(col(seed), tidb, c)
+        val = workload_draw(u, col(lo), col(hi), is_ncs, col(workload),
+                            wl_gate_off, wl_tscale, col(wl_burst))
         return val, jnp.where(mask, c + jnp.uint32(1), c)
 
     def park(mask, st, wake_at, permits, wake_count, slept, rem):
@@ -260,7 +341,7 @@ def lock_transitions_ref(st, rem, wake_at, slept, spun, ctr, ticket,
     do_latch = rel & (win_f > 0)
     r_wuc = jnp.where(do_latch & (wuc >= 0), wuc, -1)      # R2-R6
     wuc = jnp.where(do_latch, jnp.where(wuc >= 0, 0, wuc + 1), wuc)  # R4/R7
-    ncs_val, ctr = draw_into(holder_done, ncs_lo, ncs_hi, ctr)
+    ncs_val, ctr = draw_into(holder_done, ncs_lo, ncs_hi, ctr, is_ncs=1)
     rem = jnp.where(holder_done, ncs_val, rem)
     st = jnp.where(holder_done, P.NCS, st)                 # R9-R10
     # handoff: grant priority is the arrival ticket for FIFO rows, the
@@ -347,7 +428,8 @@ def lock_transitions_ref(st, rem, wake_at, slept, spun, ctr, ticket,
 BLOCK_CONTEXT = ("step0", "alpha", "cores", "has_budget",
                  "policy", "threads", "dt", "wake", "cs_lo", "cs_hi",
                  "ncs_lo", "ncs_hi", "k", "sws_max", "spin_budget", "seed",
-                 "oracle")
+                 "oracle", "workload", "wl_period", "wl_duty", "wl_burst",
+                 "wl_spread")
 
 
 def lock_sim_block_ref(st, rem, wake_at, slept, spun, ctr, ticket,
@@ -356,7 +438,8 @@ def lock_sim_block_ref(st, rem, wake_at, slept, spun, ctr, ticket,
                        step0, alpha, cores, has_budget,
                        policy, threads, dt, wake, cs_lo, cs_hi,
                        ncs_lo, ncs_hi, k, sws_max, spin_budget, seed,
-                       oracle, *, n_sub_steps: int):
+                       oracle, workload, wl_period, wl_duty, wl_burst,
+                       wl_spread, *, n_sub_steps: int):
     """``n_sub_steps`` fused timesteps for a (C, T) block of configurations.
 
     Each sub-step is exactly one per-step iteration of the legacy rollout
@@ -384,7 +467,9 @@ def lock_sim_block_ref(st, rem, wake_at, slept, spun, ctr, ticket,
         state = lock_transitions_ref(st_s, rem_s, *state[2:], now2, policy,
                                      threads, dt, wake, cs_lo, cs_hi,
                                      ncs_lo, ncs_hi, k, sws_max,
-                                     spin_budget, seed, oracle)
+                                     spin_budget, seed, oracle, workload,
+                                     wl_period, wl_duty, wl_burst,
+                                     wl_spread)
         return (*state, cpu + burn)
 
     carry = (st, rem, wake_at, slept, spun, ctr, ticket, completed_pt,

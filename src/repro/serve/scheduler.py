@@ -217,6 +217,13 @@ class SchedScenario:
     request regenerates after up to ``think_s`` (the NCS), and promoting a
     cold request costs ``prefill_s`` (the OS wake-up latency).  Standby
     residency maps to spin CPU; cold promotions map to wake-ups.
+
+    ``workload`` selects a hold-time row from
+    :data:`repro.core.policy.WORKLOAD_ROWS` on the same schema: ``bursty``
+    models diurnal/batchy admission (each request's think time stretches
+    ``wl_burst`` x outside its ON window — traffic arrives in waves),
+    ``hetero`` models mixed decode lengths (chat next to long-form
+    generation), ``jitter`` models Poisson request arrivals.
     """
 
     slots: int
@@ -225,6 +232,11 @@ class SchedScenario:
     think_s: float = 100e-3
     prefill_s: float = 8e-3
     seed: int = 0
+    workload: str = "constant"
+    wl_period_s: float = 0.0      # bursty cycle length; 0 -> auto-scaled
+    wl_duty: float = 0.25
+    wl_burst: float = 8.0
+    wl_spread: float = 4.0
 
     def to_sim_config(self, policy: str) -> SimConfig:
         """Encode this scenario under an admission policy as a SimConfig
@@ -232,32 +244,47 @@ class SchedScenario:
         if policy not in SCHED_POLICY_LOCKS:
             raise ValueError(f"unknown admission policy {policy!r}; "
                              f"options: {sorted(SCHED_POLICY_LOCKS)}")
+        period = self.wl_period_s or 8.0 * (self.decode_s + self.think_s)
         return SimConfig(SCHED_POLICY_LOCKS[policy],
                          threads=self.requests, cores=self.slots,
                          cs=(0.0, self.decode_s), ncs=(0.0, self.think_s),
                          wake_latency=self.prefill_s, alpha=0.0,
-                         seed=self.seed)
+                         seed=self.seed, workload=self.workload,
+                         wl_period=period, wl_duty=self.wl_duty,
+                         wl_burst=self.wl_burst, wl_spread=self.wl_spread)
 
 
 def sample_sched_scenarios(n_scenarios: int, seed: int = 0,
-                           slots=(4, 8, 16)) -> list[SchedScenario]:
+                           slots=(4, 8, 16),
+                           workload: str = "constant"
+                           ) -> list[SchedScenario]:
     """Random serving workloads: under- to over-subscribed slot pools,
     decode/think/prefill times log-uniform across serving-realistic
     scales.  Stable draw order (the sweep-seed contract of
-    :func:`repro.configs.catalog.sample_scenarios`)."""
+    :func:`repro.configs.catalog.sample_scenarios`): the base stream is
+    untouched by ``workload``, so e.g. the bursty-admission sweep sees the
+    SAME machines scenario-by-scenario as the constant one — the workload
+    knobs come from a separate salted stream."""
     import numpy as np
 
     rng = np.random.default_rng(seed)
+    wl_rng = np.random.default_rng(seed ^ 0x9E3779B9)
     out = []
     for i in range(n_scenarios):
         s = int(rng.choice(slots))
+        kw = {}
+        if workload == "bursty":
+            kw = dict(wl_duty=float(wl_rng.uniform(0.15, 0.5)),
+                      wl_burst=float(wl_rng.uniform(4.0, 16.0)))
+        elif workload == "hetero":
+            kw = dict(wl_spread=float(wl_rng.uniform(2.0, 8.0)))
         out.append(SchedScenario(
             slots=s,
             requests=int(rng.integers(s, 4 * s + 1)),
             decode_s=float(np.exp(rng.uniform(np.log(5e-3), np.log(2e-1)))),
             think_s=float(np.exp(rng.uniform(np.log(1e-2), np.log(5e-1)))),
             prefill_s=float(np.exp(rng.uniform(np.log(2e-3), np.log(5e-2)))),
-            seed=i))
+            seed=i, workload=workload, **kw))
     return out
 
 

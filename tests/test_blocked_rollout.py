@@ -99,6 +99,11 @@ def test_block_ref_matches_per_step_composition():
         np.full(C, 2e-6, np.float32),                           # spin_budget
         rng.integers(0, 2**31, C).astype(np.uint32),            # seed
         rng.integers(0, 4, C).astype(np.int32),                 # oracle
+        rng.integers(0, 4, C).astype(np.int32),                 # workload
+        rng.uniform(1e-5, 1e-3, C).astype(np.float32),          # wl_period
+        rng.uniform(0.1, 0.9, C).astype(np.float32),            # wl_duty
+        rng.uniform(1.0, 16.0, C).astype(np.float32),           # wl_burst
+        rng.uniform(1.0, 8.0, C).astype(np.float32),            # wl_spread
     )
     dt = ctx[2]
     B, step0 = 5, 11

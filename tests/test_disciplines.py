@@ -120,6 +120,11 @@ def _one_step_state(policy_id, tickets, T=4):
         spin_budget=jnp.full((C,), 2e-6, jnp.float32),
         seed=jnp.zeros((C,), jnp.uint32),
         oracle=jnp.zeros((C,), jnp.int32),
+        workload=jnp.zeros((C,), jnp.int32),
+        wl_period=jnp.full((C,), 1e-4, jnp.float32),
+        wl_duty=jnp.full((C,), 0.25, jnp.float32),
+        wl_burst=jnp.full((C,), 8.0, jnp.float32),
+        wl_spread=jnp.full((C,), 4.0, jnp.float32),
     )
     return args
 
@@ -234,6 +239,11 @@ def test_transitions_kernel_matches_ref_on_random_state():
         np.full(C, 2e-6, np.float32),                           # spin_budget
         rng.integers(0, 2**31, C).astype(np.uint32),            # seed
         rng.integers(0, 4, C).astype(np.int32),                 # oracle
+        rng.integers(0, 4, C).astype(np.int32),                 # workload
+        rng.uniform(1e-5, 1e-3, C).astype(np.float32),          # wl_period
+        rng.uniform(0.1, 0.9, C).astype(np.float32),            # wl_duty
+        rng.uniform(1.0, 16.0, C).astype(np.float32),           # wl_burst
+        rng.uniform(1.0, 8.0, C).astype(np.float32),            # wl_spread
     )
     ref = lock_transitions_ref(*args)
     pal = lock_transitions_step(*args, block_configs=16)

@@ -1,0 +1,366 @@
+"""Workload-row registry: registry/encoding semantics, randomized
+xdes-vs-DES parity per workload row, ref-vs-Pallas bit-identity on the
+workload-aware kernel body (per-step and blocked), seeded determinism of
+the arrival-order randomization (incl. under sharding), and the workload
+sweep / serve-scenario plumbing."""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import policy as P
+from repro.core import xdes
+from repro.core.des import simulate
+from repro.core.policy import SimConfig
+
+SHORT = (0.0, 3.7e-6)
+WAKE = 8e-6
+WORKLOADS = ["constant", "bursty", "hetero", "jitter"]
+
+
+# --------------------------------------------------------------------------
+# Registry + encoding
+# --------------------------------------------------------------------------
+def test_workload_registry():
+    assert sorted(P.WORKLOAD_IDS) == sorted(WORKLOADS)
+    assert all(P.WORKLOAD_ROWS[n].wid == i
+               for n, i in P.WORKLOAD_IDS.items())
+    assert P.WORKLOAD_ROWS["bursty"].time_varying == 1
+    assert P.WORKLOAD_ROWS["constant"].time_varying == 0
+
+
+def test_workload_hold_scalar_semantics():
+    # constant: the base draw, untouched
+    assert P.workload_hold(P.WL_CONSTANT, 1, 2.0, 9.0, 1.0, 3.0, 8.0) == 2.0
+    # bursty: OFF-phase NCS stretched by burst, CS and ON-phase untouched
+    assert P.workload_hold(P.WL_BURSTY, 1, 2.0, 9.0, 1.0, 3.0, 8.0) == 16.0
+    assert P.workload_hold(P.WL_BURSTY, 1, 2.0, 9.0, 0.0, 3.0, 8.0) == 2.0
+    assert P.workload_hold(P.WL_BURSTY, 0, 2.0, 9.0, 1.0, 3.0, 8.0) == 2.0
+    # hetero: both kinds scaled by the thread factor
+    assert P.workload_hold(P.WL_HETERO, 0, 2.0, 9.0, 1.0, 3.0, 8.0) == 6.0
+    # jitter: NCS takes the exponential deviate, CS the uniform
+    assert P.workload_hold(P.WL_JITTER, 1, 2.0, 9.0, 1.0, 3.0, 8.0) == 9.0
+    assert P.workload_hold(P.WL_JITTER, 0, 2.0, 9.0, 1.0, 3.0, 8.0) == 2.0
+
+
+def test_workload_off_gate_and_scale():
+    # duty 0.25: first quarter of the cycle is ON
+    assert P.workload_off_gate(0.0, 0.1, 1.0, 0.25) == 0.0
+    assert P.workload_off_gate(0.0, 0.6, 1.0, 0.25) == 1.0
+    assert P.workload_off_gate(0.5, 0.6, 1.0, 0.25) == 0.0   # wrapped
+    s = P.workload_thread_scale(0.0, 4.0)
+    assert s == pytest.approx(0.25)
+    assert P.workload_thread_scale(1.0, 4.0) == pytest.approx(4.0)
+    assert P.workload_thread_scale(0.5, 4.0) == pytest.approx(1.0)
+
+
+def test_sim_config_validates_and_encodes_workload():
+    cfgs = [SimConfig("mutable", threads=2, cores=2, cs=SHORT, ncs=SHORT,
+                      workload=w, arrival_phase=0.5) for w in WORKLOADS]
+    arrs = P.encode_configs(cfgs)
+    assert arrs["workload"].tolist() == [P.WORKLOAD_IDS[w]
+                                         for w in WORKLOADS]
+    assert arrs["arrival_phase"].tolist() == [np.float32(0.5)] * 4
+    with pytest.raises(ValueError):
+        SimConfig("mutable", threads=2, cores=2, cs=SHORT, ncs=SHORT,
+                  workload="nope")
+    with pytest.raises(ValueError):
+        SimConfig("mutable", threads=2, cores=2, cs=SHORT, ncs=SHORT,
+                  wl_duty=0.0)
+    with pytest.raises(ValueError):
+        SimConfig("mutable", threads=2, cores=2, cs=SHORT, ncs=SHORT,
+                  arrival_phase=-1.0)
+
+
+def test_counter_uniform_scalar_matches_kernel_hash():
+    import jax.numpy as jnp
+
+    from repro.kernels.ref import counter_uniform
+
+    for seed in (0, 7, 123456, 2**31 + 5):
+        for tid in (0, 1, 17):
+            a = P.counter_uniform_scalar(seed ^ P.WL_PHASE_SALT, tid)
+            b = float(counter_uniform(
+                jnp.uint32(seed ^ P.WL_PHASE_SALT), jnp.int32(tid),
+                jnp.uint32(0)))
+            assert a == pytest.approx(b, abs=1e-7)
+
+
+def test_workload_draw_finite_at_u_one():
+    """counter_uniform's float32 cast rounds the top uint32 values to
+    u == 1.0 (~6e-8 per draw); the exponential deviate must clamp so no
+    row's dispatch sees inf/NaN (0.0 * inf poisons the masked select)."""
+    import jax.numpy as jnp
+
+    from repro.kernels.ref import workload_draw
+
+    f = jnp.float32
+    for wid in range(len(P.WORKLOAD_ROWS)):
+        for is_ncs in (0, 1):
+            v = workload_draw(f(1.0), f(0.0), f(3.7e-6), is_ncs,
+                              jnp.int32(wid), f(1.0), f(2.0), f(8.0))
+            assert np.isfinite(float(v)), (wid, is_ncs, float(v))
+
+
+def test_plan_schedule_corrects_horizon_for_workload():
+    """A bursty row's effective arrival gap is duty + (1-duty)*burst of
+    the base (6.25x at the defaults), so the planner must size its
+    horizon accordingly — and leave constant plans bit-identical."""
+    base = SimConfig("ttas", threads=2, cores=8, cs=SHORT, ncs=SHORT,
+                     wake_latency=WAKE)
+    burst = SimConfig("ttas", threads=2, cores=8, cs=SHORT, ncs=SHORT,
+                      wake_latency=WAKE, workload="bursty")
+    het = SimConfig("ttas", threads=2, cores=8, cs=SHORT, ncs=SHORT,
+                    wake_latency=WAKE, workload="hetero")
+    dt, steps = xdes.plan_schedule([base, burst, het], 100)
+    assert dt[0] == dt[1] == dt[2]          # dt resolves the BASE scale
+    assert steps[1] > 2 * steps[0]          # bursty horizon stretched
+    assert steps[2] > steps[0]              # hetero mean scale ~1.35
+    # and the corrected horizon actually reaches target_cs
+    res = xdes.simulate_batch([burst], target_cs=120)
+    assert res.completed[0] >= 120
+
+
+# --------------------------------------------------------------------------
+# Behaviour: rows actually reshape the workload
+# --------------------------------------------------------------------------
+def test_workload_rows_change_trajectories():
+    base = SimConfig("mutable", threads=6, cores=4, cs=SHORT, ncs=SHORT,
+                     wake_latency=WAKE, seed=3)
+    rc = xdes.simulate_batch([base], n_steps=400)
+    for w in ("bursty", "hetero", "jitter"):
+        cw = SimConfig("mutable", threads=6, cores=4, cs=SHORT, ncs=SHORT,
+                       wake_latency=WAKE, seed=3, workload=w,
+                       wl_period=5e-5)
+        rw = xdes.simulate_batch([cw], n_steps=400)
+        assert (rw.completed[0] != rc.completed[0]
+                or not np.array_equal(rw.completed_per_thread,
+                                      rc.completed_per_thread)), w
+
+
+def test_hetero_threads_complete_unevenly():
+    """Per-thread scales spread the completed-CS counts far beyond the
+    constant row's under a fair (FIFO) lock — heterogeneity is visible in
+    who gets work done, not just in totals."""
+    mk = lambda w: SimConfig("fifo", threads=8, cores=8, cs=SHORT,
+                             ncs=SHORT, wake_latency=WAKE, seed=2,
+                             workload=w, wl_spread=8.0)
+    rc = xdes.simulate_batch([mk("constant")], target_cs=300)
+    rh = xdes.simulate_batch([mk("hetero")], target_cs=300)
+    assert rh.fairness_spread(0) > 3 * max(rc.fairness_spread(0), 1)
+
+
+# --------------------------------------------------------------------------
+# xdes vs DES parity per workload row (randomized shapes)
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("workload", WORKLOADS)
+def test_xdes_vs_des_parity_per_row(workload):
+    """Seed-averaged throughput band per (workload, lock) cell: single
+    realizations diverge under heterogeneity (the DES hands off to a
+    random spinner, xdes to the lowest tid — WHO gets served drives the
+    total when thread speeds differ), so the pin is the 3-seed mean.  The
+    xdes side runs every (lock, seed) cell of the row in ONE call."""
+    rng = np.random.default_rng(P.WORKLOAD_IDS[workload])
+    locks = ("ttas", "mutable", "sleep")
+    seeds = (0, 1, 2)
+    cells = [(lock, int(rng.integers(4, 13)), int(rng.integers(4, 13)))
+             for lock in locks]
+    cfgs = [SimConfig(lock, threads=tc, cores=cores, cs=SHORT, ncs=SHORT,
+                      wake_latency=WAKE, seed=s, workload=workload,
+                      wl_period=8e-5)
+            for (lock, tc, cores) in cells for s in seeds]
+    x = xdes.simulate_batch(cfgs, target_cs=150)
+    xthr = x.throughput.reshape(len(cells), len(seeds)).mean(axis=1)
+    for i, (lock, tc, cores) in enumerate(cells):
+        dthr = np.mean([simulate(
+            lock, threads=tc, cores=cores, cs=SHORT, ncs=SHORT,
+            wake_latency=WAKE, target_cs=800, seed=s,
+            **cfgs[i * len(seeds)].workload_kwargs()).throughput
+            for s in seeds])
+        assert 0.7 * dthr < xthr[i] < 1.4 * dthr, (
+            workload, lock, tc, cores, xthr[i], dthr)
+
+
+# --------------------------------------------------------------------------
+# ref vs Pallas bit-identity on the workload-aware kernel body
+# --------------------------------------------------------------------------
+def _workload_batch(seed=0):
+    """Every workload row x several disciplines/oracles, random shapes —
+    the randomized parity surface for the new kernel body."""
+    rng = np.random.default_rng(seed)
+    cfgs = []
+    for w in WORKLOADS:
+        for lock, oracle in (("mutable", "paper"), ("mutable", "history"),
+                             ("ttas", "paper"), ("fifo", "paper"),
+                             ("sleep", "paper"), ("adaptive", "paper")):
+            cfgs.append(SimConfig(
+                lock, threads=int(rng.integers(2, 10)),
+                cores=int(rng.integers(2, 10)), cs=SHORT, ncs=SHORT,
+                wake_latency=WAKE, seed=int(rng.integers(0, 1000)),
+                oracle=oracle, workload=w, wl_period=5e-5,
+                wl_duty=float(rng.uniform(0.1, 0.9)),
+                wl_burst=float(rng.uniform(1, 12)),
+                wl_spread=float(rng.uniform(1, 6)),
+                arrival_phase=float(rng.uniform(0, 2))))
+    return cfgs
+
+
+def _assert_results_equal(a, b, msg=""):
+    np.testing.assert_array_equal(a.completed, b.completed, err_msg=msg)
+    np.testing.assert_array_equal(a.completed_per_thread,
+                                  b.completed_per_thread, err_msg=msg)
+    np.testing.assert_array_equal(a.wake_count, b.wake_count, err_msg=msg)
+    np.testing.assert_array_equal(a.final_sws, b.final_sws, err_msg=msg)
+    np.testing.assert_array_equal(a.spin_cpu, b.spin_cpu, err_msg=msg)
+
+
+def test_workload_ref_vs_pallas_per_step():
+    cfgs = _workload_batch(seed=11)
+    ref = xdes.simulate_batch(cfgs, n_steps=260, rollout="scan",
+                              backend="ref")
+    pal = xdes.simulate_batch(cfgs, n_steps=260, rollout="scan",
+                              backend="pallas")
+    _assert_results_equal(ref, pal, "per-step")
+
+
+@pytest.mark.parametrize("block_steps", [1, 32])
+def test_workload_ref_vs_pallas_blocked(block_steps):
+    cfgs = _workload_batch(seed=13)
+    ref = xdes.simulate_batch(cfgs, n_steps=260, rollout="blocked",
+                              block_steps=block_steps, backend="ref")
+    pal = xdes.simulate_batch(cfgs, n_steps=260, rollout="blocked",
+                              block_steps=block_steps, backend="pallas")
+    _assert_results_equal(ref, pal, f"blocked B={block_steps}")
+    scan = xdes.simulate_batch(cfgs, n_steps=260, rollout="scan",
+                               backend="ref")
+    _assert_results_equal(ref, scan, f"blocked==scan B={block_steps}")
+
+
+# --------------------------------------------------------------------------
+# Arrival-order randomization: seeded, deterministic, effective
+# --------------------------------------------------------------------------
+def test_arrival_phase_seeded_determinism():
+    mk = lambda seed: SimConfig("ttas", threads=6, cores=4, cs=SHORT,
+                                ncs=SHORT, wake_latency=WAKE, seed=seed,
+                                arrival_phase=2.0)
+    a = xdes.simulate_batch([mk(1)], n_steps=300)
+    b = xdes.simulate_batch([mk(1)], n_steps=300)
+    np.testing.assert_array_equal(a.completed_per_thread,
+                                  b.completed_per_thread)
+    # a different seed realizes a different arrival order
+    c = xdes.simulate_batch([mk(2)], n_steps=300)
+    assert not np.array_equal(a.completed_per_thread,
+                              c.completed_per_thread)
+    # and the offset actually changes the tid-order tie-break
+    z = xdes.simulate_batch(
+        [SimConfig("ttas", threads=6, cores=4, cs=SHORT, ncs=SHORT,
+                   wake_latency=WAKE, seed=1)], n_steps=300)
+    assert not np.array_equal(a.completed_per_thread,
+                              z.completed_per_thread)
+
+
+_SHARD_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+import numpy as np
+import jax
+from repro.core import xdes
+from repro.core.policy import SimConfig
+
+assert len(jax.devices()) == 4
+SHORT = (0.0, 3.7e-6)
+cfgs = [SimConfig(l, threads=6, cores=4, cs=SHORT, ncs=SHORT,
+                  wake_latency=8e-6, seed=i, workload=w, wl_period=5e-5,
+                  arrival_phase=1.5)
+        for i, (l, w) in enumerate(
+            [("ttas", "bursty"), ("mutable", "hetero"),
+             ("sleep", "jitter"), ("fifo", "bursty"),
+             ("adaptive", "jitter"), ("mutable", "constant")])]
+r1 = xdes.simulate_batch(cfgs, n_steps=300, shard=False)
+r2 = xdes.simulate_batch(cfgs, n_steps=300, shard=True)  # pad 6 -> 8
+for f in ("completed", "final_sws", "wake_count", "completed_per_thread",
+          "spin_cpu"):
+    np.testing.assert_array_equal(getattr(r1, f), getattr(r2, f), err_msg=f)
+r3 = xdes.simulate_batch(cfgs, n_steps=300, shard=True)
+np.testing.assert_array_equal(r2.completed_per_thread,
+                              r3.completed_per_thread)
+print("WORKLOAD-SHARD-OK", r1.completed.tolist())
+"""
+
+
+def test_workload_arrival_randomization_deterministic_under_sharding():
+    """Workload rows + arrival_phase under a 4-device mesh: sharded ==
+    unsharded bit-for-bit and repeat runs identical (the seeded-
+    determinism contract).  Subprocess because the device count locks at
+    first backend init (same pattern as test_disciplines.py)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        filter(None, ["src", env.get("PYTHONPATH")]))
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", _SHARD_SCRIPT],
+                          capture_output=True, text=True, timeout=600,
+                          env=env)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "WORKLOAD-SHARD-OK" in proc.stdout
+
+
+# --------------------------------------------------------------------------
+# Sweep + serve plumbing
+# --------------------------------------------------------------------------
+def test_workload_sweep_catalog_shape():
+    from repro.configs.catalog import (LOCK_WORKLOADS,
+                                       lock_discipline_variants,
+                                       lock_workload_sweep,
+                                       lock_workload_variants)
+
+    disc = lock_discipline_variants()
+    variants = lock_workload_variants()
+    assert len(variants) == len(LOCK_WORKLOADS) * len(disc)
+    cfgs = lock_workload_sweep(n_scenarios=3)
+    assert len(cfgs) == 3 * len(variants)
+    B = len(variants)
+    for s in range(3):
+        block = cfgs[s * B:(s + 1) * B]
+        # scenario-major: every row of the block shares its machine
+        assert len({(c.threads, c.cores, c.cs, c.wake_latency)
+                    for c in block}) == 1
+        # workload-major within the block, disciplines minor
+        assert [c.workload for c in block] == [
+            w for w in LOCK_WORKLOADS for _ in disc]
+        assert [(c.lock, c.oracle) for c in block[:len(disc)]] == [
+            (v["lock"], v["oracle"]) for v in disc]
+        # the bursty cycle is scenario-scaled
+        assert block[0].wl_period == pytest.approx(
+            16.0 * (block[0].cs[1] + block[0].ncs[1]))
+
+
+def test_sched_scenario_workload_rows():
+    from repro.serve import SchedScenario, sample_sched_scenarios
+
+    sc = SchedScenario(slots=8, requests=20, decode_s=0.05, think_s=0.1,
+                       prefill_s=0.01, seed=3, workload="bursty")
+    c = sc.to_sim_config("mutable")
+    assert c.workload == "bursty"
+    assert c.wl_period == pytest.approx(8.0 * (0.05 + 0.1))
+    # bursty sampling sees the same machines as the constant sweep
+    base = sample_sched_scenarios(6)
+    burst = sample_sched_scenarios(6, workload="bursty")
+    for a, b in zip(base, burst):
+        assert (a.slots, a.requests, a.decode_s, a.think_s) == \
+            (b.slots, b.requests, b.decode_s, b.think_s)
+        assert b.workload == "bursty"
+
+
+def test_workload_grid_smoke():
+    from benchmarks.sweep import workload_grid
+
+    out = workload_grid(n_scenarios=4, target_cs=25, verbose=False)
+    assert out["meta"]["n_configs"] == 4 * 4 * 9
+    assert set(out["workloads"]) == set(WORKLOADS)
+    for w, rows in out["workloads"].items():
+        assert sum(r["wins"] for r in rows.values()) == 4, w
+    assert all(0 < c["win_share"] <= 1 for c in out["phase"])
