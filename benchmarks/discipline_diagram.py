@@ -110,6 +110,18 @@ def main(argv=None) -> dict:
     ap.add_argument("--no-shard", action="store_true",
                     help="disable the shard_map path even on multi-device "
                          "hosts")
+    ap.add_argument("--stream", choices=("auto", "on", "off"),
+                    default="auto",
+                    help="run the grid chunk-by-chunk under a memory "
+                         "budget (auto: stream at >= %d configs)"
+                         % sweep.STREAM_AUTO)
+    ap.add_argument("--mem-mb", type=float, default=None,
+                    help="streaming memory budget in MiB (default: "
+                         "REPRO_SWEEP_MEM_MB env, else device-derived)")
+    ap.add_argument("--refine", action="store_true",
+                    help="also run the coarse->dense phase-boundary "
+                         "refinement lattice (sweep.refine_grid) and "
+                         "attach it under result['refine']")
     ap.add_argument("--out", default="reports/discipline_diagram.json")
     args = ap.parse_args(argv)
 
@@ -122,7 +134,16 @@ def main(argv=None) -> dict:
         n_scenarios=n_scenarios,
         target_cs=args.target_cs or (40 if args.quick else 150),
         backend=args.backend, seed=args.seed,
-        shard=False if args.no_shard else None)
+        shard=False if args.no_shard else None,
+        stream={"auto": None, "on": True, "off": False}[args.stream],
+        mem_mb=args.mem_mb)
+    if args.refine:
+        result["refine"] = sweep.refine_grid(
+            nx=8 if args.quick else 16, ny=6 if args.quick else 12,
+            factor=2 if args.quick else 3,
+            target_cs=args.target_cs or (40 if args.quick else 150),
+            backend=args.backend, seed=args.seed,
+            shard=False if args.no_shard else None, mem_mb=args.mem_mb)
 
     out_dir = os.path.dirname(args.out) or "."
     os.makedirs(out_dir, exist_ok=True)

@@ -101,18 +101,29 @@ def main(argv=None) -> dict:
                     help="default: 150 (40 with --quick)")
     ap.add_argument("--backend", choices=("ref", "pallas"), default="ref")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--stream", choices=("auto", "on", "off"),
+                    default="auto",
+                    help="run the grid chunk-by-chunk under a memory "
+                         "budget (auto: stream at >= %d configs)"
+                         % sweep.STREAM_AUTO)
+    ap.add_argument("--mem-mb", type=float, default=None,
+                    help="streaming memory budget in MiB (default: "
+                         "REPRO_SWEEP_MEM_MB env, else device-derived)")
     ap.add_argument("--out", default="reports/oracle_ablation.json")
     args = ap.parse_args(argv)
 
+    stream = {"auto": None, "on": True, "off": False}[args.stream]
     if args.quick:
         result = sweep.oracle_grid(n_scenarios=args.scenarios or 24,
                                    target_cs=args.target_cs or 40,
                                    backend=args.backend, seed=args.seed,
-                                   ks=(3, 10), sws_maxes=(None,))
+                                   ks=(3, 10), sws_maxes=(None,),
+                                   stream=stream, mem_mb=args.mem_mb)
     else:
         result = sweep.oracle_grid(n_scenarios=args.scenarios or 200,
                                    target_cs=args.target_cs or 150,
-                                   backend=args.backend, seed=args.seed)
+                                   backend=args.backend, seed=args.seed,
+                                   stream=stream, mem_mb=args.mem_mb)
 
     # all three artifacts (JSON + CSV + MD) land in the same directory
     out_dir = os.path.dirname(args.out) or "."

@@ -1,7 +1,7 @@
 """Wall-clock microbenchmark of the batched lock simulator — the tracked
 perf trajectory of the xdes engine.
 
-Two suites, every cell timed twice (cold = compile + run, steady = the
+Four suites, sim cells timed twice (cold = compile + run, steady = the
 jit-cached second call; throughputs are computed from the steady time):
 
 * ``dispatch`` — a pinned-horizon 1k-config batch (10k too with
@@ -15,13 +15,25 @@ jit-cached second call; throughputs are computed from the steady time):
   horizon: the legacy path (scan, full horizon, one global scan length)
   vs the shipped fast path (blocked + early exit + ``bucket_steps``, so
   a 100µs-CS cell no longer pins a µs-spin cell to its scan length).
+* ``encode`` — packing 100k configs into engine columns: the per-config
+  ``encode_configs_legacy`` lambda table vs the array-native
+  ``encode_configs`` column path (the streamed sweeps' feed).
+* ``stream`` — the end-to-end streamed discipline sweep
+  (:func:`repro.core.stream.sweep_stream`, bucketed, memory-budgeted):
+  20k configs in quick mode, 20k + the recorded 100k run in full mode,
+  with peak RSS (``ru_maxrss``) alongside the chunk plan.
 
 Artifact: ``BENCH_xdes.json`` at the repo root is the COMMITTED perf
-baseline; CI re-measures and fails on a >2x throughput regression via
-``--check``.  Ad-hoc runs default to ``reports/bench_xdes.json`` so a
-bare invocation can't clobber the baseline — refresh it deliberately
-with ``--out BENCH_xdes.json`` (full mode, quiet machine).  How to read
-it: docs/performance.md.
+baseline — schema 2: ``{"schema": 2, "entries": {<env>: result}}`` keyed
+by ``<platform>/<n_devices>dev/<interpret|compiled>`` so baselines from
+different machines coexist and CI compares against ITS OWN environment's
+entry (``--check`` passes with a note when the env has no entry yet).
+Writes merge into the existing file under the current env key; legacy
+single-result files are migrated under their own recorded env.  Ad-hoc
+runs default to ``reports/bench_xdes.json`` so a bare invocation can't
+clobber the baseline — refresh it deliberately with
+``--out BENCH_xdes.json`` (full mode, quiet machine).  How to read it:
+docs/performance.md.
 
     PYTHONPATH=src python -m benchmarks.perf_bench [--quick] [--check]
 """
@@ -128,6 +140,104 @@ def sweep_suite(n_scenarios: int, target_cs: int,
     return cells
 
 
+def encode_suite(n_configs: int = 100_000, verbose: bool = True) -> dict:
+    """Config packing: per-config lambda table vs array-native columns.
+
+    Both paths pack the SAME sweep (the column twin is bit-equal to the
+    list pack, asserted here) — the timed step is encode only; building
+    the 100k ``SimConfig`` list for the legacy path is setup, not
+    payload.  Best-of-3 wall times: pure numpy, no jit warmup needed."""
+    from repro.configs.catalog import (lock_scenario_columns,
+                                       lock_scenario_sweep)
+    from repro.core import policy
+
+    n_scenarios = n_configs // 5
+    configs = lock_scenario_sweep(n_scenarios=n_scenarios)
+    cols = lock_scenario_columns(n_scenarios=n_scenarios)
+
+    def best_of(fn, n=3):
+        best, res = float("inf"), None
+        for _ in range(n):
+            t0 = time.perf_counter()
+            res = fn()
+            best = min(best, time.perf_counter() - t0)
+        return best, res
+
+    legacy_s, legacy = best_of(lambda: policy.encode_configs_legacy(configs))
+    column_s, packed = best_of(lambda: policy.encode_configs(cols))
+    for k in packed:
+        assert np.array_equal(packed[k], legacy[k]), f"encode mismatch: {k}"
+    cells = {
+        "n_configs": len(configs),
+        "legacy_s": round(legacy_s, 4), "columns_s": round(column_s, 4),
+        "legacy_cfg_per_s": round(len(configs) / legacy_s, 1),
+        "columns_cfg_per_s": round(len(configs) / column_s, 1),
+        "speedup": round(legacy_s / column_s, 1),
+    }
+    if verbose:
+        print(f"  legacy {_fmt_s(legacy_s):>8}  columns "
+              f"{_fmt_s(column_s):>8}  ({cells['speedup']}x)")
+    return cells
+
+
+def stream_suite(n_configs: int, target_cs: int,
+                 mem_mb: float | None = None,
+                 verbose: bool = True) -> dict:
+    """End-to-end streamed discipline sweep: bucketed ``sweep_stream``
+    under a memory budget, with peak RSS recorded next to the chunk
+    plan.  One cold call — at this scale the compile cost is noise and a
+    steady rerun would double a minutes-long cell."""
+    import resource
+
+    from repro.configs.catalog import (lock_discipline_columns,
+                                       lock_discipline_variants)
+    from repro.core import stream as xstream
+
+    V = len(lock_discipline_variants())
+    n_scenarios = max(1, n_configs // V)
+    cols = lock_discipline_columns(n_scenarios=n_scenarios)
+    C = n_scenarios * V
+    t0 = time.perf_counter()
+    res = xstream.sweep_stream(cols, target_cs=target_cs, backend="ref",
+                               bucket_steps=True, mem_mb=mem_mb)
+    wall = time.perf_counter() - t0
+    rss_kib = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    cell = {
+        "n_configs": C, "target_cs": target_cs,
+        "wall_s": round(wall, 2),
+        "configs_per_s": round(C / wall, 1),
+        "chunk_size": res.chunk_size, "n_chunks": res.n_chunks,
+        "budget_mb": round(res.budget_mb, 1),
+        "bytes_per_config": res.bytes_per_config,
+        "ru_maxrss_mb": round(rss_kib / 1024.0, 1),
+        "min_completed": int(res.completed.min()),
+    }
+    if verbose:
+        print(f"  {C} configs in {_fmt_s(wall):>8} "
+              f"({cell['configs_per_s']} cfg/s, {res.n_chunks} chunk(s) "
+              f"of <= {res.chunk_size}, peak RSS "
+              f"{cell['ru_maxrss_mb']:.0f} MB)")
+    return cell
+
+
+def env_key(meta: dict) -> str:
+    """The baseline entry key for one environment's measurements —
+    results are only comparable within a (platform, device count,
+    pallas-interpret) triple."""
+    return (f"{meta['platform']}/{meta['n_devices']}dev/"
+            f"{'interpret' if meta['pallas_interpret'] else 'compiled'}")
+
+
+def load_entries(path: str) -> dict:
+    """Read a baseline file as ``{env_key: result}`` — schema-2 files
+    verbatim, legacy single-result files keyed by their recorded meta."""
+    with open(path) as f:
+        data = json.load(f)
+    if data.get("schema") == 2:
+        return data["entries"]
+    return {env_key(data["meta"]): data}
+
+
 def _speedups(cells: dict) -> dict:
     out = {}
     for backend in ("ref", "pallas"):
@@ -154,6 +264,17 @@ def summarize(result: dict) -> str:
             f"| sweep {name} | {c['n_configs']} "
             f"| {c['mean_steps_run']:.0f}/{c['planned_steps']} "
             f"| {_fmt_s(c['wall_cold_s'])} | {_fmt_s(c['wall_s'])} | - |")
+    for name, c in result.get("stream", {}).items():
+        lines.append(
+            f"| stream {name} | {c['n_configs']} | - "
+            f"| - | {_fmt_s(c['wall_s'])} | {c['configs_per_s']} cfg/s, "
+            f"{c['n_chunks']} chunks, RSS {c['ru_maxrss_mb']:.0f} MB |")
+    enc = result.get("encode")
+    if enc:
+        lines.append(
+            f"| encode columns | {enc['n_configs']} | - "
+            f"| - | {_fmt_s(enc['columns_s'])} "
+            f"| {enc['speedup']}x over legacy |")
     lines += ["", "| speedup | x |", "|---|---|"]
     for k, v in result["speedups"].items():
         lines.append(f"| {k} | {v} |")
@@ -162,8 +283,9 @@ def summarize(result: dict) -> str:
 
 def check_regression(result: dict, baseline: dict,
                      factor: float = REGRESSION_FACTOR) -> list[str]:
-    """Compare steady-state throughput of matching dispatch cells against
-    the committed baseline; return the list of failures (empty = pass)."""
+    """Compare steady-state throughput of matching dispatch and stream
+    cells against the committed baseline (one environment's entry);
+    return the list of failures (empty = pass)."""
     failures = []
     base_cells = baseline.get("dispatch", {})
     for name, cell in result.get("dispatch", {}).items():
@@ -176,6 +298,16 @@ def check_regression(result: dict, baseline: dict,
                 f"{name}: {cell['cfg_steps_per_s']:.2e} cfg-steps/s is "
                 f">{factor}x below baseline "
                 f"{base['cfg_steps_per_s']:.2e}")
+    base_stream = baseline.get("stream", {})
+    for name, cell in result.get("stream", {}).items():
+        base = base_stream.get(name)
+        if not base or (base["n_configs"], base["target_cs"]) != (
+                cell["n_configs"], cell["target_cs"]):
+            continue
+        if cell["configs_per_s"] * factor < base["configs_per_s"]:
+            failures.append(
+                f"stream {name}: {cell['configs_per_s']} cfg/s is "
+                f">{factor}x below baseline {base['configs_per_s']}")
     return failures
 
 
@@ -191,13 +323,17 @@ def main(argv=None) -> dict:
                          "root) to deliberately refresh the committed "
                          "baseline the CI gate compares against")
     ap.add_argument("--check", action="store_true",
-                    help="compare against the committed baseline at "
-                         "--baseline BEFORE overwriting; exit 1 on a "
+                    help="compare against this environment's entry in the "
+                         "committed baseline at --baseline BEFORE "
+                         "overwriting; exit 1 on a "
                          f">{REGRESSION_FACTOR}x throughput regression")
     ap.add_argument("--baseline", default="BENCH_xdes.json")
+    ap.add_argument("--mem-mb", type=float, default=None,
+                    help="streaming suite memory budget in MiB (default: "
+                         "REPRO_SWEEP_MEM_MB env, else device-derived)")
     args = ap.parse_args(argv)
 
-    baseline = None
+    baseline_entries = None
     if args.check:
         # fail fast: --check with no baseline must not pass silently (a
         # deleted or misplaced BENCH_xdes.json would disarm the CI gate)
@@ -205,8 +341,7 @@ def main(argv=None) -> dict:
             raise SystemExit(
                 f"perf check: no baseline at {args.baseline} "
                 f"(refresh it with --out BENCH_xdes.json)")
-        with open(args.baseline) as f:
-            baseline = json.load(f)
+        baseline_entries = load_entries(args.baseline)
 
     import jax
 
@@ -224,6 +359,16 @@ def main(argv=None) -> dict:
     sweep = sweep_suite(n_scenarios=40 if args.quick else 200,
                         target_cs=20 if args.quick else 50)
 
+    print("encode suite (100k-config packing):")
+    encode = encode_suite(100_000)
+
+    print("stream suite (bucketed sweep_stream under a memory budget):")
+    stream = {"discipline_20k": stream_suite(20_000, target_cs=20,
+                                             mem_mb=args.mem_mb)}
+    if not args.quick:
+        stream["discipline_100k"] = stream_suite(100_000, target_cs=20,
+                                                 mem_mb=args.mem_mb)
+
     result = {
         "meta": {
             "platform": jax.default_backend(),
@@ -235,32 +380,44 @@ def main(argv=None) -> dict:
         },
         "dispatch": dispatch,
         "sweep": sweep,
+        "encode": encode,
+        "stream": stream,
     }
     result["speedups"] = _speedups(dispatch)
     legacy, fast = sweep.get("legacy"), sweep.get("fast")
     if legacy and fast:
         result["speedups"]["sweep/fast_over_legacy"] = round(
             legacy["wall_s"] / fast["wall_s"], 2)
+    result["speedups"]["encode/columns_over_legacy"] = encode["speedup"]
     result["meta"]["wall_total_s"] = round(time.time() - t0, 1)
 
+    key = env_key(result["meta"])
+    entries = load_entries(args.out) if os.path.exists(args.out) else {}
+    entries[key] = result
     out_dir = os.path.dirname(args.out)
     if out_dir:
         os.makedirs(out_dir, exist_ok=True)
     with open(args.out, "w") as f:
-        json.dump(result, f, indent=1)
+        json.dump({"schema": 2, "entries": entries}, f, indent=1)
         f.write("\n")
-    print(f"\n{summarize(result)}\n\nwrote {args.out} "
+    print(f"\n{summarize(result)}\n\nwrote {args.out} entry '{key}' "
           f"({result['meta']['wall_total_s']}s total)")
 
-    if baseline is not None:
-        failures = check_regression(result, baseline)
-        if failures:
-            print("PERF REGRESSION vs committed baseline:")
-            for line in failures:
-                print(f"  {line}")
-            raise SystemExit(1)
-        print(f"perf check vs {args.baseline}: OK "
-              f"(no cell >{REGRESSION_FACTOR}x below baseline)")
+    if baseline_entries is not None:
+        base = baseline_entries.get(key)
+        if base is None:
+            print(f"perf check vs {args.baseline}: no entry for '{key}' "
+                  f"yet — nothing to compare (refresh the baseline on "
+                  f"this environment to arm the gate)")
+        else:
+            failures = check_regression(result, base)
+            if failures:
+                print("PERF REGRESSION vs committed baseline:")
+                for line in failures:
+                    print(f"  {line}")
+                raise SystemExit(1)
+            print(f"perf check vs {args.baseline} entry '{key}': OK "
+                  f"(no cell >{REGRESSION_FACTOR}x below baseline)")
     return result
 
 

@@ -27,6 +27,16 @@ Every batched call auto-shards its config axis over all visible devices
 version-robust shim in ``repro/sharding/compat.py``) — on a multi-device
 host the same entry points sweep 10-100k configurations.
 
+Every grid also has a **streaming** mode (``stream=True`` / ``--stream``,
+auto-on at >= :data:`STREAM_AUTO` configs): the grid is generated as raw
+column arrays (``repro.configs.catalog.lock_*_columns``, no per-config
+Python objects) and run chunk-by-chunk under a memory budget by
+:func:`repro.core.stream.sweep_stream`, with the phase-diagram win
+counts accumulated ON DEVICE (``CellReduce``) — the 100k-1M-config path
+(docs/performance.md "Scaling sweeps").  ``refine_grid`` adds a
+coarse->dense resolution-refinement sweep that re-samples dense lattices
+only near phase boundaries at a fixed config budget.
+
     PYTHONPATH=src python -m benchmarks.sweep [--quick] [--backend pallas]
 """
 
@@ -39,14 +49,28 @@ import time
 
 import numpy as np
 
-from repro.configs.catalog import (LOCK_DISCIPLINE_SET, LOCK_DISCIPLINES,
-                                   LOCK_ORACLE_KS, LOCK_ORACLE_SWS_MAX,
-                                   LOCK_ORACLES, LOCK_REGIMES, LOCK_THREADS,
-                                   LOCK_WORKLOADS, lock_discipline_sweep,
+from repro.configs.catalog import (LOCK_CORES, LOCK_DISCIPLINE_SET,
+                                   LOCK_DISCIPLINES, LOCK_ORACLE_KS,
+                                   LOCK_ORACLE_SWS_MAX, LOCK_ORACLES,
+                                   LOCK_REGIMES, LOCK_SHORT, LOCK_THREADS,
+                                   LOCK_WAKE, LOCK_WORKLOADS,
+                                   _product_columns, lock_discipline_columns,
+                                   lock_discipline_sweep,
                                    lock_discipline_variants, lock_fig3_grid,
-                                   lock_oracle_sweep, lock_oracle_variants,
-                                   lock_scenario_sweep, lock_workload_sweep)
+                                   lock_oracle_columns, lock_oracle_sweep,
+                                   lock_oracle_variants,
+                                   lock_scenario_columns,
+                                   lock_scenario_sweep,
+                                   lock_workload_columns, lock_workload_sweep,
+                                   sample_scenario_columns)
+from repro.core import stream as xstream
 from repro.core import xdes
+
+#: Config count at which the grids switch to the streaming path by
+#: default (stream=None): below it the one-shot batched call is simpler
+#: and the working set is small; above it chunking + on-device reduction
+#: keep memory flat (see repro.core.stream).
+STREAM_AUTO = 50_000
 
 
 # --------------------------------------------------------------------------
@@ -127,31 +151,57 @@ def _check_claims(f3: dict) -> dict:
 # --------------------------------------------------------------------------
 def scenario(n_scenarios: int = 200, target_cs: int = 150,
              backend: str = "ref", seed: int = 0, bucket: bool = True,
-             verbose: bool = True) -> dict:
+             stream: bool | None = None, mem_mb: float | None = None,
+             early_exit: bool | None = None, verbose: bool = True) -> dict:
     """``bucket=True`` groups the heterogeneous scenarios into power-of-two
     step-count buckets (:func:`repro.core.xdes.plan_buckets`) — one
     batched call per bucket instead of pinning every cell to the slowest
     scenario's scan length.  All five locks of a scenario share its
-    planned step count, so per-scenario comparisons stay consistent."""
+    planned step count, so per-scenario comparisons stay consistent.
+
+    ``stream=True`` (auto at >= :data:`STREAM_AUTO` configs) feeds the
+    grid as column arrays through :func:`repro.core.stream.sweep_stream`
+    under the ``mem_mb`` memory budget, with the per-lock win counts
+    accumulated on device."""
     locks = list(LOCK_DISCIPLINES)
-    configs = lock_scenario_sweep(n_scenarios=n_scenarios, seed=seed,
-                                  locks=locks)
+    C = n_scenarios * len(locks)
+    if stream is None:
+        stream = C >= STREAM_AUTO
     t0 = time.time()
-    res = xdes.simulate_batch(configs, target_cs=target_cs, backend=backend,
-                              bucket_steps=bucket)
+    if stream:
+        cols = lock_scenario_columns(n_scenarios=n_scenarios, seed=seed,
+                                     locks=locks)
+        red = xstream.CellReduce(
+            group=len(locks), cell_ids=np.zeros(n_scenarios, np.int32),
+            n_cells=1)
+        res = xstream.sweep_stream(cols, target_cs=target_cs,
+                                   backend=backend, bucket_steps=bucket,
+                                   reduce=red, mem_mb=mem_mb,
+                                   early_exit=early_exit)
+        win_counts = res.wins[0]
+    else:
+        configs = lock_scenario_sweep(n_scenarios=n_scenarios, seed=seed,
+                                      locks=locks)
+        res = xdes.simulate_batch(configs, target_cs=target_cs,
+                                  backend=backend, bucket_steps=bucket,
+                                  early_exit=early_exit)
     wall = time.time() - t0
 
     thr = res.throughput.reshape(n_scenarios, len(locks))
     cpu = res.sync_cpu_per_cs.reshape(n_scenarios, len(locks))
     best = thr.max(axis=1)
-    win = thr.argmax(axis=1)
     ratio = thr / np.maximum(best[:, None], 1e-30)
+    if not stream:
+        win = thr.argmax(axis=1)
+        win_counts = np.asarray([(win == i).sum()
+                                 for i in range(len(locks))])
 
     out = {
-        "meta": {"backend": backend, "n_configs": len(configs),
+        "meta": {"backend": backend, "n_configs": C,
                  "n_steps": res.n_steps, "wall_s": round(wall, 2),
-                 "configs_per_s": round(len(configs) / max(wall, 1e-9), 1)},
-        "wins": {lock: int((win == i).sum())
+                 "streamed": bool(stream),
+                 "configs_per_s": round(C / max(wall, 1e-9), 1)},
+        "wins": {lock: int(win_counts[i])
                  for i, lock in enumerate(locks)},
         "mean_ratio_to_best": {lock: float(ratio[:, i].mean())
                                for i, lock in enumerate(locks)},
@@ -160,9 +210,15 @@ def scenario(n_scenarios: int = 200, target_cs: int = 150,
         "mean_sync_cpu_per_cs_us": {lock: float(cpu[:, i].mean() * 1e6)
                                     for i, lock in enumerate(locks)},
     }
+    if stream:
+        out["meta"].update(chunk_size=res.chunk_size,
+                           n_chunks=res.n_chunks,
+                           budget_mb=round(res.budget_mb, 1))
     if verbose:
-        print(f"\nscenario sweep: {len(configs)} configs x {res.n_steps} "
-              f"steps in {wall:.1f}s "
+        how = (f"streamed in {res.n_chunks} chunk(s) of "
+               f"<= {res.chunk_size}" if stream else "one-shot")
+        print(f"\nscenario sweep: {C} configs x {res.n_steps} "
+              f"steps ({how}) in {wall:.1f}s "
               f"({out['meta']['configs_per_s']} cfg/s)")
         print(f"{'lock':>10} {'wins':>6} {'mean ratio':>11} "
               f"{'p10 ratio':>10} {'cpu/cs (µs)':>12}")
@@ -177,28 +233,50 @@ def scenario(n_scenarios: int = 200, target_cs: int = 150,
 # --------------------------------------------------------------------------
 # Oracle-family ablation grid
 # --------------------------------------------------------------------------
-def _bucket_scenarios(configs, n_variants: int) -> list[dict]:
-    """Coarse workload features per scenario (row 0 of each variant block):
-    the phase-diagram axes of the oracle report."""
-    feats = []
-    for s in range(len(configs) // n_variants):
-        c = configs[s * n_variants]
-        feats.append({
-            "cs": ("short" if c.cs[1] <= 1e-5
-                   else "mid" if c.cs[1] <= 1e-4 else "long"),
-            "sub": "under" if c.threads <= c.cores else "over",
-            "wake": "fast" if c.wake_latency <= 1e-5 else "slow",
-        })
-    return feats
+def _scenario_feats(sc_cols: dict) -> list[dict]:
+    """Coarse workload features per scenario — the phase-diagram axes —
+    from :func:`repro.configs.catalog.sample_scenario_columns` arrays
+    (shared by the one-shot and streaming paths, which therefore bucket
+    identically)."""
+    return [{
+        "cs": "short" if cs <= 1e-5 else "mid" if cs <= 1e-4 else "long",
+        "sub": "under" if th <= co else "over",
+        "wake": "fast" if wk <= 1e-5 else "slow",
+    } for th, co, cs, wk in zip(sc_cols["threads"], sc_cols["cores"],
+                                sc_cols["cs_hi"], sc_cols["wake"])]
+
+
+def _phase_cells(keys: list[tuple]) -> tuple[list[tuple], np.ndarray]:
+    """Order the distinct phase-cell keys and map each reduction group to
+    its cell id — the ``CellReduce.cell_ids`` layout shared by the
+    on-device (streamed) and host (one-shot) win accounting."""
+    uniq = sorted(set(keys))
+    kid = {k: i for i, k in enumerate(uniq)}
+    return uniq, np.asarray([kid[k] for k in keys], np.int32)
+
+
+def _host_wins(throughput, n_cells: int, cell_ids, group: int) -> np.ndarray:
+    """Host twin of the streamed on-device accumulation: win counts per
+    (phase cell, variant) from the per-config throughput columns."""
+    win = np.asarray(throughput).reshape(-1, group).argmax(axis=1)
+    wins = np.zeros((n_cells, group), np.int64)
+    np.add.at(wins, (np.asarray(cell_ids), win), 1)
+    return wins
 
 
 def oracle_grid(n_scenarios: int = 200, target_cs: int = 150,
                 backend: str = "ref", seed: int = 0,
                 oracles=LOCK_ORACLES, ks=LOCK_ORACLE_KS,
-                sws_maxes=LOCK_ORACLE_SWS_MAX, verbose: bool = True) -> dict:
+                sws_maxes=LOCK_ORACLE_SWS_MAX, stream: bool | None = None,
+                mem_mb: float | None = None,
+                early_exit: bool | None = None,
+                verbose: bool = True) -> dict:
     """The full ``(oracle, K, sws_max) x scenario`` product as ONE
     jit-compiled :func:`repro.core.xdes.simulate_batch` call (no per-cell
-    Python loop), summarized three ways:
+    Python loop) — or, with ``stream=True`` (auto at >=
+    :data:`STREAM_AUTO` configs), chunk-by-chunk under a memory budget
+    via :func:`repro.core.stream.sweep_stream` with the phase-cell win
+    counts accumulated on device — summarized three ways:
 
     * per variant — wins, mean/p10 throughput ratio to the per-scenario
       best variant, spin CPU per CS;
@@ -209,11 +287,30 @@ def oracle_grid(n_scenarios: int = 200, target_cs: int = 150,
       wins where" artifact rendered by ``benchmarks/oracle_ablation.py``.
     """
     variants = lock_oracle_variants(oracles, ks, sws_maxes)
-    configs = lock_oracle_sweep(n_scenarios=n_scenarios, seed=seed,
-                                oracles=oracles, ks=ks, sws_maxes=sws_maxes)
     V = len(variants)
+    C = n_scenarios * V
+    if stream is None:
+        stream = C >= STREAM_AUTO
+    feats = _scenario_feats(sample_scenario_columns(n_scenarios, seed))
+    uniq, cell_ids = _phase_cells(
+        [(f["cs"], f["sub"], f["wake"]) for f in feats])
     t0 = time.time()
-    res = xdes.simulate_batch(configs, target_cs=target_cs, backend=backend)
+    if stream:
+        cols = lock_oracle_columns(n_scenarios=n_scenarios, seed=seed,
+                                   oracles=oracles, ks=ks,
+                                   sws_maxes=sws_maxes)
+        res = xstream.sweep_stream(
+            cols, target_cs=target_cs, backend=backend, mem_mb=mem_mb,
+            early_exit=early_exit,
+            reduce=xstream.CellReduce(V, cell_ids, len(uniq)))
+        wins_cells = res.wins
+    else:
+        configs = lock_oracle_sweep(n_scenarios=n_scenarios, seed=seed,
+                                    oracles=oracles, ks=ks,
+                                    sws_maxes=sws_maxes)
+        res = xdes.simulate_batch(configs, target_cs=target_cs,
+                                  backend=backend, early_exit=early_exit)
+        wins_cells = _host_wins(res.throughput, len(uniq), cell_ids, V)
     wall = time.time() - t0
 
     thr = res.throughput.reshape(n_scenarios, V)
@@ -221,7 +318,7 @@ def oracle_grid(n_scenarios: int = 200, target_cs: int = 150,
     sws = res.final_sws.reshape(n_scenarios, V)
     best = np.maximum(thr.max(axis=1), 1e-30)
     ratio = thr / best[:, None]
-    win = thr.argmax(axis=1)
+    win_v = wins_cells.sum(axis=0)
 
     def vname(v):
         m = "cores" if v["sws_max"] is None else v["sws_max"]
@@ -229,7 +326,7 @@ def oracle_grid(n_scenarios: int = 200, target_cs: int = 150,
 
     out_variants = [{
         "name": vname(v), "oracle": v["oracle"], "k": v["k"],
-        "sws_max": v["sws_max"], "wins": int((win == i).sum()),
+        "sws_max": v["sws_max"], "wins": int(win_v[i]),
         "mean_ratio_to_best": float(ratio[:, i].mean()),
         "p10_ratio_to_best": float(np.percentile(ratio[:, i], 10)),
         "mean_sync_cpu_per_cs_us": float(cpu[:, i].mean() * 1e6),
@@ -239,22 +336,17 @@ def oracle_grid(n_scenarios: int = 200, target_cs: int = 150,
     fam_names = list(dict.fromkeys(v["oracle"] for v in variants))
     fam_cols = {f: [i for i, v in enumerate(variants) if v["oracle"] == f]
                 for f in fam_names}
-    win_fam = np.asarray([variants[i]["oracle"] for i in win])
     families = {f: {
-        "wins": int((win_fam == f).sum()),
+        "wins": int(win_v[cols].sum()),
         # ratio achieved by the best tuning of this family per scenario
         "best_tuned_mean_ratio": float(ratio[:, cols].max(axis=1).mean()),
         "mean_sync_cpu_per_cs_us": float(cpu[:, cols].mean() * 1e6),
     } for f, cols in fam_cols.items()}
 
-    feats = _bucket_scenarios(configs, V)
-    cells: dict[tuple, dict] = {}
-    for s, ft in enumerate(feats):
-        key = (ft["cs"], ft["sub"], ft["wake"])
-        cell = cells.setdefault(key, {f: 0 for f in fam_names})
-        cell[win_fam[s]] += 1
     phase = []
-    for (cs_b, sub_b, wake_b), counts in sorted(cells.items()):
+    for ci, (cs_b, sub_b, wake_b) in enumerate(uniq):
+        counts = {f: int(wins_cells[ci, cols].sum())
+                  for f, cols in fam_cols.items()}
         n = sum(counts.values())
         winner = max(counts, key=counts.get)
         phase.append({"cs": cs_b, "sub": sub_b, "wake": wake_b, "n": n,
@@ -264,15 +356,20 @@ def oracle_grid(n_scenarios: int = 200, target_cs: int = 150,
 
     out = {
         "meta": {"backend": backend, "n_scenarios": n_scenarios,
-                 "n_variants": V, "n_configs": len(configs),
+                 "n_variants": V, "n_configs": C,
                  "n_steps": res.n_steps, "wall_s": round(wall, 2),
-                 "configs_per_s": round(len(configs) / max(wall, 1e-9), 1)},
+                 "streamed": bool(stream),
+                 "configs_per_s": round(C / max(wall, 1e-9), 1)},
         "variants": out_variants,
         "families": families,
         "phase": phase,
     }
+    if stream:
+        out["meta"].update(chunk_size=res.chunk_size,
+                           n_chunks=res.n_chunks,
+                           budget_mb=round(res.budget_mb, 1))
     if verbose:
-        print(f"\noracle grid: {len(configs)} configs ({n_scenarios} "
+        print(f"\noracle grid: {C} configs ({n_scenarios} "
               f"scenarios x {V} variants) x {res.n_steps} steps "
               f"in {wall:.1f}s ({out['meta']['configs_per_s']} cfg/s)")
         print(f"{'family':>9} {'wins':>5} {'best-tuned ratio':>17} "
@@ -290,11 +387,17 @@ def oracle_grid(n_scenarios: int = 200, target_cs: int = 150,
 def discipline_grid(n_scenarios: int = 200, target_cs: int = 150,
                     backend: str = "ref", seed: int = 0,
                     disciplines=LOCK_DISCIPLINE_SET, oracles=LOCK_ORACLES,
-                    shard: bool | None = None, verbose: bool = True) -> dict:
+                    shard: bool | None = None, stream: bool | None = None,
+                    mem_mb: float | None = None,
+                    early_exit: bool | None = None,
+                    verbose: bool = True) -> dict:
     """The full ``(discipline, oracle) x scenario`` product — every row of
     ``DISCIPLINE_ROWS`` crossed with every ``ORACLE_ROWS`` family — as ONE
-    (sharded) jit-compiled :func:`repro.core.xdes.simulate_batch` call,
-    summarized three ways:
+    (sharded) jit-compiled :func:`repro.core.xdes.simulate_batch` call —
+    or, with ``stream=True`` (auto at >= :data:`STREAM_AUTO` configs),
+    chunk-by-chunk under a memory budget via
+    :func:`repro.core.stream.sweep_stream` with phase-cell win counts
+    accumulated on device — summarized three ways:
 
     * per variant — wins, mean/p10 throughput ratio to the per-scenario
       best variant, spin CPU per CS, fairness spread;
@@ -305,19 +408,38 @@ def discipline_grid(n_scenarios: int = 200, target_cs: int = 150,
       wins where" artifact rendered by ``benchmarks/discipline_diagram.py``.
     """
     variants = lock_discipline_variants(disciplines, oracles)
-    configs = lock_discipline_sweep(n_scenarios=n_scenarios, seed=seed,
-                                    disciplines=disciplines, oracles=oracles)
     V = len(variants)
+    C = n_scenarios * V
+    if stream is None:
+        stream = C >= STREAM_AUTO
+    feats = _scenario_feats(sample_scenario_columns(n_scenarios, seed))
+    uniq, cell_ids = _phase_cells(
+        [(f["cs"], f["sub"], f["wake"]) for f in feats])
     t0 = time.time()
-    res = xdes.simulate_batch(configs, target_cs=target_cs, backend=backend,
-                              shard=shard)
+    if stream:
+        cols = lock_discipline_columns(n_scenarios=n_scenarios, seed=seed,
+                                       disciplines=disciplines,
+                                       oracles=oracles)
+        res = xstream.sweep_stream(
+            cols, target_cs=target_cs, backend=backend, shard=shard,
+            mem_mb=mem_mb, early_exit=early_exit,
+            reduce=xstream.CellReduce(V, cell_ids, len(uniq)))
+        wins_cells = res.wins
+    else:
+        configs = lock_discipline_sweep(n_scenarios=n_scenarios, seed=seed,
+                                        disciplines=disciplines,
+                                        oracles=oracles)
+        res = xdes.simulate_batch(configs, target_cs=target_cs,
+                                  backend=backend, shard=shard,
+                                  early_exit=early_exit)
+        wins_cells = _host_wins(res.throughput, len(uniq), cell_ids, V)
     wall = time.time() - t0
 
     thr = res.throughput.reshape(n_scenarios, V)
     cpu = res.sync_cpu_per_cs.reshape(n_scenarios, V)
     best = np.maximum(thr.max(axis=1), 1e-30)
     ratio = thr / best[:, None]
-    win = thr.argmax(axis=1)
+    win_v = wins_cells.sum(axis=0)
 
     def vname(v):
         return (f"{v['lock']}/{v['oracle']}"
@@ -325,7 +447,7 @@ def discipline_grid(n_scenarios: int = 200, target_cs: int = 150,
 
     out_variants = [{
         "name": vname(v), "lock": v["lock"], "oracle": v["oracle"],
-        "wins": int((win == i).sum()),
+        "wins": int(win_v[i]),
         "mean_ratio_to_best": float(ratio[:, i].mean()),
         "p10_ratio_to_best": float(np.percentile(ratio[:, i], 10)),
         "mean_sync_cpu_per_cs_us": float(cpu[:, i].mean() * 1e6),
@@ -334,22 +456,17 @@ def discipline_grid(n_scenarios: int = 200, target_cs: int = 150,
     disc_names = list(dict.fromkeys(v["lock"] for v in variants))
     disc_cols = {d: [i for i, v in enumerate(variants) if v["lock"] == d]
                  for d in disc_names}
-    win_disc = np.asarray([variants[i]["lock"] for i in win])
     by_discipline = {d: {
-        "wins": int((win_disc == d).sum()),
+        "wins": int(win_v[cols].sum()),
         "best_variant_mean_ratio": float(ratio[:, cols].max(axis=1).mean()),
         "mean_sync_cpu_per_cs_us": float(cpu[:, cols].mean() * 1e6),
     } for d, cols in disc_cols.items()}
 
-    feats = _bucket_scenarios(configs, V)
-    win_name = np.asarray([out_variants[i]["name"] for i in win])
-    cells: dict[tuple, dict] = {}
-    for s, ft in enumerate(feats):
-        key = (ft["cs"], ft["sub"], ft["wake"])
-        cell = cells.setdefault(key, {})
-        cell[win_name[s]] = cell.get(win_name[s], 0) + 1
+    variant_names = [vname(v) for v in variants]
     phase = []
-    for (cs_b, sub_b, wake_b), counts in sorted(cells.items()):
+    for ci, (cs_b, sub_b, wake_b) in enumerate(uniq):
+        counts = {variant_names[i]: int(wins_cells[ci, i])
+                  for i in range(V) if wins_cells[ci, i]}
         n = sum(counts.values())
         winner = max(counts, key=counts.get)
         phase.append({"cs": cs_b, "sub": sub_b, "wake": wake_b, "n": n,
@@ -361,18 +478,23 @@ def discipline_grid(n_scenarios: int = 200, target_cs: int = 150,
 
     out = {
         "meta": {"backend": backend, "n_scenarios": n_scenarios,
-                 "n_variants": V, "n_configs": len(configs),
+                 "n_variants": V, "n_configs": C,
                  "n_steps": res.n_steps, "wall_s": round(wall, 2),
                  "n_devices": len(jax.devices()),
                  "sharded": bool(shard) if shard is not None
                  else len(jax.devices()) > 1,
-                 "configs_per_s": round(len(configs) / max(wall, 1e-9), 1)},
+                 "streamed": bool(stream),
+                 "configs_per_s": round(C / max(wall, 1e-9), 1)},
         "variants": out_variants,
         "disciplines": by_discipline,
         "phase": phase,
     }
+    if stream:
+        out["meta"].update(chunk_size=res.chunk_size,
+                           n_chunks=res.n_chunks,
+                           budget_mb=round(res.budget_mb, 1))
     if verbose:
-        print(f"\ndiscipline grid: {len(configs)} configs ({n_scenarios} "
+        print(f"\ndiscipline grid: {C} configs ({n_scenarios} "
               f"scenarios x {V} variants) x {res.n_steps} steps in "
               f"{wall:.1f}s on {out['meta']['n_devices']} device(s) "
               f"({out['meta']['configs_per_s']} cfg/s)")
@@ -392,7 +514,10 @@ def workload_grid(n_scenarios: int = 100, target_cs: int = 150,
                   backend: str = "ref", seed: int = 0,
                   workloads=LOCK_WORKLOADS,
                   disciplines=LOCK_DISCIPLINE_SET, oracles=LOCK_ORACLES,
-                  shard: bool | None = None, verbose: bool = True) -> dict:
+                  shard: bool | None = None, stream: bool | None = None,
+                  mem_mb: float | None = None,
+                  early_exit: bool | None = None,
+                  verbose: bool = True) -> dict:
     """The full ``workload x (discipline, oracle) x scenario`` product —
     every row of ``WORKLOAD_ROWS`` crossed with every discipline-diagram
     variant — as ONE (sharded) jit-compiled
@@ -409,23 +534,54 @@ def workload_grid(n_scenarios: int = 100, target_cs: int = 150,
 
     The per-scenario best is taken *within* a workload, so a variant is
     judged against the other locks under the same workload — never
-    against an easier workload's throughput.
+    against an easier workload's throughput.  With ``stream=True`` (auto
+    at >= :data:`STREAM_AUTO` configs) the sweep runs chunk-by-chunk via
+    :func:`repro.core.stream.sweep_stream`; each ``(scenario, workload)``
+    slice of ``V`` variants is one reduction group, so the on-device
+    argmax is the same within-workload contest.
     """
     disc_variants = lock_discipline_variants(disciplines, oracles)
-    configs = lock_workload_sweep(n_scenarios=n_scenarios, seed=seed,
-                                  workloads=workloads,
-                                  disciplines=disciplines, oracles=oracles)
     W, V = len(workloads), len(disc_variants)
+    C = n_scenarios * W * V
+    if stream is None:
+        stream = C >= STREAM_AUTO
+    feats = _scenario_feats(sample_scenario_columns(n_scenarios, seed))
+    # One phase key per (scenario, workload) group of V variants.
+    uniq, cell_ids = _phase_cells(
+        [(w, f["cs"], f["sub"]) for f in feats for w in workloads])
     t0 = time.time()
-    res = xdes.simulate_batch(configs, target_cs=target_cs, backend=backend,
-                              shard=shard)
+    if stream:
+        cols = lock_workload_columns(n_scenarios=n_scenarios, seed=seed,
+                                     workloads=workloads,
+                                     disciplines=disciplines,
+                                     oracles=oracles)
+        res = xstream.sweep_stream(
+            cols, target_cs=target_cs, backend=backend, shard=shard,
+            mem_mb=mem_mb, early_exit=early_exit,
+            reduce=xstream.CellReduce(V, cell_ids, len(uniq)))
+        wins_cells = res.wins
+    else:
+        configs = lock_workload_sweep(n_scenarios=n_scenarios, seed=seed,
+                                      workloads=workloads,
+                                      disciplines=disciplines,
+                                      oracles=oracles)
+        res = xdes.simulate_batch(configs, target_cs=target_cs,
+                                  backend=backend, shard=shard,
+                                  early_exit=early_exit)
+        wins_cells = _host_wins(res.throughput, len(uniq), cell_ids, V)
     wall = time.time() - t0
 
     thr = res.throughput.reshape(n_scenarios, W, V)
     cpu = res.sync_cpu_per_cs.reshape(n_scenarios, W, V)
     best = np.maximum(thr.max(axis=2), 1e-30)          # (S, W)
     ratio = thr / best[..., None]
-    win = thr.argmax(axis=2)                           # (S, W)
+    # per-(workload, variant) win counts from the phase-cell matrix:
+    # every (scenario, workload) group maps to exactly one cell whose key
+    # starts with that workload, so summing cells by workload recovers
+    # the within-workload contest.
+    cell_w = np.asarray([list(workloads).index(k[0]) for k in uniq])
+    win_wv = np.zeros((W, V), np.int64)
+    np.add.at(win_wv, cell_w, wins_cells)
 
     def vname(v):
         return (f"{v['lock']}/{v['oracle']}"
@@ -436,7 +592,7 @@ def workload_grid(n_scenarios: int = 100, target_cs: int = 150,
         "workload": w, "name": variant_names[i],
         "lock": disc_variants[i]["lock"],
         "oracle": disc_variants[i]["oracle"],
-        "wins": int((win[:, wi] == i).sum()),
+        "wins": int(win_wv[wi, i]),
         "mean_ratio_to_best": float(ratio[:, wi, i].mean()),
         "p10_ratio_to_best": float(np.percentile(ratio[:, wi, i], 10)),
         "mean_sync_cpu_per_cs_us": float(cpu[:, wi, i].mean() * 1e6),
@@ -447,28 +603,22 @@ def workload_grid(n_scenarios: int = 100, target_cs: int = 150,
                      if v["lock"] == d] for d in disc_names}
     by_workload = {}
     for wi, w in enumerate(workloads):
-        win_disc = np.asarray([disc_variants[i]["lock"]
-                               for i in win[:, wi]])
         by_workload[w] = {d: {
-            "wins": int((win_disc == d).sum()),
+            "wins": int(win_wv[wi, cols].sum()),
             "best_variant_mean_ratio":
                 float(ratio[:, wi, cols].max(axis=1).mean()),
             "mean_sync_cpu_per_cs_us":
                 float(cpu[:, wi, cols].mean() * 1e6),
         } for d, cols in disc_cols.items()}
 
-    feats = _bucket_scenarios(configs, W * V)
-    cells: dict[tuple, dict] = {}
-    for s, ft in enumerate(feats):
-        for wi, w in enumerate(workloads):
-            key = (w, ft["cs"], ft["sub"])
-            cell = cells.setdefault(key, {})
-            name = variant_names[win[s, wi]]
-            cell[name] = cell.get(name, 0) + 1
     phase = []
-    for (w, cs_b, sub_b), counts in sorted(
-            cells.items(), key=lambda kv: (list(workloads).index(kv[0][0]),
-                                           kv[0][1:])):
+    order = sorted(range(len(uniq)),
+                   key=lambda ci: (list(workloads).index(uniq[ci][0]),
+                                   uniq[ci][1:]))
+    for ci in order:
+        w, cs_b, sub_b = uniq[ci]
+        counts = {variant_names[i]: int(wins_cells[ci, i])
+                  for i in range(V) if wins_cells[ci, i]}
         n = sum(counts.values())
         winner = max(counts, key=counts.get)
         phase.append({"workload": w, "cs": cs_b, "sub": sub_b, "n": n,
@@ -481,20 +631,25 @@ def workload_grid(n_scenarios: int = 100, target_cs: int = 150,
     out = {
         "meta": {"backend": backend, "n_scenarios": n_scenarios,
                  "n_workloads": W, "n_variants": V,
-                 "n_configs": len(configs), "n_steps": res.n_steps,
+                 "n_configs": C, "n_steps": res.n_steps,
                  "wall_s": round(wall, 2),
                  "n_devices": len(jax.devices()),
                  "sharded": bool(shard) if shard is not None
                  else len(jax.devices()) > 1,
-                 "configs_per_s": round(len(configs) / max(wall, 1e-9), 1),
+                 "streamed": bool(stream),
+                 "configs_per_s": round(C / max(wall, 1e-9), 1),
                  "workloads": list(workloads),
                  "variant_names": variant_names},
         "variants": out_variants,
         "workloads": by_workload,
         "phase": phase,
     }
+    if stream:
+        out["meta"].update(chunk_size=res.chunk_size,
+                           n_chunks=res.n_chunks,
+                           budget_mb=round(res.budget_mb, 1))
     if verbose:
-        print(f"\nworkload grid: {len(configs)} configs ({n_scenarios} "
+        print(f"\nworkload grid: {C} configs ({n_scenarios} "
               f"scenarios x {W} workloads x {V} variants) x {res.n_steps} "
               f"steps in {wall:.1f}s on {out['meta']['n_devices']} "
               f"device(s) ({out['meta']['configs_per_s']} cfg/s)")
@@ -504,6 +659,136 @@ def workload_grid(n_scenarios: int = 100, target_cs: int = 150,
             print(f"{w:>9}: top discipline {top} "
                   f"({rows[top]['wins']}/{n_scenarios} wins); "
                   + " ".join(f"{d}:{r['wins']}" for d, r in rows.items()))
+    return out
+
+
+# --------------------------------------------------------------------------
+# Coarse -> dense resolution refinement
+# --------------------------------------------------------------------------
+def refine_grid(nx: int = 16, ny: int = 12, factor: int = 3,
+                target_cs: int = 150, backend: str = "ref", seed: int = 0,
+                disciplines=LOCK_DISCIPLINE_SET, oracles=LOCK_ORACLES,
+                cs_range: tuple = (1e-6, 4e-4), thread_range: tuple = (2, 32),
+                max_configs: int = 100_000, mem_mb: float | None = None,
+                shard: bool | None = None, verbose: bool = True) -> dict:
+    """Two-pass phase-boundary refinement over a regular (CS length x
+    thread count) lattice at the paper's fixed machine (``LOCK_CORES``
+    cores, short NCS, ``LOCK_WAKE`` wake latency).
+
+    Pass 1 streams a coarse ``ny x nx`` lattice (every point crossed with
+    every discipline variant) and takes the per-point winner from the
+    on-device :class:`repro.core.stream.CellReduce` win matrix.  Pass 2
+    re-streams only the dense sub-lattice points (``factor`` x finer per
+    axis) that fall in coarse cells touching a phase boundary — where the
+    winner differs from a 4-neighbour — so the dense budget is spent on
+    the boundary, not the interior.  Total configs are capped at
+    ``max_configs`` (dense points beyond the cap are dropped, reported in
+    ``meta``).
+    """
+    variants = lock_discipline_variants(disciplines, oracles)
+    V = len(variants)
+
+    def vname(v):
+        return (f"{v['lock']}/{v['oracle']}"
+                if v["lock"] == "mutable" else v["lock"])
+
+    variant_names = [vname(v) for v in variants]
+
+    def lattice_cols(cs_vals, th_vals):
+        """(P,) scenario columns for the row-major cs x threads lattice."""
+        cs, th = np.meshgrid(cs_vals, th_vals)          # (len(th), len(cs))
+        cs, th = cs.ravel(), th.ravel()
+        P = cs.size
+        sc = {"threads": th.astype(np.int64),
+              "cores": np.full(P, LOCK_CORES, np.int64),
+              "cs_hi": cs.astype(np.float64),
+              "ncs_hi": np.full(P, LOCK_SHORT[1], np.float64),
+              "wake": np.full(P, LOCK_WAKE, np.float64),
+              "contention": np.ones(P, np.float64),
+              "seed": np.full(P, seed, np.int64)}
+        return _product_columns(sc, variants), P
+
+    def winners(cs_vals, th_vals):
+        cols, P = lattice_cols(cs_vals, th_vals)
+        red = xstream.CellReduce(V, np.arange(P, dtype=np.int32), P)
+        res = xstream.sweep_stream(cols, target_cs=target_cs,
+                                   backend=backend, shard=shard,
+                                   mem_mb=mem_mb, reduce=red)
+        return np.asarray(res.wins).argmax(axis=1), res
+
+    t0 = time.time()
+    cs_coarse = np.geomspace(cs_range[0], cs_range[1], nx)
+    th_coarse = np.unique(np.rint(np.linspace(
+        thread_range[0], thread_range[1], ny)).astype(np.int64))
+    ny = len(th_coarse)
+    win_c, res_c = winners(cs_coarse, th_coarse)
+    grid = win_c.reshape(ny, nx)
+
+    boundary = np.zeros((ny, nx), bool)
+    boundary[:, 1:] |= grid[:, 1:] != grid[:, :-1]
+    boundary[:, :-1] |= grid[:, 1:] != grid[:, :-1]
+    boundary[1:, :] |= grid[1:, :] != grid[:-1, :]
+    boundary[:-1, :] |= grid[1:, :] != grid[:-1, :]
+
+    cs_dense = np.geomspace(cs_range[0], cs_range[1], factor * nx)
+    th_dense = np.unique(np.rint(np.linspace(
+        thread_range[0], thread_range[1], factor * ny)).astype(np.int64))
+    # Map every dense point to its enclosing coarse cell (nearest coarse
+    # index per axis); keep only points inside boundary cells.
+    ix = np.clip(np.searchsorted(np.sqrt(cs_coarse[1:] * cs_coarse[:-1]),
+                                 cs_dense), 0, nx - 1)
+    iy = np.clip(np.searchsorted((th_coarse[1:] + th_coarse[:-1]) / 2.0,
+                                 th_dense), 0, ny - 1)
+    keep_y, keep_x = np.nonzero(boundary[np.ix_(iy, ix)])
+    pts_cs = cs_dense[keep_x]
+    pts_th = th_dense[keep_y]
+    budget_pts = max(0, max_configs // V - nx * ny)
+    n_dropped = max(0, len(pts_cs) - budget_pts)
+    pts_cs, pts_th = pts_cs[:budget_pts], pts_th[:budget_pts]
+
+    dense = []
+    res_d = None
+    if len(pts_cs):
+        P = len(pts_cs)
+        sc = {"threads": pts_th.astype(np.int64),
+              "cores": np.full(P, LOCK_CORES, np.int64),
+              "cs_hi": pts_cs.astype(np.float64),
+              "ncs_hi": np.full(P, LOCK_SHORT[1], np.float64),
+              "wake": np.full(P, LOCK_WAKE, np.float64),
+              "contention": np.ones(P, np.float64),
+              "seed": np.full(P, seed, np.int64)}
+        cols = _product_columns(sc, variants)
+        red = xstream.CellReduce(V, np.arange(P, dtype=np.int32), P)
+        res_d = xstream.sweep_stream(cols, target_cs=target_cs,
+                                     backend=backend, shard=shard,
+                                     mem_mb=mem_mb, reduce=red)
+        win_d = np.asarray(res_d.wins).argmax(axis=1)
+        dense = [{"cs_us": round(float(c) * 1e6, 4), "threads": int(t),
+                  "winner": variant_names[w]}
+                 for c, t, w in zip(pts_cs, pts_th, win_d)]
+    wall = time.time() - t0
+
+    C = (nx * ny + len(pts_cs)) * V
+    out = {
+        "meta": {"backend": backend, "nx": nx, "ny": ny, "factor": factor,
+                 "n_variants": V, "n_coarse": nx * ny,
+                 "n_dense": len(pts_cs), "n_dense_dropped": n_dropped,
+                 "n_configs": C, "wall_s": round(wall, 2),
+                 "configs_per_s": round(C / max(wall, 1e-9), 1),
+                 "chunk_size": res_c.chunk_size,
+                 "budget_mb": round(res_c.budget_mb, 1),
+                 "variant_names": variant_names},
+        "axes": {"cs_us": [round(c * 1e6, 4) for c in cs_coarse],
+                 "threads": [int(t) for t in th_coarse]},
+        "coarse": [[variant_names[w] for w in row] for row in grid],
+        "dense": dense,
+    }
+    if verbose:
+        print(f"\nrefine grid: {nx}x{ny} coarse + {len(pts_cs)} dense "
+              f"boundary points ({C} configs) in {wall:.1f}s; "
+              f"{int(boundary.sum())} boundary cells"
+              + (f"; {n_dropped} dense points dropped at cap"
+                 if n_dropped else ""))
     return out
 
 
@@ -517,18 +802,28 @@ def main(argv=None) -> dict:
     ap.add_argument("--no-bucket", action="store_true",
                     help="run the scenario sweep as one global-horizon "
                          "batch instead of per-step-count buckets")
+    ap.add_argument("--stream", choices=("auto", "on", "off"),
+                    default="auto",
+                    help="run sweeps chunk-by-chunk under a memory budget "
+                         "(auto: stream at >= %d configs)" % STREAM_AUTO)
+    ap.add_argument("--mem-mb", type=float, default=None,
+                    help="streaming memory budget in MiB (default: "
+                         "REPRO_SWEEP_MEM_MB env, else device-derived)")
     ap.add_argument("--out", default="reports/sweep.json")
     args = ap.parse_args(argv)
 
+    stream = {"auto": None, "on": True, "off": False}[args.stream]
     if args.quick:
         f3 = fig3_batched(target_cs=60, seeds=(0,), backend=args.backend)
         sc = scenario(n_scenarios=40, target_cs=50, backend=args.backend,
-                      bucket=not args.no_bucket)
+                      bucket=not args.no_bucket, stream=stream,
+                      mem_mb=args.mem_mb)
     else:
         f3 = fig3_batched(target_cs=args.target_cs, backend=args.backend)
         sc = scenario(n_scenarios=args.scenarios,
                       target_cs=args.target_cs, backend=args.backend,
-                      bucket=not args.no_bucket)
+                      bucket=not args.no_bucket, stream=stream,
+                      mem_mb=args.mem_mb)
 
     results = {"fig3": f3, "scenario": sc}
     out_dir = os.path.dirname(args.out)

@@ -118,6 +118,14 @@ def main(argv=None) -> dict:
     ap.add_argument("--no-shard", action="store_true",
                     help="disable the shard_map path even on multi-device "
                          "hosts")
+    ap.add_argument("--stream", choices=("auto", "on", "off"),
+                    default="auto",
+                    help="run the grid chunk-by-chunk under a memory "
+                         "budget (auto: stream at >= %d configs)"
+                         % sweep.STREAM_AUTO)
+    ap.add_argument("--mem-mb", type=float, default=None,
+                    help="streaming memory budget in MiB (default: "
+                         "REPRO_SWEEP_MEM_MB env, else device-derived)")
     ap.add_argument("--out", default="reports/workload_diagram.json")
     args = ap.parse_args(argv)
 
@@ -132,7 +140,9 @@ def main(argv=None) -> dict:
         target_cs=args.target_cs or (40 if args.quick else 150),
         backend=args.backend, seed=args.seed,
         workloads=LOCK_WORKLOADS,
-        shard=False if args.no_shard else None)
+        shard=False if args.no_shard else None,
+        stream={"auto": None, "on": True, "off": False}[args.stream],
+        mem_mb=args.mem_mb)
 
     out_dir = os.path.dirname(args.out) or "."
     os.makedirs(out_dir, exist_ok=True)

@@ -451,6 +451,123 @@ def lock_workload_sweep(n_scenarios: int = 100, seed: int = 0,
     ]
 
 
+# -- array-native column twins (the streaming-sweep feed) ------------------
+# Each lock_*_sweep generator above has a *_columns twin emitting RAW
+# struct-of-arrays columns (repro.core.policy.RAW_CONFIG_FIELDS) directly
+# — no per-config SimConfig objects — for repro.core.stream.sweep_stream.
+# The twins are pinned field-for-field equal (values AND dtypes) to
+# repro.core.policy.config_columns of the corresponding list, so either
+# form feeds the same plans and bit-identical simulations.
+
+def sample_scenario_columns(n_scenarios: int, seed: int = 0) -> dict:
+    """:func:`sample_scenarios` packed as (S,) column arrays — the same
+    RNG draws in the same order (the seed contract), so array-native
+    sweeps see exactly the machines the list path sees."""
+    import numpy as np
+
+    sc = sample_scenarios(n_scenarios, seed)
+    return {k: np.asarray([s[k] for s in sc],
+                          np.int64 if k in ("threads", "cores", "seed")
+                          else np.float64)
+            for k in ("threads", "cores", "cs_hi", "ncs_hi", "wake",
+                      "contention", "seed")}
+
+
+def _product_columns(sc: dict, variants: list[dict],
+                     wl: dict | None = None) -> dict:
+    """Scenario-major x variant-minor product as RAW columns: scenario
+    feature columns repeated per variant, variant columns tiled per
+    scenario, ``alpha = contention x DEFAULT_ALPHA[lock]`` per row.
+    ``wl`` optionally carries per-scenario (S,) workload-knob columns
+    (:func:`lock_workload_params` vectorized); missing knobs take the
+    SimConfig defaults."""
+    import numpy as np
+
+    from repro.core.policy import (DEFAULT_ALPHA, DEFAULT_SPIN_BUDGET,
+                                   ORACLE_IDS, POLICY_IDS, WORKLOAD_IDS)
+
+    S, V = len(sc["seed"]), len(variants)
+    rep = lambda a, dt: np.repeat(np.asarray(a, dt), V)
+    tile = lambda a: np.tile(a, S)
+    lock_names = [v.get("lock", "mutable") for v in variants]
+    wl = wl or {}
+    wlcol = lambda key, dflt: (rep(wl[key], np.float64) if key in wl
+                               else np.full(S * V, dflt, np.float64))
+    return {
+        "lock": tile(np.asarray([POLICY_IDS[n] for n in lock_names],
+                                np.int32)),
+        "threads": rep(sc["threads"], np.int32),
+        "cores": rep(sc["cores"], np.int32),
+        "cs_lo": np.zeros(S * V, np.float64),
+        "cs_hi": rep(sc["cs_hi"], np.float64),
+        "ncs_lo": np.zeros(S * V, np.float64),
+        "ncs_hi": rep(sc["ncs_hi"], np.float64),
+        "wake_latency": rep(sc["wake"], np.float64),
+        "alpha": rep(sc["contention"], np.float64)
+        * tile(np.asarray([DEFAULT_ALPHA[n] for n in lock_names],
+                          np.float64)),
+        "sws_init": np.ones(S * V, np.int32),
+        "sws_max": tile(np.asarray(
+            [-1 if v.get("sws_max") is None else v["sws_max"]
+             for v in variants], np.int32)),
+        "k": tile(np.asarray([v.get("k", 10) for v in variants],
+                             np.int32)),
+        "spin_budget": np.full(S * V, DEFAULT_SPIN_BUDGET, np.float64),
+        "seed": rep(sc["seed"], np.uint32),
+        "oracle": tile(np.asarray(
+            [ORACLE_IDS[v.get("oracle", "paper")] for v in variants],
+            np.int32)),
+        "workload": tile(np.asarray(
+            [WORKLOAD_IDS[v.get("workload", "constant")]
+             for v in variants], np.int32)),
+        "wl_period": wlcol("wl_period", 1e-4),
+        "wl_duty": wlcol("wl_duty", 0.25),
+        "wl_burst": wlcol("wl_burst", 8.0),
+        "wl_spread": wlcol("wl_spread", 4.0),
+        "arrival_phase": np.zeros(S * V, np.float64),
+    }
+
+
+def lock_scenario_columns(n_scenarios: int = 200, seed: int = 0,
+                          locks=LOCK_DISCIPLINES) -> dict:
+    """Column twin of :func:`lock_scenario_sweep`."""
+    return _product_columns(sample_scenario_columns(n_scenarios, seed),
+                            [dict(lock=l) for l in locks])
+
+
+def lock_oracle_columns(n_scenarios: int = 200, seed: int = 0,
+                        oracles=LOCK_ORACLES, ks=LOCK_ORACLE_KS,
+                        sws_maxes=LOCK_ORACLE_SWS_MAX) -> dict:
+    """Column twin of :func:`lock_oracle_sweep`."""
+    return _product_columns(sample_scenario_columns(n_scenarios, seed),
+                            lock_oracle_variants(oracles, ks, sws_maxes))
+
+
+def lock_discipline_columns(n_scenarios: int = 200, seed: int = 0,
+                            disciplines=LOCK_DISCIPLINE_SET,
+                            oracles=LOCK_ORACLES) -> dict:
+    """Column twin of :func:`lock_discipline_sweep`."""
+    return _product_columns(sample_scenario_columns(n_scenarios, seed),
+                            lock_discipline_variants(disciplines, oracles))
+
+
+def lock_workload_columns(n_scenarios: int = 100, seed: int = 0,
+                          workloads=LOCK_WORKLOADS,
+                          disciplines=LOCK_DISCIPLINE_SET,
+                          oracles=LOCK_ORACLES) -> dict:
+    """Column twin of :func:`lock_workload_sweep` (the scenario-scaled
+    workload knobs of :func:`lock_workload_params` computed as columns)."""
+    import numpy as np
+
+    sc = sample_scenario_columns(n_scenarios, seed)
+    S = len(sc["seed"])
+    wl = dict(wl_period=16.0 * (sc["cs_hi"] + sc["ncs_hi"]),
+              wl_duty=np.full(S, 0.25), wl_burst=np.full(S, 8.0),
+              wl_spread=np.full(S, 4.0))
+    return _product_columns(
+        sc, lock_workload_variants(workloads, disciplines, oracles), wl)
+
+
 #: Named sweep registry (mirrors the model-config registry above).
 LOCK_SWEEPS = {
     "fig3": lock_fig3_grid,

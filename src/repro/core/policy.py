@@ -694,6 +694,28 @@ class SimConfig:
                     arrival_phase=self.arrival_phase)
 
 
+def workload_mean_scale_columns(workload, wl_duty, wl_burst, wl_spread):
+    """Vectorized twin of :func:`workload_mean_scale` over (C,) columns.
+
+    ``workload`` is an integer-id array; the float columns are taken in
+    float64 so the arithmetic matches the scalar (Python-float) path.
+    Returns ``(cs_scale, ncs_scale)`` float64 arrays.
+    """
+    import numpy as np
+
+    wid = np.asarray(workload)
+    duty = np.asarray(wl_duty, np.float64)
+    burst = np.asarray(wl_burst, np.float64)
+    s = np.asarray(wl_spread, np.float64)
+    cs = np.ones(wid.shape, np.float64)
+    ncs = np.ones(wid.shape, np.float64)
+    ncs = np.where(wid == WL_BURSTY, duty + (1.0 - duty) * burst, ncs)
+    ss = np.where(s <= 1.0, 2.0, s)          # dummy where the log is unused
+    m = np.where(s <= 1.0, 1.0, (ss - 1.0 / ss) / (2.0 * np.log(ss)))
+    het = wid == WL_HETERO
+    return np.where(het, m, cs), np.where(het, m, ncs)
+
+
 #: Column order of the struct-of-arrays encoding (see encode_configs).
 CONFIG_FIELDS = (
     "policy", "threads", "cores", "cs_lo", "cs_hi", "ncs_lo", "ncs_hi",
@@ -702,15 +724,216 @@ CONFIG_FIELDS = (
     "arrival_phase",
 )
 
+#: Column order of the RAW (pre-encoding) struct-of-arrays form — the
+#: array-native interchange format emitted by the catalog's column
+#: generators and consumed by :func:`encode_columns` and the streaming
+#: sweep.  Values keep SimConfig semantics and full float64 precision:
+#: ``lock``/``oracle``/``workload`` are integer ids (or name strings),
+#: ``alpha`` uses NaN for "default for this lock", ``sws_max`` uses -1
+#: for "default (= cores)".
+RAW_CONFIG_FIELDS = (
+    "lock", "threads", "cores", "cs_lo", "cs_hi", "ncs_lo", "ncs_hi",
+    "wake_latency", "alpha", "sws_init", "sws_max", "k", "spin_budget",
+    "seed", "oracle", "workload", "wl_period", "wl_duty", "wl_burst",
+    "wl_spread", "arrival_phase",
+)
+
+
+def _ids_from(values, table, what: str):
+    """Map an array/sequence of names or ids onto int32 ids (without ever
+    materializing a numpy unicode array — the dict lookup is the fast
+    path for name sequences)."""
+    import numpy as np
+
+    if isinstance(values, np.ndarray) and values.dtype.kind in "iu":
+        return values.astype(np.int32)
+    seq = values.tolist() if isinstance(values, np.ndarray) \
+        else list(values)
+    if seq and isinstance(seq[0], (int, np.integer)):
+        return np.asarray(seq, np.int32)
+    try:
+        return np.fromiter((table[v] for v in seq), np.int32, len(seq))
+    except KeyError as e:
+        raise ValueError(f"unknown {what} {e.args[0]!r}; "
+                         f"options: {sorted(table)}") from None
+
+
+def config_columns(configs) -> dict:
+    """Extract a list of :class:`SimConfig` into RAW struct-of-arrays form
+    (:data:`RAW_CONFIG_FIELDS`) in ONE attribute pass — no per-field
+    lambdas, no property calls.  Float columns keep float64 precision so
+    downstream planning (:func:`repro.core.xdes.plan_schedule`) matches
+    the per-object path exactly."""
+    import operator
+
+    import numpy as np
+
+    configs = list(configs)
+    if not configs:
+        raise ValueError("empty config batch")
+    get = operator.attrgetter(
+        "lock", "threads", "cores", "cs", "ncs", "wake_latency", "alpha",
+        "sws_init", "sws_max", "k", "spin_budget", "seed", "oracle",
+        "workload", "wl_period", "wl_duty", "wl_burst", "wl_spread",
+        "arrival_phase")
+    (lock, threads, cores, cs, ncs, wake, alpha, sws_init, sws_max, k,
+     spin_budget, seed, oracle, workload, wl_period, wl_duty, wl_burst,
+     wl_spread, arrival_phase) = zip(*map(get, configs))
+    n = len(configs)
+    cs = np.asarray(cs, np.float64)
+    ncs = np.asarray(ncs, np.float64)
+    return {
+        "lock": _ids_from(lock, POLICY_IDS, "lock"),
+        "threads": np.asarray(threads, np.int64).astype(np.int32),
+        "cores": np.asarray(cores, np.int64).astype(np.int32),
+        "cs_lo": cs[:, 0], "cs_hi": cs[:, 1],
+        "ncs_lo": ncs[:, 0], "ncs_hi": ncs[:, 1],
+        "wake_latency": np.asarray(wake, np.float64),
+        "alpha": np.fromiter((np.nan if a is None else a for a in alpha),
+                             np.float64, n),
+        "sws_init": np.asarray(sws_init, np.int64).astype(np.int32),
+        "sws_max": np.fromiter((-1 if s is None else s for s in sws_max),
+                               np.int64, n).astype(np.int32),
+        "k": np.asarray(k, np.int64).astype(np.int32),
+        "spin_budget": np.asarray(spin_budget, np.float64),
+        "seed": np.asarray(seed, np.int64).astype(np.uint32),
+        "oracle": _ids_from(oracle, ORACLE_IDS, "oracle"),
+        "workload": _ids_from(workload, WORKLOAD_IDS, "workload"),
+        "wl_period": np.asarray(wl_period, np.float64),
+        "wl_duty": np.asarray(wl_duty, np.float64),
+        "wl_burst": np.asarray(wl_burst, np.float64),
+        "wl_spread": np.asarray(wl_spread, np.float64),
+        "arrival_phase": np.asarray(arrival_phase, np.float64),
+    }
+
+
+def _validate_columns(cols, C: int) -> None:
+    """Vectorized mirror of ``SimConfig.__post_init__`` for column inputs
+    that never passed through the dataclass; names the first offending
+    row."""
+    import numpy as np
+
+    def bad(mask, msg):
+        idx = np.nonzero(np.asarray(mask))[0]
+        if idx.size:
+            raise ValueError(f"config column row {int(idx[0])}: {msg}")
+
+    bad((cols["lock"] < 0) | (cols["lock"] >= len(POLICY_IDS)),
+        f"unknown lock id; options: {sorted(POLICY_IDS.values())}")
+    bad((cols["oracle"] < 0) | (cols["oracle"] >= len(ORACLE_IDS)),
+        f"unknown oracle id; options: {sorted(ORACLE_IDS.values())}")
+    bad((cols["workload"] < 0) | (cols["workload"] >= len(WORKLOAD_IDS)),
+        f"unknown workload id; options: {sorted(WORKLOAD_IDS.values())}")
+    bad((cols["threads"] < 1) | (cols["cores"] < 1),
+        "threads and cores must be >= 1")
+    bad((cols["wl_period"] <= 0) | (cols["wl_duty"] <= 0)
+        | (cols["wl_duty"] > 1),
+        "wl_period must be > 0 and wl_duty in (0, 1]")
+    bad((cols["wl_burst"] < 1) | (cols["wl_spread"] < 1),
+        "wl_burst and wl_spread must be >= 1")
+    bad(cols["arrival_phase"] < 0, "arrival_phase must be >= 0")
+
+
+#: DEFAULT_ALPHA indexed by policy id (the vectorized alpha_eff lookup).
+def _alpha_by_id():
+    import numpy as np
+
+    return np.asarray([DEFAULT_ALPHA[POLICY_NAMES[i]]
+                       for i in range(len(POLICY_IDS))], np.float64)
+
+
+def encode_columns(cols, validate: bool = True) -> dict:
+    """Encode RAW struct-of-arrays columns (:data:`RAW_CONFIG_FIELDS`;
+    scalars broadcast, name strings accepted for the id columns) into the
+    engine's :data:`CONFIG_FIELDS` form — the fully array-native path the
+    streaming sweep feeds 100k+-config catalogs through.  Output is
+    bit-identical to ``encode_configs`` of the equivalent
+    :class:`SimConfig` list (same float64 -> float32 rounding, same
+    derived ``alpha``/``sws_init``/``sws_max`` rules)."""
+    import numpy as np
+
+    cols = dict(cols)
+    for key, table, what in (("lock", POLICY_IDS, "lock"),
+                             ("oracle", ORACLE_IDS, "oracle"),
+                             ("workload", WORKLOAD_IDS, "workload")):
+        v = cols[key]
+        if isinstance(v, str):
+            cols[key] = table.get(v)
+            if cols[key] is None:
+                raise ValueError(f"unknown {what} {v!r}; "
+                                 f"options: {sorted(table)}")
+        elif not np.asarray(v).dtype.kind in "iu":
+            cols[key] = _ids_from(v, table, what)
+    C = max(np.size(cols[f]) for f in RAW_CONFIG_FIELDS if f in cols)
+    full = {f: np.broadcast_to(np.asarray(cols[f]), (C,))
+            for f in RAW_CONFIG_FIELDS}
+    if validate:
+        _validate_columns(full, C)
+
+    lock = full["lock"].astype(np.int32)
+    threads = full["threads"].astype(np.int32)
+    cores = full["cores"].astype(np.int64)
+    alpha = full["alpha"].astype(np.float64)
+    alpha = np.where(np.isnan(alpha), _alpha_by_id()[lock], alpha)
+    sws_max_eff = np.where(full["sws_max"] < 0, cores,
+                           full["sws_max"]).astype(np.int64)
+    # sws_start per discipline (the SimConfig.sws_start rule, vectorized)
+    sws_start = np.where(
+        lock == SLEEP, 1,
+        np.where(lock == MUTABLE,
+                 np.clip(full["sws_init"], 1, np.maximum(sws_max_eff, 1)),
+                 threads)).astype(np.int32)
+    f32 = lambda key: full[key].astype(np.float32)
+    return {
+        "policy": lock,
+        "threads": threads,
+        "cores": cores.astype(np.float32),
+        "cs_lo": f32("cs_lo"), "cs_hi": f32("cs_hi"),
+        "ncs_lo": f32("ncs_lo"), "ncs_hi": f32("ncs_hi"),
+        "wake": f32("wake_latency"),
+        "alpha": alpha.astype(np.float32),
+        "sws_init": sws_start,
+        "sws_max": np.maximum(sws_max_eff, sws_start).astype(np.int32),
+        "k": full["k"].astype(np.int32),
+        "spin_budget": f32("spin_budget"),
+        "seed": full["seed"].astype(np.uint32),
+        "oracle": full["oracle"].astype(np.int32),
+        "workload": full["workload"].astype(np.int32),
+        "wl_period": f32("wl_period"), "wl_duty": f32("wl_duty"),
+        "wl_burst": f32("wl_burst"), "wl_spread": f32("wl_spread"),
+        "arrival_phase": f32("arrival_phase"),
+    }
+
 
 def encode_configs(configs) -> dict:
-    """Encode a list of :class:`SimConfig` as struct-of-arrays (numpy).
+    """Encode a batch of configs as struct-of-arrays (numpy).
 
-    The result is the array program's input: every column has length
-    ``len(configs)``; dtypes are int32 for discrete fields and float32 for
-    durations/rates.  ``policy`` uses the shared ids above, so the batched
-    simulator and the Pallas kernel can branch with ``where`` masks.
+    Accepts either a list of :class:`SimConfig` or a RAW column mapping
+    (:data:`RAW_CONFIG_FIELDS`, as emitted by the catalog's ``*_columns``
+    generators).  The result is the array program's input: every column
+    has length ``C``; dtypes are int32 for discrete fields and float32
+    for durations/rates.  ``policy`` uses the shared ids above, so the
+    batched simulator and the Pallas kernel can branch with ``where``
+    masks.
+
+    Vectorized: column inputs go straight through numpy column math
+    (:func:`encode_columns`, no per-config Python at all — the 100k+
+    streaming path); object lists take one attribute pass
+    (:func:`config_columns`) first.  Output is bit-identical to
+    :func:`encode_configs_legacy`, the pre-streaming per-field
+    implementation kept as the equality/bench baseline.
     """
+    if isinstance(configs, dict):
+        return encode_columns(configs)
+    return encode_columns(config_columns(configs), validate=False)
+
+
+def encode_configs_legacy(configs) -> dict:
+    """The per-lambda baseline implementation of :func:`encode_configs`
+    (one list comprehension per column, a Python lambda + property call
+    per config per field).  Kept for the vectorized-equality tests and as
+    the perf_bench speedup baseline — new code should call
+    :func:`encode_configs`."""
     import numpy as np
 
     configs = list(configs)

@@ -1,0 +1,399 @@
+"""stream — memory-budgeted streaming sweeps over the xdes engine.
+
+:func:`repro.core.xdes.simulate_batch` is one device program per call: at
+10^5-10^6 configs its working set — eight ``(C, T)`` state arrays carried
+through the blocked rollout, plus the full raw :class:`~repro.core.xdes.
+BatchResult` on host — outgrows both accelerator memory and host RAM.
+:func:`sweep_stream` runs the SAME blocked/bucketed/sharded rollout
+chunk-by-chunk instead:
+
+* **Chunk size from a memory model, not a constant.**
+  :func:`bytes_per_config` prices the rollout's working set per config
+  (the ``(C, T)`` state block double-buffered across a ``while_loop``
+  iteration plus the per-config input/carry/output columns);
+  :func:`memory_budget_bytes` resolves the budget — an explicit
+  ``mem_mb``, the ``REPRO_SWEEP_MEM_MB`` env var, the accelerator's
+  reported ``bytes_limit`` when it has one, else a CPU default — and
+  :func:`plan_chunks` divides the two, quantized to
+  ``lcm(reduce.group, n_devices) x power-of-two`` so every full chunk
+  lands on one compiled executable (the traced-horizon blocked rollout
+  makes the executable horizon-agnostic) and reduction groups never
+  straddle a chunk boundary.
+* **On-device reduction.** Chunks run ``keep_per_thread=False``: the
+  ``(chunk, T)`` state reduces on device to per-config summary columns —
+  completed CS, spin CPU, wake count, fairness spread (max-min over
+  active thread slots), final SWS, executed steps, ``t_end`` — and only
+  those ``(chunk,)`` vectors reach the host.  An optional
+  :class:`CellReduce` additionally folds each chunk into a donated
+  ``(n_cells, group)`` win-count accumulator on device (throughput
+  argmax per consecutive ``group``-row block — the phase-diagram
+  accumulation), so diagram cells update in place without a host pass.
+* **Composition.** ``bucket_steps=True`` buckets the GLOBAL step plan
+  (:func:`repro.core.xdes.plan_buckets`) before chunking, so per-config
+  horizons match the one-shot bucketed path; ``shard=True`` routes every
+  chunk through the ``shard_map`` path.  With ``early_exit=False``
+  results are bit-identical to one-shot ``simulate_batch`` and invariant
+  to chunk boundaries (configs are independent; padded tail rows are
+  copies of the last row).  With ``early_exit=True`` the exit decision
+  is per call — i.e. per (bucket, chunk) — so ``steps_run``/``t_end``
+  may differ from the one-shot run (each config still reports its exact
+  state at its reported horizon); single-chunk streams remain
+  bit-identical.
+
+Feed it raw column arrays (:data:`repro.core.policy.RAW_CONFIG_FIELDS`,
+e.g. from the ``*_columns`` generators in :mod:`repro.configs.catalog`)
+to keep the whole pipeline array-native — a list of
+:class:`~repro.core.policy.SimConfig` works too.  See docs/performance.md
+("Scaling sweeps") for the memory model and how the 100k diagrams use
+this path.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+import os
+import warnings
+from dataclasses import dataclass
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from . import policy as P
+from . import xdes
+
+#: Environment variable naming the sweep memory budget in MiB.
+ENV_MEM_MB = "REPRO_SWEEP_MEM_MB"
+#: Fallback budget (MiB) when neither an explicit ``mem_mb``, the env
+#: var, nor an accelerator ``bytes_limit`` is available (CPU hosts).
+DEFAULT_MEM_MB = 512.0
+#: Fraction of the accelerator's reported ``bytes_limit`` the sweep may
+#: claim (headroom for the runtime's own allocations).
+DEVICE_MEM_FRACTION = 0.6
+
+#: The blocked rollout's working set, per config (see bytes_per_config):
+#: (C, T) state arrays carried through the while_loop...
+_STATE_PT_ARRAYS = 8     # st, rem, wake_at, slept, spun, ctr, ticket, cpt
+#: ...plus (C,) carries (sws..wake_count, spin_cpu),
+_STATE_PC_ARRAYS = 9
+#: the encoded input columns (CONFIG_FIELDS + dt),
+_IN_COLS = len(P.CONFIG_FIELDS) + 1
+#: and the summary output columns.
+_OUT_COLS = 7
+
+#: Per-config summary columns a streamed chunk reduces to on device.
+SUMMARY_FIELDS = ("completed", "spin_cpu", "wake_count", "final_sws",
+                  "t_end", "steps_run", "fairness")
+
+
+def bytes_per_config(T: int, *, dtype_bytes: int = 4,
+                     double_buffer: int = 2) -> int:
+    """Modelled device working set of one config at ``T`` thread slots.
+
+    Every state/input/output element is 4 bytes (int32/float32/uint32).
+    The ``(C, T)`` state block is counted ``double_buffer`` times: XLA
+    holds the old and new carry of a ``while_loop`` body concurrently,
+    and donation does not reliably elide the copy on every backend — the
+    model prices the worst case so the budget is an upper bound.
+    """
+    per_thread = _STATE_PT_ARRAYS * dtype_bytes * int(T) * double_buffer
+    per_config = dtype_bytes * (_STATE_PC_ARRAYS * double_buffer
+                                + _IN_COLS + _OUT_COLS)
+    return per_thread + per_config
+
+
+def memory_budget_bytes(mem_mb: float | None = None) -> int:
+    """Resolve the sweep memory budget in bytes.
+
+    Priority: explicit ``mem_mb`` argument > ``REPRO_SWEEP_MEM_MB`` env
+    var > :data:`DEVICE_MEM_FRACTION` of the accelerator's reported
+    ``bytes_limit`` (GPU/TPU) > :data:`DEFAULT_MEM_MB` (CPU hosts, where
+    jax reports no limit).
+    """
+    if mem_mb is None:
+        env = os.environ.get(ENV_MEM_MB)
+        if env:
+            mem_mb = float(env)
+    if mem_mb is not None:
+        return int(float(mem_mb) * 2**20)
+    try:
+        stats = jax.devices()[0].memory_stats() or {}
+        limit = stats.get("bytes_limit")
+        if limit:
+            return int(DEVICE_MEM_FRACTION * limit)
+    except Exception:          # backends without memory_stats()
+        pass
+    return int(DEFAULT_MEM_MB * 2**20)
+
+
+def plan_chunks(C: int, T: int, *, mem_mb: float | None = None,
+                quantum: int = 1) -> int:
+    """Chunk size (configs per device call) for a ``C``-config sweep at
+    ``T`` thread slots under the resolved memory budget.
+
+    The chunk is the largest ``quantum x power-of-two`` count whose
+    modelled working set (:func:`bytes_per_config`) fits the budget
+    (:func:`memory_budget_bytes`) — quantized so every full chunk shares
+    ONE compiled executable and reduction groups / device shards divide
+    it evenly.  Floor: one ``quantum`` (a warning names the overshoot
+    when even that exceeds the budget).  Never larger than needed for
+    ``C``.
+    """
+    if C < 1 or T < 1 or quantum < 1:
+        raise ValueError("C, T and quantum must be >= 1")
+    budget = memory_budget_bytes(mem_mb)
+    raw = budget // bytes_per_config(T)
+    if raw < quantum:
+        warnings.warn(
+            f"sweep memory budget {budget / 2**20:.0f} MiB is below one "
+            f"reduction/shard quantum of {quantum} configs at T={T} "
+            f"(~{quantum * bytes_per_config(T) / 2**20:.1f} MiB); "
+            f"streaming at the quantum floor.", stacklevel=2)
+        return quantum
+    chunk = quantum * (1 << int(math.log2(raw // quantum)))
+    return min(chunk, quantum * xdes._pad_quantum(-(-C // quantum)))
+
+
+@dataclass(frozen=True)
+class CellReduce:
+    """Phase-diagram accumulation spec for :func:`sweep_stream`.
+
+    Rows are consumed in consecutive blocks of ``group`` (e.g. the V
+    (discipline, oracle) variants of one scenario, row order of the
+    catalog sweeps); each block's throughput argmax is its winner, and
+    ``cell_ids[g]`` names the phase-diagram cell block ``g`` belongs to
+    (e.g. its scenario's CS-length x subscription x wake bucket).  The
+    stream folds every chunk into a donated on-device ``(n_cells,
+    group)`` int32 win-count accumulator — ``StreamResult.wins``.
+    """
+
+    group: int
+    cell_ids: np.ndarray
+    n_cells: int
+
+    def __post_init__(self):
+        ids = np.asarray(self.cell_ids, np.int32)
+        object.__setattr__(self, "cell_ids", ids)
+        if self.group < 1:
+            raise ValueError("group must be >= 1")
+        if ids.size and (int(ids.min()) < 0
+                         or int(ids.max()) >= self.n_cells):
+            raise ValueError("cell_ids out of range")
+
+
+@functools.partial(jax.jit, static_argnames=("group",),
+                   donate_argnums=(0,))
+def _cell_update(wins, completed, t_end, cell_ids, *, group: int):
+    """Fold one chunk into the donated win-count accumulator: throughput
+    argmax per ``group``-row block, scatter-add at ``cell_ids`` (-1 ids
+    mark padded blocks and contribute nothing)."""
+    thr = completed.astype(jnp.float32) / jnp.maximum(t_end, 1e-30)
+    win = jnp.argmax(thr.reshape(-1, group), axis=1)
+    ok = cell_ids >= 0
+    return wins.at[jnp.where(ok, cell_ids, 0), win].add(
+        ok.astype(jnp.int32))
+
+
+@dataclass
+class StreamResult:
+    """Per-config summary columns of one streamed sweep (numpy, length
+    C) — the same statistics as :class:`repro.core.xdes.BatchResult`
+    with ``keep_per_thread=False``, without the configs list or any
+    (C, T) array ever reaching the host."""
+
+    n_configs: int
+    n_steps: int               # the largest horizon any chunk ran
+    backend: str
+    dt: np.ndarray
+    t_end: np.ndarray
+    completed: np.ndarray
+    spin_cpu: np.ndarray
+    wake_count: np.ndarray
+    final_sws: np.ndarray
+    steps_run: np.ndarray
+    fairness: np.ndarray
+    #: Streaming-plan record: configs per device call, number of calls,
+    #: resolved budget, and the bytes/config model behind the chunk size.
+    chunk_size: int = 0
+    n_chunks: int = 0
+    budget_mb: float = 0.0
+    bytes_per_config: int = 0
+    #: (n_cells, group) on-device win counts when a CellReduce was given.
+    wins: np.ndarray | None = None
+
+    @property
+    def throughput(self) -> np.ndarray:
+        return self.completed / np.maximum(self.t_end, 1e-30)
+
+    @property
+    def sync_cpu_per_cs(self) -> np.ndarray:
+        return self.spin_cpu / np.maximum(self.completed, 1)
+
+    def fairness_spread(self, i: int) -> int:
+        return int(self.fairness[i])
+
+
+def _run_chunk(arrs, n_steps: int, T: int, backend: str, block_steps: int,
+               target_cs: int, shard: bool):
+    """One device call on an encoded chunk — the sharded or the
+    traced-horizon unsharded blocked rollout, ``keep_per_thread=False``
+    (summaries reduce on device)."""
+    if shard:
+        return xdes._simulate_sharded(
+            arrs, n_steps=int(n_steps), T=T, backend=backend,
+            rollout="blocked", block_steps=block_steps,
+            target_cs=target_cs, keep_per_thread=False)
+    return xdes._simulate_dyn(
+        arrs, np.int32(n_steps), T=T, backend=backend, rollout="blocked",
+        block_steps=block_steps, target_cs=np.int32(target_cs),
+        early_exit=target_cs > 0, keep_per_thread=False)
+
+
+def _pad_rows(arrs, n: int):
+    """Pad every column to ``n`` rows with copies of the last row (the
+    bucketed path's trick: independent copies converge exactly when the
+    source row does, so early exit and results are unchanged)."""
+    C = arrs["policy"].shape[0]
+    if n <= C:
+        return arrs
+    return {k: np.concatenate([v, np.repeat(v[-1:], n - C, axis=0)])
+            for k, v in arrs.items()}
+
+
+def sweep_stream(configs, *, target_cs: int = 300,
+                 n_steps: int | None = None, dt=None, backend: str = "ref",
+                 block_steps: int | None = None, shard: bool | None = None,
+                 bucket_steps: bool = False, early_exit: bool | None = None,
+                 reduce: CellReduce | None = None,
+                 mem_mb: float | None = None,
+                 max_threads: int | None = None,
+                 chunk: int | None = None,
+                 verbose: bool = False) -> StreamResult:
+    """Run a sweep chunk-by-chunk under a memory budget; see the module
+    docstring for the mechanism.
+
+    ``configs`` is a RAW column mapping (:data:`repro.core.policy.
+    RAW_CONFIG_FIELDS`) or a list of :class:`~repro.core.policy.
+    SimConfig`.  Planning (``dt`` + per-config horizons, and the
+    ``bucket_steps`` grouping) happens ONCE over the full sweep, so
+    per-config horizons match the equivalent one-shot
+    :func:`~repro.core.xdes.simulate_batch` call regardless of
+    chunking.  ``chunk`` overrides the budget-derived size (tests);
+    ``mem_mb`` overrides the budget (else env/device/default — see
+    :func:`memory_budget_bytes`).  ``early_exit`` defaults to on iff the
+    horizon is auto-planned, like ``simulate_batch`` — pass ``False``
+    for chunk-invariant bit-exactness.
+    """
+    cols = configs if isinstance(configs, dict) else \
+        P.config_columns(configs)
+    arrs = P.encode_columns(cols, validate=isinstance(configs, dict))
+    C = arrs["policy"].shape[0]
+    if reduce is not None:
+        if C % reduce.group:
+            raise ValueError(f"C={C} not a multiple of reduce.group="
+                             f"{reduce.group}")
+        if reduce.cell_ids.shape != (C // reduce.group,):
+            raise ValueError("cell_ids must have one entry per group")
+
+    auto_dt, steps_arr = xdes.plan_schedule_columns(cols, target_cs)
+    dt = auto_dt if dt is None else np.broadcast_to(
+        np.asarray(dt, np.float32), (C,)).copy()
+    if n_steps is None:
+        if int(steps_arr.max()) > xdes.MAX_STEPS and not bucket_steps:
+            over = int((steps_arr > xdes.MAX_STEPS).sum())
+            warnings.warn(
+                f"step cap {xdes.MAX_STEPS} truncates {over}/{C} configs "
+                f"below target_cs={target_cs} (see plan_schedule); "
+                f"bucket_steps=True keeps fast cells fully sampled.",
+                stacklevel=2)
+        n_steps = min(int(steps_arr.max()), xdes.MAX_STEPS)
+        if early_exit is None:
+            early_exit = True
+    elif early_exit is None:
+        early_exit = False
+    arrs["dt"] = np.asarray(dt, np.float32)
+
+    T = max_threads or int(arrs["threads"].max())
+    if T < int(arrs["threads"].max()):
+        raise ValueError("max_threads smaller than widest config")
+    if shard is None:
+        shard = len(jax.devices()) > 1
+    n_dev = len(jax.devices()) if shard else 1
+    if block_steps is None:
+        block_steps = xdes.DEFAULT_BLOCK_STEPS
+    tc = int(target_cs) if early_exit else 0
+
+    group = reduce.group if reduce is not None else 1
+    quantum = (group * n_dev) // math.gcd(group, n_dev)
+    if chunk is None:
+        chunk = plan_chunks(C, T, mem_mb=mem_mb, quantum=quantum)
+    elif chunk % quantum:
+        raise ValueError(f"chunk={chunk} not a multiple of the "
+                         f"group/device quantum {quantum}")
+    bpc = bytes_per_config(T)
+    budget_mb = memory_budget_bytes(mem_mb) / 2**20
+
+    out = {f: np.empty(C, np.float32 if f in ("spin_cpu", "t_end")
+                       else np.int32) for f in SUMMARY_FIELDS}
+    wins = (jnp.zeros((reduce.n_cells, group), jnp.int32)
+            if reduce is not None else None)
+    # Per-chunk on-device cell accumulation needs every group's rows in
+    # one call: that holds in row order, but bucketing regroups rows by
+    # horizon — there the accumulator folds once at the end instead.
+    chunk_reduce = reduce is not None and not bucket_steps
+
+    if bucket_steps:
+        buckets = xdes.plan_buckets(steps_arr)
+        plans = [(idx, min(int(steps_arr[idx].max()), xdes.MAX_STEPS))
+                 for idx in buckets]
+    else:
+        plans = [(None, int(n_steps))]
+
+    n_chunks = 0
+    run_steps = 0
+    for idx, horizon in plans:
+        rows = C if idx is None else len(idx)
+        for lo in range(0, rows, chunk):
+            hi = min(lo + chunk, rows)
+            sel = slice(lo, hi) if idx is None else idx[lo:hi]
+            part = {k: v[sel] for k, v in arrs.items()}
+            n = hi - lo
+            # pad the tail chunk onto the quantized shape ladder so it
+            # reuses executables across sweeps instead of compiling 1:1
+            pad_to = min(chunk, quantum * xdes._pad_quantum(
+                -(-n // quantum)))
+            res = _run_chunk(_pad_rows(part, pad_to), horizon, T, backend,
+                             int(block_steps), tc, shard)
+            for f in SUMMARY_FIELDS:
+                out[f][sel] = np.asarray(res[f])[:n]
+            if chunk_reduce:
+                cid = np.full(pad_to // group, -1, np.int32)
+                cid[:n // group] = reduce.cell_ids[lo // group:
+                                                   hi // group]
+                wins = _cell_update(wins, res["completed"][:pad_to],
+                                    res["t_end"][:pad_to], cid,
+                                    group=group)
+            n_chunks += 1
+            run_steps = max(run_steps, horizon)
+            if verbose:
+                done = sum(1 for _ in range(0, rows, chunk))
+                print(f"  stream chunk {n_chunks}: {n} configs "
+                      f"(pad {pad_to}) x {horizon} steps "
+                      f"[bucket rows={rows}, {done} chunks]")
+    if reduce is not None and not chunk_reduce:
+        wins = _cell_update(jnp.zeros((reduce.n_cells, group), jnp.int32),
+                            jnp.asarray(out["completed"]),
+                            jnp.asarray(out["t_end"]),
+                            jnp.asarray(reduce.cell_ids), group=group)
+
+    return StreamResult(
+        n_configs=C, n_steps=run_steps, backend=backend,
+        dt=np.asarray(dt, np.float32), t_end=out["t_end"],
+        completed=out["completed"], spin_cpu=out["spin_cpu"],
+        wake_count=out["wake_count"], final_sws=out["final_sws"],
+        steps_run=out["steps_run"], fairness=out["fairness"],
+        chunk_size=int(chunk), n_chunks=n_chunks,
+        budget_mb=float(budget_mb), bytes_per_config=bpc,
+        wins=None if wins is None else np.asarray(wins))

@@ -158,42 +158,65 @@ def _init_state(arrs, T: int):
     )
 
 
-def _out_dict(state, executed, arrs):
+def _out_dict(state, executed, arrs, keep_per_thread: bool = True):
     (st, rem, wake_at, slept, spun, ctr, ticket, completed_pt,
      sws, cnt, ewma, wuc, permits, nticket, completed, wake_count,
      spin_cpu) = state
     executed = jnp.asarray(executed, jnp.int32)
-    return {
+    out = {
         "completed": completed,
-        "completed_per_thread": completed_pt,
         "spin_cpu": spin_cpu,
         "wake_count": wake_count,
         "final_sws": sws,
         "t_end": executed.astype(jnp.float32) * arrs["dt"],
         "steps_run": jnp.broadcast_to(executed, completed.shape),
     }
+    if keep_per_thread:
+        out["completed_per_thread"] = completed_pt
+    else:
+        # fairness on device: max-min completed-CS spread over the active
+        # thread slots — the (C, T) array never reaches the host.
+        T = completed_pt.shape[1]
+        tid = jnp.arange(T, dtype=jnp.int32)[None, :]
+        act = tid < arrs["threads"][:, None]
+        big = jnp.int32(2**31 - 1)
+        mx = jnp.max(jnp.where(act, completed_pt, -big), axis=-1)
+        mn = jnp.min(jnp.where(act, completed_pt, big), axis=-1)
+        out["fairness"] = mx - mn
+    return out
 
 
-def _simulate_core(arrs, n_steps: int, T: int, backend: str = "ref",
+def _simulate_core(arrs, n_steps, T: int, backend: str = "ref",
                    rollout: str = "blocked",
                    block_steps: int = DEFAULT_BLOCK_STEPS,
-                   target_cs: int = 0, shard_axis: str | None = None):
+                   target_cs=0, shard_axis: str | None = None,
+                   early_exit: bool | None = None,
+                   keep_per_thread: bool = True):
     """One device program simulating ``n_steps`` timesteps of every config.
 
     ``rollout="blocked"``: chunked ``lax.while_loop``, one fused kernel
-    dispatch (:func:`_block_backend`) per ``block_steps`` timesteps; when
-    ``target_cs > 0`` the loop exits at the first block boundary where
-    every config has completed at least ``target_cs`` critical sections
-    (under ``shard_axis`` the exit decision is agreed across devices with
-    a one-int ``psum``, keeping sharded results bit-identical).
-    ``rollout="scan"``: the legacy per-step ``lax.scan`` (two kernel
-    dispatches per step, no early exit) — the parity reference.
+    dispatch (:func:`_block_backend`) per ``block_steps`` timesteps.  Both
+    ``n_steps`` and ``target_cs`` may be traced int32 scalars here: the
+    loop runs ``ceil(n_steps / block_steps)`` blocks with the kernels'
+    step-``limit`` mask turning the tail block's overshoot sub-steps into
+    exact passthroughs, so one compiled executable serves every horizon
+    at a given padded shape.  When early exit is on the loop stops at the
+    first block boundary where every config has completed ``target_cs``
+    critical sections (under ``shard_axis`` the decision is agreed across
+    devices with a one-int ``psum``, keeping sharded results
+    bit-identical).  ``early_exit=None`` infers the flag from a static
+    ``target_cs`` (on iff > 0); pass it explicitly when ``target_cs`` is
+    traced.  ``rollout="scan"``: the legacy per-step ``lax.scan`` (two
+    kernel dispatches per step, static ``n_steps``, no early exit) — the
+    parity reference.
     """
     C = arrs["policy"].shape[0]
     _, _, budget_f, _, _, _ = P.discipline_flags(arrs["policy"])
     has_budget = budget_f > 0
     state0 = _init_state(arrs, T)
     prm = tuple(arrs[f] for f in _PRM_FIELDS)
+    if early_exit is None:
+        early_exit = isinstance(target_cs, int) and target_cs > 0
 
     if rollout == "scan":
         advance, transitions = _step_backends(backend)
@@ -207,79 +230,101 @@ def _simulate_core(arrs, n_steps: int, T: int, backend: str = "ref",
             state = transitions(st, rem, *state[2:], now2, *prm)
             return (*state, spin_cpu + burn), None
 
-        final, _ = jax.lax.scan(body, state0, jnp.arange(n_steps))
-        return _out_dict(final, n_steps, arrs)
+        final, _ = jax.lax.scan(body, state0, jnp.arange(int(n_steps)))
+        return _out_dict(final, int(n_steps), arrs, keep_per_thread)
 
     if rollout != "blocked":
         raise ValueError(f"unknown rollout {rollout!r} (blocked|scan)")
 
     block = _block_backend(backend)
-    B = max(1, min(int(block_steps), max(int(n_steps), 1)))
-    n_full, n_rem = divmod(int(n_steps), B)
+    B = max(1, int(block_steps))
+    limit = jnp.asarray(n_steps, jnp.int32)
+    n_blocks = (limit + (B - 1)) // B
+    tc = jnp.asarray(target_cs, jnp.int32)
 
-    def run_block(state, step0, nss):
-        return block(*state, jnp.int32(step0), arrs["alpha"], arrs["cores"],
-                     has_budget, *prm, n_sub_steps=nss)
+    def run_block(state, step0):
+        return block(*state, jnp.asarray(step0, jnp.int32), arrs["alpha"],
+                     arrs["cores"], has_budget, *prm, n_sub_steps=B,
+                     limit=limit)
 
     def all_done(completed):
-        if target_cs <= 0:
+        if not early_exit:
             return jnp.bool_(False)
-        done = jnp.all(completed >= target_cs)
+        done = jnp.all(completed >= tc)
         if shard_axis is not None:    # agree across shards: exit globally
             done = (jax.lax.psum(done.astype(jnp.int32), shard_axis)
                     == jax.lax.psum(1, shard_axis))
         return done
 
-    nblk = jnp.int32(0)
-    done = jnp.bool_(False)
-    state = state0
-    if n_full:
-        def cond(c):
-            return (c[-2] < n_full) & jnp.logical_not(c[-1])
+    def cond(c):
+        return (c[-2] < n_blocks) & jnp.logical_not(c[-1])
 
-        def body(c):
-            s = run_block(c[:-2], c[-2] * B, B)
-            return (*s, c[-2] + 1, all_done(s[14]))
+    def body(c):
+        s = run_block(c[:-2], c[-2] * B)
+        return (*s, c[-2] + 1, all_done(s[14]))
 
-        *state, nblk, done = jax.lax.while_loop(cond, body,
-                                                (*state0, nblk, done))
-        state = tuple(state)
-    executed = nblk * B
-    if n_rem:
-        state = jax.lax.cond(
-            done, lambda s: s,
-            lambda s: run_block(s, n_full * B, n_rem), state)
-        executed = executed + jnp.where(done, 0, n_rem)
-    return _out_dict(state, executed, arrs)
+    *state, nblk, done = jax.lax.while_loop(
+        cond, body, (*state0, jnp.int32(0), jnp.bool_(False)))
+    executed = jnp.minimum(nblk * B, limit)
+    return _out_dict(tuple(state), executed, arrs, keep_per_thread)
 
 
+#: Fully-static jit entry (legacy + scan path): one executable per
+#: (n_steps, target_cs, shapes) combination.
 _simulate = functools.partial(jax.jit, static_argnames=(
     "n_steps", "T", "backend", "rollout", "block_steps", "target_cs",
-    "shard_axis"))(_simulate_core)
+    "shard_axis", "early_exit", "keep_per_thread"))(_simulate_core)
+
+#: Dynamic-horizon jit entry for the blocked rollout: ``n_steps`` and
+#: ``target_cs`` are traced int32 scalars, so ONE executable per padded
+#: (C, T) shape serves every step-count bucket and stream chunk.
+_simulate_dyn = functools.partial(jax.jit, static_argnames=(
+    "T", "backend", "rollout", "block_steps", "shard_axis", "early_exit",
+    "keep_per_thread"))(_simulate_core)
 
 
 @functools.lru_cache(maxsize=None)
-def _sharded_fn(n_steps: int, T: int, backend: str, n_dev: int,
-                rollout: str, block_steps: int, target_cs: int):
+def _sharded_fn(n_steps: int | None, T: int, backend: str, n_dev: int,
+                rollout: str, block_steps: int, target_cs: int | None,
+                early_exit: bool = False, keep_per_thread: bool = True):
     """jit(shard_map(core)) over a 1-d ``configs`` device mesh — every
     config is independent, so the mapping is manual (the single collective
     is the one-int early-exit psum per block, which agrees on the exit
-    step) and results are bit-identical to the unsharded call."""
+    step) and results are bit-identical to the unsharded call.
+
+    With ``n_steps=None`` (blocked rollout only) the returned callable
+    takes ``(arrs, n_steps, target_cs)`` with the two scalars traced and
+    replicated across the mesh — the sharded twin of :data:`_simulate_dyn`.
+    """
     from jax.sharding import Mesh, PartitionSpec
 
     from repro.sharding.compat import shard_map
 
     mesh = Mesh(np.asarray(jax.devices()[:n_dev]), ("configs",))
     spec = PartitionSpec("configs")
-
-    def run(arrs):
-        return _simulate_core(arrs, n_steps=n_steps, T=T, backend=backend,
-                              rollout=rollout, block_steps=block_steps,
-                              target_cs=target_cs, shard_axis="configs")
+    rep = PartitionSpec()
 
     # check_vma=False: the pinned JAX has no replication rule for `while`
     # (the blocked rollout's chunk loop); replication checking adds no
     # safety here — every output is config-partitioned, never replicated.
+    if n_steps is None:
+        def run_dyn(arrs, ns, tc):
+            return _simulate_core(arrs, ns, T=T, backend=backend,
+                                  rollout=rollout, block_steps=block_steps,
+                                  target_cs=tc, shard_axis="configs",
+                                  early_exit=early_exit,
+                                  keep_per_thread=keep_per_thread)
+
+        return jax.jit(shard_map(run_dyn, mesh=mesh,
+                                 in_specs=(spec, rep, rep),
+                                 out_specs=spec, check_vma=False))
+
+    def run(arrs):
+        return _simulate_core(arrs, n_steps=n_steps, T=T, backend=backend,
+                              rollout=rollout, block_steps=block_steps,
+                              target_cs=target_cs, shard_axis="configs",
+                              keep_per_thread=keep_per_thread)
+
     return jax.jit(shard_map(run, mesh=mesh, in_specs=(spec,),
                              out_specs=spec, check_vma=False))
 
@@ -287,15 +332,20 @@ def _sharded_fn(n_steps: int, T: int, backend: str, n_dev: int,
 def _simulate_sharded(arrs, n_steps: int, T: int, backend: str,
                       rollout: str = "blocked",
                       block_steps: int = DEFAULT_BLOCK_STEPS,
-                      target_cs: int = 0):
+                      target_cs: int = 0, keep_per_thread: bool = True):
     n_dev = len(jax.devices())
     C = arrs["policy"].shape[0]
     pad = (-C) % n_dev
     if pad:            # pad with copies of the last row, sliced off below
         arrs = {k: np.concatenate([v, np.repeat(v[-1:], pad, axis=0)])
                 for k, v in arrs.items()}
-    out = _sharded_fn(n_steps, T, backend, n_dev, rollout, block_steps,
-                      target_cs)(arrs)
+    if rollout == "blocked":
+        fn = _sharded_fn(None, T, backend, n_dev, rollout, block_steps,
+                         None, target_cs > 0, keep_per_thread)
+        out = fn(arrs, np.int32(n_steps), np.int32(target_cs))
+    else:
+        out = _sharded_fn(n_steps, T, backend, n_dev, rollout, block_steps,
+                          target_cs, False, keep_per_thread)(arrs)
     return {k: v[:C] for k, v in out.items()}
 
 
@@ -319,18 +369,34 @@ def plan_schedule(configs, target_cs: int = 300):
     ``bucket_steps=True``), capped at :data:`MAX_STEPS` with a diagnostic
     naming the cells the cap under-samples.
     """
-    dts, steps = [], []
-    for c in configs:
-        cs_scale, ncs_scale = P.workload_mean_scale(c)
-        cs_b = (c.cs[0] + c.cs[1]) / 2.0
-        cs_m = cs_b * cs_scale
-        ncs_m = (c.ncs[0] + c.ncs[1]) / 2.0 * ncs_scale
-        dt = min(max(cs_b, 1e-8), max(c.wake_latency, 1e-8)) / 6.0
-        per_cs = (max(cs_m, (cs_m + ncs_m) / min(c.threads, c.cores)) * 1.35
-                  + 0.25 * c.wake_latency + 2.0 * dt)
-        dts.append(dt)
-        steps.append(int(np.ceil(target_cs * per_cs / dt)))
-    return np.asarray(dts, np.float32), np.asarray(steps, np.int64)
+    return plan_schedule_columns(P.config_columns(configs), target_cs)
+
+
+def plan_schedule_columns(cols, target_cs: int = 300):
+    """:func:`plan_schedule` over RAW struct-of-arrays columns
+    (:data:`repro.core.policy.RAW_CONFIG_FIELDS`) — the array-native
+    planner the streaming sweep uses.  All arithmetic is float64 and
+    elementwise-identical to the per-object path (``plan_schedule`` is
+    now this function applied to :func:`repro.core.policy.
+    config_columns`), so plans never depend on which form fed them."""
+    cs_lo = np.asarray(cols["cs_lo"], np.float64)
+    cs_hi = np.asarray(cols["cs_hi"], np.float64)
+    ncs_lo = np.asarray(cols["ncs_lo"], np.float64)
+    ncs_hi = np.asarray(cols["ncs_hi"], np.float64)
+    wake = np.asarray(cols["wake_latency"], np.float64)
+    threads = np.asarray(cols["threads"], np.int64)
+    cores = np.asarray(cols["cores"], np.int64)
+    cs_scale, ncs_scale = P.workload_mean_scale_columns(
+        cols["workload"], cols["wl_duty"], cols["wl_burst"],
+        cols["wl_spread"])
+    cs_b = (cs_lo + cs_hi) / 2.0
+    cs_m = cs_b * cs_scale
+    ncs_m = (ncs_lo + ncs_hi) / 2.0 * ncs_scale
+    dt = np.minimum(np.maximum(cs_b, 1e-8), np.maximum(wake, 1e-8)) / 6.0
+    per_cs = (np.maximum(cs_m, (cs_m + ncs_m) / np.minimum(threads, cores))
+              * 1.35 + 0.25 * wake + 2.0 * dt)
+    steps = np.ceil(target_cs * per_cs / dt).astype(np.int64)
+    return dt.astype(np.float32), steps
 
 
 def plan_buckets(steps) -> list[np.ndarray]:
@@ -386,10 +452,17 @@ class BatchResult:
     spin_cpu: np.ndarray
     wake_count: np.ndarray
     final_sws: np.ndarray
-    completed_per_thread: np.ndarray    # (C, T) per-slot CS counts
+    #: (C, T) per-slot CS counts; ``None`` when the run was made with
+    #: ``keep_per_thread=False`` (the (C, T) array then never reaches the
+    #: host and ``fairness`` carries the on-device spread instead).
+    completed_per_thread: np.ndarray | None = None
     #: (C,) timesteps actually executed per config — less than ``n_steps``
     #: when early exit fired, and per-bucket under ``bucket_steps=True``.
     steps_run: np.ndarray | None = None
+    #: (C,) max-min completed-CS spread over active threads, computed on
+    #: device when ``keep_per_thread=False`` (else derivable from
+    #: ``completed_per_thread``).
+    fairness: np.ndarray | None = None
 
     @property
     def throughput(self) -> np.ndarray:
@@ -402,6 +475,8 @@ class BatchResult:
     def fairness_spread(self, i: int) -> int:
         """Max-min completed-CS spread across config ``i``'s threads —
         ~0/1 under FIFO ticket grants, unbounded under barging locks."""
+        if self.completed_per_thread is None:
+            return int(self.fairness[i])
         per = self.completed_per_thread[i, :self.configs[i].threads]
         return int(per.max() - per.min())
 
@@ -417,13 +492,24 @@ class BatchResult:
         }
 
 
+def _pad_quantum(n: int) -> int:
+    """Next power of two — the shared config-axis padding quantum of the
+    bucketed path, so buckets of nearby sizes land on the SAME padded
+    (C, T) shape and (with the traced-horizon blocked rollout) reuse one
+    compiled executable instead of compiling per bucket."""
+    return 1 << max(int(n) - 1, 0).bit_length()
+
+
 def _simulate_bucketed(configs, buckets, steps, *, target_cs, dt, backend,
                        max_threads, shard, rollout, block_steps,
-                       early_exit) -> BatchResult:
+                       early_exit, keep_per_thread=True) -> BatchResult:
     """Run each step-count bucket as its own batched call and stitch the
     per-config results back into the caller's row order.  ``dt`` and
     ``steps`` are the (C,) planned arrays — passed down sliced, so the
-    per-bucket calls skip re-planning."""
+    per-bucket calls skip re-planning.  Each bucket's config axis is
+    padded to the next power of two (copies of its last row, sliced off
+    again), so buckets share padded shapes and — the horizon being traced
+    in the blocked rollout — compiled executables."""
     C = len(configs)
     T = max_threads or max(c.threads for c in configs)
     parts = []
@@ -434,18 +520,24 @@ def _simulate_bucketed(configs, buckets, steps, *, target_cs, dt, backend,
             n_steps=min(int(steps[idx].max()), MAX_STEPS),
             backend=backend, max_threads=T, shard=shard, rollout=rollout,
             block_steps=block_steps, early_exit=early_exit,
-            bucket_steps=False))
+            bucket_steps=False, keep_per_thread=keep_per_thread,
+            pad_configs=_pad_quantum(len(idx)) if rollout == "blocked"
+            else None))
     res = BatchResult(
         configs=configs, n_steps=max(p.n_steps for p in parts),
         backend=backend,
         dt=np.empty(C, np.float32), t_end=np.empty(C, np.float32),
         completed=np.empty(C, np.int32), spin_cpu=np.empty(C, np.float32),
         wake_count=np.empty(C, np.int32), final_sws=np.empty(C, np.int32),
-        completed_per_thread=np.empty((C, T), np.int32),
-        steps_run=np.empty(C, np.int32))
+        completed_per_thread=(np.empty((C, T), np.int32)
+                              if keep_per_thread else None),
+        steps_run=np.empty(C, np.int32),
+        fairness=None if keep_per_thread else np.empty(C, np.int32))
+    fields = ["dt", "t_end", "completed", "spin_cpu", "wake_count",
+              "final_sws", "steps_run"]
+    fields.append("completed_per_thread" if keep_per_thread else "fairness")
     for idx, p in zip(buckets, parts):
-        for f in ("dt", "t_end", "completed", "spin_cpu", "wake_count",
-                  "final_sws", "completed_per_thread", "steps_run"):
+        for f in fields:
             getattr(res, f)[idx] = getattr(p, f)
     return res
 
@@ -456,7 +548,9 @@ def simulate_batch(configs, *, target_cs: int = 300, n_steps: int | None = None,
                    shard: bool | None = None, rollout: str = "blocked",
                    block_steps: int | None = None,
                    early_exit: bool | None = None,
-                   bucket_steps: bool = False) -> BatchResult:
+                   bucket_steps: bool = False,
+                   keep_per_thread: bool = True,
+                   pad_configs: int | None = None) -> BatchResult:
     """Simulate every :class:`repro.core.policy.SimConfig` in ``configs``
     in ONE jit-compiled device call (or one per step-count bucket).
 
@@ -487,6 +581,15 @@ def simulate_batch(configs, *, target_cs: int = 300, n_steps: int | None = None,
     single-device hosts), ``shard=False`` disables it.  Sharded and
     unsharded results are bit-identical (configs are independent; the
     early-exit decision is agreed across devices).
+
+    ``keep_per_thread=False`` drops the (C, T) ``completed_per_thread``
+    output (the fairness spread is reduced on device into
+    ``BatchResult.fairness`` instead) — the memory-lean mode the
+    streaming sweep (:mod:`repro.core.stream`) runs in.  ``pad_configs``
+    pads the batch with copies of the last config up to the given count
+    (results sliced back), stabilizing compiled shapes across calls;
+    results are bit-identical because configs are independent and the
+    padded copies converge exactly when their source row does.
     """
     configs = list(configs)
     if dt is None or n_steps is None:
@@ -507,7 +610,8 @@ def simulate_batch(configs, *, target_cs: int = 300, n_steps: int | None = None,
                 backend=backend, max_threads=max_threads, shard=shard,
                 rollout=rollout, block_steps=block_steps,
                 # a bucketed horizon is auto-planned: exit by default
-                early_exit=True if early_exit is None else early_exit)
+                early_exit=True if early_exit is None else early_exit,
+                keep_per_thread=keep_per_thread)
     arrs = P.encode_configs(configs)
     if dt is None:
         dt = auto_dt
@@ -526,7 +630,12 @@ def simulate_batch(configs, *, target_cs: int = 300, n_steps: int | None = None,
         early_exit = False       # a pinned horizon means: run exactly it
     if n_steps > MAX_STEPS:
         raise ValueError(f"n_steps={n_steps} exceeds MAX_STEPS={MAX_STEPS}")
-    arrs["dt"] = dt
+    arrs["dt"] = np.asarray(dt, np.float32)
+    C = len(configs)
+    if pad_configs is not None and pad_configs > C:
+        pad = pad_configs - C
+        arrs = {k: np.concatenate([v, np.repeat(v[-1:], pad, axis=0)])
+                for k, v in arrs.items()}
     T = max_threads or int(arrs["threads"].max())
     if T < int(arrs["threads"].max()):
         raise ValueError("max_threads smaller than widest config")
@@ -535,14 +644,30 @@ def simulate_batch(configs, *, target_cs: int = 300, n_steps: int | None = None,
     if block_steps is None:
         block_steps = DEFAULT_BLOCK_STEPS
     tc = int(target_cs) if (early_exit and rollout == "blocked") else 0
-    run = _simulate_sharded if shard else _simulate
-    out = run(arrs, n_steps=int(n_steps), T=int(T), backend=backend,
-              rollout=rollout, block_steps=int(block_steps), target_cs=tc)
-    out = {k: np.asarray(v) for k, v in out.items()}
+    if shard:
+        out = _simulate_sharded(arrs, n_steps=int(n_steps), T=int(T),
+                                backend=backend, rollout=rollout,
+                                block_steps=int(block_steps), target_cs=tc,
+                                keep_per_thread=keep_per_thread)
+    elif rollout == "blocked":
+        # traced horizon/target: one executable per padded (C, T) shape
+        out = _simulate_dyn(arrs, np.int32(n_steps), T=int(T),
+                            backend=backend, rollout=rollout,
+                            block_steps=int(block_steps),
+                            target_cs=np.int32(tc), early_exit=tc > 0,
+                            keep_per_thread=keep_per_thread)
+    else:
+        out = _simulate(arrs, n_steps=int(n_steps), T=int(T),
+                        backend=backend, rollout=rollout,
+                        block_steps=int(block_steps), target_cs=tc,
+                        keep_per_thread=keep_per_thread)
+    out = {k: np.asarray(v)[:C] for k, v in out.items()}
     return BatchResult(configs=configs, n_steps=int(n_steps), backend=backend,
-                       dt=dt, t_end=out["t_end"], completed=out["completed"],
+                       dt=np.asarray(dt, np.float32)[:C],
+                       t_end=out["t_end"], completed=out["completed"],
                        spin_cpu=out["spin_cpu"],
                        wake_count=out["wake_count"],
                        final_sws=out["final_sws"],
-                       completed_per_thread=out["completed_per_thread"],
-                       steps_run=out["steps_run"])
+                       completed_per_thread=out.get("completed_per_thread"),
+                       steps_run=out["steps_run"],
+                       fairness=out.get("fairness"))

@@ -298,10 +298,11 @@ def lock_transitions_step(st, rem, wake_at, slept, spun, ctr, ticket,
 # scan: 2*B pad/slice round trips and kernel launches become 1 per block.
 # --------------------------------------------------------------------------
 
-#: dtypes of the 17 per-config context columns of the block kernel
-#: (repro.kernels.ref.BLOCK_CONTEXT order): step0, the GPS advance inputs
-#: (alpha, cores, has_budget), then TRANSITION_CONTEXT minus now2.
-_BLOCK_CTX_DTYPES = (jnp.int32, jnp.float32, jnp.float32,
+#: dtypes of the 18 per-config context columns of the block kernel
+#: (repro.kernels.ref.BLOCK_CONTEXT order): step0, the step limit, the GPS
+#: advance inputs (alpha, cores, has_budget), then TRANSITION_CONTEXT
+#: minus now2.
+_BLOCK_CTX_DTYPES = (jnp.int32, jnp.int32, jnp.float32, jnp.float32,
                      jnp.int32) + _CONTEXT_DTYPES[1:]
 
 _N_BLOCK_CTX = len(_BLOCK_CTX_DTYPES)
@@ -314,9 +315,10 @@ def _block_kernel(n_sub_steps, *refs):
     spin_cpu = ins[_N_THREAD][...][:, 0]
     conf = [r[...][:, 0] for r in ins[_N_THREAD + 1:_N_THREAD + 1 + _N_CONF]]
     ctx = [r[...][:, 0] for r in ins[_N_THREAD + 1 + _N_CONF:]]
-    step0, alpha, cores, hb = ctx[:4]
+    step0, limit, alpha, cores, hb = ctx[:5]
     out = lock_sim_block_ref(*thread, *conf, spin_cpu, step0, alpha, cores,
-                             hb > 0, *ctx[4:], n_sub_steps=n_sub_steps)
+                             hb > 0, *ctx[5:], n_sub_steps=n_sub_steps,
+                             limit=limit)
     for r, v in zip(outs, out):
         r[...] = v if v.ndim == 2 else v[:, None]
 
@@ -331,14 +333,18 @@ def lock_sim_block(st, rem, wake_at, slept, spun, ctr, ticket,
                    k, sws_max, spin_budget, seed, oracle, workload,
                    wl_period, wl_duty, wl_burst, wl_spread, *,
                    n_sub_steps: int, block_configs: int = 256,
-                   interpret: bool | None = None):
+                   interpret: bool | None = None, limit=None):
     """Pallas time-blocked rollout kernel; signature mirrors
     :func:`repro.kernels.ref.lock_sim_block_ref` and returns the same 17
     updated state arrays after ``n_sub_steps`` fused timesteps.  ``step0``
     (int32 scalar or (C,) vector) is the global index of the block's first
-    step.  ``interpret=None`` auto-detects the backend (interpret iff no
-    GPU/TPU is attached)."""
+    step; ``limit`` (same broadcast, optionally traced) masks sub-steps at
+    global index >= limit into exact passthroughs (see the ref twin) and
+    defaults to unlimited.  ``interpret=None`` auto-detects the backend
+    (interpret iff no GPU/TPU is attached)."""
     interpret = resolve_interpret(interpret)
+    if limit is None:
+        limit = jnp.int32(2**31 - 1)      # no masked sub-steps
     C, T = st.shape
     bc = min(block_configs, C)
     pc = (-C) % bc
@@ -358,11 +364,11 @@ def lock_sim_block(st, rem, wake_at, slept, spun, ctr, ticket,
                          wake_count)]
     ctx_in = [jnp.pad(jnp.broadcast_to(jnp.asarray(v, dtype), (C,)),
                       (0, pc))[:, None]
-              for v, dtype in zip((step0, alpha, cores, has_budget, policy,
-                                   threads, dt, wake, cs_lo, cs_hi, ncs_lo,
-                                   ncs_hi, k, sws_max, spin_budget, seed,
-                                   oracle, workload, wl_period, wl_duty,
-                                   wl_burst, wl_spread),
+              for v, dtype in zip((step0, limit, alpha, cores, has_budget,
+                                   policy, threads, dt, wake, cs_lo, cs_hi,
+                                   ncs_lo, ncs_hi, k, sws_max, spin_budget,
+                                   seed, oracle, workload, wl_period,
+                                   wl_duty, wl_burst, wl_spread),
                                   _BLOCK_CTX_DTYPES)]
 
     mat = pl.BlockSpec((bc, Tp), lambda i: (i, 0))

@@ -425,7 +425,7 @@ def lock_transitions_ref(st, rem, wake_at, slept, spun, ctr, ticket,
 #: advance inputs, then the transition context minus ``now2`` (recomputed
 #: inside the loop as ``(step0 + s + 1) * dt`` — the exact expression of
 #: the per-step path, so blocked and per-step rollouts are bit-identical).
-BLOCK_CONTEXT = ("step0", "alpha", "cores", "has_budget",
+BLOCK_CONTEXT = ("step0", "limit", "alpha", "cores", "has_budget",
                  "policy", "threads", "dt", "wake", "cs_lo", "cs_hi",
                  "ncs_lo", "ncs_hi", "k", "sws_max", "spin_budget", "seed",
                  "oracle", "workload", "wl_period", "wl_duty", "wl_burst",
@@ -439,7 +439,7 @@ def lock_sim_block_ref(st, rem, wake_at, slept, spun, ctr, ticket,
                        policy, threads, dt, wake, cs_lo, cs_hi,
                        ncs_lo, ncs_hi, k, sws_max, spin_budget, seed,
                        oracle, workload, wl_period, wl_duty, wl_burst,
-                       wl_spread, *, n_sub_steps: int):
+                       wl_spread, *, n_sub_steps: int, limit=None):
     """``n_sub_steps`` fused timesteps for a (C, T) block of configurations.
 
     Each sub-step is exactly one per-step iteration of the legacy rollout
@@ -455,6 +455,15 @@ def lock_sim_block_ref(st, rem, wake_at, slept, spun, ctr, ticket,
     (C,) vector); the remaining context matches
     :data:`TRANSITION_CONTEXT`/``has_budget`` of the advance.  Returns the
     17 updated state arrays.
+
+    ``limit`` (int32 scalar or (C,) vector, optionally traced) caps the
+    global step index: sub-steps with ``step0 + s >= limit`` select the
+    pre-step state unchanged (a ``where`` passthrough), so a partial tail
+    block of ``limit - step0`` live sub-steps is bit-identical to running
+    exactly that many steps.  This is what lets the blocked rollout treat
+    the total step count as a traced value (one compiled executable per
+    padded shape instead of one per horizon).  ``limit=None`` keeps the
+    legacy unmasked graph.
     """
 
     def body(s, carry):
@@ -464,13 +473,19 @@ def lock_sim_block_ref(st, rem, wake_at, slept, spun, ctr, ticket,
         now2 = (i.astype(jnp.float32) + 1.0) * dt
         rem_s, burn = lock_sim_step_ref(st_s, rem_s, alpha, cores, dt,
                                         has_budget)
-        state = lock_transitions_ref(st_s, rem_s, *state[2:], now2, policy,
-                                     threads, dt, wake, cs_lo, cs_hi,
-                                     ncs_lo, ncs_hi, k, sws_max,
-                                     spin_budget, seed, oracle, workload,
-                                     wl_period, wl_duty, wl_burst,
-                                     wl_spread)
-        return (*state, cpu + burn)
+        new = lock_transitions_ref(st_s, rem_s, *state[2:], now2, policy,
+                                   threads, dt, wake, cs_lo, cs_hi,
+                                   ncs_lo, ncs_hi, k, sws_max,
+                                   spin_budget, seed, oracle, workload,
+                                   wl_period, wl_duty, wl_burst,
+                                   wl_spread)
+        if limit is None:
+            return (*new, cpu + burn)
+        act = i < limit                       # bool scalar or (C,)
+        actT = act[..., None] if jnp.ndim(act) else act   # (C, 1) for (C, T)
+        state = tuple(jnp.where(actT if n.ndim == 2 else act, n, o)
+                      for n, o in zip(new, state))
+        return (*state, cpu + jnp.where(act, burn, 0.0))
 
     carry = (st, rem, wake_at, slept, spun, ctr, ticket, completed_pt,
              sws, cnt, ewma, wuc, permits, nticket, completed, wake_count,

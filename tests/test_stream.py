@@ -1,0 +1,329 @@
+"""The streaming sweep engine (`repro.core.stream`): streamed-vs-one-shot
+bit-identity (ref and Pallas, bucketed and sharded), the memory-model
+chunk planner's invariants, the array-native config feed against the
+per-lambda legacy encoder, and the on-device phase-cell reduction."""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import stream as xstream
+from repro.core import xdes
+from repro.core.policy import SimConfig
+
+SHORT = (0.0, 3.7e-6)
+LONG = (0.0, 366e-6)
+WAKE = 8e-6
+LOCKS = ["ttas", "mcs", "fifo", "sleep", "adaptive", "mutable"]
+
+
+def _mixed_batch(n=40, seed=0):
+    """Mixed-discipline, mixed-regime batch — heterogeneous enough that
+    chunking crosses discipline and shape boundaries."""
+    rng = np.random.default_rng(seed)
+    return [SimConfig(
+        LOCKS[i % len(LOCKS)], threads=int(rng.integers(2, 12)),
+        cores=int(rng.integers(2, 12)),
+        cs=SHORT if i % 2 else LONG, ncs=SHORT if i % 3 else LONG,
+        wake_latency=WAKE, seed=int(rng.integers(0, 1000)),
+        oracle=("paper", "aimd", "fixed", "history")[i % 4])
+        for i in range(n)]
+
+
+def _assert_stream_equal(s, b, msg=""):
+    """StreamResult == BatchResult(keep_per_thread=False), bit for bit."""
+    np.testing.assert_array_equal(s.completed, b.completed, err_msg=msg)
+    np.testing.assert_array_equal(s.spin_cpu, b.spin_cpu, err_msg=msg)
+    np.testing.assert_array_equal(s.wake_count, b.wake_count, err_msg=msg)
+    np.testing.assert_array_equal(s.final_sws, b.final_sws, err_msg=msg)
+    np.testing.assert_array_equal(s.t_end, b.t_end, err_msg=msg)
+    np.testing.assert_array_equal(s.steps_run, b.steps_run, err_msg=msg)
+    np.testing.assert_array_equal(s.fairness, b.fairness, err_msg=msg)
+    np.testing.assert_array_equal(s.throughput, b.throughput, err_msg=msg)
+    np.testing.assert_array_equal(s.sync_cpu_per_cs, b.sync_cpu_per_cs,
+                                  err_msg=msg)
+
+
+# --------------------------------------------------------------------------
+# Streamed == one-shot, bit for bit
+# --------------------------------------------------------------------------
+def test_streamed_multichunk_matches_one_shot_ref():
+    """Pinned horizon, 5 chunks of 8: chunk boundaries must be invisible
+    in every summary column."""
+    cfgs = _mixed_batch(40)
+    one = xdes.simulate_batch(cfgs, n_steps=400, keep_per_thread=False)
+    s = xstream.sweep_stream(cfgs, n_steps=400, chunk=8)
+    assert s.n_chunks == 5 and s.chunk_size == 8
+    _assert_stream_equal(s, one, "multi-chunk ref")
+
+
+def test_streamed_chunk_size_invariance():
+    """Any chunking of the same sweep gives the same bits (pinned
+    horizon => early exit off => chunk-invariant by construction)."""
+    cfgs = _mixed_batch(24, seed=3)
+    base = xstream.sweep_stream(cfgs, n_steps=300, chunk=24)
+    for chunk in (4, 8, 12):
+        s = xstream.sweep_stream(cfgs, n_steps=300, chunk=chunk)
+        np.testing.assert_array_equal(s.completed, base.completed,
+                                      err_msg=f"chunk={chunk}")
+        np.testing.assert_array_equal(s.spin_cpu, base.spin_cpu,
+                                      err_msg=f"chunk={chunk}")
+        np.testing.assert_array_equal(s.fairness, base.fairness,
+                                      err_msg=f"chunk={chunk}")
+
+
+def test_streamed_matches_one_shot_pallas():
+    cfgs = _mixed_batch(16, seed=1)
+    one = xdes.simulate_batch(cfgs, n_steps=200, backend="pallas",
+                              keep_per_thread=False)
+    s = xstream.sweep_stream(cfgs, n_steps=200, backend="pallas", chunk=4)
+    assert s.n_chunks == 4
+    _assert_stream_equal(s, one, "multi-chunk pallas")
+
+
+def test_streamed_bucketed_matches_one_shot():
+    """bucket_steps on both sides, early exit pinned off: the bucketed
+    streamed sweep regroups rows by horizon AND chunks each bucket, and
+    must still land every config's bits in its original slot."""
+    cfgs = _mixed_batch(32, seed=2)
+    one = xdes.simulate_batch(cfgs, target_cs=20, bucket_steps=True,
+                              early_exit=False, keep_per_thread=False)
+    s = xstream.sweep_stream(cfgs, target_cs=20, bucket_steps=True,
+                             early_exit=False, chunk=8)
+    assert s.n_chunks > 1
+    _assert_stream_equal(s, one, "bucketed stream")
+
+
+def test_streamed_single_chunk_early_exit_identity():
+    """Auto-planned horizon (early exit ON, like simulate_batch): with
+    everything in one chunk the exit step agrees with the one-shot call,
+    so even the composition-dependent columns match bit for bit."""
+    cfgs = _mixed_batch(16, seed=4)
+    one = xdes.simulate_batch(cfgs, target_cs=20, keep_per_thread=False)
+    s = xstream.sweep_stream(cfgs, target_cs=20, chunk=16)
+    assert s.n_chunks == 1
+    _assert_stream_equal(s, one, "single-chunk early exit")
+
+
+def test_streamed_column_feed_matches_list_feed():
+    """RAW column dict in == SimConfig list in, bit for bit."""
+    from repro.core.policy import config_columns
+
+    cfgs = _mixed_batch(20, seed=5)
+    a = xstream.sweep_stream(cfgs, n_steps=250, chunk=4)
+    b = xstream.sweep_stream(config_columns(cfgs), n_steps=250, chunk=4)
+    np.testing.assert_array_equal(a.completed, b.completed)
+    np.testing.assert_array_equal(a.spin_cpu, b.spin_cpu)
+    np.testing.assert_array_equal(a.fairness, b.fairness)
+
+
+_SHARD_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+import numpy as np
+import jax
+from repro.core import stream as xstream
+from repro.core import xdes
+from repro.core.policy import SimConfig
+
+assert len(jax.devices()) == 4
+locks = ["ttas", "fifo", "sleep", "mutable", "adaptive", "mcs"]
+cfgs = [SimConfig(l, threads=5, cores=4, cs=(0.0, 3.7e-6),
+                  ncs=(0.0, 3.7e-6), wake_latency=8e-6, seed=s)
+        for s in range(4) for l in locks]           # 24 configs
+one = xdes.simulate_batch(cfgs, n_steps=300, shard=False,
+                          keep_per_thread=False)
+s = xstream.sweep_stream(cfgs, n_steps=300, shard=True, chunk=8)
+assert s.n_chunks == 3 and s.chunk_size == 8
+np.testing.assert_array_equal(s.completed, one.completed)
+np.testing.assert_array_equal(s.spin_cpu, one.spin_cpu)
+np.testing.assert_array_equal(s.final_sws, one.final_sws)
+np.testing.assert_array_equal(s.wake_count, one.wake_count)
+np.testing.assert_array_equal(s.fairness, one.fairness)
+print("STREAM-SHARDED-OK", s.completed[:4].tolist())
+"""
+
+
+def test_streamed_sharded_matches_unsharded():
+    """Device count locks at first backend init, so the 4-device mesh
+    runs in a subprocess (same pattern as test_distributed.py).  Chunks
+    shard over the mesh; the quantum keeps every chunk divisible."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        filter(None, ["src", env.get("PYTHONPATH")]))
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", _SHARD_SCRIPT],
+                          capture_output=True, text=True, timeout=600,
+                          env=env)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "STREAM-SHARDED-OK" in proc.stdout
+
+
+# --------------------------------------------------------------------------
+# Chunk planner invariants (property-style sweeps, no hypothesis dep)
+# --------------------------------------------------------------------------
+def test_plan_chunks_respects_budget():
+    """Over a lattice of (C, T, budget, quantum): the planned chunk's
+    modelled bytes fit the budget unless the plan bottomed out at one
+    quantum — and then a warning says so."""
+    import warnings as w
+
+    for C in (64, 1000, 100_000):
+        for T in (2, 16, 64):
+            for mem_mb in (0.5, 4, 64, 512):
+                for quantum in (1, 5, 12):
+                    with w.catch_warnings():
+                        w.simplefilter("ignore")
+                        chunk = xstream.plan_chunks(
+                            C, T, mem_mb=mem_mb, quantum=quantum)
+                    assert chunk % quantum == 0
+                    assert chunk >= quantum
+                    if chunk > quantum:
+                        assert (chunk * xstream.bytes_per_config(T)
+                                <= mem_mb * 2**20), (C, T, mem_mb, quantum)
+
+
+def test_plan_chunks_never_exceeds_padded_sweep():
+    """No point planning chunks bigger than the padded sweep itself."""
+    for C in (3, 17, 100, 4096):
+        chunk = xstream.plan_chunks(C, 8, mem_mb=10_000, quantum=1)
+        assert chunk <= xdes._pad_quantum(C)
+
+
+def test_plan_chunks_quantum_floor_warns():
+    with pytest.warns(UserWarning, match="quantum floor"):
+        assert xstream.plan_chunks(100, 64, mem_mb=0.001,
+                                   quantum=12) == 12
+
+
+def test_plan_chunks_rejects_bad_args():
+    with pytest.raises(ValueError):
+        xstream.plan_chunks(0, 8)
+    with pytest.raises(ValueError):
+        xstream.plan_chunks(8, 0)
+    with pytest.raises(ValueError):
+        xstream.plan_chunks(8, 8, quantum=0)
+
+
+def test_memory_budget_env_override(monkeypatch):
+    monkeypatch.setenv(xstream.ENV_MEM_MB, "37")
+    assert xstream.memory_budget_bytes() == 37 * 2**20
+    # explicit argument beats the env var
+    assert xstream.memory_budget_bytes(2) == 2 * 2**20
+    monkeypatch.delenv(xstream.ENV_MEM_MB)
+    assert xstream.memory_budget_bytes(8.5) == int(8.5 * 2**20)
+
+
+def test_sweep_stream_rejects_misaligned_chunk():
+    cfgs = _mixed_batch(12)
+    red = xstream.CellReduce(group=4, cell_ids=np.zeros(3, np.int32),
+                             n_cells=1)
+    with pytest.raises(ValueError, match="quantum"):
+        xstream.sweep_stream(cfgs, n_steps=100, chunk=6, reduce=red)
+    with pytest.raises(ValueError, match="multiple of reduce.group"):
+        xstream.sweep_stream(_mixed_batch(10), n_steps=100, reduce=red)
+
+
+# --------------------------------------------------------------------------
+# Array-native config feed == legacy per-lambda encoder
+# --------------------------------------------------------------------------
+def test_encode_columns_matches_legacy_per_family():
+    """Every catalog row family: the column twin packs bit-equal engine
+    arrays to the per-config lambda table."""
+    from repro.configs.catalog import (lock_discipline_columns,
+                                       lock_discipline_sweep,
+                                       lock_oracle_columns,
+                                       lock_oracle_sweep,
+                                       lock_scenario_columns,
+                                       lock_scenario_sweep,
+                                       lock_workload_columns,
+                                       lock_workload_sweep)
+    from repro.core.policy import encode_configs, encode_configs_legacy
+
+    pairs = [
+        ("scenario", lock_scenario_sweep(n_scenarios=23),
+         lock_scenario_columns(n_scenarios=23)),
+        ("oracle", lock_oracle_sweep(n_scenarios=7),
+         lock_oracle_columns(n_scenarios=7)),
+        ("discipline", lock_discipline_sweep(n_scenarios=7),
+         lock_discipline_columns(n_scenarios=7)),
+        ("workload", lock_workload_sweep(n_scenarios=5),
+         lock_workload_columns(n_scenarios=5)),
+    ]
+    for name, cfgs, cols in pairs:
+        legacy = encode_configs_legacy(cfgs)
+        packed = encode_configs(cols)
+        assert set(packed) == set(legacy), name
+        for k in packed:
+            np.testing.assert_array_equal(packed[k], legacy[k],
+                                          err_msg=f"{name}.{k}")
+            assert packed[k].dtype == legacy[k].dtype, f"{name}.{k}"
+
+
+def test_encode_configs_list_matches_legacy():
+    """The polymorphic front door on a plain SimConfig list."""
+    from repro.core.policy import encode_configs, encode_configs_legacy
+
+    cfgs = _mixed_batch(30, seed=6)
+    legacy = encode_configs_legacy(cfgs)
+    packed = encode_configs(cfgs)
+    for k in packed:
+        np.testing.assert_array_equal(packed[k], legacy[k], err_msg=k)
+
+
+# --------------------------------------------------------------------------
+# On-device phase-cell reduction
+# --------------------------------------------------------------------------
+def test_cell_update_matches_host_argmax():
+    """Random throughputs, 3 cells x group of 5, padded groups masked
+    with cell id -1: device accumulation == numpy argmax accounting."""
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(7)
+    group, n_groups, n_cells = 5, 12, 3
+    completed = rng.integers(1, 1000,
+                             size=n_groups * group).astype(np.int32)
+    t_end = np.full(n_groups * group, 0.25, np.float32)
+    cell_ids = rng.integers(0, n_cells, size=n_groups).astype(np.int32)
+    cell_ids[-2:] = -1                   # two padded groups: ignored
+
+    wins = xstream._cell_update(
+        jnp.zeros((n_cells, group), jnp.int32), jnp.asarray(completed),
+        jnp.asarray(t_end), jnp.asarray(cell_ids), group=group)
+    wins = np.asarray(wins)
+
+    expect = np.zeros((n_cells, group), np.int64)
+    thr = (completed / t_end).reshape(n_groups, group)
+    for g in range(n_groups):
+        if cell_ids[g] >= 0:
+            expect[cell_ids[g], thr[g].argmax()] += 1
+    np.testing.assert_array_equal(wins, expect)
+    assert wins.sum() == (cell_ids >= 0).sum()
+
+
+def test_cell_reduce_validates():
+    with pytest.raises(ValueError):
+        xstream.CellReduce(group=0, cell_ids=np.zeros(2, np.int32),
+                           n_cells=1)
+    with pytest.raises(ValueError):
+        xstream.CellReduce(group=2, cell_ids=np.asarray([0, 3], np.int32),
+                           n_cells=2)          # cell id out of range
+
+
+def test_sweep_stream_wins_match_host_fold():
+    """End-to-end: the streamed on-device win matrix equals the host
+    argmax over the returned throughput columns."""
+    cfgs = _mixed_batch(24, seed=8)
+    red = xstream.CellReduce(
+        group=6, cell_ids=np.asarray([0, 1, 0, 1], np.int32), n_cells=2)
+    s = xstream.sweep_stream(cfgs, n_steps=300, chunk=6, reduce=red)
+    assert s.n_chunks == 4
+    win = s.throughput.reshape(4, 6).argmax(axis=1)
+    expect = np.zeros((2, 6), np.int64)
+    for g in range(4):
+        expect[red.cell_ids[g], win[g]] += 1
+    np.testing.assert_array_equal(s.wins, expect)
