@@ -1,7 +1,7 @@
 """Wall-clock microbenchmark of the batched lock simulator — the tracked
 perf trajectory of the xdes engine.
 
-Four suites, sim cells timed twice (cold = compile + run, steady = the
+Five suites, sim cells timed twice (cold = compile + run, steady = the
 jit-cached second call; throughputs are computed from the steady time):
 
 * ``dispatch`` — a pinned-horizon 1k-config batch (10k too with
@@ -15,6 +15,9 @@ jit-cached second call; throughputs are computed from the steady time):
   horizon: the legacy path (scan, full horizon, one global scan length)
   vs the shipped fast path (blocked + early exit + ``bucket_steps``, so
   a 100µs-CS cell no longer pins a µs-spin cell to its scan length).
+* ``open_loop`` — the open-loop arrival engine (request ring, binding,
+  on-device latency histograms) vs the closed engine at the same pinned
+  horizon: the wall-clock price of per-request tail-latency telemetry.
 * ``encode`` — packing 100k configs into engine columns: the per-config
   ``encode_configs_legacy`` lambda table vs the array-native
   ``encode_configs`` column path (the streamed sweeps' feed).
@@ -220,6 +223,50 @@ def stream_suite(n_configs: int, target_cs: int,
     return cell
 
 
+def open_loop_suite(n_configs: int, n_steps: int,
+                    verbose: bool = True) -> dict:
+    """Pinned-horizon open-loop cells: the arrival engine (request ring,
+    binding, on-device latency histograms) vs the closed engine at the
+    same config count and horizon — the wall-clock price of per-request
+    tail-latency telemetry.  Both cells run the blocked rollout with
+    early exit off; throughput is compared per cfg-step so the slightly
+    different variant counts cancel."""
+    from repro.configs.catalog import (lock_arrival_sweep,
+                                       lock_arrival_variants,
+                                       lock_discipline_sweep,
+                                       lock_discipline_variants)
+    from repro.core import xdes
+
+    Va = len(lock_arrival_variants())
+    Vd = len(lock_discipline_variants())
+    batches = {
+        "closed": lock_discipline_sweep(
+            n_scenarios=max(1, n_configs // Vd)),
+        "open": lock_arrival_sweep(n_scenarios=max(1, n_configs // Va)),
+    }
+    cells = {}
+    for name, cfgs in batches.items():
+        cold, steady, res = _time_twice(lambda: xdes.simulate_batch(
+            cfgs, n_steps=n_steps, rollout="blocked", early_exit=False))
+        cells[name] = {
+            "n_configs": len(cfgs), "n_steps": n_steps,
+            "wall_cold_s": round(cold, 3), "wall_s": round(steady, 3),
+            "cfg_steps_per_s": round(len(cfgs) * n_steps / steady, 1),
+        }
+        if verbose:
+            c = cells[name]
+            print(f"  {name:>7} cold {_fmt_s(cold):>8} steady "
+                  f"{_fmt_s(steady):>8} "
+                  f"({c['cfg_steps_per_s']:.2e} cfg-steps/s)")
+    cells["open_overhead_x"] = round(
+        cells["closed"]["cfg_steps_per_s"]
+        / max(cells["open"]["cfg_steps_per_s"], 1e-9), 2)
+    if verbose:
+        print(f"  open-loop overhead {cells['open_overhead_x']}x "
+              f"(closed cfg-steps/s over open)")
+    return cells
+
+
 def env_key(meta: dict) -> str:
     """The baseline entry key for one environment's measurements —
     results are only comparable within a (platform, device count,
@@ -264,6 +311,13 @@ def summarize(result: dict) -> str:
             f"| sweep {name} | {c['n_configs']} "
             f"| {c['mean_steps_run']:.0f}/{c['planned_steps']} "
             f"| {_fmt_s(c['wall_cold_s'])} | {_fmt_s(c['wall_s'])} | - |")
+    for name in ("closed", "open"):
+        c = result.get("open_loop", {}).get(name)
+        if c:
+            lines.append(
+                f"| open_loop {name} | {c['n_configs']} | {c['n_steps']} "
+                f"| {_fmt_s(c['wall_cold_s'])} | {_fmt_s(c['wall_s'])} "
+                f"| {c['cfg_steps_per_s']:.2e} |")
     for name, c in result.get("stream", {}).items():
         lines.append(
             f"| stream {name} | {c['n_configs']} | - "
@@ -359,6 +413,9 @@ def main(argv=None) -> dict:
     sweep = sweep_suite(n_scenarios=40 if args.quick else 200,
                         target_cs=20 if args.quick else 50)
 
+    print("open-loop suite (pinned horizon, arrival engine vs closed):")
+    open_loop = open_loop_suite(1000, 384)
+
     print("encode suite (100k-config packing):")
     encode = encode_suite(100_000)
 
@@ -380,10 +437,13 @@ def main(argv=None) -> dict:
         },
         "dispatch": dispatch,
         "sweep": sweep,
+        "open_loop": open_loop,
         "encode": encode,
         "stream": stream,
     }
     result["speedups"] = _speedups(dispatch)
+    result["speedups"]["open_loop/overhead_x"] = open_loop[
+        "open_overhead_x"]
     legacy, fast = sweep.get("legacy"), sweep.get("fast")
     if legacy and fast:
         result["speedups"]["sweep/fast_over_legacy"] = round(

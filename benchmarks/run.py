@@ -12,6 +12,7 @@
 | oracle     | §5 oracle families     | benchmarks.oracle_ablation (xdes) |
 | discipline | discipline x oracle map| benchmarks.discipline_diagram (sharded xdes) |
 | workload   | workload x lock map    | benchmarks.workload_diagram (sharded xdes) |
+| arrival    | open-loop traffic map  | benchmarks.arrival_diagram (sharded xdes) |
 | perf       | engine perf trajectory | benchmarks.perf_bench   |
 | fidelity   | dt-convergence study   | benchmarks.fidelity_study (xdes vs DES; not in --quick/--full, run on demand) |
 
@@ -20,9 +21,9 @@ phase-diagram CSV/markdown, and the measured perf trajectory —
 ``BENCH_xdes.json`` at the repo root is the committed perf BASELINE,
 refreshed only by an explicit ``perf_bench --out BENCH_xdes.json``); a
 summary CSV is printed at the end.  ``--quick`` runs the batched xdes sweep, the oracle-family grid,
-the discipline x oracle diagram and the perf microbenchmark at smoke
-scale (~2-3 min) — the fast signal that the simulation stack works end
-to end and hasn't slowed down.
+the discipline/workload/arrival diagrams and the perf microbenchmark at
+smoke scale (~2-3 min) — the fast signal that the simulation stack works
+end to end and hasn't slowed down.
 """
 
 from __future__ import annotations
@@ -79,6 +80,15 @@ def main(argv=None) -> None:
             top = max(rows, key=lambda d: rows[d]["wins"])
             summary.append((f"workload.{w}.top", top))
         print("\n" + "=" * 72)
+        print("[quick] arrival x discipline diagram smoke (open-loop xdes)")
+        print("=" * 72)
+        from benchmarks import arrival_diagram
+        ad = arrival_diagram.main(["--quick"])
+        for cell in ad["phase"]:
+            summary.append(
+                (f"arrival.{cell['arrival']}.rho{cell['rho']}.winner",
+                 cell["winner"]))
+        print("\n" + "=" * 72)
         print("[quick] xdes perf microbenchmark")
         print("=" * 72)
         from benchmarks import perf_bench
@@ -98,7 +108,7 @@ def main(argv=None) -> None:
         return
 
     print("=" * 72)
-    print("[1/9] lockbench fig1 (paper Fig. 1 timelines)")
+    print("[1/10] lockbench fig1 (paper Fig. 1 timelines)")
     print("=" * 72)
     from benchmarks import lockbench
     f1 = lockbench.fig1()
@@ -110,7 +120,7 @@ def main(argv=None) -> None:
                     f1["mutable"]["makespan_slots"]))
 
     print("\n" + "=" * 72)
-    print("[2/9] lockbench fig3 (paper Fig. 3 grid, batched xdes engine)")
+    print("[2/10] lockbench fig3 (paper Fig. 3 grid, batched xdes engine)")
     print("=" * 72)
     f3 = lockbench.fig3(target_cs=400 if args.full else 200)
     for regime, data in f3.items():
@@ -121,7 +131,7 @@ def main(argv=None) -> None:
         json.dump({"fig1": f1, "fig3": f3}, f, indent=1)
 
     print("\n" + "=" * 72)
-    print("[3/9] batched xdes sweep (fig3 grid + 1000-config scenarios)")
+    print("[3/10] batched xdes sweep (fig3 grid + 1000-config scenarios)")
     print("=" * 72)
     from benchmarks import sweep
     sw = sweep.main(["--target-cs", "250" if args.full else "150"])
@@ -131,7 +141,7 @@ def main(argv=None) -> None:
         summary.append((f"sweep.scenario.{lock}.mean_ratio", round(r, 3)))
 
     print("\n" + "=" * 72)
-    print("[4/9] PHOLD on share-everything PDES (paper Fig. 4)")
+    print("[4/10] PHOLD on share-everything PDES (paper Fig. 4)")
     print("=" * 72)
     from benchmarks import phold
     ph = phold.run_phold(n_events=3000 if args.full else 1500)
@@ -143,7 +153,7 @@ def main(argv=None) -> None:
                             locks["mutable"]["speedup"]))
 
     print("\n" + "=" * 72)
-    print("[5/9] serving-window scheduler (the technique on TPU batches)")
+    print("[5/10] serving-window scheduler (the technique on TPU batches)")
     print("=" * 72)
     from benchmarks import sched_bench
     sb = sched_bench.main(["--requests", "400" if args.full else "250"])
@@ -154,7 +164,7 @@ def main(argv=None) -> None:
                         round(agg["avg_standby"], 2)))
 
     print("\n" + "=" * 72)
-    print("[6/9] oracle-family grid (paper §5 future work, batched xdes)")
+    print("[6/10] oracle-family grid (paper §5 future work, batched xdes)")
     print("=" * 72)
     from benchmarks import oracle_ablation
     oa = oracle_ablation.main(
@@ -166,7 +176,7 @@ def main(argv=None) -> None:
                         round(row["best_tuned_mean_ratio"], 3)))
 
     print("\n" + "=" * 72)
-    print("[7/9] discipline x oracle diagram (sharded batched xdes)")
+    print("[7/10] discipline x oracle diagram (sharded batched xdes)")
     print("=" * 72)
     from benchmarks import discipline_diagram
     dd = discipline_diagram.main(
@@ -177,7 +187,7 @@ def main(argv=None) -> None:
                         round(row["best_variant_mean_ratio"], 3)))
 
     print("\n" + "=" * 72)
-    print("[8/9] workload x discipline diagram (sharded batched xdes)")
+    print("[8/10] workload x discipline diagram (sharded batched xdes)")
     print("=" * 72)
     from benchmarks import workload_diagram
     wd = workload_diagram.main(
@@ -190,7 +200,21 @@ def main(argv=None) -> None:
                               3)))
 
     print("\n" + "=" * 72)
-    print("[9/9] xdes perf microbenchmark (reports/bench_xdes.json)")
+    print("[9/10] arrival x discipline diagram (open-loop sharded xdes)")
+    print("=" * 72)
+    from benchmarks import arrival_diagram
+    ad = arrival_diagram.main(
+        [] if args.full else ["--scenarios", "25", "--target-cs", "100"])
+    for cell in ad["phase"]:
+        summary.append(
+            (f"arrival.{cell['arrival']}.rho{cell['rho']}.winner",
+             cell["winner"]))
+        summary.append(
+            (f"arrival.{cell['arrival']}.rho{cell['rho']}.slo_frac",
+             round(cell["mean_slo_frac"], 3)))
+
+    print("\n" + "=" * 72)
+    print("[10/10] xdes perf microbenchmark (reports/bench_xdes.json)")
     print("=" * 72)
     from benchmarks import perf_bench
     pb = perf_bench.main(["--full-size"] if args.full else [])

@@ -21,6 +21,11 @@ Two artifacts:
 * ``workload_grid`` — the workload x discipline x oracle diagram (every
   WORKLOAD_ROW x every discipline variant x scenarios, one call),
   consumed by ``benchmarks/workload_diagram.py`` (see docs/workloads.md).
+* ``arrival_grid`` — the open-loop arrival x offered-load x discipline
+  diagram (every non-closed ARRIVAL_ROW x load fraction x discipline
+  variant x scenarios, one call with per-request tail latency from the
+  on-device histograms), consumed by ``benchmarks/arrival_diagram.py``
+  (see docs/open_loop.md).
 
 Every batched call auto-shards its config axis over all visible devices
 (``repro.core.xdes.simulate_batch(shard=...)``, ``shard_map`` through the
@@ -49,12 +54,15 @@ import time
 
 import numpy as np
 
-from repro.configs.catalog import (LOCK_CORES, LOCK_DISCIPLINE_SET,
+from repro.configs.catalog import (LOCK_ARRIVAL_RHOS, LOCK_ARRIVALS,
+                                   LOCK_CORES, LOCK_DISCIPLINE_SET,
                                    LOCK_DISCIPLINES, LOCK_ORACLE_KS,
                                    LOCK_ORACLE_SWS_MAX, LOCK_ORACLES,
                                    LOCK_REGIMES, LOCK_SHORT, LOCK_THREADS,
                                    LOCK_WAKE, LOCK_WORKLOADS,
-                                   _product_columns, lock_discipline_columns,
+                                   _product_columns, lock_arrival_columns,
+                                   lock_arrival_sweep, lock_arrival_variants,
+                                   lock_discipline_columns,
                                    lock_discipline_sweep,
                                    lock_discipline_variants, lock_fig3_grid,
                                    lock_oracle_columns, lock_oracle_sweep,
@@ -659,6 +667,168 @@ def workload_grid(n_scenarios: int = 100, target_cs: int = 150,
             print(f"{w:>9}: top discipline {top} "
                   f"({rows[top]['wins']}/{n_scenarios} wins); "
                   + " ".join(f"{d}:{r['wins']}" for d, r in rows.items()))
+    return out
+
+
+# --------------------------------------------------------------------------
+# Arrival-rate x discipline diagram grid (open loop)
+# --------------------------------------------------------------------------
+def arrival_grid(n_scenarios: int = 50, target_cs: int = 150,
+                 backend: str = "ref", seed: int = 0,
+                 arrivals=LOCK_ARRIVALS, rhos=LOCK_ARRIVAL_RHOS,
+                 disciplines=LOCK_DISCIPLINE_SET, oracles=LOCK_ORACLES,
+                 shard: bool | None = None, stream: bool | None = None,
+                 mem_mb: float | None = None,
+                 early_exit: bool | None = None,
+                 verbose: bool = True) -> dict:
+    """The full ``arrival x load x (discipline, oracle) x scenario``
+    product — every open-loop ``ARRIVAL_ROW`` at every offered-load
+    fraction ``rho`` of the scenario's service capacity — as ONE
+    (sharded) jit-compiled :func:`repro.core.xdes.simulate_batch` call
+    with the open-loop engine on, reporting per-request tail latency
+    (p50/p95/p99 from the on-device histograms), SLO-violation fraction,
+    and shed fraction per config.  Summarized three ways:
+
+    * per (arrival, rho, variant) — throughput wins, mean p95/p99, mean
+      SLO-violation and shed fractions;
+    * per discipline — wins and best-variant tail latency per cell;
+    * phase diagram — which (discipline, oracle) wins each
+      ``(arrival row x offered load)`` cell, by throughput (the
+      on-device :class:`repro.core.stream.CellReduce` winner) AND by p95
+      tail latency (host reduction of the per-config histograms): the
+      "which lock serves traffic best" artifact rendered by
+      ``benchmarks/arrival_diagram.py``.
+
+    Row order is scenario-major, then arrival, then rho, then variant —
+    reshape to ``(n_scenarios, n_arrivals, n_rhos, n_variants)``.
+    Scenarios follow the :func:`sample_scenarios` seed contract, so every
+    cell sees the same machines scenario-by-scenario."""
+    disc_variants = lock_discipline_variants(disciplines, oracles)
+    A, R, V = len(arrivals), len(rhos), len(disc_variants)
+    C = n_scenarios * A * R * V
+    if stream is None:
+        stream = C >= STREAM_AUTO
+    # One phase cell per (arrival row, rho): the diagram's axes.  Every
+    # (scenario, arrival, rho) slice of V variants is one reduction group.
+    uniq, cell_ids = _phase_cells(
+        [(a, r) for _ in range(n_scenarios) for a in arrivals
+         for r in rhos])
+    t0 = time.time()
+    if stream:
+        cols = lock_arrival_columns(n_scenarios=n_scenarios, seed=seed,
+                                    arrivals=arrivals, rhos=rhos,
+                                    disciplines=disciplines,
+                                    oracles=oracles)
+        res = xstream.sweep_stream(
+            cols, target_cs=target_cs, backend=backend, shard=shard,
+            mem_mb=mem_mb, early_exit=early_exit,
+            reduce=xstream.CellReduce(V, cell_ids, len(uniq)))
+        wins_cells = res.wins
+    else:
+        configs = lock_arrival_sweep(n_scenarios=n_scenarios, seed=seed,
+                                     arrivals=arrivals, rhos=rhos,
+                                     disciplines=disciplines,
+                                     oracles=oracles)
+        res = xdes.simulate_batch(configs, target_cs=target_cs,
+                                  backend=backend, shard=shard,
+                                  early_exit=early_exit)
+        wins_cells = _host_wins(res.throughput, len(uniq), cell_ids, V)
+    wall = time.time() - t0
+
+    shape = (n_scenarios, A, R, V)
+    p50 = res.p50.reshape(shape)
+    p95 = res.p95.reshape(shape)
+    p99 = res.p99.reshape(shape)
+    slo_frac = res.slo_frac.reshape(shape)
+    arrived = res.arrived.reshape(shape)
+    shed_frac = (res.shed.reshape(shape)
+                 / np.maximum(arrived, 1).astype(np.float64))
+    # host-side tail-latency winner per (scenario, arrival, rho) group:
+    # lowest p95 among variants that departed anything (NaN = no service,
+    # never wins while any variant served traffic).
+    p95_rank = np.where(np.isnan(p95), np.inf, p95)
+    lat_win = p95_rank.reshape(-1, V).argmin(axis=1)
+    lat_wins_cells = np.zeros((len(uniq), V), np.int64)
+    np.add.at(lat_wins_cells, (np.asarray(cell_ids), lat_win), 1)
+
+    def vname(v):
+        return (f"{v['lock']}/{v['oracle']}"
+                if v["lock"] == "mutable" else v["lock"])
+
+    variant_names = [vname(v) for v in disc_variants]
+    cell_of = {k: i for i, k in enumerate(uniq)}
+    win_thr = np.asarray(wins_cells)
+
+    out_variants = [{
+        "arrival": a, "rho": r, "name": variant_names[i],
+        "lock": disc_variants[i]["lock"],
+        "oracle": disc_variants[i]["oracle"],
+        "wins": int(win_thr[cell_of[(a, r)], i]),
+        "lat_wins": int(lat_wins_cells[cell_of[(a, r)], i]),
+        "mean_p50_us": float(np.nanmean(p50[:, ai, ri, i]) * 1e6),
+        "mean_p95_us": float(np.nanmean(p95[:, ai, ri, i]) * 1e6),
+        "mean_p99_us": float(np.nanmean(p99[:, ai, ri, i]) * 1e6),
+        "mean_slo_frac": float(np.nanmean(slo_frac[:, ai, ri, i])),
+        "mean_shed_frac": float(shed_frac[:, ai, ri, i].mean()),
+    } for ai, a in enumerate(arrivals) for ri, r in enumerate(rhos)
+        for i in range(V)]
+
+    phase = []
+    for ai, a in enumerate(arrivals):
+        for ri, r in enumerate(rhos):
+            ci = cell_of[(a, r)]
+            counts = {variant_names[i]: int(win_thr[ci, i])
+                      for i in range(V) if win_thr[ci, i]}
+            lcounts = {variant_names[i]: int(lat_wins_cells[ci, i])
+                       for i in range(V) if lat_wins_cells[ci, i]}
+            n = sum(counts.values())
+            winner = max(counts, key=counts.get)
+            lat_winner = max(lcounts, key=lcounts.get)
+            phase.append({
+                "arrival": a, "rho": r, "n": n,
+                "winner": winner,
+                "win_share": round(counts[winner] / n, 3),
+                "lat_winner": lat_winner,
+                "lat_win_share": round(lcounts[lat_winner]
+                                       / max(sum(lcounts.values()), 1), 3),
+                "mean_slo_frac": float(np.nanmean(slo_frac[:, ai, ri, :])),
+                "mean_shed_frac": float(shed_frac[:, ai, ri, :].mean()),
+                "wins_by_variant": counts,
+                "lat_wins_by_variant": lcounts,
+            })
+
+    import jax
+
+    out = {
+        "meta": {"backend": backend, "n_scenarios": n_scenarios,
+                 "n_arrivals": A, "n_rhos": R, "n_variants": V,
+                 "n_configs": C, "n_steps": res.n_steps,
+                 "wall_s": round(wall, 2),
+                 "n_devices": len(jax.devices()),
+                 "sharded": bool(shard) if shard is not None
+                 else len(jax.devices()) > 1,
+                 "streamed": bool(stream),
+                 "configs_per_s": round(C / max(wall, 1e-9), 1),
+                 "arrivals": list(arrivals), "rhos": list(rhos),
+                 "variant_names": variant_names},
+        "variants": out_variants,
+        "phase": phase,
+    }
+    if stream:
+        out["meta"].update(chunk_size=res.chunk_size,
+                           n_chunks=res.n_chunks,
+                           budget_mb=round(res.budget_mb, 1))
+    if verbose:
+        print(f"\narrival grid: {C} configs ({n_scenarios} scenarios x "
+              f"{A} arrivals x {R} loads x {V} variants) x {res.n_steps} "
+              f"steps in {wall:.1f}s on {out['meta']['n_devices']} "
+              f"device(s) ({out['meta']['configs_per_s']} cfg/s)")
+        for cell in phase:
+            print(f"{cell['arrival']:>8} rho={cell['rho']:<4} "
+                  f"thr-winner {cell['winner']:<16} "
+                  f"p95-winner {cell['lat_winner']:<16} "
+                  f"slo-viol {cell['mean_slo_frac']:.3f} "
+                  f"shed {cell['mean_shed_frac']:.3f}")
     return out
 
 

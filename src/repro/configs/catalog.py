@@ -451,6 +451,78 @@ def lock_workload_sweep(n_scenarios: int = 100, seed: int = 0,
     ]
 
 
+# -- arrival-rate x discipline diagram grid (open loop) --------------------
+#: Arrival rows of the open-loop diagram (every non-closed ARRIVAL_ROW).
+LOCK_ARRIVALS = ("poisson", "bursty")
+#: Offered-load axis: fraction ``rho`` of each scenario's closed-form
+#: service capacity, spanning under-load to past saturation (shedding).
+LOCK_ARRIVAL_RHOS = (0.3, 0.6, 0.9, 1.2)
+
+
+def lock_arrival_capacity(sc: dict) -> float:
+    """Closed-form service-capacity estimate of a scenario (requests/s):
+    the lock serializes at one CS per mean CS length, and below that the
+    thread pool turns over a request per mean CS+NCS round per effective
+    worker.  ``rho`` in :func:`lock_arrival_sweep` scales against this."""
+    mean_cs = 0.5 * sc["cs_hi"]
+    mean_round = 0.5 * (sc["cs_hi"] + sc["ncs_hi"])
+    eff = min(sc["threads"], sc["cores"])
+    return min(1.0 / max(mean_cs, 1e-12), eff / max(mean_round, 1e-12))
+
+
+def lock_arrival_params(sc: dict) -> dict:
+    """Scenario-scaled open-loop knobs: the latency SLO sits at 8 mean
+    CS+NCS rounds — generous under light load, violated when queueing
+    sets in — and the bursty arrival gate cycles with the same scenario-
+    scaled period as the workload diagram (several phases per horizon)."""
+    return dict(slo=4.0 * (sc["cs_hi"] + sc["ncs_hi"]),
+                **lock_workload_params(sc))
+
+
+def lock_arrival_variants(arrivals=LOCK_ARRIVALS, rhos=LOCK_ARRIVAL_RHOS,
+                          disciplines=LOCK_DISCIPLINE_SET,
+                          oracles=LOCK_ORACLES) -> list[dict]:
+    """The ``(arrival, rho, discipline, oracle)`` variant axis of the
+    arrival diagram: the discipline x oracle variants (windowed-row
+    pruning of :func:`lock_discipline_variants`) replicated under every
+    (arrival row, offered load) cell, arrival-major then rho."""
+    return [dict(arrival=a, rho=r, **v)
+            for a in arrivals
+            for r in rhos
+            for v in lock_discipline_variants(disciplines, oracles)]
+
+
+def lock_arrival_sweep(n_scenarios: int = 50, seed: int = 0,
+                       arrivals=LOCK_ARRIVALS, rhos=LOCK_ARRIVAL_RHOS,
+                       disciplines=LOCK_DISCIPLINE_SET,
+                       oracles=LOCK_ORACLES) -> list[SimConfig]:
+    """The full arrival x load x discipline x oracle product as one flat
+    batch for a single (sharded) :func:`repro.core.xdes.simulate_batch`
+    call with ``open_loop=True``.
+
+    Row order is scenario-major, then arrival, then rho, then
+    (discipline, oracle) variant — reshape to
+    ``(n_scenarios, n_arrivals, n_rhos, n_variants)``.  Scenarios follow
+    the :func:`sample_scenarios` seed contract, so every arrival cell
+    sees the same machines scenario-by-scenario and tail-latency results
+    are comparable cell-by-cell with the discipline diagram."""
+    from repro.core.policy import DEFAULT_ALPHA
+
+    variants = lock_arrival_variants(arrivals, rhos, disciplines, oracles)
+    return [
+        SimConfig(v["lock"], threads=sc["threads"], cores=sc["cores"],
+                  cs=(0.0, sc["cs_hi"]), ncs=(0.0, sc["ncs_hi"]),
+                  wake_latency=sc["wake"],
+                  alpha=sc["contention"] * DEFAULT_ALPHA[v["lock"]],
+                  seed=sc["seed"], oracle=v["oracle"],
+                  arrival=v["arrival"],
+                  arrival_rate=v["rho"] * lock_arrival_capacity(sc),
+                  **lock_arrival_params(sc))
+        for sc in sample_scenarios(n_scenarios, seed)
+        for v in variants
+    ]
+
+
 # -- array-native column twins (the streaming-sweep feed) ------------------
 # Each lock_*_sweep generator above has a *_columns twin emitting RAW
 # struct-of-arrays columns (repro.core.policy.RAW_CONFIG_FIELDS) directly
@@ -568,6 +640,41 @@ def lock_workload_columns(n_scenarios: int = 100, seed: int = 0,
         sc, lock_workload_variants(workloads, disciplines, oracles), wl)
 
 
+def lock_arrival_columns(n_scenarios: int = 50, seed: int = 0,
+                         arrivals=LOCK_ARRIVALS, rhos=LOCK_ARRIVAL_RHOS,
+                         disciplines=LOCK_DISCIPLINE_SET,
+                         oracles=LOCK_ORACLES) -> dict:
+    """Column twin of :func:`lock_arrival_sweep` (capacity, SLO, and the
+    burst-gate knobs of :func:`lock_arrival_params` computed as columns)."""
+    import numpy as np
+
+    from repro.core.policy import ARRIVAL_IDS, QUEUE_MAX
+
+    sc = sample_scenario_columns(n_scenarios, seed)
+    S = len(sc["seed"])
+    variants = lock_arrival_variants(arrivals, rhos, disciplines, oracles)
+    V = len(variants)
+    wl = dict(wl_period=16.0 * (sc["cs_hi"] + sc["ncs_hi"]),
+              wl_duty=np.full(S, 0.25), wl_burst=np.full(S, 8.0),
+              wl_spread=np.full(S, 4.0))
+    cols = _product_columns(sc, variants, wl)
+    # vectorized lock_arrival_capacity (same float64 ops, same values)
+    mean_cs = 0.5 * sc["cs_hi"]
+    mean_round = 0.5 * (sc["cs_hi"] + sc["ncs_hi"])
+    eff = np.minimum(sc["threads"], sc["cores"]).astype(np.float64)
+    cap = np.minimum(1.0 / np.maximum(mean_cs, 1e-12),
+                     eff / np.maximum(mean_round, 1e-12))
+    cols["arrival"] = np.tile(np.asarray(
+        [ARRIVAL_IDS[v["arrival"]] for v in variants], np.int32), S)
+    cols["arrival_rate"] = (
+        np.tile(np.asarray([v["rho"] for v in variants], np.float64), S)
+        * np.repeat(cap, V))
+    cols["queue_cap"] = np.full(S * V, QUEUE_MAX, np.int32)
+    cols["slo"] = np.repeat(4.0 * (sc["cs_hi"] + sc["ncs_hi"]), V)
+    cols["tie_break"] = np.zeros(S * V, np.int32)
+    return cols
+
+
 #: Named sweep registry (mirrors the model-config registry above).
 LOCK_SWEEPS = {
     "fig3": lock_fig3_grid,
@@ -575,4 +682,5 @@ LOCK_SWEEPS = {
     "oracle": lock_oracle_sweep,
     "discipline": lock_discipline_sweep,
     "workload": lock_workload_sweep,
+    "arrival": lock_arrival_sweep,
 }

@@ -74,6 +74,11 @@ class SimResult:
     wake_count: int = 0
     sws_trace: list = field(default_factory=list)
     timeline: list = field(default_factory=list)  # (t, tid, event) triples
+    # -- open-loop accounting (zero / empty on closed runs) -----------------
+    arrived: int = 0            # offered arrivals (admitted + shed)
+    shed: int = 0               # dropped at the full queue
+    slo_viol: int = 0           # departures with latency > slo
+    latencies: list = field(default_factory=list)   # per-request sojourns
 
     @property
     def throughput(self) -> float:
@@ -82,6 +87,19 @@ class SimResult:
     @property
     def sync_cpu_per_cs(self) -> float:
         return self.spin_cpu / max(1, self.completed_cs)
+
+    @property
+    def mean_latency(self) -> float:
+        return (sum(self.latencies) / len(self.latencies)
+                if self.latencies else float("nan"))
+
+    def latency_percentile(self, q: float) -> float:
+        """Exact per-request latency quantile (nearest-rank)."""
+        if not self.latencies:
+            return float("nan")
+        lat = sorted(self.latencies)
+        return lat[min(len(lat) - 1,
+                       max(0, math.ceil(q * len(lat)) - 1))]
 
 
 # ---------------------------------------------------------------------------
@@ -365,6 +383,10 @@ class LockSim:
         wl_burst: float = 8.0,
         wl_spread: float = 4.0,
         arrival_phase: float = 0.0,
+        arrival: str = "closed",
+        arrival_rate: float = 0.0,
+        queue_cap: int = policy.QUEUE_MAX,
+        slo: float = 1e-3,
     ):
         self.rng = random.Random(seed)
         self.cores = cores
@@ -395,6 +417,67 @@ class LockSim:
                 policy.counter_uniform_scalar(u32 ^ policy.WL_SPREAD_SALT,
                                               i), wl_spread)
             for i in range(threads)]
+        # -- open-loop arrival rows (the event-driven twin of ARRIVAL_ROWS) --
+        self.arrival = policy.ARRIVAL_IDS[arrival]
+        self.arrival_rate = arrival_rate
+        self.queue_cap = queue_cap
+        self.slo = slo
+        self.open_loop = self.arrival != policy.AR_CLOSED
+        # burst-gate phase from the same salted counter stream as the engine
+        self._ar_phase = policy.counter_uniform_scalar(
+            (seed ^ policy.AR_PHASE_SALT) & 0xFFFFFFFF, 0)
+        # dedicated arrival stream: the main draw sequence stays untouched,
+        # so closed-loop realizations are unchanged by the open-loop fields
+        self.arr_rng = random.Random((seed ^ policy.AR_SALT) & 0xFFFFFFFF)
+        self.queue: list[float] = []   # FIFO of admitted arrival wall-times
+        self._req_t: dict[int, float] = {}  # tid -> bound request's arrival
+        self._next_arr = float("inf")
+
+    # -- open-loop arrival machinery ----------------------------------------
+    def arrival_rate_at(self, t: float) -> float:
+        """Instantaneous offered rate: scalar twin of ARRIVAL_ROWS."""
+        if self.arrival == policy.AR_BURSTY:
+            gate_off = policy.workload_off_gate(t, self._ar_phase,
+                                                self.wl_period, self.wl_duty)
+            gate_on = 1.0 - gate_off
+            return self.arrival_rate * (1.0 + gate_on * (self.wl_burst - 1.0))
+        return self.arrival_rate
+
+    def _draw_next_arrival(self, t0: float) -> float:
+        """Next arrival after ``t0`` by thinning an Exp(max-rate) stream,
+        exact for the time-varying bursty row."""
+        rmax = self.arrival_rate * (self.wl_burst
+                                    if self.arrival == policy.AR_BURSTY
+                                    else 1.0)
+        if rmax <= 0.0:
+            return float("inf")
+        t = t0
+        while True:
+            t += self.arr_rng.expovariate(rmax)
+            if self.arr_rng.random() * rmax <= self.arrival_rate_at(t):
+                return t
+
+    def _admit_due_arrivals(self) -> None:
+        while self._next_arr <= self.now + 1e-15:
+            self.res.arrived += 1
+            if len(self.queue) < self.queue_cap:
+                self.queue.append(self._next_arr)
+            else:
+                self.res.shed += 1
+            self._next_arr = self._draw_next_arrival(self._next_arr)
+
+    def _bind_queued(self) -> None:
+        """Bind queued requests to free (DONE) threads, lowest tid first."""
+        if not self.queue:
+            return
+        for t in self.tasks:
+            if not self.queue:
+                return
+            if t.state == DONE:
+                self._req_t[t.tid] = self.queue.pop(0)
+                t.state = NCS
+                t.remaining = self.draw_ncs(t.tid)
+                self._log(t.tid, "bind")
 
     # -- workload-row hold-time draws ---------------------------------------
     def draw_cs(self, tid: int) -> float:
@@ -451,23 +534,40 @@ class LockSim:
     # -- main loop ------------------------------------------------------------
     def run(self, target_cs: int = 1000, horizon: float = 1e9) -> SimResult:
         ncs_mean = 0.5 * (self.ncs_lo + self.ncs_hi)
-        for t in self.tasks:
-            t.state = NCS
-            # seeded per-thread arrival-order randomization: stagger first
-            # arrivals by up to arrival_phase mean-NCS lengths
-            t.remaining = (self.draw_ncs(t.tid)
-                           + self._wl_phase[t.tid] * self.arrival_phase
-                           * ncs_mean)
+        if self.open_loop:
+            # threads start free; logical requests arrive and bind to them
+            for t in self.tasks:
+                t.state = DONE
+            self._next_arr = self._draw_next_arrival(0.0)
+            self._admit_due_arrivals()
+            self._bind_queued()
+        else:
+            for t in self.tasks:
+                t.state = NCS
+                # seeded per-thread arrival-order randomization: stagger
+                # first arrivals by up to arrival_phase mean-NCS lengths
+                t.remaining = (self.draw_ncs(t.tid)
+                               + self._wl_phase[t.tid] * self.arrival_phase
+                               * ncs_mean)
 
         while self.res.completed_cs < target_cs and self.now < horizon:
             runnable = [t for t in self.tasks if t.state in (CS, NCS, SPIN)]
             if not runnable:
                 wakes = [t for t in self.tasks if t.state == WAKING]
                 if not wakes:
+                    if self.open_loop and self._next_arr < horizon:
+                        self.now = self._next_arr
+                        self._admit_due_arrivals()
+                        self._bind_queued()
+                        continue
                     break  # all DONE (or a model bug; tests assert progress)
                 nxt = min(wakes, key=lambda t: t.wake_at)
-                self.now = nxt.wake_at
-                self._wake(nxt)
+                self.now = min(nxt.wake_at, self._next_arr)
+                if self.now >= nxt.wake_at:
+                    self._wake(nxt)
+                if self.open_loop:
+                    self._admit_due_arrivals()
+                    self._bind_queued()
                 continue
 
             rate = min(1.0, self.cores / len(runnable))
@@ -486,6 +586,8 @@ class LockSim:
             for t in self.tasks:
                 if t.state == WAKING:
                     dt = min(dt, t.wake_at - self.now)
+            if self.open_loop and self._next_arr < float("inf"):
+                dt = min(dt, self._next_arr - self.now)
             dt = max(dt, 0.0)
             assert dt != float("inf")
 
@@ -518,7 +620,14 @@ class LockSim:
                     self.res.completed_cs += 1
                     self._log(t.tid, "cs_end")
                     self.model.on_release(t)
-                    if (self.max_cs_per_thread is not None
+                    if self.open_loop:
+                        # departure: record the request's sojourn, free tid
+                        lat = self.now - self._req_t.pop(t.tid)
+                        self.res.latencies.append(lat)
+                        if lat > self.slo:
+                            self.res.slo_viol += 1
+                        t.state = DONE
+                    elif (self.max_cs_per_thread is not None
                             and t.cs_done >= self.max_cs_per_thread):
                         t.state = DONE
                     else:
@@ -527,6 +636,10 @@ class LockSim:
                 elif t.state == NCS:
                     self._log(t.tid, "arrive")
                     self.model.on_arrive(t)
+
+            if self.open_loop:
+                self._admit_due_arrivals()
+                self._bind_queued()
 
         self.res.t_end = self.now
         return self.res

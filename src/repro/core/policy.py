@@ -597,6 +597,160 @@ def workload_mean_scale(cfg) -> tuple[float, float]:
 
 
 # --------------------------------------------------------------------------
+# Arrival rows — the OPEN-LOOP arrival process as data, mirroring
+# WORKLOAD_ROWS.
+#
+# Everything before these rows is closed-loop: a fixed thread population
+# circulates forever.  An arrival row turns a config open-loop: logical
+# requests arrive at a (possibly time-varying) rate, wait in a bounded
+# request queue, bind to a free simulated thread, contend under the
+# config's DISCIPLINE_ROWS row, complete one critical section and depart
+# — per-request latency is accumulated into on-device histogram columns
+# (see docs/open_loop.md).
+#
+# A row's ``rate`` function maps the config's base rate to the
+# instantaneous arrival rate; it is pure arithmetic on caller-precomputed
+# inputs (the burst gate derives from the counter RNG under
+# AR_PHASE_SALT, exactly like the workload rows' duty-cycle gate), so ONE
+# implementation runs on Python floats (the DES twin), numpy arrays and
+# traced jax values inside the kernels:
+#
+#   rate(base, gate_on, burst) -> requests/second
+#     base     the config's ``arrival_rate``
+#     gate_on  0/1: the config is inside the ON part of its burst cycle
+#     burst    the ON-phase rate multiplier (reuses ``wl_burst``)
+#
+# Per step the engine admits ``floor(rate*dt)`` requests plus a Bernoulli
+# trial on the fractional part (uniform from the counter RNG under
+# AR_SALT), so the expected count is EXACTLY ``rate*dt`` at any dt.  The
+# closed row has rate 0 and is bit-identical to the pre-open-loop engine
+# (the masked select is exact and the open-loop state is only
+# materialized when a batch contains an open config).
+# --------------------------------------------------------------------------
+AR_CLOSED, AR_POISSON, AR_BURSTY = range(3)
+
+ARRIVAL_IDS = {
+    "closed": AR_CLOSED,      # no external arrivals: the closed-loop engine
+    "poisson": AR_POISSON,    # constant-rate memoryless arrivals
+    "bursty": AR_BURSTY,      # ON/OFF rate modulation (wl_period/duty/burst)
+}
+ARRIVAL_NAMES = {v: k for k, v in ARRIVAL_IDS.items()}
+
+#: Seed salts for the open-loop arrival streams (XOR-ed into the config
+#: seed; disjoint from WL_PHASE_SALT/WL_SPREAD_SALT so the arrival
+#: process never perturbs the workload draws).
+AR_SALT = 0x94D049BB          # per-step Bernoulli-rounding uniforms
+AR_PHASE_SALT = 0xBF58476D    # per-config burst-phase offset
+
+#: Seed salt for the randomized same-step tie-break stream
+#: (``SimConfig.tie_break="random"``).
+TB_SALT = 0xD6E8FEB8
+
+#: Same-step tie-break among equally-eligible spinners at handoff:
+#: ``id`` keeps the historical deterministic thread-id order; ``random``
+#: draws a fresh seeded key per (thread, step) — the DES resolves such
+#: ties by RNG, so ``random`` closes that fidelity gap.
+TIE_BREAK_IDS = {"id": 0, "random": 1}
+TIE_BREAK_NAMES = {v: k for k, v in TIE_BREAK_IDS.items()}
+
+#: Capacity of the on-device request ring buffer — ``queue_cap`` may not
+#: exceed it (it is one Pallas lane: :data:`repro.kernels.lock_sim.LANE`).
+QUEUE_MAX = 128
+
+#: On-device latency histogram: ``LAT_NBINS`` log-spaced bins,
+#: ``LAT_BINS_PER_OCTAVE`` per factor of two, starting at ``LAT_BIN0``
+#: seconds — 64 bins at 2/octave span 1e-7 s .. ~4.6e2 s, wide enough for
+#: µs spin cells and saturated 100µs-CS queues alike.
+LAT_NBINS = 64
+LAT_BIN0 = 1e-7
+LAT_BINS_PER_OCTAVE = 2
+
+
+@dataclass(frozen=True)
+class ArrivalRow:
+    name: str
+    aid: int
+    time_varying: int          # 1 iff the rate reads the current time
+    rate: object               # callable, elementwise (see module comment)
+
+
+def _rate_closed(base, gate_on, burst):
+    return base * 0.0
+
+
+def _rate_poisson(base, gate_on, burst):
+    return base * 1.0
+
+
+def _rate_bursty(base, gate_on, burst):
+    # ON/OFF rate modulation: `burst` times the base rate inside the ON
+    # window (the first `wl_duty` fraction of each `wl_period` cycle,
+    # phase-staggered per config under AR_PHASE_SALT).
+    return base * (1.0 + gate_on * (burst - 1.0))
+
+
+ARRIVAL_ROWS = {
+    "closed": ArrivalRow("closed", AR_CLOSED, 0, _rate_closed),
+    "poisson": ArrivalRow("poisson", AR_POISSON, 0, _rate_poisson),
+    "bursty": ArrivalRow("bursty", AR_BURSTY, 1, _rate_bursty),
+}
+assert sorted(r.aid for r in ARRIVAL_ROWS.values()) \
+    == sorted(ARRIVAL_IDS.values())
+
+
+def arrival_rate_at(arrival_id, base, gate_on, burst):
+    """Dispatch the instantaneous arrival rate by ``arrival_id`` — the
+    arrival twin of :func:`workload_hold`'s masked select.  Exact for the
+    closed row (rate 0 regardless of base)."""
+    out = 0.0
+    for row in ARRIVAL_ROWS.values():
+        sel = (arrival_id == row.aid) * 1.0
+        out = out + sel * row.rate(base, gate_on, burst)
+    return out
+
+
+def arrival_mean_scale(arrival_id, duty, burst):
+    """Time-averaged multiplier of the base rate for a row: 0 for closed,
+    1 for poisson, ``1 + duty*(burst-1)`` for bursty.  Elementwise — the
+    DES twin and saturation math (catalog) share it."""
+    closed = (arrival_id == AR_CLOSED) * 1.0
+    bursty = (arrival_id == AR_BURSTY) * 1.0
+    return (1.0 - closed) * (1.0 + bursty * duty * (burst - 1.0))
+
+
+def latency_bin_edges():
+    """The ``LAT_NBINS + 1`` histogram bin edges in seconds (float64).
+    Bin ``i`` covers ``[edges[i], edges[i+1])``; the first and last bins
+    additionally absorb underflow/overflow (the kernel clips)."""
+    import numpy as np
+
+    return LAT_BIN0 * 2.0 ** (np.arange(LAT_NBINS + 1, dtype=np.float64)
+                              / LAT_BINS_PER_OCTAVE)
+
+
+def latency_percentiles(hist, qs=(0.50, 0.95, 0.99)):
+    """Per-config latency percentiles from ``(..., LAT_NBINS)`` histogram
+    counts: the geometric midpoint of the bin containing each quantile
+    (the histogram is the exact on-device record; within-bin position is
+    unknowable, so the midpoint is the canonical readout — bins are a
+    factor sqrt(2) wide).  Returns one array per ``q``; NaN where no
+    request departed."""
+    import numpy as np
+
+    hist = np.asarray(hist, np.int64)
+    edges = latency_bin_edges()
+    mids = np.sqrt(edges[:-1] * edges[1:])
+    tot = hist.sum(axis=-1)
+    cum = np.cumsum(hist, axis=-1)
+    out = []
+    for q in qs:
+        target = np.ceil(q * np.maximum(tot, 1)).astype(np.int64)[..., None]
+        idx = np.argmax(cum >= target, axis=-1)
+        out.append(np.where(tot > 0, mids[idx], np.nan))
+    return out
+
+
+# --------------------------------------------------------------------------
 # Scenario description — the unit of the batched sweep
 # --------------------------------------------------------------------------
 @dataclass(frozen=True)
@@ -629,6 +783,11 @@ class SimConfig:
     wl_spread: float = 4.0              # hetero per-thread scale spread
     arrival_phase: float = 0.0          # seeded arrival-order offset
     #                                     (fraction of the mean NCS)
+    arrival: str = "closed"             # open-loop arrival row (ARRIVAL_IDS)
+    arrival_rate: float = 0.0           # base arrival rate (requests/s)
+    queue_cap: int = QUEUE_MAX          # bounded request queue (<= QUEUE_MAX)
+    slo: float = 1e-3                   # per-request latency SLO (seconds)
+    tie_break: str = "id"               # same-step tie-break (TIE_BREAK_IDS)
 
     def __post_init__(self):
         if self.lock not in POLICY_IDS:
@@ -648,6 +807,18 @@ class SimConfig:
             raise ValueError("wl_burst and wl_spread must be >= 1")
         if self.arrival_phase < 0.0:
             raise ValueError("arrival_phase must be >= 0")
+        if self.arrival not in ARRIVAL_IDS:
+            raise ValueError(f"unknown arrival {self.arrival!r}; "
+                             f"options: {sorted(ARRIVAL_IDS)}")
+        if self.arrival_rate < 0.0:
+            raise ValueError("arrival_rate must be >= 0")
+        if not (1 <= self.queue_cap <= QUEUE_MAX):
+            raise ValueError(f"queue_cap must be in [1, {QUEUE_MAX}]")
+        if self.slo <= 0.0:
+            raise ValueError("slo must be > 0")
+        if self.tie_break not in TIE_BREAK_IDS:
+            raise ValueError(f"unknown tie_break {self.tie_break!r}; "
+                             f"options: {sorted(TIE_BREAK_IDS)}")
 
     # -- derived quantities shared by both backends -----------------------
     @property
@@ -693,6 +864,17 @@ class SimConfig:
                     wl_spread=self.wl_spread,
                     arrival_phase=self.arrival_phase)
 
+    @property
+    def open_loop(self) -> bool:
+        """True iff this config runs the open-loop arrival engine."""
+        return ARRIVAL_IDS[self.arrival] != AR_CLOSED
+
+    def arrival_kwargs(self) -> dict:
+        """Open-loop keywords consumed by :class:`repro.core.des.LockSim`
+        (the event-driven twin of the arrival rows)."""
+        return dict(arrival=self.arrival, arrival_rate=self.arrival_rate,
+                    queue_cap=self.queue_cap)
+
 
 def workload_mean_scale_columns(workload, wl_duty, wl_burst, wl_spread):
     """Vectorized twin of :func:`workload_mean_scale` over (C,) columns.
@@ -721,7 +903,7 @@ CONFIG_FIELDS = (
     "policy", "threads", "cores", "cs_lo", "cs_hi", "ncs_lo", "ncs_hi",
     "wake", "alpha", "sws_init", "sws_max", "k", "spin_budget", "seed",
     "oracle", "workload", "wl_period", "wl_duty", "wl_burst", "wl_spread",
-    "arrival_phase",
+    "arrival_phase", "arrival", "arr_rate", "q_cap", "slo", "tb",
 )
 
 #: Column order of the RAW (pre-encoding) struct-of-arrays form — the
@@ -735,8 +917,18 @@ RAW_CONFIG_FIELDS = (
     "lock", "threads", "cores", "cs_lo", "cs_hi", "ncs_lo", "ncs_hi",
     "wake_latency", "alpha", "sws_init", "sws_max", "k", "spin_budget",
     "seed", "oracle", "workload", "wl_period", "wl_duty", "wl_burst",
-    "wl_spread", "arrival_phase",
+    "wl_spread", "arrival_phase", "arrival", "arrival_rate", "queue_cap",
+    "slo", "tie_break",
 )
+
+#: Defaults for the RAW open-loop columns — column producers written
+#: before the open-loop engine may omit them; :func:`encode_columns`
+#: fills these in (the closed defaults, bit-identical to the
+#: pre-open-loop encoding).
+RAW_OPEN_DEFAULTS = {
+    "arrival": AR_CLOSED, "arrival_rate": 0.0, "queue_cap": QUEUE_MAX,
+    "slo": 1e-3, "tie_break": 0,
+}
 
 
 def _ids_from(values, table, what: str):
@@ -775,10 +967,12 @@ def config_columns(configs) -> dict:
         "lock", "threads", "cores", "cs", "ncs", "wake_latency", "alpha",
         "sws_init", "sws_max", "k", "spin_budget", "seed", "oracle",
         "workload", "wl_period", "wl_duty", "wl_burst", "wl_spread",
-        "arrival_phase")
+        "arrival_phase", "arrival", "arrival_rate", "queue_cap", "slo",
+        "tie_break")
     (lock, threads, cores, cs, ncs, wake, alpha, sws_init, sws_max, k,
      spin_budget, seed, oracle, workload, wl_period, wl_duty, wl_burst,
-     wl_spread, arrival_phase) = zip(*map(get, configs))
+     wl_spread, arrival_phase, arrival, arrival_rate, queue_cap, slo,
+     tie_break) = zip(*map(get, configs))
     n = len(configs)
     cs = np.asarray(cs, np.float64)
     ncs = np.asarray(ncs, np.float64)
@@ -804,6 +998,11 @@ def config_columns(configs) -> dict:
         "wl_burst": np.asarray(wl_burst, np.float64),
         "wl_spread": np.asarray(wl_spread, np.float64),
         "arrival_phase": np.asarray(arrival_phase, np.float64),
+        "arrival": _ids_from(arrival, ARRIVAL_IDS, "arrival"),
+        "arrival_rate": np.asarray(arrival_rate, np.float64),
+        "queue_cap": np.asarray(queue_cap, np.int64).astype(np.int32),
+        "slo": np.asarray(slo, np.float64),
+        "tie_break": _ids_from(tie_break, TIE_BREAK_IDS, "tie_break"),
     }
 
 
@@ -832,6 +1031,15 @@ def _validate_columns(cols, C: int) -> None:
     bad((cols["wl_burst"] < 1) | (cols["wl_spread"] < 1),
         "wl_burst and wl_spread must be >= 1")
     bad(cols["arrival_phase"] < 0, "arrival_phase must be >= 0")
+    bad((cols["arrival"] < 0) | (cols["arrival"] >= len(ARRIVAL_IDS)),
+        f"unknown arrival id; options: {sorted(ARRIVAL_IDS.values())}")
+    bad(cols["arrival_rate"] < 0, "arrival_rate must be >= 0")
+    bad((cols["queue_cap"] < 1) | (cols["queue_cap"] > QUEUE_MAX),
+        f"queue_cap must be in [1, {QUEUE_MAX}]")
+    bad(cols["slo"] <= 0, "slo must be > 0")
+    bad((cols["tie_break"] < 0)
+        | (cols["tie_break"] >= len(TIE_BREAK_IDS)),
+        f"unknown tie_break id; options: {sorted(TIE_BREAK_IDS.values())}")
 
 
 #: DEFAULT_ALPHA indexed by policy id (the vectorized alpha_eff lookup).
@@ -853,9 +1061,13 @@ def encode_columns(cols, validate: bool = True) -> dict:
     import numpy as np
 
     cols = dict(cols)
+    for f, v in RAW_OPEN_DEFAULTS.items():
+        cols.setdefault(f, v)
     for key, table, what in (("lock", POLICY_IDS, "lock"),
                              ("oracle", ORACLE_IDS, "oracle"),
-                             ("workload", WORKLOAD_IDS, "workload")):
+                             ("workload", WORKLOAD_IDS, "workload"),
+                             ("arrival", ARRIVAL_IDS, "arrival"),
+                             ("tie_break", TIE_BREAK_IDS, "tie_break")):
         v = cols[key]
         if isinstance(v, str):
             cols[key] = table.get(v)
@@ -902,6 +1114,11 @@ def encode_columns(cols, validate: bool = True) -> dict:
         "wl_period": f32("wl_period"), "wl_duty": f32("wl_duty"),
         "wl_burst": f32("wl_burst"), "wl_spread": f32("wl_spread"),
         "arrival_phase": f32("arrival_phase"),
+        "arrival": full["arrival"].astype(np.int32),
+        "arr_rate": f32("arrival_rate"),
+        "q_cap": full["queue_cap"].astype(np.int32),
+        "slo": f32("slo"),
+        "tb": full["tie_break"].astype(np.int32),
     }
 
 
@@ -965,4 +1182,9 @@ def encode_configs_legacy(configs) -> dict:
         "wl_burst": col(lambda c: c.wl_burst, np.float32),
         "wl_spread": col(lambda c: c.wl_spread, np.float32),
         "arrival_phase": col(lambda c: c.arrival_phase, np.float32),
+        "arrival": col(lambda c: ARRIVAL_IDS[c.arrival], np.int32),
+        "arr_rate": col(lambda c: c.arrival_rate, np.float32),
+        "q_cap": col(lambda c: c.queue_cap, np.int32),
+        "slo": col(lambda c: c.slo, np.float32),
+        "tb": col(lambda c: TIE_BREAK_IDS[c.tie_break], np.int32),
     }

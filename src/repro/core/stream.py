@@ -87,9 +87,18 @@ _OUT_COLS = 7
 SUMMARY_FIELDS = ("completed", "spin_cpu", "wake_count", "final_sws",
                   "t_end", "steps_run", "fairness")
 
+#: Extra (C,) summary columns of an open-loop stream (the (C, LAT_NBINS)
+#: ``lat_hist`` histogram rides along separately).
+OPEN_SUMMARY_FIELDS = ("arrived", "shed", "departed", "slo_viol",
+                       "lat_sum", "occ_int", "in_flight")
+
+#: Open-loop integer summary columns (the rest are float32).
+_OPEN_INT_FIELDS = ("arrived", "shed", "departed", "slo_viol", "in_flight")
+
 
 def bytes_per_config(T: int, *, dtype_bytes: int = 4,
-                     double_buffer: int = 2) -> int:
+                     double_buffer: int = 2,
+                     open_loop: bool = False) -> int:
     """Modelled device working set of one config at ``T`` thread slots.
 
     Every state/input/output element is 4 bytes (int32/float32/uint32).
@@ -97,10 +106,19 @@ def bytes_per_config(T: int, *, dtype_bytes: int = 4,
     holds the old and new carry of a ``while_loop`` body concurrently,
     and donation does not reliably elide the copy on every backend — the
     model prices the worst case so the budget is an upper bound.
+
+    ``open_loop=True`` adds the 11 OPEN_STATE carry arrays: one more
+    ``(C, T)`` block (``req_t``), the ``(C, QUEUE_MAX)`` ring buffer and
+    ``(C, LAT_NBINS)`` histogram, and 8 more per-config counters.
     """
-    per_thread = _STATE_PT_ARRAYS * dtype_bytes * int(T) * double_buffer
+    pt_arrays = _STATE_PT_ARRAYS + (1 if open_loop else 0)
+    per_thread = pt_arrays * dtype_bytes * int(T) * double_buffer
     per_config = dtype_bytes * (_STATE_PC_ARRAYS * double_buffer
                                 + _IN_COLS + _OUT_COLS)
+    if open_loop:
+        per_config += dtype_bytes * (
+            (P.QUEUE_MAX + P.LAT_NBINS + 8) * double_buffer
+            + len(OPEN_SUMMARY_FIELDS) + P.LAT_NBINS)
     return per_thread + per_config
 
 
@@ -129,7 +147,7 @@ def memory_budget_bytes(mem_mb: float | None = None) -> int:
 
 
 def plan_chunks(C: int, T: int, *, mem_mb: float | None = None,
-                quantum: int = 1) -> int:
+                quantum: int = 1, open_loop: bool = False) -> int:
     """Chunk size (configs per device call) for a ``C``-config sweep at
     ``T`` thread slots under the resolved memory budget.
 
@@ -144,12 +162,13 @@ def plan_chunks(C: int, T: int, *, mem_mb: float | None = None,
     if C < 1 or T < 1 or quantum < 1:
         raise ValueError("C, T and quantum must be >= 1")
     budget = memory_budget_bytes(mem_mb)
-    raw = budget // bytes_per_config(T)
+    bpc = bytes_per_config(T, open_loop=open_loop)
+    raw = budget // bpc
     if raw < quantum:
         warnings.warn(
             f"sweep memory budget {budget / 2**20:.0f} MiB is below one "
             f"reduction/shard quantum of {quantum} configs at T={T} "
-            f"(~{quantum * bytes_per_config(T) / 2**20:.1f} MiB); "
+            f"(~{quantum * bpc / 2**20:.1f} MiB); "
             f"streaming at the quantum floor.", stacklevel=2)
         return quantum
     chunk = quantum * (1 << int(math.log2(raw // quantum)))
@@ -222,6 +241,17 @@ class StreamResult:
     bytes_per_config: int = 0
     #: (n_cells, group) on-device win counts when a CellReduce was given.
     wins: np.ndarray | None = None
+    #: Open-loop outputs (``None`` on closed sweeps): the (C, LAT_NBINS)
+    #: latency histogram and the (C,) request counters / accumulators —
+    #: same semantics as :class:`repro.core.xdes.BatchResult`.
+    lat_hist: np.ndarray | None = None
+    arrived: np.ndarray | None = None
+    shed: np.ndarray | None = None
+    departed: np.ndarray | None = None
+    slo_viol: np.ndarray | None = None
+    lat_sum: np.ndarray | None = None
+    occ_int: np.ndarray | None = None
+    in_flight: np.ndarray | None = None
 
     @property
     def throughput(self) -> np.ndarray:
@@ -234,9 +264,36 @@ class StreamResult:
     def fairness_spread(self, i: int) -> int:
         return int(self.fairness[i])
 
+    def latency_quantiles(self, qs=(0.50, 0.95, 0.99)) -> np.ndarray:
+        """(len(qs), C) per-request latency percentiles from the streamed
+        histogram (NaN where nothing departed)."""
+        if self.lat_hist is None:
+            raise ValueError("closed-loop sweep: no latency histogram")
+        return P.latency_percentiles(self.lat_hist, qs)
+
+    @property
+    def p50(self) -> np.ndarray:
+        return self.latency_quantiles((0.50,))[0]
+
+    @property
+    def p95(self) -> np.ndarray:
+        return self.latency_quantiles((0.95,))[0]
+
+    @property
+    def p99(self) -> np.ndarray:
+        return self.latency_quantiles((0.99,))[0]
+
+    @property
+    def slo_frac(self) -> np.ndarray:
+        if self.slo_viol is None:
+            raise ValueError("closed-loop sweep: no SLO accounting")
+        dep = np.asarray(self.departed, np.float64)
+        return np.where(dep > 0, self.slo_viol / np.maximum(dep, 1.0),
+                        np.nan)
+
 
 def _run_chunk(arrs, n_steps: int, T: int, backend: str, block_steps: int,
-               target_cs: int, shard: bool):
+               target_cs: int, shard: bool, open_loop: bool = False):
     """One device call on an encoded chunk — the sharded or the
     traced-horizon unsharded blocked rollout, ``keep_per_thread=False``
     (summaries reduce on device)."""
@@ -244,11 +301,13 @@ def _run_chunk(arrs, n_steps: int, T: int, backend: str, block_steps: int,
         return xdes._simulate_sharded(
             arrs, n_steps=int(n_steps), T=T, backend=backend,
             rollout="blocked", block_steps=block_steps,
-            target_cs=target_cs, keep_per_thread=False)
+            target_cs=target_cs, keep_per_thread=False,
+            open_loop=open_loop)
     return xdes._simulate_dyn(
         arrs, np.int32(n_steps), T=T, backend=backend, rollout="blocked",
         block_steps=block_steps, target_cs=np.int32(target_cs),
-        early_exit=target_cs > 0, keep_per_thread=False)
+        early_exit=target_cs > 0, keep_per_thread=False,
+        open_loop=open_loop)
 
 
 def _pad_rows(arrs, n: int):
@@ -290,6 +349,7 @@ def sweep_stream(configs, *, target_cs: int = 300,
         P.config_columns(configs)
     arrs = P.encode_columns(cols, validate=isinstance(configs, dict))
     C = arrs["policy"].shape[0]
+    open_loop = bool((np.asarray(arrs["arrival"]) != P.AR_CLOSED).any())
     if reduce is not None:
         if C % reduce.group:
             raise ValueError(f"C={C} not a multiple of reduce.group="
@@ -328,15 +388,21 @@ def sweep_stream(configs, *, target_cs: int = 300,
     group = reduce.group if reduce is not None else 1
     quantum = (group * n_dev) // math.gcd(group, n_dev)
     if chunk is None:
-        chunk = plan_chunks(C, T, mem_mb=mem_mb, quantum=quantum)
+        chunk = plan_chunks(C, T, mem_mb=mem_mb, quantum=quantum,
+                            open_loop=open_loop)
     elif chunk % quantum:
         raise ValueError(f"chunk={chunk} not a multiple of the "
                          f"group/device quantum {quantum}")
-    bpc = bytes_per_config(T)
+    bpc = bytes_per_config(T, open_loop=open_loop)
     budget_mb = memory_budget_bytes(mem_mb) / 2**20
 
     out = {f: np.empty(C, np.float32 if f in ("spin_cpu", "t_end")
                        else np.int32) for f in SUMMARY_FIELDS}
+    if open_loop:
+        for f in OPEN_SUMMARY_FIELDS:
+            out[f] = np.empty(C, np.int32 if f in _OPEN_INT_FIELDS
+                              else np.float32)
+        out["lat_hist"] = np.empty((C, P.LAT_NBINS), np.int32)
     wins = (jnp.zeros((reduce.n_cells, group), jnp.int32)
             if reduce is not None else None)
     # Per-chunk on-device cell accumulation needs every group's rows in
@@ -365,9 +431,13 @@ def sweep_stream(configs, *, target_cs: int = 300,
             pad_to = min(chunk, quantum * xdes._pad_quantum(
                 -(-n // quantum)))
             res = _run_chunk(_pad_rows(part, pad_to), horizon, T, backend,
-                             int(block_steps), tc, shard)
+                             int(block_steps), tc, shard, open_loop)
             for f in SUMMARY_FIELDS:
                 out[f][sel] = np.asarray(res[f])[:n]
+            if open_loop:
+                for f in OPEN_SUMMARY_FIELDS:
+                    out[f][sel] = np.asarray(res[f])[:n]
+                out["lat_hist"][sel] = np.asarray(res["lat_hist"])[:n]
             if chunk_reduce:
                 cid = np.full(pad_to // group, -1, np.int32)
                 cid[:n // group] = reduce.cell_ids[lo // group:
@@ -396,4 +466,8 @@ def sweep_stream(configs, *, target_cs: int = 300,
         steps_run=out["steps_run"], fairness=out["fairness"],
         chunk_size=int(chunk), n_chunks=n_chunks,
         budget_mb=float(budget_mb), bytes_per_config=bpc,
-        wins=None if wins is None else np.asarray(wins))
+        wins=None if wins is None else np.asarray(wins),
+        lat_hist=out.get("lat_hist"), arrived=out.get("arrived"),
+        shed=out.get("shed"), departed=out.get("departed"),
+        slo_viol=out.get("slo_viol"), lat_sum=out.get("lat_sum"),
+        occ_int=out.get("occ_int"), in_flight=out.get("in_flight"))

@@ -89,11 +89,11 @@ DEFAULT_BLOCK_STEPS = 32
 _INF = np.float32(np.inf)
 
 #: Context columns threaded to the transition kernels each step
-#: (TRANSITION_CONTEXT minus ``now2``, same order).
+#: (TRANSITION_CONTEXT minus the per-step ``now2``/``stepi``, same order).
 _PRM_FIELDS = ("policy", "threads", "dt", "wake", "cs_lo", "cs_hi",
                "ncs_lo", "ncs_hi", "k", "sws_max", "spin_budget", "seed",
                "oracle", "workload", "wl_period", "wl_duty", "wl_burst",
-               "wl_spread")
+               "wl_spread", "arrival", "arr_rate", "q_cap", "slo", "tb")
 
 
 # --------------------------------------------------------------------------
@@ -122,11 +122,18 @@ def _block_backend(backend: str):
     raise ValueError(f"unknown backend {backend!r} (ref|pallas)")
 
 
-def _init_state(arrs, T: int):
+def _init_state(arrs, T: int, open_loop: bool = False):
     """The 17-array carry (16 transition-state arrays + spin_cpu): every
     thread starts in NCS with a fresh workload-row duration draw plus the
     seeded arrival-order phase offset (:func:`repro.kernels.ref.
-    workload_init_rem`)."""
+    workload_init_rem`).
+
+    With ``open_loop=True`` the 11 OPEN_STATE arrays are appended and
+    threads of open-arrival configs (``arrival != closed``) start DONE
+    with no request bound (``req_t = -1``) — the population is empty
+    until requests arrive.  Closed configs in the same batch are
+    untouched (their threads circulate from step 0 exactly as in the
+    closed-loop engine)."""
     C = arrs["policy"].shape[0]
     tid = jnp.arange(T, dtype=jnp.int32)[None, :]
     active = tid < arrs["threads"][:, None]
@@ -137,9 +144,12 @@ def _init_state(arrs, T: int):
         col("ncs_lo"), col("ncs_hi"), col("workload"), col("wl_period"),
         col("wl_duty"), col("wl_burst"), col("wl_spread"),
         col("arrival_phase"))
-    return (
-        jnp.where(active, P.NCS, P.DONE).astype(jnp.int32),   # st
-        jnp.where(active, rem0, _INF),                        # rem
+    circulate = active
+    if open_loop:
+        circulate = active & (col("arrival") == P.AR_CLOSED)
+    state = (
+        jnp.where(circulate, P.NCS, P.DONE).astype(jnp.int32),  # st
+        jnp.where(circulate, rem0, _INF),                     # rem
         jnp.full((C, T), _INF),                               # wake_at
         jnp.zeros((C, T), jnp.int32),                         # slept
         jnp.zeros((C, T), jnp.int32),                         # spun
@@ -156,12 +166,27 @@ def _init_state(arrs, T: int):
         jnp.zeros((C,), jnp.int32),                           # wake_count
         jnp.zeros((C,), jnp.float32),                         # spin_cpu
     )
+    if not open_loop:
+        return state
+    return state + (
+        jnp.full((C, T), -1.0, jnp.float32),                  # req_t
+        jnp.zeros((C, P.QUEUE_MAX), jnp.float32),             # qbuf
+        jnp.zeros((C, P.LAT_NBINS), jnp.int32),               # hist
+        jnp.zeros((C,), jnp.int32),                           # qhead
+        jnp.zeros((C,), jnp.int32),                           # qlen
+        jnp.zeros((C,), jnp.int32),                           # arrived
+        jnp.zeros((C,), jnp.int32),                           # shed
+        jnp.zeros((C,), jnp.int32),                           # departed
+        jnp.zeros((C,), jnp.int32),                           # slo_viol
+        jnp.zeros((C,), jnp.float32),                         # lat_sum
+        jnp.zeros((C,), jnp.float32),                         # occ_int
+    )
 
 
 def _out_dict(state, executed, arrs, keep_per_thread: bool = True):
     (st, rem, wake_at, slept, spun, ctr, ticket, completed_pt,
      sws, cnt, ewma, wuc, permits, nticket, completed, wake_count,
-     spin_cpu) = state
+     spin_cpu) = state[:17]
     executed = jnp.asarray(executed, jnp.int32)
     out = {
         "completed": completed,
@@ -171,6 +196,16 @@ def _out_dict(state, executed, arrs, keep_per_thread: bool = True):
         "t_end": executed.astype(jnp.float32) * arrs["dt"],
         "steps_run": jnp.broadcast_to(executed, completed.shape),
     }
+    if len(state) > 17:          # open-loop run: the 11 OPEN_STATE arrays
+        (req_t, qbuf, hist, qhead, qlen, arrived, shed, departed,
+         slo_viol, lat_sum, occ_int) = state[17:]
+        T = req_t.shape[1]
+        tid = jnp.arange(T, dtype=jnp.int32)[None, :]
+        act = tid < arrs["threads"][:, None]
+        busy = jnp.sum((act & (req_t >= 0.0)).astype(jnp.int32), axis=-1)
+        out.update(lat_hist=hist, arrived=arrived, shed=shed,
+                   departed=departed, slo_viol=slo_viol, lat_sum=lat_sum,
+                   occ_int=occ_int, in_flight=qlen + busy)
     if keep_per_thread:
         out["completed_per_thread"] = completed_pt
     else:
@@ -191,7 +226,8 @@ def _simulate_core(arrs, n_steps, T: int, backend: str = "ref",
                    block_steps: int = DEFAULT_BLOCK_STEPS,
                    target_cs=0, shard_axis: str | None = None,
                    early_exit: bool | None = None,
-                   keep_per_thread: bool = True):
+                   keep_per_thread: bool = True,
+                   open_loop: bool = False):
     """One device program simulating ``n_steps`` timesteps of every config.
 
     ``rollout="blocked"``: chunked ``lax.while_loop``, one fused kernel
@@ -213,7 +249,7 @@ def _simulate_core(arrs, n_steps, T: int, backend: str = "ref",
     C = arrs["policy"].shape[0]
     _, _, budget_f, _, _, _ = P.discipline_flags(arrs["policy"])
     has_budget = budget_f > 0
-    state0 = _init_state(arrs, T)
+    state0 = _init_state(arrs, T, open_loop)
     prm = tuple(arrs[f] for f in _PRM_FIELDS)
     if early_exit is None:
         early_exit = isinstance(target_cs, int) and target_cs > 0
@@ -222,13 +258,16 @@ def _simulate_core(arrs, n_steps, T: int, backend: str = "ref",
         advance, transitions = _step_backends(backend)
 
         def body(carry, i):
-            state, spin_cpu = carry[:-1], carry[-1]
+            state, spin_cpu = carry[:16], carry[16]
+            ostate = carry[17:] if open_loop else None
             st, rem = state[0], state[1]
             now2 = (i.astype(jnp.float32) + 1.0) * arrs["dt"]
             rem, burn = advance(st, rem, arrs["alpha"], arrs["cores"],
                                 arrs["dt"], has_budget)
-            state = transitions(st, rem, *state[2:], now2, *prm)
-            return (*state, spin_cpu + burn), None
+            out = transitions(st, rem, *state[2:], now2, i, *prm,
+                              open_state=ostate)
+            new, onew = out[:16], out[16:]
+            return (*new, spin_cpu + burn, *onew), None
 
         final, _ = jax.lax.scan(body, state0, jnp.arange(int(n_steps)))
         return _out_dict(final, int(n_steps), arrs, keep_per_thread)
@@ -243,9 +282,10 @@ def _simulate_core(arrs, n_steps, T: int, backend: str = "ref",
     tc = jnp.asarray(target_cs, jnp.int32)
 
     def run_block(state, step0):
-        return block(*state, jnp.asarray(step0, jnp.int32), arrs["alpha"],
-                     arrs["cores"], has_budget, *prm, n_sub_steps=B,
-                     limit=limit)
+        ostate = tuple(state[17:]) if open_loop else None
+        return block(*state[:17], jnp.asarray(step0, jnp.int32),
+                     arrs["alpha"], arrs["cores"], has_budget, *prm,
+                     n_sub_steps=B, limit=limit, open_state=ostate)
 
     def all_done(completed):
         if not early_exit:
@@ -273,20 +313,22 @@ def _simulate_core(arrs, n_steps, T: int, backend: str = "ref",
 #: (n_steps, target_cs, shapes) combination.
 _simulate = functools.partial(jax.jit, static_argnames=(
     "n_steps", "T", "backend", "rollout", "block_steps", "target_cs",
-    "shard_axis", "early_exit", "keep_per_thread"))(_simulate_core)
+    "shard_axis", "early_exit", "keep_per_thread",
+    "open_loop"))(_simulate_core)
 
 #: Dynamic-horizon jit entry for the blocked rollout: ``n_steps`` and
 #: ``target_cs`` are traced int32 scalars, so ONE executable per padded
 #: (C, T) shape serves every step-count bucket and stream chunk.
 _simulate_dyn = functools.partial(jax.jit, static_argnames=(
     "T", "backend", "rollout", "block_steps", "shard_axis", "early_exit",
-    "keep_per_thread"))(_simulate_core)
+    "keep_per_thread", "open_loop"))(_simulate_core)
 
 
 @functools.lru_cache(maxsize=None)
 def _sharded_fn(n_steps: int | None, T: int, backend: str, n_dev: int,
                 rollout: str, block_steps: int, target_cs: int | None,
-                early_exit: bool = False, keep_per_thread: bool = True):
+                early_exit: bool = False, keep_per_thread: bool = True,
+                open_loop: bool = False):
     """jit(shard_map(core)) over a 1-d ``configs`` device mesh — every
     config is independent, so the mapping is manual (the single collective
     is the one-int early-exit psum per block, which agrees on the exit
@@ -313,7 +355,8 @@ def _sharded_fn(n_steps: int | None, T: int, backend: str, n_dev: int,
                                   rollout=rollout, block_steps=block_steps,
                                   target_cs=tc, shard_axis="configs",
                                   early_exit=early_exit,
-                                  keep_per_thread=keep_per_thread)
+                                  keep_per_thread=keep_per_thread,
+                                  open_loop=open_loop)
 
         return jax.jit(shard_map(run_dyn, mesh=mesh,
                                  in_specs=(spec, rep, rep),
@@ -323,7 +366,8 @@ def _sharded_fn(n_steps: int | None, T: int, backend: str, n_dev: int,
         return _simulate_core(arrs, n_steps=n_steps, T=T, backend=backend,
                               rollout=rollout, block_steps=block_steps,
                               target_cs=target_cs, shard_axis="configs",
-                              keep_per_thread=keep_per_thread)
+                              keep_per_thread=keep_per_thread,
+                              open_loop=open_loop)
 
     return jax.jit(shard_map(run, mesh=mesh, in_specs=(spec,),
                              out_specs=spec, check_vma=False))
@@ -332,7 +376,8 @@ def _sharded_fn(n_steps: int | None, T: int, backend: str, n_dev: int,
 def _simulate_sharded(arrs, n_steps: int, T: int, backend: str,
                       rollout: str = "blocked",
                       block_steps: int = DEFAULT_BLOCK_STEPS,
-                      target_cs: int = 0, keep_per_thread: bool = True):
+                      target_cs: int = 0, keep_per_thread: bool = True,
+                      open_loop: bool = False):
     n_dev = len(jax.devices())
     C = arrs["policy"].shape[0]
     pad = (-C) % n_dev
@@ -341,11 +386,12 @@ def _simulate_sharded(arrs, n_steps: int, T: int, backend: str,
                 for k, v in arrs.items()}
     if rollout == "blocked":
         fn = _sharded_fn(None, T, backend, n_dev, rollout, block_steps,
-                         None, target_cs > 0, keep_per_thread)
+                         None, target_cs > 0, keep_per_thread, open_loop)
         out = fn(arrs, np.int32(n_steps), np.int32(target_cs))
     else:
         out = _sharded_fn(n_steps, T, backend, n_dev, rollout, block_steps,
-                          target_cs, False, keep_per_thread)(arrs)
+                          target_cs, False, keep_per_thread,
+                          open_loop)(arrs)
     return {k: v[:C] for k, v in out.items()}
 
 
@@ -463,6 +509,23 @@ class BatchResult:
     #: device when ``keep_per_thread=False`` (else derivable from
     #: ``completed_per_thread``).
     fairness: np.ndarray | None = None
+    #: Open-loop outputs, ``None`` on closed-loop runs: (C, LAT_NBINS)
+    #: per-request latency histogram (log-spaced bins,
+    #: :func:`repro.core.policy.latency_bin_edges`) plus (C,) request
+    #: counters — arrivals offered, shed at the full queue, departed,
+    #: SLO violations among departures — and the exact latency /
+    #: occupancy-integral accumulators behind Little's law
+    #: (``occ_int = ∫L dt``, ``lat_sum = Σ latency``; see
+    #: docs/open_loop.md).  ``in_flight`` is the end-of-run system
+    #: occupancy (queued + bound to a thread).
+    lat_hist: np.ndarray | None = None
+    arrived: np.ndarray | None = None
+    shed: np.ndarray | None = None
+    departed: np.ndarray | None = None
+    slo_viol: np.ndarray | None = None
+    lat_sum: np.ndarray | None = None
+    occ_int: np.ndarray | None = None
+    in_flight: np.ndarray | None = None
 
     @property
     def throughput(self) -> np.ndarray:
@@ -471,6 +534,44 @@ class BatchResult:
     @property
     def sync_cpu_per_cs(self) -> np.ndarray:
         return self.spin_cpu / np.maximum(self.completed, 1)
+
+    def latency_quantiles(self, qs=(0.50, 0.95, 0.99)) -> np.ndarray:
+        """(len(qs), C) per-request latency percentiles from the on-device
+        histogram (geometric bin midpoints; NaN where nothing departed)."""
+        if self.lat_hist is None:
+            raise ValueError("closed-loop run: no latency histogram")
+        return P.latency_percentiles(self.lat_hist, qs)
+
+    @property
+    def p50(self) -> np.ndarray:
+        return self.latency_quantiles((0.50,))[0]
+
+    @property
+    def p95(self) -> np.ndarray:
+        return self.latency_quantiles((0.95,))[0]
+
+    @property
+    def p99(self) -> np.ndarray:
+        return self.latency_quantiles((0.99,))[0]
+
+    @property
+    def slo_frac(self) -> np.ndarray:
+        """Fraction of departed requests whose latency exceeded the
+        config's SLO (NaN where nothing departed)."""
+        if self.slo_viol is None:
+            raise ValueError("closed-loop run: no SLO accounting")
+        dep = np.asarray(self.departed, np.float64)
+        return np.where(dep > 0, self.slo_viol / np.maximum(dep, 1.0),
+                        np.nan)
+
+    @property
+    def mean_latency(self) -> np.ndarray:
+        """Exact mean departed-request latency (NaN where none departed)."""
+        if self.lat_sum is None:
+            raise ValueError("closed-loop run: no latency accounting")
+        dep = np.asarray(self.departed, np.float64)
+        return np.where(dep > 0, self.lat_sum / np.maximum(dep, 1.0),
+                        np.nan)
 
     def fairness_spread(self, i: int) -> int:
         """Max-min completed-CS spread across config ``i``'s threads —
@@ -502,14 +603,18 @@ def _pad_quantum(n: int) -> int:
 
 def _simulate_bucketed(configs, buckets, steps, *, target_cs, dt, backend,
                        max_threads, shard, rollout, block_steps,
-                       early_exit, keep_per_thread=True) -> BatchResult:
+                       early_exit, keep_per_thread=True,
+                       open_loop=False) -> BatchResult:
     """Run each step-count bucket as its own batched call and stitch the
     per-config results back into the caller's row order.  ``dt`` and
     ``steps`` are the (C,) planned arrays — passed down sliced, so the
     per-bucket calls skip re-planning.  Each bucket's config axis is
     padded to the next power of two (copies of its last row, sliced off
     again), so buckets share padded shapes and — the horizon being traced
-    in the blocked rollout — compiled executables."""
+    in the blocked rollout — compiled executables.  ``open_loop`` is
+    resolved once here and forced on every bucket, so a mixed batch
+    whose open configs all land in one bucket still returns open-loop
+    outputs for every row."""
     C = len(configs)
     T = max_threads or max(c.threads for c in configs)
     parts = []
@@ -521,6 +626,7 @@ def _simulate_bucketed(configs, buckets, steps, *, target_cs, dt, backend,
             backend=backend, max_threads=T, shard=shard, rollout=rollout,
             block_steps=block_steps, early_exit=early_exit,
             bucket_steps=False, keep_per_thread=keep_per_thread,
+            open_loop=open_loop,
             pad_configs=_pad_quantum(len(idx)) if rollout == "blocked"
             else None))
     res = BatchResult(
@@ -532,10 +638,22 @@ def _simulate_bucketed(configs, buckets, steps, *, target_cs, dt, backend,
         completed_per_thread=(np.empty((C, T), np.int32)
                               if keep_per_thread else None),
         steps_run=np.empty(C, np.int32),
-        fairness=None if keep_per_thread else np.empty(C, np.int32))
+        fairness=None if keep_per_thread else np.empty(C, np.int32),
+        lat_hist=(np.empty((C, P.LAT_NBINS), np.int32)
+                  if open_loop else None),
+        arrived=np.empty(C, np.int32) if open_loop else None,
+        shed=np.empty(C, np.int32) if open_loop else None,
+        departed=np.empty(C, np.int32) if open_loop else None,
+        slo_viol=np.empty(C, np.int32) if open_loop else None,
+        lat_sum=np.empty(C, np.float32) if open_loop else None,
+        occ_int=np.empty(C, np.float32) if open_loop else None,
+        in_flight=np.empty(C, np.int32) if open_loop else None)
     fields = ["dt", "t_end", "completed", "spin_cpu", "wake_count",
               "final_sws", "steps_run"]
     fields.append("completed_per_thread" if keep_per_thread else "fairness")
+    if open_loop:
+        fields += ["lat_hist", "arrived", "shed", "departed", "slo_viol",
+                   "lat_sum", "occ_int", "in_flight"]
     for idx, p in zip(buckets, parts):
         for f in fields:
             getattr(res, f)[idx] = getattr(p, f)
@@ -550,7 +668,8 @@ def simulate_batch(configs, *, target_cs: int = 300, n_steps: int | None = None,
                    early_exit: bool | None = None,
                    bucket_steps: bool = False,
                    keep_per_thread: bool = True,
-                   pad_configs: int | None = None) -> BatchResult:
+                   pad_configs: int | None = None,
+                   open_loop: bool | None = None) -> BatchResult:
     """Simulate every :class:`repro.core.policy.SimConfig` in ``configs``
     in ONE jit-compiled device call (or one per step-count bucket).
 
@@ -590,8 +709,17 @@ def simulate_batch(configs, *, target_cs: int = 300, n_steps: int | None = None,
     (results sliced back), stabilizing compiled shapes across calls;
     results are bit-identical because configs are independent and the
     padded copies converge exactly when their source row does.
+
+    ``open_loop=None`` (auto) switches on the open-loop arrival engine iff
+    any config has a non-closed arrival row; closed batches compile the
+    exact legacy graph (the flag is static, so the 11 OPEN_STATE carry
+    arrays simply don't exist).  Forcing ``open_loop=True`` on an
+    all-closed batch is valid — the open machinery runs but stays inert
+    (rate 0 admits nothing), which the bit-identity tests exploit.
     """
     configs = list(configs)
+    if open_loop is None:
+        open_loop = any(c.open_loop for c in configs)
     if dt is None or n_steps is None:
         auto_dt, steps_arr = plan_schedule(configs, target_cs)
     if bucket_steps and n_steps is None and len(configs) > 1:
@@ -611,7 +739,7 @@ def simulate_batch(configs, *, target_cs: int = 300, n_steps: int | None = None,
                 rollout=rollout, block_steps=block_steps,
                 # a bucketed horizon is auto-planned: exit by default
                 early_exit=True if early_exit is None else early_exit,
-                keep_per_thread=keep_per_thread)
+                keep_per_thread=keep_per_thread, open_loop=open_loop)
     arrs = P.encode_configs(configs)
     if dt is None:
         dt = auto_dt
@@ -648,19 +776,22 @@ def simulate_batch(configs, *, target_cs: int = 300, n_steps: int | None = None,
         out = _simulate_sharded(arrs, n_steps=int(n_steps), T=int(T),
                                 backend=backend, rollout=rollout,
                                 block_steps=int(block_steps), target_cs=tc,
-                                keep_per_thread=keep_per_thread)
+                                keep_per_thread=keep_per_thread,
+                                open_loop=open_loop)
     elif rollout == "blocked":
         # traced horizon/target: one executable per padded (C, T) shape
         out = _simulate_dyn(arrs, np.int32(n_steps), T=int(T),
                             backend=backend, rollout=rollout,
                             block_steps=int(block_steps),
                             target_cs=np.int32(tc), early_exit=tc > 0,
-                            keep_per_thread=keep_per_thread)
+                            keep_per_thread=keep_per_thread,
+                            open_loop=open_loop)
     else:
         out = _simulate(arrs, n_steps=int(n_steps), T=int(T),
                         backend=backend, rollout=rollout,
                         block_steps=int(block_steps), target_cs=tc,
-                        keep_per_thread=keep_per_thread)
+                        keep_per_thread=keep_per_thread,
+                        open_loop=open_loop)
     out = {k: np.asarray(v)[:C] for k, v in out.items()}
     return BatchResult(configs=configs, n_steps=int(n_steps), backend=backend,
                        dt=np.asarray(dt, np.float32)[:C],
@@ -670,4 +801,11 @@ def simulate_batch(configs, *, target_cs: int = 300, n_steps: int | None = None,
                        final_sws=out["final_sws"],
                        completed_per_thread=out.get("completed_per_thread"),
                        steps_run=out["steps_run"],
-                       fairness=out.get("fairness"))
+                       fairness=out.get("fairness"),
+                       lat_hist=out.get("lat_hist"),
+                       arrived=out.get("arrived"), shed=out.get("shed"),
+                       departed=out.get("departed"),
+                       slo_viol=out.get("slo_viol"),
+                       lat_sum=out.get("lat_sum"),
+                       occ_int=out.get("occ_int"),
+                       in_flight=out.get("in_flight"))

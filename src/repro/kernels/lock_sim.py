@@ -206,9 +206,10 @@ _THREAD_STATE_SPEC = (
     ("completed_pt", jnp.int32, 0),
 )
 
-#: dtypes of the 19 per-config context columns (TRANSITION_CONTEXT order).
+#: dtypes of the 25 per-config context columns (TRANSITION_CONTEXT order).
 _CONTEXT_DTYPES = (
     jnp.float32,                        # now2
+    jnp.int32,                          # stepi (per-step RNG counter)
     jnp.int32, jnp.int32,               # policy, threads
     jnp.float32, jnp.float32,           # dt, wake
     jnp.float32, jnp.float32, jnp.float32, jnp.float32,  # cs/ncs lo/hi
@@ -217,18 +218,66 @@ _CONTEXT_DTYPES = (
     jnp.uint32, jnp.int32,              # seed, oracle
     jnp.int32,                          # workload
     jnp.float32, jnp.float32, jnp.float32, jnp.float32,  # wl_* knobs
+    jnp.int32, jnp.float32,             # arrival, arr_rate
+    jnp.int32, jnp.float32, jnp.int32,  # q_cap, slo, tb
 )
 
 _N_THREAD, _N_CONF, _N_CTX = 8, 8, len(_CONTEXT_DTYPES)
 
+#: dtypes of the 8 (C,) open-loop counter columns (OPEN_STATE[3:] order:
+#: qhead, qlen, arrived, shed, departed, slo_viol int32; lat_sum, occ_int
+#: float32).  The first three OPEN_STATE arrays are 2-d: ``req_t`` (C, T)
+#: f32 (padded thread lanes hold the -1 free sentinel), ``qbuf``
+#: (C, QUEUE_MAX) f32 and ``hist`` (C, LAT_NBINS) i32 (their second axes
+#: are never thread-padded).
+_OPEN_COL_DTYPES = (jnp.int32,) * 6 + (jnp.float32,) * 2
+_N_OPEN = 3 + len(_OPEN_COL_DTYPES)
 
-def _transitions_kernel(*refs):
-    ins, outs = refs[:_N_THREAD + _N_CONF + _N_CTX], \
-        refs[_N_THREAD + _N_CONF + _N_CTX:]
+
+def _pad_open(open_state, pc, pt):
+    """Pad the 11 OPEN_STATE arrays to the kernel's block grid: config
+    rows with copies of zero / free sentinels, thread lanes of ``req_t``
+    with -1 (free — inert in the busy count, which is also gated by
+    ``threads``)."""
+    req_t, qbuf, hist = open_state[:3]
+    padded = [jnp.pad(req_t.astype(jnp.float32), ((0, pc), (0, pt)),
+                      constant_values=-1.0),
+              jnp.pad(qbuf.astype(jnp.float32), ((0, pc), (0, 0))),
+              jnp.pad(hist.astype(jnp.int32), ((0, pc), (0, 0)))]
+    padded += [jnp.pad(v.astype(d), (0, pc))[:, None]
+               for v, d in zip(open_state[3:], _OPEN_COL_DTYPES)]
+    return padded
+
+
+def _open_specs_shapes(open_state, bc, C, pc, Tp, mat, colspec):
+    """(in/out specs, out shapes) for the 11 OPEN_STATE kernel operands."""
+    Qn = open_state[1].shape[1]
+    NBn = open_state[2].shape[1]
+    specs = [mat, pl.BlockSpec((bc, Qn), lambda i: (i, 0)),
+             pl.BlockSpec((bc, NBn), lambda i: (i, 0))] + [colspec] * 8
+    shapes = [jax.ShapeDtypeStruct((C + pc, Tp), jnp.float32),
+              jax.ShapeDtypeStruct((C + pc, Qn), jnp.float32),
+              jax.ShapeDtypeStruct((C + pc, NBn), jnp.int32)] \
+        + [jax.ShapeDtypeStruct((C + pc, 1), d) for d in _OPEN_COL_DTYPES]
+    return specs, shapes
+
+
+def _read_open(orefs):
+    """Materialize the open-state refs for the ref body: 2-d arrays whole,
+    counter columns squeezed to (C,)."""
+    return [orefs[0][...], orefs[1][...], orefs[2][...]] \
+        + [r[...][:, 0] for r in orefs[3:]]
+
+
+def _transitions_kernel(open_run, *refs):
+    n_in = _N_THREAD + _N_CONF + _N_CTX + (_N_OPEN if open_run else 0)
+    ins, outs = refs[:n_in], refs[n_in:]
     thread = [r[...] for r in ins[:_N_THREAD]]
     conf = [r[...][:, 0] for r in ins[_N_THREAD:_N_THREAD + _N_CONF]]
-    ctx = [r[...][:, 0] for r in ins[_N_THREAD + _N_CONF:]]
-    out = lock_transitions_ref(*thread, *conf, *ctx)
+    base = _N_THREAD + _N_CONF
+    ctx = [r[...][:, 0] for r in ins[base:base + _N_CTX]]
+    ostate = _read_open(ins[base + _N_CTX:]) if open_run else None
+    out = lock_transitions_ref(*thread, *conf, *ctx, open_state=ostate)
     for r, v in zip(outs, out):
         r[...] = v if v.ndim == 2 else v[:, None]
 
@@ -237,14 +286,17 @@ def _transitions_kernel(*refs):
 def lock_transitions_step(st, rem, wake_at, slept, spun, ctr, ticket,
                           completed_pt, sws, cnt, ewma, wuc, permits,
                           nticket, completed, wake_count,
-                          now2, policy, threads, dt, wake, cs_lo, cs_hi,
-                          ncs_lo, ncs_hi, k, sws_max, spin_budget, seed,
-                          oracle, workload, wl_period, wl_duty, wl_burst,
-                          wl_spread, *, block_configs: int = 256,
+                          now2, stepi, policy, threads, dt, wake, cs_lo,
+                          cs_hi, ncs_lo, ncs_hi, k, sws_max, spin_budget,
+                          seed, oracle, workload, wl_period, wl_duty,
+                          wl_burst, wl_spread, arrival, arr_rate, q_cap,
+                          slo, tb, *, open_state=None,
+                          block_configs: int = 256,
                           interpret: bool | None = None):
     """Pallas-fused transition stage; signature mirrors
     :func:`repro.kernels.ref.lock_transitions_ref` and returns the same
-    16 updated state arrays.  ``interpret=None`` auto-detects the backend
+    16 updated state arrays (27 with ``open_state``, the 11 OPEN_STATE
+    arrays appended).  ``interpret=None`` auto-detects the backend
     (interpret iff no GPU/TPU is attached)."""
     interpret = resolve_interpret(interpret)
     C, T = st.shape
@@ -263,28 +315,44 @@ def lock_transitions_step(st, rem, wake_at, slept, spun, ctr, ticket,
     conf_in = [jnp.pad(v.astype(jnp.int32), (0, pc))[:, None]
                for v in (sws, cnt, ewma, wuc, permits, nticket, completed,
                          wake_count)]
-    ctx_in = [jnp.pad(v.astype(dtype), (0, pc))[:, None]
-              for v, dtype in zip((now2, policy, threads, dt, wake, cs_lo,
-                                   cs_hi, ncs_lo, ncs_hi, k, sws_max,
+    ctx_in = [jnp.pad(jnp.broadcast_to(jnp.asarray(v, dtype), (C,)),
+                      (0, pc))[:, None]
+              for v, dtype in zip((now2, stepi, policy, threads, dt, wake,
+                                   cs_lo, cs_hi, ncs_lo, ncs_hi, k, sws_max,
                                    spin_budget, seed, oracle, workload,
-                                   wl_period, wl_duty, wl_burst, wl_spread),
+                                   wl_period, wl_duty, wl_burst, wl_spread,
+                                   arrival, arr_rate, q_cap, slo, tb),
                                   _CONTEXT_DTYPES)]
 
     mat = pl.BlockSpec((bc, Tp), lambda i: (i, 0))
     colspec = pl.BlockSpec((bc, 1), lambda i: (i, 0))
+    open_run = open_state is not None
+    open_in, open_specs, open_shapes = [], [], []
+    if open_run:
+        open_in = _pad_open(open_state, pc, pt)
+        open_specs, open_shapes = _open_specs_shapes(
+            open_state, bc, C, pc, Tp, mat, colspec)
     out = pl.pallas_call(
-        _transitions_kernel,
+        functools.partial(_transitions_kernel, open_run),
         grid=(nc,),
-        in_specs=[mat] * _N_THREAD + [colspec] * (_N_CONF + _N_CTX),
-        out_specs=[mat] * _N_THREAD + [colspec] * _N_CONF,
+        in_specs=[mat] * _N_THREAD + [colspec] * (_N_CONF + _N_CTX)
+        + open_specs,
+        out_specs=[mat] * _N_THREAD + [colspec] * _N_CONF + open_specs,
         out_shape=[jax.ShapeDtypeStruct((C + pc, Tp), s[1])
                    for s in _THREAD_STATE_SPEC]
-        + [jax.ShapeDtypeStruct((C + pc, 1), jnp.int32)] * _N_CONF,
+        + [jax.ShapeDtypeStruct((C + pc, 1), jnp.int32)] * _N_CONF
+        + open_shapes,
         interpret=interpret,
         compiler_params=CompilerParams(dimension_semantics=("parallel",)),
-    )(*thread_in, *conf_in, *ctx_in)
-    return tuple(v[:C, :T] for v in out[:_N_THREAD]) \
-        + tuple(v[:C, 0] for v in out[_N_THREAD:])
+    )(*thread_in, *conf_in, *ctx_in, *open_in)
+    nclosed = _N_THREAD + _N_CONF
+    res = tuple(v[:C, :T] for v in out[:_N_THREAD]) \
+        + tuple(v[:C, 0] for v in out[_N_THREAD:nclosed])
+    if open_run:
+        o = out[nclosed:]
+        res += (o[0][:C, :T], o[1][:C], o[2][:C]) \
+            + tuple(v[:C, 0] for v in o[3:])
+    return res
 
 
 # --------------------------------------------------------------------------
@@ -298,27 +366,30 @@ def lock_transitions_step(st, rem, wake_at, slept, spun, ctr, ticket,
 # scan: 2*B pad/slice round trips and kernel launches become 1 per block.
 # --------------------------------------------------------------------------
 
-#: dtypes of the 18 per-config context columns of the block kernel
+#: dtypes of the 28 per-config context columns of the block kernel
 #: (repro.kernels.ref.BLOCK_CONTEXT order): step0, the step limit, the GPS
 #: advance inputs (alpha, cores, has_budget), then TRANSITION_CONTEXT
-#: minus now2.
+#: minus now2 and stepi (both recomputed in-block from step0 + s).
 _BLOCK_CTX_DTYPES = (jnp.int32, jnp.int32, jnp.float32, jnp.float32,
-                     jnp.int32) + _CONTEXT_DTYPES[1:]
+                     jnp.int32) + _CONTEXT_DTYPES[2:]
 
 _N_BLOCK_CTX = len(_BLOCK_CTX_DTYPES)
 
 
-def _block_kernel(n_sub_steps, *refs):
-    n_in = _N_THREAD + 1 + _N_CONF + _N_BLOCK_CTX
+def _block_kernel(n_sub_steps, open_run, *refs):
+    n_in = _N_THREAD + 1 + _N_CONF + _N_BLOCK_CTX \
+        + (_N_OPEN if open_run else 0)
     ins, outs = refs[:n_in], refs[n_in:]
     thread = [r[...] for r in ins[:_N_THREAD]]
     spin_cpu = ins[_N_THREAD][...][:, 0]
     conf = [r[...][:, 0] for r in ins[_N_THREAD + 1:_N_THREAD + 1 + _N_CONF]]
-    ctx = [r[...][:, 0] for r in ins[_N_THREAD + 1 + _N_CONF:]]
+    base = _N_THREAD + 1 + _N_CONF
+    ctx = [r[...][:, 0] for r in ins[base:base + _N_BLOCK_CTX]]
     step0, limit, alpha, cores, hb = ctx[:5]
+    ostate = _read_open(ins[base + _N_BLOCK_CTX:]) if open_run else None
     out = lock_sim_block_ref(*thread, *conf, spin_cpu, step0, alpha, cores,
                              hb > 0, *ctx[5:], n_sub_steps=n_sub_steps,
-                             limit=limit)
+                             limit=limit, open_state=ostate)
     for r, v in zip(outs, out):
         r[...] = v if v.ndim == 2 else v[:, None]
 
@@ -331,12 +402,15 @@ def lock_sim_block(st, rem, wake_at, slept, spun, ctr, ticket,
                    step0, alpha, cores, has_budget,
                    policy, threads, dt, wake, cs_lo, cs_hi, ncs_lo, ncs_hi,
                    k, sws_max, spin_budget, seed, oracle, workload,
-                   wl_period, wl_duty, wl_burst, wl_spread, *,
+                   wl_period, wl_duty, wl_burst, wl_spread, arrival,
+                   arr_rate, q_cap, slo, tb, *,
                    n_sub_steps: int, block_configs: int = 256,
-                   interpret: bool | None = None, limit=None):
+                   interpret: bool | None = None, limit=None,
+                   open_state=None):
     """Pallas time-blocked rollout kernel; signature mirrors
     :func:`repro.kernels.ref.lock_sim_block_ref` and returns the same 17
-    updated state arrays after ``n_sub_steps`` fused timesteps.  ``step0``
+    updated state arrays after ``n_sub_steps`` fused timesteps (28 with
+    ``open_state``, the 11 OPEN_STATE arrays appended).  ``step0``
     (int32 scalar or (C,) vector) is the global index of the block's first
     step; ``limit`` (same broadcast, optionally traced) masks sub-steps at
     global index >= limit into exact passthroughs (see the ref twin) and
@@ -368,23 +442,38 @@ def lock_sim_block(st, rem, wake_at, slept, spun, ctr, ticket,
                                    policy, threads, dt, wake, cs_lo, cs_hi,
                                    ncs_lo, ncs_hi, k, sws_max, spin_budget,
                                    seed, oracle, workload, wl_period,
-                                   wl_duty, wl_burst, wl_spread),
+                                   wl_duty, wl_burst, wl_spread, arrival,
+                                   arr_rate, q_cap, slo, tb),
                                   _BLOCK_CTX_DTYPES)]
 
     mat = pl.BlockSpec((bc, Tp), lambda i: (i, 0))
     colspec = pl.BlockSpec((bc, 1), lambda i: (i, 0))
+    open_run = open_state is not None
+    open_in, open_specs, open_shapes = [], [], []
+    if open_run:
+        open_in = _pad_open(open_state, pc, pt)
+        open_specs, open_shapes = _open_specs_shapes(
+            open_state, bc, C, pc, Tp, mat, colspec)
     out = pl.pallas_call(
-        functools.partial(_block_kernel, n_sub_steps),
+        functools.partial(_block_kernel, n_sub_steps, open_run),
         grid=(nc,),
         in_specs=[mat] * _N_THREAD
-        + [colspec] * (1 + _N_CONF + _N_BLOCK_CTX),
-        out_specs=[mat] * _N_THREAD + [colspec] * (_N_CONF + 1),
+        + [colspec] * (1 + _N_CONF + _N_BLOCK_CTX) + open_specs,
+        out_specs=[mat] * _N_THREAD + [colspec] * (_N_CONF + 1)
+        + open_specs,
         out_shape=[jax.ShapeDtypeStruct((C + pc, Tp), s[1])
                    for s in _THREAD_STATE_SPEC]
         + [jax.ShapeDtypeStruct((C + pc, 1), jnp.int32)] * _N_CONF
-        + [jax.ShapeDtypeStruct((C + pc, 1), jnp.float32)],
+        + [jax.ShapeDtypeStruct((C + pc, 1), jnp.float32)]
+        + open_shapes,
         interpret=interpret,
         compiler_params=CompilerParams(dimension_semantics=("parallel",)),
-    )(*thread_in, cpu_in, *conf_in, *ctx_in)
-    return tuple(v[:C, :T] for v in out[:_N_THREAD]) \
-        + tuple(v[:C, 0] for v in out[_N_THREAD:])
+    )(*thread_in, cpu_in, *conf_in, *ctx_in, *open_in)
+    nclosed = _N_THREAD + _N_CONF + 1
+    res = tuple(v[:C, :T] for v in out[:_N_THREAD]) \
+        + tuple(v[:C, 0] for v in out[_N_THREAD:nclosed])
+    if open_run:
+        o = out[nclosed:]
+        res += (o[0][:C, :T], o[1][:C], o[2][:C]) \
+            + tuple(v[:C, 0] for v in o[3:])
+    return res

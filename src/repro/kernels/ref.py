@@ -134,10 +134,24 @@ TRANSITION_THREAD_STATE = ("st", "rem", "wake_at", "slept", "spun", "ctr",
                            "ticket", "completed_pt")
 TRANSITION_CONFIG_STATE = ("sws", "cnt", "ewma", "wuc", "permits", "nticket",
                            "completed", "wake_count")
-TRANSITION_CONTEXT = ("now2", "policy", "threads", "dt", "wake", "cs_lo",
-                      "cs_hi", "ncs_lo", "ncs_hi", "k", "sws_max",
+TRANSITION_CONTEXT = ("now2", "stepi", "policy", "threads", "dt", "wake",
+                      "cs_lo", "cs_hi", "ncs_lo", "ncs_hi", "k", "sws_max",
                       "spin_budget", "seed", "oracle", "workload",
-                      "wl_period", "wl_duty", "wl_burst", "wl_spread")
+                      "wl_period", "wl_duty", "wl_burst", "wl_spread",
+                      "arrival", "arr_rate", "q_cap", "slo", "tb")
+
+#: Open-loop state appended after the closed carry (spin_cpu) — only
+#: materialized when a batch contains an open-arrival config
+#: (``SimConfig.arrival != "closed"``; see docs/open_loop.md).  Shapes:
+#: ``req_t`` (C, T) f32 bound-request arrival times (-1 when the slot is
+#: free), ``qbuf`` (C, QUEUE_MAX) f32 queued arrival times (a ring
+#: buffer), ``hist`` (C, LAT_NBINS) i32 latency histogram, then (C,)
+#: counters: queue head/length, arrived/shed/departed/SLO-violation
+#: counts (i32), latency sum and queue+service occupancy time-integral
+#: (f32) — the exact Little's-law pair (``occ_int - lat_sum`` equals the
+#: summed ages of still-in-system requests at the horizon).
+OPEN_STATE = ("req_t", "qbuf", "hist", "qhead", "qlen", "arrived", "shed",
+              "departed", "slo_viol", "lat_sum", "occ_int")
 
 
 def counter_uniform(seed, tid, ctr):
@@ -227,22 +241,30 @@ def workload_init_rem(seed, tid, ctr0, ncs_lo, ncs_hi, workload, wl_period,
 def lock_transitions_ref(st, rem, wake_at, slept, spun, ctr, ticket,
                          completed_pt, sws, cnt, ewma, wuc, permits,
                          nticket, completed, wake_count,
-                         now2, policy, threads, dt, wake, cs_lo, cs_hi,
-                         ncs_lo, ncs_hi, k, sws_max, spin_budget, seed,
-                         oracle, workload, wl_period, wl_duty, wl_burst,
-                         wl_spread):
+                         now2, stepi, policy, threads, dt, wake, cs_lo,
+                         cs_hi, ncs_lo, ncs_hi, k, sws_max, spin_budget,
+                         seed, oracle, workload, wl_period, wl_duty,
+                         wl_burst, wl_spread, arrival, arr_rate, q_cap,
+                         slo, tb, *, open_state=None):
     """One transition step for a (C, T) block of configurations.
 
     Stages (same order as the event-driven DES resolves a timestep):
-    budget exhaustion -> wake completions -> CS release/handoff ->
-    arrivals.  Per-thread state is int32/f32/uint32 arrays of shape
-    (C, T) (``slept``/``spun`` as 0/1 int32, ``ticket`` int32 with
-    :data:`NO_TICKET` when not queued); per-config state and context are
-    (C,) vectors.  Every CS/NCS duration draw dispatches through the
+    [open-loop admission] -> budget exhaustion -> wake completions ->
+    CS release/handoff [+ open-loop departure] -> arrivals ->
+    [open-loop request binding + occupancy].  Per-thread state is
+    int32/f32/uint32 arrays of shape (C, T) (``slept``/``spun`` as 0/1
+    int32, ``ticket`` int32 with :data:`NO_TICKET` when not queued);
+    per-config state and context are (C,) vectors; ``stepi`` is the
+    global step index (int32 scalar or (C,), the counter of the per-step
+    RNG streams).  Every CS/NCS duration draw dispatches through the
     workload rows (:func:`workload_draw`; constant rows reproduce the
     plain uniform draw bit-identically).  Returns the 16 updated state
     arrays in the canonical order (:data:`TRANSITION_THREAD_STATE` +
-    :data:`TRANSITION_CONFIG_STATE`).
+    :data:`TRANSITION_CONFIG_STATE`), plus the 11 :data:`OPEN_STATE`
+    arrays when ``open_state`` is given.  A closed config
+    (``arrival == AR_CLOSED``) inside an open batch takes every open
+    stage as an exact masked no-op, and ``tb == 0`` reproduces the
+    historical thread-id tie-break bit-identically.
     """
     from repro.core import policy as P
 
@@ -255,6 +277,44 @@ def lock_transitions_ref(st, rem, wake_at, slept, spun, ctr, ticket,
     (hand_f, fifo_f, budget_f, w2s_f, repark_f,
      win_f) = P.discipline_flags(policy)
     teps = dt * jnp.float32(1e-3)
+    stepu = jnp.asarray(stepi).astype(jnp.uint32)  # scalar or (C,)
+    stepuT = stepu if stepu.ndim == 0 else stepu[:, None]
+
+    # -- open-loop admission (arrival rows; see docs/open_loop.md) --------
+    # Runs FIRST so a request admitted at step i is in the system for
+    # steps i..j-1 when it departs at step j — the occupancy integral
+    # accumulated at the END of the step then equals the recorded latency
+    # (j - i)·dt exactly (the Little's-law invariant the property tests
+    # pin).  Requests carry their admission timestamp ``now2`` through
+    # the ring buffer into the bound thread's ``req_t`` slot.
+    open_run = open_state is not None
+    if open_run:
+        (req_t, qbuf, hist, qhead, qlen, arrived, shed, departed,
+         slo_viol, lat_sum, occ_int) = open_state
+        Q = qbuf.shape[1]
+        NB = hist.shape[1]
+        openc = col(arrival != P.AR_CLOSED)
+        zero_u = jnp.zeros_like(seed)
+        ar_phase = counter_uniform(seed ^ jnp.uint32(P.AR_PHASE_SALT),
+                                   zero_u, jnp.uint32(0))
+        gate_on = 1.0 - P.workload_off_gate(now2, ar_phase, wl_period,
+                                            wl_duty)
+        rate = P.arrival_rate_at(arrival, arr_rate, gate_on, wl_burst)
+        # Bernoulli-rounded count: floor(rate·dt) plus a trial on the
+        # fractional part — the expected count is exactly rate·dt, so the
+        # admitted load is dt-independent (closed rows: rate 0, count 0).
+        m = rate * dt
+        mf = jnp.floor(m)
+        u_arr = counter_uniform(seed ^ jnp.uint32(P.AR_SALT), zero_u,
+                                stepu)
+        n_arr = (mf + (u_arr < (m - mf))).astype(jnp.int32)
+        n_adm = jnp.minimum(n_arr, q_cap - qlen)   # bounded queue: shed
+        qi = jnp.arange(Q, dtype=jnp.int32)[None, :]
+        wr = ((qi - col(qhead + qlen)) % Q) < col(n_adm)
+        qbuf = jnp.where(wr, col(now2), qbuf)
+        qlen = qlen + n_adm
+        arrived = arrived + n_arr
+        shed = shed + (n_arr - n_adm)
 
     def first_oh(mask):
         """One-hot of the lowest-tid True per row (all-False rows stay
@@ -344,12 +404,43 @@ def lock_transitions_ref(st, rem, wake_at, slept, spun, ctr, ticket,
     ncs_val, ctr = draw_into(holder_done, ncs_lo, ncs_hi, ctr, is_ncs=1)
     rem = jnp.where(holder_done, ncs_val, rem)
     st = jnp.where(holder_done, P.NCS, st)                 # R9-R10
+    # -- open-loop departure: an open config's completed request leaves
+    # the system instead of drawing a fresh NCS — latency = now2 - req_t
+    # lands in the log-spaced histogram and the SLO/latency counters; the
+    # thread slot frees (DONE) for the end-of-step binding stage.
+    if open_run:
+        depart = holder_done & openc
+        latv = col(now2) - req_t
+        binv = jnp.clip(
+            jnp.floor(jnp.log2(jnp.maximum(latv, jnp.float32(1e-30))
+                               / jnp.float32(P.LAT_BIN0))
+                      * jnp.float32(P.LAT_BINS_PER_OCTAVE)),
+            0, NB - 1).astype(jnp.int32)
+        has_dep = jnp.any(depart, axis=-1)
+        dep_bin = jnp.sum(jnp.where(depart, binv, 0), axis=-1)
+        nbi = jnp.arange(NB, dtype=jnp.int32)[None, :]
+        hist = hist + ((nbi == dep_bin[:, None]) & has_dep[:, None]
+                       ).astype(jnp.int32)
+        lat_sum = lat_sum + jnp.sum(jnp.where(depart, latv, 0.0), axis=-1)
+        departed = departed + has_dep.astype(jnp.int32)
+        slo_viol = slo_viol + jnp.sum(
+            (depart & (latv > col(slo))).astype(jnp.int32), axis=-1)
+        st = jnp.where(depart, P.DONE, st)
+        rem = jnp.where(depart, inf, rem)
+        req_t = jnp.where(depart, jnp.float32(-1.0), req_t)
     # handoff: grant priority is the arrival ticket for FIFO rows, the
-    # thread id otherwise (the DES picks a spinner at random)
+    # thread id otherwise — or, with tie_break="random", a fresh seeded
+    # per-(thread, step) key (the DES picks a spinner at random; tb == 0
+    # keeps the historical id order bit-identically, equal random keys
+    # fall back to it)
     spinners = st == P.SPIN
     can_handoff = rel & (hand_f > 0) & jnp.any(spinners, axis=-1)
+    tb_u = counter_uniform(col(seed) ^ jnp.uint32(P.TB_SALT), tidb, stepuT)
+    rkey = (tb_u * jnp.float32(2 ** 23)).astype(jnp.int32)
     key = jnp.where(spinners,
-                    jnp.where(col(fifo_f) > 0, ticket, tidb), NO_TICKET)
+                    jnp.where(col(fifo_f) > 0, ticket,
+                              jnp.where(col(tb) > 0, rkey, tidb)),
+                    NO_TICKET)
     cand = spinners & (key == jnp.min(key, axis=-1, keepdims=True))
     winB = first_oh(cand) & col(can_handoff)
     cs_valB, ctr = draw_into(winB, cs_lo, cs_hi, ctr)
@@ -407,8 +498,39 @@ def lock_transitions_ref(st, rem, wake_at, slept, spun, ctr, ticket,
         sleeps, st, wake_at, permits, wake_count, slept, rem)
     ticket = jnp.where(st == P.SPIN, ticket, NO_TICKET)    # retire tickets
 
+    if not open_run:
+        return (st, rem, wake_at, slept, spun, ctr, ticket, completed_pt,
+                sws, cnt, ewma, wuc, permits, nticket, completed,
+                wake_count)
+
+    # -- open-loop binding: queued requests claim free thread slots (DONE
+    # under an open config) in queue order, entering NCS with a workload
+    # draw and carrying their admission timestamp; then the occupancy
+    # integral accumulates LAST, so every in-system request (queued or
+    # bound) is counted for exactly the steps between its admission and
+    # its departure.
+    freem = active & (st == P.DONE) & openc
+    rank_f = jnp.cumsum(freem.astype(jnp.int32), axis=-1) - 1
+    n_free = jnp.sum(freem.astype(jnp.int32), axis=-1)
+    n_bind = jnp.minimum(qlen, n_free)
+    bindm = freem & (rank_f < col(n_bind))
+    qpos = (col(qhead) + rank_f) % Q
+    rt = jnp.take_along_axis(qbuf, qpos, axis=1)
+    ncs_b, ctr = draw_into(bindm, ncs_lo, ncs_hi, ctr, is_ncs=1)
+    st = jnp.where(bindm, P.NCS, st)
+    rem = jnp.where(bindm, ncs_b, rem)
+    req_t = jnp.where(bindm, rt, req_t)
+    slept = jnp.where(bindm, 0, slept)
+    spun = jnp.where(bindm, 0, spun)
+    qhead = (qhead + n_bind) % Q
+    qlen = qlen - n_bind
+    busy = jnp.sum((active & (req_t >= 0.0)).astype(jnp.int32), axis=-1)
+    occ_int = occ_int + (qlen + busy).astype(jnp.float32) * dt
+
     return (st, rem, wake_at, slept, spun, ctr, ticket, completed_pt,
-            sws, cnt, ewma, wuc, permits, nticket, completed, wake_count)
+            sws, cnt, ewma, wuc, permits, nticket, completed, wake_count,
+            req_t, qbuf, hist, qhead, qlen, arrived, shed, departed,
+            slo_viol, lat_sum, occ_int)
 
 
 # --------------------------------------------------------------------------
@@ -429,7 +551,7 @@ BLOCK_CONTEXT = ("step0", "limit", "alpha", "cores", "has_budget",
                  "policy", "threads", "dt", "wake", "cs_lo", "cs_hi",
                  "ncs_lo", "ncs_hi", "k", "sws_max", "spin_budget", "seed",
                  "oracle", "workload", "wl_period", "wl_duty", "wl_burst",
-                 "wl_spread")
+                 "wl_spread", "arrival", "arr_rate", "q_cap", "slo", "tb")
 
 
 def lock_sim_block_ref(st, rem, wake_at, slept, spun, ctr, ticket,
@@ -439,7 +561,8 @@ def lock_sim_block_ref(st, rem, wake_at, slept, spun, ctr, ticket,
                        policy, threads, dt, wake, cs_lo, cs_hi,
                        ncs_lo, ncs_hi, k, sws_max, spin_budget, seed,
                        oracle, workload, wl_period, wl_duty, wl_burst,
-                       wl_spread, *, n_sub_steps: int, limit=None):
+                       wl_spread, arrival, arr_rate, q_cap, slo, tb,
+                       *, n_sub_steps: int, limit=None, open_state=None):
     """``n_sub_steps`` fused timesteps for a (C, T) block of configurations.
 
     Each sub-step is exactly one per-step iteration of the legacy rollout
@@ -454,7 +577,9 @@ def lock_sim_block_ref(st, rem, wake_at, slept, spun, ctr, ticket,
     ``step0`` is the global index of the first sub-step (int32 scalar or
     (C,) vector); the remaining context matches
     :data:`TRANSITION_CONTEXT`/``has_budget`` of the advance.  Returns the
-    17 updated state arrays.
+    17 updated state arrays — plus the 11 :data:`OPEN_STATE` arrays,
+    carried through the loop and masked by ``limit`` exactly like the
+    closed state, when ``open_state`` is given (open-loop batches).
 
     ``limit`` (int32 scalar or (C,) vector, optionally traced) caps the
     global step index: sub-steps with ``step0 + s >= limit`` select the
@@ -466,30 +591,38 @@ def lock_sim_block_ref(st, rem, wake_at, slept, spun, ctr, ticket,
     legacy unmasked graph.
     """
 
+    n_open = 0 if open_state is None else len(open_state)
+
     def body(s, carry):
-        state, cpu = carry[:-1], carry[-1]
+        state, cpu = carry[:16], carry[16]
+        ostate = carry[17:]
         st_s, rem_s = state[0], state[1]
         i = step0 + s
         now2 = (i.astype(jnp.float32) + 1.0) * dt
         rem_s, burn = lock_sim_step_ref(st_s, rem_s, alpha, cores, dt,
                                         has_budget)
-        new = lock_transitions_ref(st_s, rem_s, *state[2:], now2, policy,
-                                   threads, dt, wake, cs_lo, cs_hi,
-                                   ncs_lo, ncs_hi, k, sws_max,
+        out = lock_transitions_ref(st_s, rem_s, *state[2:], now2, i,
+                                   policy, threads, dt, wake, cs_lo,
+                                   cs_hi, ncs_lo, ncs_hi, k, sws_max,
                                    spin_budget, seed, oracle, workload,
                                    wl_period, wl_duty, wl_burst,
-                                   wl_spread)
+                                   wl_spread, arrival, arr_rate, q_cap,
+                                   slo, tb,
+                                   open_state=ostate if n_open else None)
+        new, onew = out[:16], out[16:]
         if limit is None:
-            return (*new, cpu + burn)
+            return (*new, cpu + burn, *onew)
         act = i < limit                       # bool scalar or (C,)
         actT = act[..., None] if jnp.ndim(act) else act   # (C, 1) for (C, T)
         state = tuple(jnp.where(actT if n.ndim == 2 else act, n, o)
                       for n, o in zip(new, state))
-        return (*state, cpu + jnp.where(act, burn, 0.0))
+        ostate = tuple(jnp.where(actT if n.ndim == 2 else act, n, o)
+                       for n, o in zip(onew, ostate))
+        return (*state, cpu + jnp.where(act, burn, 0.0), *ostate)
 
     carry = (st, rem, wake_at, slept, spun, ctr, ticket, completed_pt,
              sws, cnt, ewma, wuc, permits, nticket, completed, wake_count,
-             spin_cpu)
+             spin_cpu, *(open_state or ()))
     return jax.lax.fori_loop(0, n_sub_steps, body, carry)
 
 

@@ -22,9 +22,10 @@ from __future__ import annotations
 
 from collections import deque
 from dataclasses import dataclass, field
+from dataclasses import replace as dataclass_replace
 
 from repro.core.oracle import EvalSWS, FixedOracle, Oracle
-from repro.core.policy import SimConfig
+from repro.core.policy import QUEUE_MAX, SimConfig
 from repro.core.window import SpinningWindow
 
 from .engine import Request
@@ -39,6 +40,8 @@ class SchedStats:
     standby_residency: float = 0.0    # sum over steps of standby pool size
     queue_wait_steps: float = 0.0     # sum over steps of queue length
     slot_idle_steps: float = 0.0      # occupied-capacity shortfall
+    submitted: int = 0                # offered requests (admitted + shed)
+    shed: int = 0                     # rejected at the full queue
     window_trace: list = field(default_factory=list)
 
     def summary(self) -> dict:
@@ -51,6 +54,9 @@ class SchedStats:
             "avg_standby": self.standby_residency / s,
             "avg_queue": self.queue_wait_steps / s,
             "avg_slot_idle": self.slot_idle_steps / s,
+            "submitted": self.submitted,
+            "shed": self.shed,
+            "shed_rate": self.shed / max(1, self.submitted),
         }
 
 
@@ -65,8 +71,12 @@ class ContinuousBatcher:
 
     def __init__(self, engine, max_standby: int | None = None,
                  initial: int = 1, oracle: Oracle | None = None,
-                 k: int = 10, min_standby: int | None = None):
+                 k: int = 10, min_standby: int | None = None,
+                 queue_cap: int | None = None):
         self.engine = engine
+        #: open-loop admission bound: submissions past a full queue are
+        #: shed (None = unbounded, the closed-loop legacy behaviour)
+        self.queue_cap = queue_cap
         max_standby = max_standby or max(1, engine.max_slots)
         if min_standby is None:
             # static-zero ablation: a FixedOracle with initial=0 means
@@ -107,8 +117,20 @@ class ContinuousBatcher:
                          "options: mutable|sleep|zero|spin|max")
 
     # -- client API ---------------------------------------------------------
-    def submit(self, req: Request) -> None:
+    def submit(self, req: Request) -> bool:
+        """Admit ``req`` (True) or shed it at a full queue (False).
+
+        Admission reads the queue depth against ``queue_cap`` — the
+        scheduler twin of the engine's bounded request ring: under an
+        open-loop arrival process, offered load past saturation is shed
+        here instead of growing the queue without bound."""
+        self.stats.submitted += 1
+        if (self.queue_cap is not None
+                and len(self.queue) + len(self.standby) >= self.queue_cap):
+            self.stats.shed += 1
+            return False
         self.queue.append(req)
+        return True
 
     def pending(self) -> int:
         return len(self.queue) + len(self.standby)
@@ -224,6 +246,16 @@ class SchedScenario:
     ``wl_burst`` x outside its ON window — traffic arrives in waves),
     ``hetero`` models mixed decode lengths (chat next to long-form
     generation), ``jitter`` models Poisson request arrivals.
+
+    ``arrival`` turns the scenario OPEN-LOOP on the same schema
+    (:data:`repro.core.policy.ARRIVAL_ROWS`): instead of ``requests``
+    circulating forever, logical requests arrive at ``arrival_rate_rps``
+    (the ``bursty`` row gates the rate through the ``wl_period_s`` /
+    ``wl_duty`` burst phase), queue up to ``queue_cap`` deep (admission
+    reads queue depth; offered load past saturation is shed), bind to one
+    of the ``requests`` workers, and depart with a recorded sojourn —
+    per-request p50/p95/p99 and the fraction violating ``slo_s`` come
+    from the engine's on-device latency histograms.
     """
 
     slots: int
@@ -237,6 +269,22 @@ class SchedScenario:
     wl_duty: float = 0.25
     wl_burst: float = 8.0
     wl_spread: float = 4.0
+    arrival: str = "closed"       # open-loop arrival row (ARRIVAL_ROWS)
+    arrival_rate_rps: float = 0.0
+    queue_cap: int = QUEUE_MAX
+    slo_s: float = 0.5            # per-request sojourn SLO (seconds)
+
+    @property
+    def capacity_rps(self) -> float:
+        """Closed-form service-capacity estimate (requests/s): the slot
+        pool serializes at one handoff per mean decode hold, and below
+        that each effective worker turns over a request per mean
+        decode+think round."""
+        mean_decode = 0.5 * self.decode_s
+        mean_round = 0.5 * (self.decode_s + self.think_s)
+        eff = min(self.requests, self.slots)
+        return min(1.0 / max(mean_decode, 1e-12),
+                   eff / max(mean_round, 1e-12))
 
     def to_sim_config(self, policy: str) -> SimConfig:
         """Encode this scenario under an admission policy as a SimConfig
@@ -251,24 +299,33 @@ class SchedScenario:
                          wake_latency=self.prefill_s, alpha=0.0,
                          seed=self.seed, workload=self.workload,
                          wl_period=period, wl_duty=self.wl_duty,
-                         wl_burst=self.wl_burst, wl_spread=self.wl_spread)
+                         wl_burst=self.wl_burst, wl_spread=self.wl_spread,
+                         arrival=self.arrival,
+                         arrival_rate=self.arrival_rate_rps,
+                         queue_cap=self.queue_cap, slo=self.slo_s)
 
 
 def sample_sched_scenarios(n_scenarios: int, seed: int = 0,
                            slots=(4, 8, 16),
-                           workload: str = "constant"
+                           workload: str = "constant",
+                           arrival: str = "closed"
                            ) -> list[SchedScenario]:
     """Random serving workloads: under- to over-subscribed slot pools,
     decode/think/prefill times log-uniform across serving-realistic
     scales.  Stable draw order (the sweep-seed contract of
     :func:`repro.configs.catalog.sample_scenarios`): the base stream is
-    untouched by ``workload``, so e.g. the bursty-admission sweep sees the
-    SAME machines scenario-by-scenario as the constant one — the workload
-    knobs come from a separate salted stream."""
+    untouched by ``workload`` and ``arrival``, so e.g. the bursty-
+    admission sweep sees the SAME machines scenario-by-scenario as the
+    constant one — the workload and arrival knobs come from separate
+    salted streams.  ``arrival != "closed"`` makes the scenarios
+    open-loop, with the offered load drawn from under-load to past
+    saturation (0.3-1.2 x :attr:`SchedScenario.capacity_rps`) and the SLO
+    at 8 mean decode+think rounds."""
     import numpy as np
 
     rng = np.random.default_rng(seed)
     wl_rng = np.random.default_rng(seed ^ 0x9E3779B9)
+    ar_rng = np.random.default_rng(seed ^ 0x3C6EF372)
     out = []
     for i in range(n_scenarios):
         s = int(rng.choice(slots))
@@ -278,13 +335,20 @@ def sample_sched_scenarios(n_scenarios: int, seed: int = 0,
                       wl_burst=float(wl_rng.uniform(4.0, 16.0)))
         elif workload == "hetero":
             kw = dict(wl_spread=float(wl_rng.uniform(2.0, 8.0)))
-        out.append(SchedScenario(
+        sc = SchedScenario(
             slots=s,
             requests=int(rng.integers(s, 4 * s + 1)),
             decode_s=float(np.exp(rng.uniform(np.log(5e-3), np.log(2e-1)))),
             think_s=float(np.exp(rng.uniform(np.log(1e-2), np.log(5e-1)))),
             prefill_s=float(np.exp(rng.uniform(np.log(2e-3), np.log(5e-2)))),
-            seed=i, workload=workload, **kw))
+            seed=i, workload=workload, **kw)
+        if arrival != "closed":
+            rho = float(ar_rng.uniform(0.3, 1.2))
+            sc = dataclass_replace(
+                sc, arrival=arrival,
+                arrival_rate_rps=rho * sc.capacity_rps,
+                slo_s=4.0 * (sc.decode_s + sc.think_s))
+        out.append(sc)
     return out
 
 
@@ -299,6 +363,9 @@ def xdes_policy_sweep(scenarios, policies=("zero", "max", "mutable"), *,
     ``handoffs_per_s`` (throughput), ``cold_promotions_per_handoff``
     (wake-ups per CS — the late-handoff analogue) and
     ``standby_s_per_handoff`` (spin CPU per CS — hot-pool residency).
+    Open-loop scenarios (``SchedScenario.arrival != "closed"``) add
+    per-request tail latency (``p50/p95/p99_s`` from the on-device
+    histograms), ``slo_violation_frac`` and ``shed_frac``.
     """
     import numpy as np
 
@@ -313,9 +380,11 @@ def xdes_policy_sweep(scenarios, policies=("zero", "max", "mutable"), *,
     wake = (res.wake_count / np.maximum(res.completed, 1)).reshape(S, Pn)
     standby = res.sync_cpu_per_cs.reshape(S, Pn)
     best = np.maximum(thr.max(axis=1), 1e-30)
+    open_loop = any(c.open_loop for c in configs)
 
     out = {"meta": {"n_scenarios": S, "n_configs": len(configs),
-                    "n_steps": res.n_steps, "backend": res.backend},
+                    "n_steps": res.n_steps, "backend": res.backend,
+                    "open_loop": open_loop},
            "policies": {}}
     for j, p in enumerate(policies):
         out["policies"][p] = {
@@ -324,10 +393,26 @@ def xdes_policy_sweep(scenarios, policies=("zero", "max", "mutable"), *,
             "cold_promotions_per_handoff": float(wake[:, j].mean()),
             "standby_s_per_handoff": float(standby[:, j].mean()),
         }
+        if open_loop:
+            sl = (slice(None), j)
+            shed_frac = (res.shed.reshape(S, Pn)[sl]
+                         / np.maximum(res.arrived.reshape(S, Pn)[sl], 1))
+            out["policies"][p].update(
+                p50_s=float(np.nanmean(res.p50.reshape(S, Pn)[sl])),
+                p95_s=float(np.nanmean(res.p95.reshape(S, Pn)[sl])),
+                p99_s=float(np.nanmean(res.p99.reshape(S, Pn)[sl])),
+                slo_violation_frac=float(
+                    np.nanmean(res.slo_frac.reshape(S, Pn)[sl])),
+                shed_frac=float(shed_frac.mean()))
         if verbose:
             r = out["policies"][p]
-            print(f"{p:>8} handoffs/s {r['handoffs_per_s']:9.1f} "
-                  f"ratio {r['mean_ratio_to_best']:5.3f} "
-                  f"cold/handoff {r['cold_promotions_per_handoff']:5.3f} "
-                  f"standby s/handoff {r['standby_s_per_handoff']:.4f}")
+            line = (f"{p:>8} handoffs/s {r['handoffs_per_s']:9.1f} "
+                    f"ratio {r['mean_ratio_to_best']:5.3f} "
+                    f"cold/handoff {r['cold_promotions_per_handoff']:5.3f} "
+                    f"standby s/handoff {r['standby_s_per_handoff']:.4f}")
+            if open_loop:
+                line += (f" p95 {r['p95_s']:.4f}s "
+                         f"slo-viol {r['slo_violation_frac']:.3f} "
+                         f"shed {r['shed_frac']:.3f}")
+            print(line)
     return out

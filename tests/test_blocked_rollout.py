@@ -104,6 +104,11 @@ def test_block_ref_matches_per_step_composition():
         rng.uniform(0.1, 0.9, C).astype(np.float32),            # wl_duty
         rng.uniform(1.0, 16.0, C).astype(np.float32),           # wl_burst
         rng.uniform(1.0, 8.0, C).astype(np.float32),            # wl_spread
+        np.zeros(C, np.int32),                                  # arrival
+        np.zeros(C, np.float32),                                # arr_rate
+        np.full(C, 128, np.int32),                              # q_cap
+        np.full(C, 1e-3, np.float32),                           # slo
+        rng.integers(0, 2, C).astype(np.int32),                 # tb
     )
     dt = ctx[2]
     B, step0 = 5, 11
@@ -117,7 +122,7 @@ def test_block_ref_matches_per_step_composition():
         rem, burn = lock_sim_step_ref(want[0], want[1], alpha, cores, dt,
                                       has_budget)
         want = list(lock_transitions_ref(want[0], rem, *want[2:], now2,
-                                         *ctx))
+                                         jnp.int32(step0 + s), *ctx))
         cpu = cpu + burn
     for name, a, b in zip(("st rem wake_at slept spun ctr ticket cpt sws "
                            "cnt ewma wuc permits nticket completed "

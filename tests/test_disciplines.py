@@ -125,6 +125,12 @@ def _one_step_state(policy_id, tickets, T=4):
         wl_duty=jnp.full((C,), 0.25, jnp.float32),
         wl_burst=jnp.full((C,), 8.0, jnp.float32),
         wl_spread=jnp.full((C,), 4.0, jnp.float32),
+        stepi=jnp.zeros((C,), jnp.int32),
+        arrival=jnp.zeros((C,), jnp.int32),
+        arr_rate=jnp.zeros((C,), jnp.float32),
+        q_cap=jnp.full((C,), 128, jnp.int32),
+        slo=jnp.full((C,), 1e-3, jnp.float32),
+        tb=jnp.zeros((C,), jnp.int32),
     )
     return args
 
@@ -226,6 +232,7 @@ def test_transitions_kernel_matches_ref_on_random_state():
         rng.integers(0, 100, C).astype(np.int32),               # completed
         rng.integers(0, 100, C).astype(np.int32),               # wake_count
         rng.uniform(1e-6, 1e-4, C).astype(np.float32),          # now2
+        rng.integers(0, 5000, C).astype(np.int32),              # stepi
         rng.integers(0, 7, C).astype(np.int32),                 # policy
         rng.integers(1, T + 1, C).astype(np.int32),             # threads
         rng.uniform(1e-8, 1e-6, C).astype(np.float32),          # dt
@@ -244,6 +251,11 @@ def test_transitions_kernel_matches_ref_on_random_state():
         rng.uniform(0.1, 0.9, C).astype(np.float32),            # wl_duty
         rng.uniform(1.0, 16.0, C).astype(np.float32),           # wl_burst
         rng.uniform(1.0, 8.0, C).astype(np.float32),            # wl_spread
+        np.zeros(C, np.int32),                                  # arrival
+        np.zeros(C, np.float32),                                # arr_rate
+        np.full(C, 128, np.int32),                              # q_cap
+        np.full(C, 1e-3, np.float32),                           # slo
+        rng.integers(0, 2, C).astype(np.int32),                 # tb
     )
     ref = lock_transitions_ref(*args)
     pal = lock_transitions_step(*args, block_configs=16)

@@ -1,0 +1,64 @@
+"""Property-based open-loop invariants (hypothesis): for ANY arrival
+row, lock discipline, offered rate, queue bound and seed —
+
+  * Little's law, sharp form: 0 <= occ_int - lat_sum <= in_flight * t_end
+    (requests are counted in the occupancy integral for exactly their
+    sojourn-so-far, up to float32 accumulation),
+  * conservation: arrived == shed + departed + in_flight, exactly,
+  * queue bound: in-flight occupancy never exceeds queue_cap + threads,
+  * histogram totals: the latency histogram holds every departure.
+
+The deterministic fixed-example twins of these checks live in
+tests/test_open_loop.py (``check_open_invariants`` is shared)."""
+
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="dev-only dependency (requirements-dev.txt)")
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import xdes
+
+# tests/ is not a package: pytest's rootdir import mode puts this
+# directory on sys.path, so the shared helpers import flat.
+from test_open_loop import OPEN_ROWS, check_open_invariants, open_cfg
+
+LOCKS = ["tas", "ttas", "mcs", "sleep", "adaptive", "mutable", "fifo"]
+
+
+@settings(max_examples=20, deadline=None)
+@given(arrival=st.sampled_from(OPEN_ROWS),
+       lock=st.sampled_from(LOCKS),
+       rate=st.floats(min_value=1e4, max_value=2e6),
+       threads=st.integers(min_value=1, max_value=10),
+       cores=st.integers(min_value=1, max_value=10),
+       queue_cap=st.integers(min_value=1, max_value=128),
+       duty=st.floats(min_value=0.05, max_value=0.95),
+       burst=st.floats(min_value=1.0, max_value=16.0),
+       seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_open_loop_invariants_hold(arrival, lock, rate, threads, cores,
+                                   queue_cap, duty, burst, seed):
+    cfg = open_cfg(lock, arrival=arrival, rate=rate, seed=seed,
+                   threads=threads, cores=cores, queue_cap=queue_cap,
+                   wl_duty=duty, wl_burst=burst)
+    res = xdes.simulate_batch([cfg], n_steps=1024, dt=5e-8)
+    check_open_invariants(res, 0, cfg)
+
+
+@settings(max_examples=10, deadline=None)
+@given(rate=st.floats(min_value=5e4, max_value=5e5),
+       seed=st.integers(min_value=0, max_value=1000))
+def test_littles_law_band_poisson(rate, seed):
+    """L = lambda * W as a band under stable-ish Poisson traffic: the
+    time-averaged occupancy brackets the departure-weighted sojourn (the
+    gap is exactly the still-in-flight boundary term)."""
+    cfg = open_cfg("mutable", rate=rate, seed=seed, threads=6, cores=6)
+    res = xdes.simulate_batch([cfg], n_steps=8192, dt=5e-8)
+    if int(res.departed[0]) < 20:
+        return                      # too few departures to average
+    L = float(res.occ_int[0]) / float(res.t_end[0])
+    lam_w = float(res.lat_sum[0]) / float(res.t_end[0])
+    fly = float(res.in_flight[0])
+    assert lam_w <= L * (1 + 1e-3) + 1e-9
+    assert L <= lam_w * (1 + 1e-3) + fly + 1e-6

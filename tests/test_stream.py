@@ -234,7 +234,9 @@ def test_sweep_stream_rejects_misaligned_chunk():
 def test_encode_columns_matches_legacy_per_family():
     """Every catalog row family: the column twin packs bit-equal engine
     arrays to the per-config lambda table."""
-    from repro.configs.catalog import (lock_discipline_columns,
+    from repro.configs.catalog import (lock_arrival_columns,
+                                       lock_arrival_sweep,
+                                       lock_discipline_columns,
                                        lock_discipline_sweep,
                                        lock_oracle_columns,
                                        lock_oracle_sweep,
@@ -253,6 +255,8 @@ def test_encode_columns_matches_legacy_per_family():
          lock_discipline_columns(n_scenarios=7)),
         ("workload", lock_workload_sweep(n_scenarios=5),
          lock_workload_columns(n_scenarios=5)),
+        ("arrival", lock_arrival_sweep(n_scenarios=3),
+         lock_arrival_columns(n_scenarios=3)),
     ]
     for name, cfgs, cols in pairs:
         legacy = encode_configs_legacy(cfgs)
