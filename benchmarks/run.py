@@ -13,6 +13,7 @@
 | discipline | discipline x oracle map| benchmarks.discipline_diagram (sharded xdes) |
 | workload   | workload x lock map    | benchmarks.workload_diagram (sharded xdes) |
 | arrival    | open-loop traffic map  | benchmarks.arrival_diagram (sharded xdes) |
+| fault      | fault x lock map       | benchmarks.fault_diagram (sharded xdes) |
 | perf       | engine perf trajectory | benchmarks.perf_bench   |
 | fidelity   | dt-convergence study   | benchmarks.fidelity_study (xdes vs DES; not in --quick/--full, run on demand) |
 
@@ -21,9 +22,9 @@ phase-diagram CSV/markdown, and the measured perf trajectory —
 ``BENCH_xdes.json`` at the repo root is the committed perf BASELINE,
 refreshed only by an explicit ``perf_bench --out BENCH_xdes.json``); a
 summary CSV is printed at the end.  ``--quick`` runs the batched xdes sweep, the oracle-family grid,
-the discipline/workload/arrival diagrams and the perf microbenchmark at
-smoke scale (~2-3 min) — the fast signal that the simulation stack works
-end to end and hasn't slowed down.
+the discipline/workload/arrival/fault diagrams and the perf
+microbenchmark at smoke scale (~2-3 min) — the fast signal that the
+simulation stack works end to end and hasn't slowed down.
 """
 
 from __future__ import annotations
@@ -89,6 +90,14 @@ def main(argv=None) -> None:
                 (f"arrival.{cell['arrival']}.rho{cell['rho']}.winner",
                  cell["winner"]))
         print("\n" + "=" * 72)
+        print("[quick] fault x discipline diagram smoke (sharded xdes)")
+        print("=" * 72)
+        from benchmarks import fault_diagram
+        fd = fault_diagram.main(["--quick"])
+        for fl, rows in fd["faults"].items():
+            top = max(rows, key=lambda d: rows[d]["wins"])
+            summary.append((f"fault.{fl}.top", top))
+        print("\n" + "=" * 72)
         print("[quick] xdes perf microbenchmark")
         print("=" * 72)
         from benchmarks import perf_bench
@@ -108,7 +117,7 @@ def main(argv=None) -> None:
         return
 
     print("=" * 72)
-    print("[1/10] lockbench fig1 (paper Fig. 1 timelines)")
+    print("[1/11] lockbench fig1 (paper Fig. 1 timelines)")
     print("=" * 72)
     from benchmarks import lockbench
     f1 = lockbench.fig1()
@@ -120,7 +129,7 @@ def main(argv=None) -> None:
                     f1["mutable"]["makespan_slots"]))
 
     print("\n" + "=" * 72)
-    print("[2/10] lockbench fig3 (paper Fig. 3 grid, batched xdes engine)")
+    print("[2/11] lockbench fig3 (paper Fig. 3 grid, batched xdes engine)")
     print("=" * 72)
     f3 = lockbench.fig3(target_cs=400 if args.full else 200)
     for regime, data in f3.items():
@@ -131,7 +140,7 @@ def main(argv=None) -> None:
         json.dump({"fig1": f1, "fig3": f3}, f, indent=1)
 
     print("\n" + "=" * 72)
-    print("[3/10] batched xdes sweep (fig3 grid + 1000-config scenarios)")
+    print("[3/11] batched xdes sweep (fig3 grid + 1000-config scenarios)")
     print("=" * 72)
     from benchmarks import sweep
     sw = sweep.main(["--target-cs", "250" if args.full else "150"])
@@ -141,7 +150,7 @@ def main(argv=None) -> None:
         summary.append((f"sweep.scenario.{lock}.mean_ratio", round(r, 3)))
 
     print("\n" + "=" * 72)
-    print("[4/10] PHOLD on share-everything PDES (paper Fig. 4)")
+    print("[4/11] PHOLD on share-everything PDES (paper Fig. 4)")
     print("=" * 72)
     from benchmarks import phold
     ph = phold.run_phold(n_events=3000 if args.full else 1500)
@@ -153,7 +162,7 @@ def main(argv=None) -> None:
                             locks["mutable"]["speedup"]))
 
     print("\n" + "=" * 72)
-    print("[5/10] serving-window scheduler (the technique on TPU batches)")
+    print("[5/11] serving-window scheduler (the technique on TPU batches)")
     print("=" * 72)
     from benchmarks import sched_bench
     sb = sched_bench.main(["--requests", "400" if args.full else "250"])
@@ -164,7 +173,7 @@ def main(argv=None) -> None:
                         round(agg["avg_standby"], 2)))
 
     print("\n" + "=" * 72)
-    print("[6/10] oracle-family grid (paper §5 future work, batched xdes)")
+    print("[6/11] oracle-family grid (paper §5 future work, batched xdes)")
     print("=" * 72)
     from benchmarks import oracle_ablation
     oa = oracle_ablation.main(
@@ -176,7 +185,7 @@ def main(argv=None) -> None:
                         round(row["best_tuned_mean_ratio"], 3)))
 
     print("\n" + "=" * 72)
-    print("[7/10] discipline x oracle diagram (sharded batched xdes)")
+    print("[7/11] discipline x oracle diagram (sharded batched xdes)")
     print("=" * 72)
     from benchmarks import discipline_diagram
     dd = discipline_diagram.main(
@@ -187,7 +196,7 @@ def main(argv=None) -> None:
                         round(row["best_variant_mean_ratio"], 3)))
 
     print("\n" + "=" * 72)
-    print("[8/10] workload x discipline diagram (sharded batched xdes)")
+    print("[8/11] workload x discipline diagram (sharded batched xdes)")
     print("=" * 72)
     from benchmarks import workload_diagram
     wd = workload_diagram.main(
@@ -200,7 +209,7 @@ def main(argv=None) -> None:
                               3)))
 
     print("\n" + "=" * 72)
-    print("[9/10] arrival x discipline diagram (open-loop sharded xdes)")
+    print("[9/11] arrival x discipline diagram (open-loop sharded xdes)")
     print("=" * 72)
     from benchmarks import arrival_diagram
     ad = arrival_diagram.main(
@@ -214,7 +223,20 @@ def main(argv=None) -> None:
              round(cell["mean_slo_frac"], 3)))
 
     print("\n" + "=" * 72)
-    print("[10/10] xdes perf microbenchmark (reports/bench_xdes.json)")
+    print("[10/11] fault x discipline diagram (sharded batched xdes)")
+    print("=" * 72)
+    from benchmarks import fault_diagram
+    fd = fault_diagram.main(
+        [] if args.full else ["--scenarios", "50", "--target-cs", "100"])
+    for fl, rows in fd["faults"].items():
+        top = max(rows, key=lambda d: rows[d]["wins"])
+        summary.append((f"fault.{fl}.top", top))
+        ret = rows["sleep"]["mean_retained_vs_none"]
+        summary.append((f"fault.{fl}.sleep.retained",
+                        None if ret is None else round(ret, 3)))
+
+    print("\n" + "=" * 72)
+    print("[11/11] xdes perf microbenchmark (reports/bench_xdes.json)")
     print("=" * 72)
     from benchmarks import perf_bench
     pb = perf_bench.main(["--full-size"] if args.full else [])

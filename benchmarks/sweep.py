@@ -26,6 +26,15 @@ Two artifacts:
   variant x scenarios, one call with per-request tail latency from the
   on-device histograms), consumed by ``benchmarks/arrival_diagram.py``
   (see docs/open_loop.md).
+* ``fault_grid`` — the fault x discipline x oracle diagram (every
+  FAULT_ROW x every discipline variant x scenarios, one call), the
+  "which lock survives which failure mode" map consumed by
+  ``benchmarks/fault_diagram.py`` (see docs/robustness.md).
+
+Every one-shot batched call is gated by ``BatchResult.validate()``: a
+non-finite engine output (poisoned cell) raises at the CLI with the
+offending config named instead of propagating NaN into the diagrams
+(the streaming path quarantines instead — see repro.core.stream).
 
 Every batched call auto-shards its config axis over all visible devices
 (``repro.core.xdes.simulate_batch(shard=...)``, ``shard_map`` through the
@@ -56,17 +65,18 @@ import numpy as np
 
 from repro.configs.catalog import (LOCK_ARRIVAL_RHOS, LOCK_ARRIVALS,
                                    LOCK_CORES, LOCK_DISCIPLINE_SET,
-                                   LOCK_DISCIPLINES, LOCK_ORACLE_KS,
-                                   LOCK_ORACLE_SWS_MAX, LOCK_ORACLES,
-                                   LOCK_REGIMES, LOCK_SHORT, LOCK_THREADS,
-                                   LOCK_WAKE, LOCK_WORKLOADS,
+                                   LOCK_DISCIPLINES, LOCK_FAULTS,
+                                   LOCK_ORACLE_KS, LOCK_ORACLE_SWS_MAX,
+                                   LOCK_ORACLES, LOCK_REGIMES, LOCK_SHORT,
+                                   LOCK_THREADS, LOCK_WAKE, LOCK_WORKLOADS,
                                    _product_columns, lock_arrival_columns,
                                    lock_arrival_sweep, lock_arrival_variants,
                                    lock_discipline_columns,
                                    lock_discipline_sweep,
-                                   lock_discipline_variants, lock_fig3_grid,
-                                   lock_oracle_columns, lock_oracle_sweep,
-                                   lock_oracle_variants,
+                                   lock_discipline_variants,
+                                   lock_fault_columns, lock_fault_sweep,
+                                   lock_fig3_grid, lock_oracle_columns,
+                                   lock_oracle_sweep, lock_oracle_variants,
                                    lock_scenario_columns,
                                    lock_scenario_sweep,
                                    lock_workload_columns, lock_workload_sweep,
@@ -80,6 +90,12 @@ from repro.core import xdes
 #: keep memory flat (see repro.core.stream).
 STREAM_AUTO = 50_000
 
+#: Structured quarantine report for streamed grids: configs whose engine
+#: summaries came back non-finite are recorded here (and excluded from
+#: the win-count reduction) instead of poisoning a phase diagram —
+#: docs/robustness.md.  Only written when a sweep quarantined something.
+FAILURES_PATH = os.path.join("reports", "sweep_failures.json")
+
 
 # --------------------------------------------------------------------------
 # Fig. 3 grid, batched
@@ -88,7 +104,8 @@ def fig3_batched(target_cs: int = 250, seeds=(0, 1), backend: str = "ref",
                  verbose: bool = True) -> dict:
     configs = lock_fig3_grid(seeds=seeds)
     t0 = time.time()
-    res = xdes.simulate_batch(configs, target_cs=target_cs, backend=backend)
+    res = xdes.simulate_batch(configs, target_cs=target_cs,
+                              backend=backend).validate("fig3")
     wall = time.time() - t0
 
     thr = res.throughput.reshape(len(LOCK_REGIMES), len(LOCK_DISCIPLINES),
@@ -185,14 +202,15 @@ def scenario(n_scenarios: int = 200, target_cs: int = 150,
         res = xstream.sweep_stream(cols, target_cs=target_cs,
                                    backend=backend, bucket_steps=bucket,
                                    reduce=red, mem_mb=mem_mb,
-                                   early_exit=early_exit)
+                                   early_exit=early_exit,
+                                   failures_path=FAILURES_PATH)
         win_counts = res.wins[0]
     else:
         configs = lock_scenario_sweep(n_scenarios=n_scenarios, seed=seed,
                                       locks=locks)
         res = xdes.simulate_batch(configs, target_cs=target_cs,
                                   backend=backend, bucket_steps=bucket,
-                                  early_exit=early_exit)
+                                  early_exit=early_exit).validate("scenario")
     wall = time.time() - t0
 
     thr = res.throughput.reshape(n_scenarios, len(locks))
@@ -309,15 +327,16 @@ def oracle_grid(n_scenarios: int = 200, target_cs: int = 150,
                                    sws_maxes=sws_maxes)
         res = xstream.sweep_stream(
             cols, target_cs=target_cs, backend=backend, mem_mb=mem_mb,
-            early_exit=early_exit,
+            early_exit=early_exit, failures_path=FAILURES_PATH,
             reduce=xstream.CellReduce(V, cell_ids, len(uniq)))
         wins_cells = res.wins
     else:
         configs = lock_oracle_sweep(n_scenarios=n_scenarios, seed=seed,
                                     oracles=oracles, ks=ks,
                                     sws_maxes=sws_maxes)
-        res = xdes.simulate_batch(configs, target_cs=target_cs,
-                                  backend=backend, early_exit=early_exit)
+        res = xdes.simulate_batch(
+            configs, target_cs=target_cs, backend=backend,
+            early_exit=early_exit).validate("oracle_grid")
         wins_cells = _host_wins(res.throughput, len(uniq), cell_ids, V)
     wall = time.time() - t0
 
@@ -431,15 +450,16 @@ def discipline_grid(n_scenarios: int = 200, target_cs: int = 150,
         res = xstream.sweep_stream(
             cols, target_cs=target_cs, backend=backend, shard=shard,
             mem_mb=mem_mb, early_exit=early_exit,
+            failures_path=FAILURES_PATH,
             reduce=xstream.CellReduce(V, cell_ids, len(uniq)))
         wins_cells = res.wins
     else:
         configs = lock_discipline_sweep(n_scenarios=n_scenarios, seed=seed,
                                         disciplines=disciplines,
                                         oracles=oracles)
-        res = xdes.simulate_batch(configs, target_cs=target_cs,
-                                  backend=backend, shard=shard,
-                                  early_exit=early_exit)
+        res = xdes.simulate_batch(
+            configs, target_cs=target_cs, backend=backend, shard=shard,
+            early_exit=early_exit).validate("discipline_grid")
         wins_cells = _host_wins(res.throughput, len(uniq), cell_ids, V)
     wall = time.time() - t0
 
@@ -566,6 +586,7 @@ def workload_grid(n_scenarios: int = 100, target_cs: int = 150,
         res = xstream.sweep_stream(
             cols, target_cs=target_cs, backend=backend, shard=shard,
             mem_mb=mem_mb, early_exit=early_exit,
+            failures_path=FAILURES_PATH,
             reduce=xstream.CellReduce(V, cell_ids, len(uniq)))
         wins_cells = res.wins
     else:
@@ -573,9 +594,9 @@ def workload_grid(n_scenarios: int = 100, target_cs: int = 150,
                                       workloads=workloads,
                                       disciplines=disciplines,
                                       oracles=oracles)
-        res = xdes.simulate_batch(configs, target_cs=target_cs,
-                                  backend=backend, shard=shard,
-                                  early_exit=early_exit)
+        res = xdes.simulate_batch(
+            configs, target_cs=target_cs, backend=backend, shard=shard,
+            early_exit=early_exit).validate("workload_grid")
         wins_cells = _host_wins(res.throughput, len(uniq), cell_ids, V)
     wall = time.time() - t0
 
@@ -722,6 +743,7 @@ def arrival_grid(n_scenarios: int = 50, target_cs: int = 150,
         res = xstream.sweep_stream(
             cols, target_cs=target_cs, backend=backend, shard=shard,
             mem_mb=mem_mb, early_exit=early_exit,
+            failures_path=FAILURES_PATH,
             reduce=xstream.CellReduce(V, cell_ids, len(uniq)))
         wins_cells = res.wins
     else:
@@ -729,9 +751,9 @@ def arrival_grid(n_scenarios: int = 50, target_cs: int = 150,
                                      arrivals=arrivals, rhos=rhos,
                                      disciplines=disciplines,
                                      oracles=oracles)
-        res = xdes.simulate_batch(configs, target_cs=target_cs,
-                                  backend=backend, shard=shard,
-                                  early_exit=early_exit)
+        res = xdes.simulate_batch(
+            configs, target_cs=target_cs, backend=backend, shard=shard,
+            early_exit=early_exit).validate("arrival_grid")
         wins_cells = _host_wins(res.throughput, len(uniq), cell_ids, V)
     wall = time.time() - t0
 
@@ -833,6 +855,178 @@ def arrival_grid(n_scenarios: int = 50, target_cs: int = 150,
 
 
 # --------------------------------------------------------------------------
+# Fault x discipline x oracle diagram grid
+# --------------------------------------------------------------------------
+def fault_grid(n_scenarios: int = 100, target_cs: int = 150,
+               backend: str = "ref", seed: int = 0,
+               faults=LOCK_FAULTS,
+               disciplines=LOCK_DISCIPLINE_SET, oracles=LOCK_ORACLES,
+               shard: bool | None = None, stream: bool | None = None,
+               mem_mb: float | None = None,
+               early_exit: bool | None = None,
+               verbose: bool = True) -> dict:
+    """The full ``fault x (discipline, oracle) x scenario`` product —
+    every row of ``FAULT_ROWS`` (benign baseline, lock-holder preemption,
+    CPU oversubscription, lost wake-ups, timer jitter — see
+    docs/robustness.md) crossed with every discipline-diagram variant —
+    as ONE (sharded) jit-compiled :func:`repro.core.xdes.simulate_batch`
+    call, summarized three ways:
+
+    * per (fault, variant) — wins, mean/p10 throughput ratio to the
+      per-(scenario, fault) best variant, spin CPU per CS, and the mean
+      throughput retained vs the same variant on the ``none`` row (the
+      degradation axis the benign diagrams cannot show);
+    * per fault — which discipline wins how often under that failure
+      mode, each discipline's best-variant ratio and retention;
+    * phase diagram — which (discipline, oracle) wins in each
+      (fault x CS-length x subscription) bucket: the "which lock
+      survives which failure mode" artifact rendered by
+      ``benchmarks/fault_diagram.py``.
+
+    The per-scenario best is taken *within* a fault row, so a variant is
+    judged against the other locks under the same interference — never
+    against the benign machine's throughput.  Scenarios follow the
+    :func:`sample_scenarios` seed contract, so the ``none`` row IS the
+    discipline diagram's machine scenario-by-scenario.  With
+    ``stream=True`` (auto at >= :data:`STREAM_AUTO` configs) the sweep
+    runs chunk-by-chunk via :func:`repro.core.stream.sweep_stream`; each
+    ``(scenario, fault)`` slice of ``V`` variants is one reduction
+    group, so the on-device argmax is the same within-fault contest.
+    """
+    disc_variants = lock_discipline_variants(disciplines, oracles)
+    F, V = len(faults), len(disc_variants)
+    C = n_scenarios * F * V
+    if stream is None:
+        stream = C >= STREAM_AUTO
+    feats = _scenario_feats(sample_scenario_columns(n_scenarios, seed))
+    # One phase key per (scenario, fault) group of V variants.
+    uniq, cell_ids = _phase_cells(
+        [(fl, ft["cs"], ft["sub"]) for ft in feats for fl in faults])
+    t0 = time.time()
+    if stream:
+        cols = lock_fault_columns(n_scenarios=n_scenarios, seed=seed,
+                                  faults=faults, disciplines=disciplines,
+                                  oracles=oracles)
+        res = xstream.sweep_stream(
+            cols, target_cs=target_cs, backend=backend, shard=shard,
+            mem_mb=mem_mb, early_exit=early_exit,
+            failures_path=FAILURES_PATH,
+            reduce=xstream.CellReduce(V, cell_ids, len(uniq)))
+        wins_cells = res.wins
+    else:
+        configs = lock_fault_sweep(n_scenarios=n_scenarios, seed=seed,
+                                   faults=faults, disciplines=disciplines,
+                                   oracles=oracles)
+        res = xdes.simulate_batch(
+            configs, target_cs=target_cs, backend=backend, shard=shard,
+            early_exit=early_exit).validate("fault_grid")
+        wins_cells = _host_wins(res.throughput, len(uniq), cell_ids, V)
+    wall = time.time() - t0
+
+    thr = res.throughput.reshape(n_scenarios, F, V)
+    cpu = res.sync_cpu_per_cs.reshape(n_scenarios, F, V)
+    best = np.maximum(thr.max(axis=2), 1e-30)          # (S, F)
+    ratio = thr / best[..., None]
+    # Throughput retained vs the benign row, same scenario and variant —
+    # the robustness ordinate (1.0 = unaffected).  Only defined when the
+    # grid includes the "none" row.
+    retained = None
+    if "none" in faults:
+        base = np.maximum(thr[:, list(faults).index("none"), :], 1e-30)
+        retained = thr / base[:, None, :]
+    # per-(fault, variant) win counts from the phase-cell matrix: every
+    # (scenario, fault) group maps to exactly one cell whose key starts
+    # with that fault, so summing cells by fault recovers the
+    # within-fault contest.
+    cell_f = np.asarray([list(faults).index(k[0]) for k in uniq])
+    win_fv = np.zeros((F, V), np.int64)
+    np.add.at(win_fv, cell_f, wins_cells)
+
+    def vname(v):
+        return (f"{v['lock']}/{v['oracle']}"
+                if v["lock"] == "mutable" else v["lock"])
+
+    variant_names = [vname(v) for v in disc_variants]
+    out_variants = [{
+        "fault": fl, "name": variant_names[i],
+        "lock": disc_variants[i]["lock"],
+        "oracle": disc_variants[i]["oracle"],
+        "wins": int(win_fv[fi, i]),
+        "mean_ratio_to_best": float(ratio[:, fi, i].mean()),
+        "p10_ratio_to_best": float(np.percentile(ratio[:, fi, i], 10)),
+        "mean_retained_vs_none": (float(retained[:, fi, i].mean())
+                                  if retained is not None else None),
+        "mean_sync_cpu_per_cs_us": float(cpu[:, fi, i].mean() * 1e6),
+    } for fi, fl in enumerate(faults) for i in range(V)]
+
+    disc_names = list(dict.fromkeys(v["lock"] for v in disc_variants))
+    disc_cols = {d: [i for i, v in enumerate(disc_variants)
+                     if v["lock"] == d] for d in disc_names}
+    by_fault = {}
+    for fi, fl in enumerate(faults):
+        by_fault[fl] = {d: {
+            "wins": int(win_fv[fi, cols].sum()),
+            "best_variant_mean_ratio":
+                float(ratio[:, fi, cols].max(axis=1).mean()),
+            "mean_retained_vs_none":
+                (float(retained[:, fi, cols].mean())
+                 if retained is not None else None),
+            "mean_sync_cpu_per_cs_us":
+                float(cpu[:, fi, cols].mean() * 1e6),
+        } for d, cols in disc_cols.items()}
+
+    phase = []
+    order = sorted(range(len(uniq)),
+                   key=lambda ci: (list(faults).index(uniq[ci][0]),
+                                   uniq[ci][1:]))
+    for ci in order:
+        fl, cs_b, sub_b = uniq[ci]
+        counts = {variant_names[i]: int(wins_cells[ci, i])
+                  for i in range(V) if wins_cells[ci, i]}
+        n = sum(counts.values())
+        winner = max(counts, key=counts.get)
+        phase.append({"fault": fl, "cs": cs_b, "sub": sub_b, "n": n,
+                      "winner": winner,
+                      "win_share": round(counts[winner] / n, 3),
+                      "wins_by_variant": counts})
+
+    import jax
+
+    out = {
+        "meta": {"backend": backend, "n_scenarios": n_scenarios,
+                 "n_faults": F, "n_variants": V,
+                 "n_configs": C, "n_steps": res.n_steps,
+                 "wall_s": round(wall, 2),
+                 "n_devices": len(jax.devices()),
+                 "sharded": bool(shard) if shard is not None
+                 else len(jax.devices()) > 1,
+                 "streamed": bool(stream),
+                 "configs_per_s": round(C / max(wall, 1e-9), 1),
+                 "faults": list(faults),
+                 "variant_names": variant_names},
+        "variants": out_variants,
+        "faults": by_fault,
+        "phase": phase,
+    }
+    if stream:
+        out["meta"].update(chunk_size=res.chunk_size,
+                           n_chunks=res.n_chunks,
+                           budget_mb=round(res.budget_mb, 1))
+    if verbose:
+        print(f"\nfault grid: {C} configs ({n_scenarios} "
+              f"scenarios x {F} faults x {V} variants) x {res.n_steps} "
+              f"steps in {wall:.1f}s on {out['meta']['n_devices']} "
+              f"device(s) ({out['meta']['configs_per_s']} cfg/s)")
+        for fl in faults:
+            rows = by_fault[fl]
+            top = max(rows, key=lambda d: rows[d]["wins"])
+            print(f"{fl:>9}: top discipline {top} "
+                  f"({rows[top]['wins']}/{n_scenarios} wins); "
+                  + " ".join(f"{d}:{r['wins']}" for d, r in rows.items()))
+    return out
+
+
+# --------------------------------------------------------------------------
 # Coarse -> dense resolution refinement
 # --------------------------------------------------------------------------
 def refine_grid(nx: int = 16, ny: int = 12, factor: int = 3,
@@ -883,7 +1077,8 @@ def refine_grid(nx: int = 16, ny: int = 12, factor: int = 3,
         red = xstream.CellReduce(V, np.arange(P, dtype=np.int32), P)
         res = xstream.sweep_stream(cols, target_cs=target_cs,
                                    backend=backend, shard=shard,
-                                   mem_mb=mem_mb, reduce=red)
+                                   mem_mb=mem_mb, reduce=red,
+                                   failures_path=FAILURES_PATH)
         return np.asarray(res.wins).argmax(axis=1), res
 
     t0 = time.time()
@@ -931,7 +1126,8 @@ def refine_grid(nx: int = 16, ny: int = 12, factor: int = 3,
         red = xstream.CellReduce(V, np.arange(P, dtype=np.int32), P)
         res_d = xstream.sweep_stream(cols, target_cs=target_cs,
                                      backend=backend, shard=shard,
-                                     mem_mb=mem_mb, reduce=red)
+                                     mem_mb=mem_mb, reduce=red,
+                                     failures_path=FAILURES_PATH)
         win_d = np.asarray(res_d.wins).argmax(axis=1)
         dense = [{"cs_us": round(float(c) * 1e6, 4), "threads": int(t),
                   "winner": variant_names[w]}

@@ -451,6 +451,72 @@ def lock_workload_sweep(n_scenarios: int = 100, seed: int = 0,
     ]
 
 
+# -- fault x discipline x oracle diagram grid ------------------------------
+#: Fault rows of the interference diagram: every FAULT_ROW
+#: (repro.core.policy) is represented — the benign baseline plus
+#: lock-holder preemption, CPU oversubscription, lost wake-ups with
+#: timeout recovery, and timer jitter.
+LOCK_FAULTS = ("none", "preempt", "oversub", "lostwake", "jitter")
+#: Per-row fault intensity: the probability/fraction knob of each row at
+#: a level where the spin-vs-sleep ranking visibly flips (preempt/oversub
+#: strong enough to starve spinners, wake faults frequent enough to tax
+#: sleepers) without collapsing every discipline to zero throughput.
+LOCK_FAULT_RATES = {"none": 0.0, "preempt": 0.6, "oversub": 0.6,
+                    "lostwake": 0.5, "jitter": 0.5}
+
+
+def lock_fault_params(sc: dict) -> dict:
+    """Scenario-scaled fault timescale: the off-CPU / recovery window is
+    ``4 x (cs_hi + ncs_hi)`` — ~8 mean CS+NCS rounds, long enough that a
+    preempted holder visibly stalls its waiters, short enough that every
+    auto-planned horizon (~``target_cs/2`` rounds) samples dozens of
+    windows (the DES parity band needs many windows per run — see
+    docs/robustness.md)."""
+    return dict(fault_scale=4.0 * (sc["cs_hi"] + sc["ncs_hi"]))
+
+
+def lock_fault_variants(faults=LOCK_FAULTS,
+                        disciplines=LOCK_DISCIPLINE_SET,
+                        oracles=LOCK_ORACLES) -> list[dict]:
+    """The ``(fault, discipline, oracle)`` variant axis of the fault
+    diagram: the discipline x oracle variants (windowed-row pruning of
+    :func:`lock_discipline_variants`) replicated under every fault row,
+    fault-major."""
+    return [dict(fault=f, fault_rate=LOCK_FAULT_RATES[f], **v)
+            for f in faults
+            for v in lock_discipline_variants(disciplines, oracles)]
+
+
+def lock_fault_sweep(n_scenarios: int = 100, seed: int = 0,
+                     faults=LOCK_FAULTS,
+                     disciplines=LOCK_DISCIPLINE_SET,
+                     oracles=LOCK_ORACLES) -> list[SimConfig]:
+    """The full fault x discipline x oracle product as one flat batch for
+    a single (sharded) :func:`repro.core.xdes.simulate_batch` call.
+
+    Row order is scenario-major, then fault, then (discipline, oracle)
+    variant — reshape to ``(n_scenarios, n_faults, n_variants)``.
+    Scenarios follow the :func:`sample_scenarios` seed contract, so every
+    fault row sees the same machines scenario-by-scenario and results are
+    comparable cell-by-cell with the discipline diagram (the ``none`` row
+    IS the discipline diagram's benign machine)."""
+    from repro.core.policy import DEFAULT_ALPHA
+
+    disc_variants = lock_discipline_variants(disciplines, oracles)
+    return [
+        SimConfig(v["lock"], threads=sc["threads"], cores=sc["cores"],
+                  cs=(0.0, sc["cs_hi"]), ncs=(0.0, sc["ncs_hi"]),
+                  wake_latency=sc["wake"],
+                  alpha=sc["contention"] * DEFAULT_ALPHA[v["lock"]],
+                  seed=sc["seed"], oracle=v["oracle"], fault=f,
+                  fault_rate=LOCK_FAULT_RATES[f],
+                  **lock_fault_params(sc))
+        for sc in sample_scenarios(n_scenarios, seed)
+        for f in faults
+        for v in disc_variants
+    ]
+
+
 # -- arrival-rate x discipline diagram grid (open loop) --------------------
 #: Arrival rows of the open-loop diagram (every non-closed ARRIVAL_ROW).
 LOCK_ARRIVALS = ("poisson", "bursty")
@@ -640,6 +706,28 @@ def lock_workload_columns(n_scenarios: int = 100, seed: int = 0,
         sc, lock_workload_variants(workloads, disciplines, oracles), wl)
 
 
+def lock_fault_columns(n_scenarios: int = 100, seed: int = 0,
+                       faults=LOCK_FAULTS,
+                       disciplines=LOCK_DISCIPLINE_SET,
+                       oracles=LOCK_ORACLES) -> dict:
+    """Column twin of :func:`lock_fault_sweep` (the scenario-scaled fault
+    window of :func:`lock_fault_params` computed as a column)."""
+    import numpy as np
+
+    from repro.core.policy import FAULT_IDS
+
+    sc = sample_scenario_columns(n_scenarios, seed)
+    variants = lock_fault_variants(faults, disciplines, oracles)
+    V = len(variants)
+    cols = _product_columns(sc, variants)
+    cols["fault"] = np.tile(np.asarray(
+        [FAULT_IDS[v["fault"]] for v in variants], np.int32), len(sc["seed"]))
+    cols["fault_rate"] = np.tile(np.asarray(
+        [v["fault_rate"] for v in variants], np.float64), len(sc["seed"]))
+    cols["fault_scale"] = np.repeat(4.0 * (sc["cs_hi"] + sc["ncs_hi"]), V)
+    return cols
+
+
 def lock_arrival_columns(n_scenarios: int = 50, seed: int = 0,
                          arrivals=LOCK_ARRIVALS, rhos=LOCK_ARRIVAL_RHOS,
                          disciplines=LOCK_DISCIPLINE_SET,
@@ -683,4 +771,5 @@ LOCK_SWEEPS = {
     "discipline": lock_discipline_sweep,
     "workload": lock_workload_sweep,
     "arrival": lock_arrival_sweep,
+    "fault": lock_fault_sweep,
 }

@@ -35,6 +35,23 @@ module is the event-driven twin the batched engine's workload rows are
 pinned against by randomized parity tests (tests/test_workloads.py).  The
 per-thread phase/scale state is drawn from a dedicated seeded stream, so
 the constant row consumes exactly the pre-workload RNG sequence.
+
+Faults: environment interference routes through the fault rows of
+:data:`repro.core.policy.FAULT_ROWS` (lock-holder preemption, CPU
+oversubscription, lost wake-ups with timeout recovery, timer jitter).  The
+DES realizes them as (a) a per-(thread, window) progress multiplier on
+CS/NCS execution, gated by the same ``FLT_GATE_SALT`` counter stream as the
+batched engine, with event intervals capped at fault-window boundaries so
+multipliers stay piecewise-constant, and (b) a perturbation of the wake-up
+latency at wake-scheduling time (``FLT_WAKE_SALT`` / ``FLT_MAG_SALT``
+streams, indexed by a per-thread wake counter — the batched engine keys the
+same draws by step index, so the two agree in distribution, not bit-for-bit;
+parity is pinned by seed-averaged band tests in tests/test_faults.py).
+Spin burn is deliberately NOT modulated: a preempted spinner stops making
+progress anyway, while the sleeper's parked time costs nothing — the
+asymmetry that lets sleep-leaning disciplines overtake spin under
+preemption.  The ``none`` row takes none of these code paths, so benign
+runs are bit-identical to the pre-fault DES.
 """
 
 from __future__ import annotations
@@ -387,6 +404,9 @@ class LockSim:
         arrival_rate: float = 0.0,
         queue_cap: int = policy.QUEUE_MAX,
         slo: float = 1e-3,
+        fault: str = "none",
+        fault_rate: float = 0.0,
+        fault_scale: float = 5e-5,
     ):
         self.rng = random.Random(seed)
         self.cores = cores
@@ -432,6 +452,45 @@ class LockSim:
         self.queue: list[float] = []   # FIFO of admitted arrival wall-times
         self._req_t: dict[int, float] = {}  # tid -> bound request's arrival
         self._next_arr = float("inf")
+        # -- fault rows (the event-driven twin of FAULT_ROWS) ---------------
+        self.fault = policy.FAULT_IDS[fault]
+        self.fault_rate = fault_rate
+        self.fault_scale = fault_scale
+        self._fault_row = policy.FAULT_ROWS[fault]
+        self._faulted = self.fault != policy.FAULT_NONE
+        self._flt_seed = u32
+        # per-thread wake-draw counters for the lostwake/jitter streams
+        self._flt_wake_ctr = [0] * threads
+
+    # -- fault-row machinery ------------------------------------------------
+    def _wake_delay(self, tid: int) -> float:
+        """Effective wake latency under the config's fault row.  The none
+        row returns ``wake_latency`` without touching any counter stream."""
+        if not self._faulted:
+            return self.wake_latency
+        k = self._flt_wake_ctr[tid]
+        self._flt_wake_ctr[tid] = k + 1
+        w1 = policy.counter_uniform_scalar(
+            self._flt_seed ^ policy.FLT_WAKE_SALT, tid, k)
+        w2 = policy.counter_uniform_scalar(
+            self._flt_seed ^ policy.FLT_MAG_SALT, tid, k)
+        return self._fault_row.wake_delay(self.wake_latency, w1, w2,
+                                          self.fault_rate, self.fault_scale)
+
+    def _fault_window(self) -> int:
+        """Current fault-window index, nudged past a boundary the clock has
+        effectively reached (guards against float-epsilon stalls)."""
+        win = int(self.now / self.fault_scale)
+        if (win + 1) * self.fault_scale - self.now <= self.fault_scale * 1e-9:
+            win += 1
+        return win
+
+    def _fault_mult(self, t: _Task, win: int) -> float:
+        """Per-(thread, window) CS/NCS progress multiplier."""
+        gu = policy.counter_uniform_scalar(
+            self._flt_seed ^ policy.FLT_GATE_SALT, t.tid, win)
+        return self._fault_row.progress(1.0 if t.state == CS else 0.0,
+                                        gu, self.fault_rate)
 
     # -- open-loop arrival machinery ----------------------------------------
     def arrival_rate_at(self, t: float) -> float:
@@ -519,7 +578,7 @@ class LockSim:
     def schedule_wake(self, t: _Task) -> None:
         assert t.state == SLEEP
         t.state = WAKING
-        t.wake_at = self.now + self.wake_latency
+        t.wake_at = self.now + self._wake_delay(t.tid)
         self.res.wake_count += 1
         self._log(t.tid, "wake_scheduled")
 
@@ -527,7 +586,7 @@ class LockSim:
         """A banked permit absorbed the sleep: still pays the park/unpark
         round-trip latency (the thread had committed to sleeping)."""
         t.state = WAKING
-        t.wake_at = self.now + self.wake_latency
+        t.wake_at = self.now + self._wake_delay(t.tid)
         self.res.wake_count += 1
         self._log(t.tid, "wake_banked")
 
@@ -575,12 +634,25 @@ class LockSim:
             holder_rate = rate / (1.0 + self.model.alpha * n_spin)
             has_budget = isinstance(self.model, AdaptiveModel)
 
+            # per-(thread, window) fault multipliers; piecewise-constant
+            # within a window, so intervals are capped at the boundary
+            mult: dict[int, float] | None = None
+            if self._faulted:
+                win = self._fault_window()
+                mult = {t.tid: self._fault_mult(t, win)
+                        for t in runnable if t.state in (CS, NCS)}
+
             dt = float("inf")
             for t in runnable:
                 if t.state == CS:
-                    dt = min(dt, t.remaining / holder_rate)
+                    r = holder_rate * (mult[t.tid] if mult is not None
+                                       else 1.0)
+                    if r > 0.0:
+                        dt = min(dt, t.remaining / r)
                 elif t.state == NCS:
-                    dt = min(dt, t.remaining / rate)
+                    r = rate * (mult[t.tid] if mult is not None else 1.0)
+                    if r > 0.0:
+                        dt = min(dt, t.remaining / r)
                 elif has_budget:  # SPIN with budget
                     dt = min(dt, t.remaining / rate)
             for t in self.tasks:
@@ -588,6 +660,8 @@ class LockSim:
                     dt = min(dt, t.wake_at - self.now)
             if self.open_loop and self._next_arr < float("inf"):
                 dt = min(dt, self._next_arr - self.now)
+            if mult is not None:
+                dt = min(dt, (win + 1) * self.fault_scale - self.now)
             dt = max(dt, 0.0)
             assert dt != float("inf")
 
@@ -595,11 +669,13 @@ class LockSim:
             finished: list[_Task] = []
             for t in runnable:
                 if t.state == CS:
-                    t.remaining -= dt * holder_rate
+                    m = mult[t.tid] if mult is not None else 1.0
+                    t.remaining -= dt * holder_rate * m
                     if t.remaining <= 1e-15:
                         finished.append(t)
                 elif t.state == NCS:
-                    t.remaining -= dt * rate
+                    m = mult[t.tid] if mult is not None else 1.0
+                    t.remaining -= dt * rate * m
                     if t.remaining <= 1e-15:
                         finished.append(t)
                 else:  # SPIN

@@ -657,6 +657,153 @@ TIE_BREAK_NAMES = {v: k for k, v in TIE_BREAK_IDS.items()}
 #: exceed it (it is one Pallas lane: :data:`repro.kernels.lock_sim.LANE`).
 QUEUE_MAX = 128
 
+
+# --------------------------------------------------------------------------
+# Fault rows — environment interference as data, mirroring WORKLOAD_ROWS
+# and ARRIVAL_ROWS.
+#
+# The paper's whole case for hybrid waiting is adverse, *unknown*
+# environments, yet the benign simulator never preempts a lock holder,
+# never oversubscribes a core and never loses a wake-up.  A fault row is a
+# named, seeded interference model dispatched per config by an integer id
+# exactly like the other registries, so a single batched call can sweep a
+# fault × discipline grid.
+#
+# Two elementwise hooks cover every row; both are pure arithmetic on
+# caller-precomputed uniforms, so ONE implementation runs on Python floats
+# (the DES twin), numpy arrays and traced jax values inside the kernels:
+#
+#   progress(is_holder, gate_u, rate) -> multiplier in [0, 1]
+#     scales a running (CS/NCS) thread's progress inside the current
+#     fault window.  ``is_holder`` is 0/1; ``gate_u`` is the persistent
+#     per-(thread, window) uniform drawn under FLT_GATE_SALT.
+#   wake_delay(wake, w1, w2, rate, scale) -> seconds
+#     replaces the config's nominal wake latency for one wake-up.
+#     ``w1``/``w2`` are per-(thread, step) uniforms under
+#     FLT_WAKE_SALT / FLT_MAG_SALT.
+#
+# Rows (``fault_rate`` = intensity in [0, 1], ``fault_scale`` = the row's
+# characteristic time in seconds):
+#
+#   none      no interference — bit-identical to the pre-fault engine
+#             (the dispatch is an exact masked select and the engine
+#             applies the progress hook through a ``where`` that is a
+#             structural no-op when the give-back is zero).
+#   preempt   lock-holder preemption: time is sliced into windows of
+#             ``fault_scale`` seconds; with probability ``fault_rate``
+#             per (thread, window) the thread is off-CPU for the whole
+#             window — a descheduled *holder* stalls every waiter while
+#             spinners keep burning CPU (the Fissile/Solaris regime).
+#   oversub   CPU oversubscription: an interfering background load
+#             steals a seeded fraction (up to ``fault_rate``) of every
+#             running thread's cycles per window — uniform time-stealing
+#             rather than whole-window blackouts.
+#   lostwake  lost wake-ups: with probability ``fault_rate`` a wake-up
+#             is dropped and the sleeper only recovers at its timeout,
+#             ``fault_scale`` seconds (futex-miss / missed-signal model).
+#   jitter    timer jitter: each wake-up is stretched by a uniform extra
+#             delay in [0, ``fault_scale``) with probability
+#             ``fault_rate`` (tickless-kernel / VM-scheduling noise).
+#
+# Spinning threads' CPU burn and the adaptive spin budget are deliberately
+# NOT modulated: interference steals *progress*, while a spinner occupying
+# a core keeps paying for it — which is exactly why sleep-leaning
+# disciplines overtake pure spin under heavy preemption.
+# --------------------------------------------------------------------------
+FAULT_NONE, FAULT_PREEMPT, FAULT_OVERSUB, FAULT_LOSTWAKE, FAULT_JITTER = \
+    range(5)
+
+FAULT_IDS = {
+    "none": FAULT_NONE,          # benign machine (the pre-fault engine)
+    "preempt": FAULT_PREEMPT,    # lock-holder preemption windows
+    "oversub": FAULT_OVERSUB,    # background load steals cycles
+    "lostwake": FAULT_LOSTWAKE,  # dropped wake-ups + timeout recovery
+    "jitter": FAULT_JITTER,      # wake-latency jitter
+}
+FAULT_NAMES = {v: k for k, v in FAULT_IDS.items()}
+
+#: Seed salts for the fault streams (XOR-ed into the config seed;
+#: disjoint from WL_PHASE_SALT/WL_SPREAD_SALT/AR_SALT/AR_PHASE_SALT/
+#: TB_SALT so interference never perturbs workload, arrival or tie-break
+#: draws).
+FLT_GATE_SALT = 0xA3C59AC3    # per-(thread, fault-window) off-CPU gate
+FLT_WAKE_SALT = 0xC2B2AE35    # per-(thread, step) wake-fault gate
+FLT_MAG_SALT = 0x27220A95     # per-(thread, step) wake-jitter magnitude
+
+
+@dataclass(frozen=True)
+class FaultRow:
+    name: str
+    fid: int
+    progress: object           # callable, elementwise (see module comment)
+    wake_delay: object         # callable, elementwise
+
+
+def _fault_progress_one(is_holder, gate_u, rate):
+    return 1.0 + 0.0 * gate_u
+
+
+def _fault_progress_preempt(is_holder, gate_u, rate):
+    # The whole fault window is lost when the per-(thread, window) gate
+    # fires — holders and waiters alike go off-CPU for the window.
+    return 1.0 - (gate_u < rate) * 1.0
+
+
+def _fault_progress_oversub(is_holder, gate_u, rate):
+    # A background load steals a seeded fraction of the window's cycles.
+    return 1.0 - rate * gate_u
+
+
+def _fault_wake_nominal(wake, w1, w2, rate, scale):
+    return wake + 0.0 * w1
+
+
+def _fault_wake_lost(wake, w1, w2, rate, scale):
+    # A dropped wake-up is recovered by the sleeper's timeout at `scale`.
+    return wake + (w1 < rate) * (scale - wake)
+
+
+def _fault_wake_jitter(wake, w1, w2, rate, scale):
+    # With probability `rate` the wake-up lands up to `scale` late.
+    return wake + (w1 < rate) * scale * w2
+
+
+FAULT_ROWS = {
+    "none": FaultRow("none", FAULT_NONE,
+                     _fault_progress_one, _fault_wake_nominal),
+    "preempt": FaultRow("preempt", FAULT_PREEMPT,
+                        _fault_progress_preempt, _fault_wake_nominal),
+    "oversub": FaultRow("oversub", FAULT_OVERSUB,
+                        _fault_progress_oversub, _fault_wake_nominal),
+    "lostwake": FaultRow("lostwake", FAULT_LOSTWAKE,
+                         _fault_progress_one, _fault_wake_lost),
+    "jitter": FaultRow("jitter", FAULT_JITTER,
+                       _fault_progress_one, _fault_wake_jitter),
+}
+assert sorted(r.fid for r in FAULT_ROWS.values()) \
+    == sorted(FAULT_IDS.values())
+
+
+def fault_progress_scale(fault_id, is_holder, gate_u, rate):
+    """Dispatch the per-window progress multiplier by ``fault_id`` — the
+    fault twin of :func:`workload_hold`'s masked select.  Exactly 1.0 for
+    the none row (every candidate is finite, the select is exact)."""
+    out = 0.0
+    for row in FAULT_ROWS.values():
+        sel = (fault_id == row.fid) * 1.0
+        out = out + sel * row.progress(is_holder, gate_u, rate)
+    return out
+
+
+def fault_wake_delay(fault_id, wake, w1, w2, rate, scale):
+    """Dispatch the effective wake latency by ``fault_id``.  Bit-identical
+    to ``wake`` for rows that do not perturb wake-ups."""
+    out = 0.0
+    for row in FAULT_ROWS.values():
+        sel = (fault_id == row.fid) * 1.0
+        out = out + sel * row.wake_delay(wake, w1, w2, rate, scale)
+    return out
+
 #: On-device latency histogram: ``LAT_NBINS`` log-spaced bins,
 #: ``LAT_BINS_PER_OCTAVE`` per factor of two, starting at ``LAT_BIN0``
 #: seconds — 64 bins at 2/octave span 1e-7 s .. ~4.6e2 s, wide enough for
@@ -788,6 +935,9 @@ class SimConfig:
     queue_cap: int = QUEUE_MAX          # bounded request queue (<= QUEUE_MAX)
     slo: float = 1e-3                   # per-request latency SLO (seconds)
     tie_break: str = "id"               # same-step tie-break (TIE_BREAK_IDS)
+    fault: str = "none"                 # interference row (FAULT_IDS)
+    fault_rate: float = 0.0             # interference intensity in [0, 1]
+    fault_scale: float = 5e-5           # fault window / timeout (seconds)
 
     def __post_init__(self):
         if self.lock not in POLICY_IDS:
@@ -819,6 +969,13 @@ class SimConfig:
         if self.tie_break not in TIE_BREAK_IDS:
             raise ValueError(f"unknown tie_break {self.tie_break!r}; "
                              f"options: {sorted(TIE_BREAK_IDS)}")
+        if self.fault not in FAULT_IDS:
+            raise ValueError(f"unknown fault {self.fault!r}; "
+                             f"options: {sorted(FAULT_IDS)}")
+        if not (0.0 <= self.fault_rate <= 1.0):
+            raise ValueError("fault_rate must be in [0, 1]")
+        if self.fault_scale <= 0.0:
+            raise ValueError("fault_scale must be > 0")
 
     # -- derived quantities shared by both backends -----------------------
     @property
@@ -875,6 +1032,12 @@ class SimConfig:
         return dict(arrival=self.arrival, arrival_rate=self.arrival_rate,
                     queue_cap=self.queue_cap)
 
+    def fault_kwargs(self) -> dict:
+        """Fault keywords consumed by :class:`repro.core.des.LockSim`
+        (the event-driven twin of the fault rows)."""
+        return dict(fault=self.fault, fault_rate=self.fault_rate,
+                    fault_scale=self.fault_scale)
+
 
 def workload_mean_scale_columns(workload, wl_duty, wl_burst, wl_spread):
     """Vectorized twin of :func:`workload_mean_scale` over (C,) columns.
@@ -904,6 +1067,7 @@ CONFIG_FIELDS = (
     "wake", "alpha", "sws_init", "sws_max", "k", "spin_budget", "seed",
     "oracle", "workload", "wl_period", "wl_duty", "wl_burst", "wl_spread",
     "arrival_phase", "arrival", "arr_rate", "q_cap", "slo", "tb",
+    "fault", "flt_rate", "flt_scale",
 )
 
 #: Column order of the RAW (pre-encoding) struct-of-arrays form — the
@@ -918,7 +1082,7 @@ RAW_CONFIG_FIELDS = (
     "wake_latency", "alpha", "sws_init", "sws_max", "k", "spin_budget",
     "seed", "oracle", "workload", "wl_period", "wl_duty", "wl_burst",
     "wl_spread", "arrival_phase", "arrival", "arrival_rate", "queue_cap",
-    "slo", "tie_break",
+    "slo", "tie_break", "fault", "fault_rate", "fault_scale",
 )
 
 #: Defaults for the RAW open-loop columns — column producers written
@@ -928,6 +1092,14 @@ RAW_CONFIG_FIELDS = (
 RAW_OPEN_DEFAULTS = {
     "arrival": AR_CLOSED, "arrival_rate": 0.0, "queue_cap": QUEUE_MAX,
     "slo": 1e-3, "tie_break": 0,
+}
+
+#: Defaults for the RAW fault columns — same contract as
+#: :data:`RAW_OPEN_DEFAULTS`: column producers written before the fault
+#: rows may omit them and get the benign machine, bit-identical to the
+#: pre-fault encoding.
+RAW_FAULT_DEFAULTS = {
+    "fault": FAULT_NONE, "fault_rate": 0.0, "fault_scale": 5e-5,
 }
 
 
@@ -968,11 +1140,11 @@ def config_columns(configs) -> dict:
         "sws_init", "sws_max", "k", "spin_budget", "seed", "oracle",
         "workload", "wl_period", "wl_duty", "wl_burst", "wl_spread",
         "arrival_phase", "arrival", "arrival_rate", "queue_cap", "slo",
-        "tie_break")
+        "tie_break", "fault", "fault_rate", "fault_scale")
     (lock, threads, cores, cs, ncs, wake, alpha, sws_init, sws_max, k,
      spin_budget, seed, oracle, workload, wl_period, wl_duty, wl_burst,
      wl_spread, arrival_phase, arrival, arrival_rate, queue_cap, slo,
-     tie_break) = zip(*map(get, configs))
+     tie_break, fault, fault_rate, fault_scale) = zip(*map(get, configs))
     n = len(configs)
     cs = np.asarray(cs, np.float64)
     ncs = np.asarray(ncs, np.float64)
@@ -1003,6 +1175,9 @@ def config_columns(configs) -> dict:
         "queue_cap": np.asarray(queue_cap, np.int64).astype(np.int32),
         "slo": np.asarray(slo, np.float64),
         "tie_break": _ids_from(tie_break, TIE_BREAK_IDS, "tie_break"),
+        "fault": _ids_from(fault, FAULT_IDS, "fault"),
+        "fault_rate": np.asarray(fault_rate, np.float64),
+        "fault_scale": np.asarray(fault_scale, np.float64),
     }
 
 
@@ -1025,21 +1200,30 @@ def _validate_columns(cols, C: int) -> None:
         f"unknown workload id; options: {sorted(WORKLOAD_IDS.values())}")
     bad((cols["threads"] < 1) | (cols["cores"] < 1),
         "threads and cores must be >= 1")
-    bad((cols["wl_period"] <= 0) | (cols["wl_duty"] <= 0)
-        | (cols["wl_duty"] > 1),
-        "wl_period must be > 0 and wl_duty in (0, 1]")
+    bad(cols["wl_period"] <= 0, "wl_period must be > 0")
+    bad((cols["wl_duty"] <= 0) | (cols["wl_duty"] > 1),
+        "wl_duty must be in (0, 1] "
+        "(pass strict=False to clamp out-of-range sweep columns)")
     bad((cols["wl_burst"] < 1) | (cols["wl_spread"] < 1),
         "wl_burst and wl_spread must be >= 1")
     bad(cols["arrival_phase"] < 0, "arrival_phase must be >= 0")
     bad((cols["arrival"] < 0) | (cols["arrival"] >= len(ARRIVAL_IDS)),
         f"unknown arrival id; options: {sorted(ARRIVAL_IDS.values())}")
-    bad(cols["arrival_rate"] < 0, "arrival_rate must be >= 0")
+    bad(cols["arrival_rate"] < 0,
+        "arrival_rate must be >= 0 "
+        "(pass strict=False to clamp out-of-range sweep columns)")
     bad((cols["queue_cap"] < 1) | (cols["queue_cap"] > QUEUE_MAX),
-        f"queue_cap must be in [1, {QUEUE_MAX}]")
+        f"queue_cap must be in [1, {QUEUE_MAX}] "
+        "(pass strict=False to clamp out-of-range sweep columns)")
     bad(cols["slo"] <= 0, "slo must be > 0")
     bad((cols["tie_break"] < 0)
         | (cols["tie_break"] >= len(TIE_BREAK_IDS)),
         f"unknown tie_break id; options: {sorted(TIE_BREAK_IDS.values())}")
+    bad((cols["fault"] < 0) | (cols["fault"] >= len(FAULT_IDS)),
+        f"unknown fault id; options: {sorted(FAULT_IDS.values())}")
+    bad((cols["fault_rate"] < 0) | (cols["fault_rate"] > 1),
+        "fault_rate must be in [0, 1]")
+    bad(cols["fault_scale"] <= 0, "fault_scale must be > 0")
 
 
 #: DEFAULT_ALPHA indexed by policy id (the vectorized alpha_eff lookup).
@@ -1050,24 +1234,33 @@ def _alpha_by_id():
                        for i in range(len(POLICY_IDS))], np.float64)
 
 
-def encode_columns(cols, validate: bool = True) -> dict:
+def encode_columns(cols, validate: bool = True, strict: bool = True) -> dict:
     """Encode RAW struct-of-arrays columns (:data:`RAW_CONFIG_FIELDS`;
     scalars broadcast, name strings accepted for the id columns) into the
     engine's :data:`CONFIG_FIELDS` form — the fully array-native path the
     streaming sweep feeds 100k+-config catalogs through.  Output is
     bit-identical to ``encode_configs`` of the equivalent
     :class:`SimConfig` list (same float64 -> float32 rounding, same
-    derived ``alpha``/``sws_init``/``sws_max`` rules)."""
+    derived ``alpha``/``sws_init``/``sws_max`` rules).
+
+    Out-of-range values raise an actionable :class:`ValueError` naming the
+    offending row.  ``strict=False`` instead clamps the continuous sweep
+    knobs (``arrival_rate`` to >= 0, ``queue_cap`` to [1, QUEUE_MAX],
+    ``wl_duty`` to (0, 1]) so mechanically-generated grids survive edge
+    cells; discrete ids are never clamped."""
     import numpy as np
 
     cols = dict(cols)
     for f, v in RAW_OPEN_DEFAULTS.items():
         cols.setdefault(f, v)
+    for f, v in RAW_FAULT_DEFAULTS.items():
+        cols.setdefault(f, v)
     for key, table, what in (("lock", POLICY_IDS, "lock"),
                              ("oracle", ORACLE_IDS, "oracle"),
                              ("workload", WORKLOAD_IDS, "workload"),
                              ("arrival", ARRIVAL_IDS, "arrival"),
-                             ("tie_break", TIE_BREAK_IDS, "tie_break")):
+                             ("tie_break", TIE_BREAK_IDS, "tie_break"),
+                             ("fault", FAULT_IDS, "fault")):
         v = cols[key]
         if isinstance(v, str):
             cols[key] = table.get(v)
@@ -1079,6 +1272,11 @@ def encode_columns(cols, validate: bool = True) -> dict:
     C = max(np.size(cols[f]) for f in RAW_CONFIG_FIELDS if f in cols)
     full = {f: np.broadcast_to(np.asarray(cols[f]), (C,))
             for f in RAW_CONFIG_FIELDS}
+    if not strict:
+        full["arrival_rate"] = np.maximum(full["arrival_rate"], 0.0)
+        full["queue_cap"] = np.clip(full["queue_cap"], 1, QUEUE_MAX)
+        full["wl_duty"] = np.clip(full["wl_duty"],
+                                  np.finfo(np.float64).tiny, 1.0)
     if validate:
         _validate_columns(full, C)
 
@@ -1119,10 +1317,13 @@ def encode_columns(cols, validate: bool = True) -> dict:
         "q_cap": full["queue_cap"].astype(np.int32),
         "slo": f32("slo"),
         "tb": full["tie_break"].astype(np.int32),
+        "fault": full["fault"].astype(np.int32),
+        "flt_rate": f32("fault_rate"),
+        "flt_scale": f32("fault_scale"),
     }
 
 
-def encode_configs(configs) -> dict:
+def encode_configs(configs, strict: bool = True) -> dict:
     """Encode a batch of configs as struct-of-arrays (numpy).
 
     Accepts either a list of :class:`SimConfig` or a RAW column mapping
@@ -1141,7 +1342,7 @@ def encode_configs(configs) -> dict:
     implementation kept as the equality/bench baseline.
     """
     if isinstance(configs, dict):
-        return encode_columns(configs)
+        return encode_columns(configs, strict=strict)
     return encode_columns(config_columns(configs), validate=False)
 
 
@@ -1187,4 +1388,7 @@ def encode_configs_legacy(configs) -> dict:
         "q_cap": col(lambda c: c.queue_cap, np.int32),
         "slo": col(lambda c: c.slo, np.float32),
         "tb": col(lambda c: TIE_BREAK_IDS[c.tie_break], np.int32),
+        "fault": col(lambda c: FAULT_IDS[c.fault], np.int32),
+        "flt_rate": col(lambda c: c.fault_rate, np.float32),
+        "flt_scale": col(lambda c: c.fault_scale, np.float32),
     }

@@ -40,6 +40,25 @@ chunk-by-chunk instead:
   state at its reported horizon); single-chunk streams remain
   bit-identical.
 
+* **Self-healing.**  Long sweeps survive their own failures
+  (docs/robustness.md):
+
+  - ``checkpoint_dir=`` checkpoints the accumulated summary columns, the
+    ``CellReduce`` win counts and the chunk cursor after every committed
+    chunk through :class:`repro.checkpoint.manager.CheckpointManager`'s
+    atomic tmp+rename layout; ``resume=True`` restores the latest
+    checkpoint (guarded by a sweep-plan fingerprint) and skips the
+    already-committed chunks — the resumed result is bit-identical to an
+    uninterrupted run.
+  - a chunk that dies with an allocation failure (``RESOURCE_EXHAUSTED``
+    / out-of-memory) is retried as two half chunks, recursively down to
+    one reduction group, instead of killing the sweep.
+  - non-finite summary values are quarantined: the offending configs are
+    reported in ``StreamResult.failures`` (and, with ``failures_path=``,
+    a structured JSON report), and sanitized copies (zero throughput)
+    feed the win-count reduction so one poisoned config cannot flip a
+    phase-diagram cell.
+
 Feed it raw column arrays (:data:`repro.core.policy.RAW_CONFIG_FIELDS`,
 e.g. from the ``*_columns`` generators in :mod:`repro.configs.catalog`)
 to keep the whole pipeline array-native — a list of
@@ -51,10 +70,12 @@ this path.
 from __future__ import annotations
 
 import functools
+import hashlib
+import json
 import math
 import os
 import warnings
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 import numpy as np
 
@@ -241,6 +262,11 @@ class StreamResult:
     bytes_per_config: int = 0
     #: (n_cells, group) on-device win counts when a CellReduce was given.
     wins: np.ndarray | None = None
+    #: Quarantined configs: one record per config whose summary came back
+    #: non-finite (see :func:`_quarantine`).  Empty on healthy sweeps.
+    failures: list = field(default_factory=list)
+    #: Chunks restored from a checkpoint instead of recomputed.
+    resumed_chunks: int = 0
     #: Open-loop outputs (``None`` on closed sweeps): the (C, LAT_NBINS)
     #: latency histogram and the (C,) request counters / accumulators —
     #: same semantics as :class:`repro.core.xdes.BatchResult`.
@@ -321,6 +347,113 @@ def _pad_rows(arrs, n: int):
             for k, v in arrs.items()}
 
 
+def _is_oom(e: BaseException) -> bool:
+    """Allocation failure, by message: jax surfaces accelerator OOM as
+    ``XlaRuntimeError`` with a ``RESOURCE_EXHAUSTED`` status (message
+    wording varies by backend, so match the status and the common
+    phrasings)."""
+    s = f"{type(e).__name__}: {e}"
+    return ("RESOURCE_EXHAUSTED" in s or "out of memory" in s.lower()
+            or "OOM" in s)
+
+
+def _run_chunk_resilient(part, n: int, horizon, T, backend, block_steps,
+                         target_cs, shard, open_loop, quantum: int,
+                         chunk: int, group: int, verbose: bool = False):
+    """Run one chunk with halving backoff: an allocation failure splits
+    the chunk into two group-aligned halves and retries each, recursively
+    down to one reduction group / shard quantum.  Returns the summary
+    dict trimmed to the ``n`` real rows."""
+    pad_to = min(chunk, quantum * xdes._pad_quantum(-(-n // quantum)))
+    try:
+        res = _run_chunk(_pad_rows(part, pad_to), horizon, T, backend,
+                         block_steps, target_cs, shard, open_loop)
+        return {k: np.asarray(v)[:n] for k, v in res.items()}
+    except Exception as e:                      # noqa: BLE001 (filtered)
+        if not _is_oom(e) or n <= quantum:
+            raise
+        mid = group * max(1, (n // 2) // group)
+        if verbose:
+            print(f"  stream chunk of {n} configs hit "
+                  f"{type(e).__name__}; retrying as {mid} + {n - mid}")
+        warnings.warn(
+            f"sweep chunk of {n} configs failed with an allocation error; "
+            f"retrying with halved chunks ({mid} + {n - mid})",
+            stacklevel=2)
+        halves = []
+        for lo, hi in ((0, mid), (mid, n)):
+            sub = {k: v[lo:hi] for k, v in part.items()}
+            halves.append(_run_chunk_resilient(
+                sub, hi - lo, horizon, T, backend, block_steps, target_cs,
+                shard, open_loop, quantum, max(quantum, pad_to // 2),
+                group, verbose))
+        return {k: np.concatenate([h[k] for h in halves])
+                for k in halves[0]}
+
+
+#: Float summary columns scanned for engine non-finites (intentional NaN
+#: lives only in DERIVED statistics of empty histograms — see
+#: ``StreamResult.latency_quantiles``/``slo_frac`` — never in these).
+_FINITE_FIELDS = ("t_end", "spin_cpu", "lat_sum", "occ_int")
+
+
+def _quarantine(res: dict, cols, sel_index: np.ndarray, failures: list):
+    """Detect non-finite summary values in one chunk's results.
+
+    Appends one structured record per offending config to ``failures``
+    (global config index, the non-finite fields, and the config's raw
+    column values for reproduction) and returns a per-row bad mask.  The
+    caller feeds SANITIZED copies to the win-count reduction; the raw
+    values stay visible in the summary columns."""
+    bad = np.zeros(sel_index.shape[0], bool)
+    for f in _FINITE_FIELDS:
+        if f in res:
+            bad |= ~np.isfinite(np.asarray(res[f], np.float64))
+    if not bad.any():
+        return bad
+    for i in np.nonzero(bad)[0]:
+        gi = int(sel_index[i])
+        failures.append({
+            "index": gi,
+            "fields": {f: float(np.asarray(res[f], np.float64)[i])
+                       for f in _FINITE_FIELDS if f in res
+                       and not np.isfinite(np.asarray(res[f],
+                                                      np.float64)[i])},
+            "config": {k: (v[gi].item() if np.asarray(v).ndim else
+                           np.asarray(v).item())
+                       for k, v in cols.items()},
+        })
+    return bad
+
+
+def _write_failures(path: str, n_configs: int, failures: list) -> None:
+    """Atomically write the structured quarantine report (tmp+rename,
+    same crash-safety contract as the checkpoint layout)."""
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump({"n_configs": n_configs, "n_failures": len(failures),
+                   "failures": failures}, f, indent=1)
+        f.flush()
+        os.fsync(f.fileno())
+    os.rename(tmp, path)
+
+
+def _plan_fingerprint(arrs, *, chunk, T, n_steps, target_cs, backend,
+                      bucket_steps, shard, group) -> np.ndarray:
+    """Digest of the sweep plan + encoded inputs: a checkpoint written by
+    a DIFFERENT sweep (other configs, other chunking) must never be
+    resumed into this one."""
+    h = hashlib.sha256()
+    h.update(repr((int(chunk), int(T), int(n_steps), int(target_cs),
+                   str(backend), bool(bucket_steps), bool(shard),
+                   int(group))).encode())
+    for k in sorted(arrs):
+        h.update(k.encode())
+        h.update(np.ascontiguousarray(arrs[k]).tobytes())
+    return np.frombuffer(h.digest(), np.uint8).copy()
+
+
 def sweep_stream(configs, *, target_cs: int = 300,
                  n_steps: int | None = None, dt=None, backend: str = "ref",
                  block_steps: int | None = None, shard: bool | None = None,
@@ -329,6 +462,10 @@ def sweep_stream(configs, *, target_cs: int = 300,
                  mem_mb: float | None = None,
                  max_threads: int | None = None,
                  chunk: int | None = None,
+                 strict: bool = True,
+                 checkpoint_dir: str | None = None,
+                 resume: bool = False,
+                 failures_path: str | None = None,
                  verbose: bool = False) -> StreamResult:
     """Run a sweep chunk-by-chunk under a memory budget; see the module
     docstring for the mechanism.
@@ -344,10 +481,19 @@ def sweep_stream(configs, *, target_cs: int = 300,
     :func:`memory_budget_bytes`).  ``early_exit`` defaults to on iff the
     horizon is auto-planned, like ``simulate_batch`` — pass ``False``
     for chunk-invariant bit-exactness.
+
+    Resilience (docs/robustness.md): ``strict=False`` clamps out-of-range
+    sweep columns instead of raising (:func:`repro.core.policy.
+    encode_columns`); ``checkpoint_dir`` + ``resume`` give chunk-granular
+    crash recovery; allocation failures retry with halved chunks;
+    non-finite summaries are quarantined into ``StreamResult.failures``
+    (and ``failures_path`` when given) with sanitized rows feeding the
+    win-count reduction.
     """
     cols = configs if isinstance(configs, dict) else \
         P.config_columns(configs)
-    arrs = P.encode_columns(cols, validate=isinstance(configs, dict))
+    arrs = P.encode_columns(cols, validate=isinstance(configs, dict),
+                            strict=strict)
     C = arrs["policy"].shape[0]
     open_loop = bool((np.asarray(arrs["arrival"]) != P.AR_CLOSED).any())
     if reduce is not None:
@@ -417,46 +563,119 @@ def sweep_stream(configs, *, target_cs: int = 300,
     else:
         plans = [(None, int(n_steps))]
 
-    n_chunks = 0
-    run_steps = 0
+    # deterministic flat chunk schedule: the unit of checkpoint/resume
+    chunk_plans = []
     for idx, horizon in plans:
         rows = C if idx is None else len(idx)
         for lo in range(0, rows, chunk):
             hi = min(lo + chunk, rows)
-            sel = slice(lo, hi) if idx is None else idx[lo:hi]
-            part = {k: v[sel] for k, v in arrs.items()}
-            n = hi - lo
-            # pad the tail chunk onto the quantized shape ladder so it
-            # reuses executables across sweeps instead of compiling 1:1
-            pad_to = min(chunk, quantum * xdes._pad_quantum(
-                -(-n // quantum)))
-            res = _run_chunk(_pad_rows(part, pad_to), horizon, T, backend,
-                             int(block_steps), tc, shard, open_loop)
-            for f in SUMMARY_FIELDS:
-                out[f][sel] = np.asarray(res[f])[:n]
-            if open_loop:
-                for f in OPEN_SUMMARY_FIELDS:
-                    out[f][sel] = np.asarray(res[f])[:n]
-                out["lat_hist"][sel] = np.asarray(res["lat_hist"])[:n]
-            if chunk_reduce:
-                cid = np.full(pad_to // group, -1, np.int32)
-                cid[:n // group] = reduce.cell_ids[lo // group:
-                                                   hi // group]
-                wins = _cell_update(wins, res["completed"][:pad_to],
-                                    res["t_end"][:pad_to], cid,
-                                    group=group)
-            n_chunks += 1
-            run_steps = max(run_steps, horizon)
-            if verbose:
-                done = sum(1 for _ in range(0, rows, chunk))
-                print(f"  stream chunk {n_chunks}: {n} configs "
-                      f"(pad {pad_to}) x {horizon} steps "
-                      f"[bucket rows={rows}, {done} chunks]")
+            chunk_plans.append((idx, lo, hi, horizon))
+
+    failures: list = []
+    mgr = None
+    cursor = 0                     # chunks already committed (checkpoint)
+    if checkpoint_dir is not None:
+        from repro.checkpoint.manager import CheckpointManager
+        mgr = CheckpointManager(checkpoint_dir, keep_last=2,
+                                async_save=False)
+        fp = _plan_fingerprint(
+            arrs, chunk=chunk, T=T, n_steps=int(n_steps),
+            target_cs=tc, backend=backend, bucket_steps=bucket_steps,
+            shard=shard, group=group)
+        template = {"out": {k: np.zeros_like(v) for k, v in out.items()},
+                    "wins": (np.zeros((reduce.n_cells, group), np.int32)
+                             if reduce is not None
+                             else np.zeros((1,), np.int32)),
+                    "cursor": np.zeros((), np.int64),
+                    "fingerprint": np.zeros_like(fp),
+                    "failures_json": np.zeros((), np.uint32)}
+        if resume:
+            step, tree = mgr.restore(template)
+            if tree is not None:
+                if not np.array_equal(np.asarray(tree["fingerprint"]), fp):
+                    raise ValueError(
+                        f"checkpoint in {checkpoint_dir!r} was written by "
+                        f"a different sweep plan; refusing to resume")
+                cursor = int(tree["cursor"])
+                for k in out:
+                    out[k][...] = np.asarray(tree["out"][k])
+                if reduce is not None:
+                    wins = jnp.asarray(tree["wins"])
+                nfail = int(tree["failures_json"])
+                if nfail and failures_path and os.path.exists(
+                        failures_path):
+                    with open(failures_path) as f:
+                        failures = json.load(f)["failures"][:nfail]
+                if verbose:
+                    print(f"  stream resume: {cursor}/{len(chunk_plans)} "
+                          f"chunks restored from {checkpoint_dir}")
+
+    n_chunks = 0
+    run_steps = 0
+    for ci, (idx, lo, hi, horizon) in enumerate(chunk_plans):
+        n_chunks += 1
+        run_steps = max(run_steps, horizon)
+        if ci < cursor:
+            continue               # committed before the crash: restored
+        sel = slice(lo, hi) if idx is None else idx[lo:hi]
+        gidx = np.arange(lo, hi) if idx is None else np.asarray(idx[lo:hi])
+        part = {k: v[sel] for k, v in arrs.items()}
+        n = hi - lo
+        # _run_chunk_resilient pads the tail chunk onto the quantized
+        # shape ladder (executable reuse) and halves on OOM
+        res = _run_chunk_resilient(part, n, horizon, T, backend,
+                                   int(block_steps), tc, shard, open_loop,
+                                   quantum, chunk, group, verbose)
+        for f in SUMMARY_FIELDS:
+            out[f][sel] = res[f]
+        if open_loop:
+            for f in OPEN_SUMMARY_FIELDS:
+                out[f][sel] = res[f]
+            out["lat_hist"][sel] = res["lat_hist"]
+        bad = _quarantine(res, cols, gidx, failures)
+        if chunk_reduce:
+            completed = np.where(bad, 0, res["completed"])
+            t_end = np.where(bad, 1.0, res["t_end"]).astype(np.float32)
+            cid = reduce.cell_ids[lo // group:hi // group]
+            wins = _cell_update(wins, jnp.asarray(completed),
+                                jnp.asarray(t_end), jnp.asarray(cid),
+                                group=group)
+        if verbose:
+            print(f"  stream chunk {ci + 1}/{len(chunk_plans)}: {n} "
+                  f"configs x {horizon} steps"
+                  + (f" [{int(bad.sum())} quarantined]" if bad.any()
+                     else ""))
+        if mgr is not None:
+            if failures and failures_path:
+                _write_failures(failures_path, C, failures)
+            mgr.save(ci + 1, {
+                "out": out,
+                "wins": (np.asarray(wins) if wins is not None
+                         else np.zeros((1,), np.int32)),
+                "cursor": np.int64(ci + 1),
+                "fingerprint": fp,
+                "failures_json": np.uint32(len(failures))})
     if reduce is not None and not chunk_reduce:
-        wins = _cell_update(jnp.zeros((reduce.n_cells, group), jnp.int32),
-                            jnp.asarray(out["completed"]),
-                            jnp.asarray(out["t_end"]),
-                            jnp.asarray(reduce.cell_ids), group=group)
+        badf = np.zeros(C, bool)
+        for f in _FINITE_FIELDS:
+            if f in out:
+                badf |= ~np.isfinite(np.asarray(out[f], np.float64))
+        wins = _cell_update(
+            jnp.zeros((reduce.n_cells, group), jnp.int32),
+            jnp.asarray(np.where(badf, 0, out["completed"])),
+            jnp.asarray(np.where(badf, 1.0,
+                                 out["t_end"]).astype(np.float32)),
+            jnp.asarray(reduce.cell_ids), group=group)
+
+    if failures and failures_path:
+        _write_failures(failures_path, C, failures)
+    if failures:
+        warnings.warn(
+            f"sweep quarantined {len(failures)}/{C} configs with "
+            f"non-finite summaries"
+            + (f" (report: {failures_path})" if failures_path else "")
+            + "; their rows kept raw values but were excluded from the "
+            f"win-count reduction", stacklevel=2)
 
     return StreamResult(
         n_configs=C, n_steps=run_steps, backend=backend,
@@ -467,6 +686,7 @@ def sweep_stream(configs, *, target_cs: int = 300,
         chunk_size=int(chunk), n_chunks=n_chunks,
         budget_mb=float(budget_mb), bytes_per_config=bpc,
         wins=None if wins is None else np.asarray(wins),
+        failures=failures, resumed_chunks=min(cursor, len(chunk_plans)),
         lat_hist=out.get("lat_hist"), arrived=out.get("arrived"),
         shed=out.get("shed"), departed=out.get("departed"),
         slo_viol=out.get("slo_viol"), lat_sum=out.get("lat_sum"),

@@ -78,7 +78,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.ref import (NO_TICKET, REM_EPS,  # noqa: F401
-                               counter_uniform, workload_init_rem)
+                               counter_uniform, fault_rewind,
+                               workload_init_rem)
 
 from . import policy as P
 
@@ -93,7 +94,8 @@ _INF = np.float32(np.inf)
 _PRM_FIELDS = ("policy", "threads", "dt", "wake", "cs_lo", "cs_hi",
                "ncs_lo", "ncs_hi", "k", "sws_max", "spin_budget", "seed",
                "oracle", "workload", "wl_period", "wl_duty", "wl_burst",
-               "wl_spread", "arrival", "arr_rate", "q_cap", "slo", "tb")
+               "wl_spread", "arrival", "arr_rate", "q_cap", "slo", "tb",
+               "fault", "flt_rate", "flt_scale")
 
 
 # --------------------------------------------------------------------------
@@ -264,6 +266,10 @@ def _simulate_core(arrs, n_steps, T: int, backend: str = "ref",
             now2 = (i.astype(jnp.float32) + 1.0) * arrs["dt"]
             rem, burn = advance(st, rem, arrs["alpha"], arrs["cores"],
                                 arrs["dt"], has_budget)
+            rem = fault_rewind(st, rem, arrs["alpha"], arrs["cores"],
+                               arrs["dt"], i.astype(jnp.float32) * arrs["dt"],
+                               arrs["seed"], arrs["fault"],
+                               arrs["flt_rate"], arrs["flt_scale"])
             out = transitions(st, rem, *state[2:], now2, i, *prm,
                               open_state=ostate)
             new, onew = out[:16], out[16:]
@@ -572,6 +578,47 @@ class BatchResult:
         dep = np.asarray(self.departed, np.float64)
         return np.where(dep > 0, self.lat_sum / np.maximum(dep, 1.0),
                         np.nan)
+
+    def validate(self, where: str = "batch") -> "BatchResult":
+        """Fail loudly on engine non-finites, naming the offending config.
+
+        Distinguishes *intentional* NaN from poison: latency quantiles,
+        ``mean_latency`` and ``slo_frac`` are NaN by design for configs
+        where no request departed (the empty-histogram readout), so those
+        are only flagged when ``departed > 0``.  Everything else —
+        throughput, spin CPU, wake counts, the open-loop accumulators —
+        must be finite for every config; a violation raises
+        :class:`ValueError` with the config index and its parameters, so
+        a poisoned sweep cell surfaces at the diagram CLI instead of
+        silently propagating NaN into the phase-diagram reduction.
+        Returns ``self`` so call sites can chain it.
+        """
+        checks = [("t_end", self.t_end), ("completed", self.completed),
+                  ("spin_cpu", self.spin_cpu),
+                  ("wake_count", self.wake_count),
+                  ("final_sws", self.final_sws),
+                  ("throughput", self.throughput),
+                  ("sync_cpu_per_cs", self.sync_cpu_per_cs)]
+        if self.lat_hist is not None:
+            dep = np.asarray(self.departed, np.int64)
+            checks += [("lat_sum", self.lat_sum),
+                       ("occ_int", self.occ_int),
+                       ("mean_latency",
+                        np.where(dep > 0, self.mean_latency, 0.0)),
+                       ("slo_frac",
+                        np.where(dep > 0, self.slo_frac, 0.0)),
+                       ("p50", np.where(dep > 0, self.p50, 0.0))]
+        for name, arr in checks:
+            a = np.asarray(arr, np.float64)
+            badm = ~np.isfinite(a)
+            if badm.any():
+                i = int(np.nonzero(badm)[0][0])
+                cfg = (self.configs[i] if i < len(self.configs)
+                       else "<padded row>")
+                raise ValueError(
+                    f"non-finite {name}={a[i]!r} at config {i} in "
+                    f"{where}: {cfg!r}")
+        return self
 
     def fairness_spread(self, i: int) -> int:
         """Max-min completed-CS spread across config ``i``'s threads —

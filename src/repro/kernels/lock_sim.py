@@ -206,7 +206,7 @@ _THREAD_STATE_SPEC = (
     ("completed_pt", jnp.int32, 0),
 )
 
-#: dtypes of the 25 per-config context columns (TRANSITION_CONTEXT order).
+#: dtypes of the 28 per-config context columns (TRANSITION_CONTEXT order).
 _CONTEXT_DTYPES = (
     jnp.float32,                        # now2
     jnp.int32,                          # stepi (per-step RNG counter)
@@ -220,6 +220,7 @@ _CONTEXT_DTYPES = (
     jnp.float32, jnp.float32, jnp.float32, jnp.float32,  # wl_* knobs
     jnp.int32, jnp.float32,             # arrival, arr_rate
     jnp.int32, jnp.float32, jnp.int32,  # q_cap, slo, tb
+    jnp.int32, jnp.float32, jnp.float32,  # fault, flt_rate, flt_scale
 )
 
 _N_THREAD, _N_CONF, _N_CTX = 8, 8, len(_CONTEXT_DTYPES)
@@ -290,7 +291,8 @@ def lock_transitions_step(st, rem, wake_at, slept, spun, ctr, ticket,
                           cs_hi, ncs_lo, ncs_hi, k, sws_max, spin_budget,
                           seed, oracle, workload, wl_period, wl_duty,
                           wl_burst, wl_spread, arrival, arr_rate, q_cap,
-                          slo, tb, *, open_state=None,
+                          slo, tb, fault, flt_rate, flt_scale, *,
+                          open_state=None,
                           block_configs: int = 256,
                           interpret: bool | None = None):
     """Pallas-fused transition stage; signature mirrors
@@ -321,7 +323,8 @@ def lock_transitions_step(st, rem, wake_at, slept, spun, ctr, ticket,
                                    cs_lo, cs_hi, ncs_lo, ncs_hi, k, sws_max,
                                    spin_budget, seed, oracle, workload,
                                    wl_period, wl_duty, wl_burst, wl_spread,
-                                   arrival, arr_rate, q_cap, slo, tb),
+                                   arrival, arr_rate, q_cap, slo, tb,
+                                   fault, flt_rate, flt_scale),
                                   _CONTEXT_DTYPES)]
 
     mat = pl.BlockSpec((bc, Tp), lambda i: (i, 0))
@@ -366,7 +369,7 @@ def lock_transitions_step(st, rem, wake_at, slept, spun, ctr, ticket,
 # scan: 2*B pad/slice round trips and kernel launches become 1 per block.
 # --------------------------------------------------------------------------
 
-#: dtypes of the 28 per-config context columns of the block kernel
+#: dtypes of the 31 per-config context columns of the block kernel
 #: (repro.kernels.ref.BLOCK_CONTEXT order): step0, the step limit, the GPS
 #: advance inputs (alpha, cores, has_budget), then TRANSITION_CONTEXT
 #: minus now2 and stepi (both recomputed in-block from step0 + s).
@@ -403,7 +406,7 @@ def lock_sim_block(st, rem, wake_at, slept, spun, ctr, ticket,
                    policy, threads, dt, wake, cs_lo, cs_hi, ncs_lo, ncs_hi,
                    k, sws_max, spin_budget, seed, oracle, workload,
                    wl_period, wl_duty, wl_burst, wl_spread, arrival,
-                   arr_rate, q_cap, slo, tb, *,
+                   arr_rate, q_cap, slo, tb, fault, flt_rate, flt_scale, *,
                    n_sub_steps: int, block_configs: int = 256,
                    interpret: bool | None = None, limit=None,
                    open_state=None):
@@ -443,7 +446,8 @@ def lock_sim_block(st, rem, wake_at, slept, spun, ctr, ticket,
                                    ncs_lo, ncs_hi, k, sws_max, spin_budget,
                                    seed, oracle, workload, wl_period,
                                    wl_duty, wl_burst, wl_spread, arrival,
-                                   arr_rate, q_cap, slo, tb),
+                                   arr_rate, q_cap, slo, tb,
+                                   fault, flt_rate, flt_scale),
                                   _BLOCK_CTX_DTYPES)]
 
     mat = pl.BlockSpec((bc, Tp), lambda i: (i, 0))

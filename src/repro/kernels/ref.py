@@ -138,7 +138,8 @@ TRANSITION_CONTEXT = ("now2", "stepi", "policy", "threads", "dt", "wake",
                       "cs_lo", "cs_hi", "ncs_lo", "ncs_hi", "k", "sws_max",
                       "spin_budget", "seed", "oracle", "workload",
                       "wl_period", "wl_duty", "wl_burst", "wl_spread",
-                      "arrival", "arr_rate", "q_cap", "slo", "tb")
+                      "arrival", "arr_rate", "q_cap", "slo", "tb",
+                      "fault", "flt_rate", "flt_scale")
 
 #: Open-loop state appended after the closed carry (spin_cpu) — only
 #: materialized when a batch contains an open-arrival config
@@ -238,6 +239,52 @@ def workload_init_rem(seed, tid, ctr0, ncs_lo, ncs_hi, workload, wl_period,
     return rem0 + phase_u * arrival_phase * (0.5 * (ncs_lo + ncs_hi))
 
 
+def fault_rewind(st, rem, alpha, cores, dt, now_start, seed, fault,
+                 flt_rate, flt_scale):
+    """Fault-row progress theft for one timestep (FAULT_ROWS dispatch).
+
+    Recomputes the GPS progress each CS/NCS thread made during the step
+    that :func:`lock_sim_step_ref` just applied (from the SAME pre-step
+    ``st``, so the rates match bit-for-bit) and gives the stolen fraction
+    back to ``rem``: a thread whose fault window is off-CPU makes no (or
+    partial) progress while spinners keep burning CPU — the asymmetry
+    that lets sleep-leaning disciplines overtake pure spin under heavy
+    preemption.  Windows are ``flt_scale`` seconds; the per-(thread,
+    window) gate uniform comes from the FLT_GATE_SALT counter stream, so
+    an off-CPU stretch persists across every sub-step of its window.
+
+    Applied through ``where(giveback > 0)``, so a fault-free config's
+    ``rem`` is a structural passthrough — bit-identical to the pre-fault
+    engine.  ``now_start`` is the step's START time ``i * dt`` (scalar or
+    (C,)); spin burn and the adaptive budget are deliberately not
+    modulated (see the FAULT_ROWS registry comment).
+    """
+    from repro.core import policy as P
+
+    C, T = st.shape
+    col = lambda v: v[:, None]
+    is_cs = st == P.CS
+    is_ncs = st == P.NCS
+    is_spin = st == P.SPIN
+    n_run = jnp.sum(is_cs | is_ncs | is_spin, axis=-1).astype(jnp.float32)
+    n_spin = jnp.sum(is_spin, axis=-1).astype(jnp.float32)
+    rate = jnp.minimum(1.0, cores / jnp.maximum(n_run, 1.0))
+    holder_rate = rate / (1.0 + alpha * n_spin)
+    prog = (jnp.where(is_cs, (dt * holder_rate)[:, None], 0.0)
+            + jnp.where(is_ncs, (dt * rate)[:, None], 0.0))
+    tid = jnp.arange(T, dtype=jnp.int32)[None, :]
+    tidb = jnp.broadcast_to(tid, (C, T))
+    win = jnp.floor(now_start / flt_scale).astype(jnp.int32) \
+        .astype(jnp.uint32)
+    winT = win[:, None] if jnp.ndim(win) else win
+    gate_u = counter_uniform(col(seed) ^ jnp.uint32(P.FLT_GATE_SALT),
+                             tidb, winT)
+    scale = P.fault_progress_scale(col(fault), is_cs * 1.0, gate_u,
+                                   col(flt_rate))
+    giveback = prog * (1.0 - scale)
+    return jnp.where(giveback > 0.0, rem + giveback, rem)
+
+
 def lock_transitions_ref(st, rem, wake_at, slept, spun, ctr, ticket,
                          completed_pt, sws, cnt, ewma, wuc, permits,
                          nticket, completed, wake_count,
@@ -245,7 +292,8 @@ def lock_transitions_ref(st, rem, wake_at, slept, spun, ctr, ticket,
                          cs_hi, ncs_lo, ncs_hi, k, sws_max, spin_budget,
                          seed, oracle, workload, wl_period, wl_duty,
                          wl_burst, wl_spread, arrival, arr_rate, q_cap,
-                         slo, tb, *, open_state=None):
+                         slo, tb, fault, flt_rate, flt_scale, *,
+                         open_state=None):
     """One transition step for a (C, T) block of configurations.
 
     Stages (same order as the event-driven DES resolves a timestep):
@@ -279,6 +327,19 @@ def lock_transitions_ref(st, rem, wake_at, slept, spun, ctr, ticket,
     teps = dt * jnp.float32(1e-3)
     stepu = jnp.asarray(stepi).astype(jnp.uint32)  # scalar or (C,)
     stepuT = stepu if stepu.ndim == 0 else stepu[:, None]
+
+    # Effective per-(thread, step) wake latency under the config's fault
+    # row (lost wake-ups recover at the `flt_scale` timeout; jitter rows
+    # stretch the delay).  The FLT_WAKE/FLT_MAG streams are salted apart
+    # from every other draw; for no-fault rows the masked dispatch returns
+    # `wake` bit-identically, so `col(now2) + wake_eff` reproduces the
+    # historical `col(now2 + wake)` exactly.
+    flt_w1 = counter_uniform(col(seed) ^ jnp.uint32(P.FLT_WAKE_SALT), tidb,
+                             stepuT)
+    flt_w2 = counter_uniform(col(seed) ^ jnp.uint32(P.FLT_MAG_SALT), tidb,
+                             stepuT)
+    wake_eff = P.fault_wake_delay(col(fault), col(wake), flt_w1, flt_w2,
+                                  col(flt_rate), col(flt_scale))
 
     # -- open-loop admission (arrival rows; see docs/open_loop.md) --------
     # Runs FIRST so a request admitted at step i is in the system for
@@ -346,7 +407,7 @@ def lock_transitions_ref(st, rem, wake_at, slept, spun, ctr, ticket,
         n_grant = jnp.sum(grant.astype(jnp.int32), axis=-1)
         st = jnp.where(grant, P.WAKING,
                        jnp.where(mask, P.SLEEP_ST, st))
-        wake_at = jnp.where(grant, col(now2 + wake), wake_at)
+        wake_at = jnp.where(grant, col(now2) + wake_eff, wake_at)
         return (st, wake_at, permits - n_grant, wake_count + n_grant,
                 jnp.where(mask, 1, slept), jnp.where(mask, inf, rem))
 
@@ -461,7 +522,7 @@ def lock_transitions_ref(st, rem, wake_at, slept, spun, ctr, ticket,
     sel = sleepers & (rank_s < col(quota))
     n_sel = jnp.sum(sel.astype(jnp.int32), axis=-1)
     st = jnp.where(sel, P.WAKING, st)
-    wake_at = jnp.where(sel, col(now2 + wake), wake_at)
+    wake_at = jnp.where(sel, col(now2) + wake_eff, wake_at)
     wake_count = wake_count + n_sel
     permits = permits + (quota - n_sel)    # park-free permits are banked
 
@@ -551,7 +612,8 @@ BLOCK_CONTEXT = ("step0", "limit", "alpha", "cores", "has_budget",
                  "policy", "threads", "dt", "wake", "cs_lo", "cs_hi",
                  "ncs_lo", "ncs_hi", "k", "sws_max", "spin_budget", "seed",
                  "oracle", "workload", "wl_period", "wl_duty", "wl_burst",
-                 "wl_spread", "arrival", "arr_rate", "q_cap", "slo", "tb")
+                 "wl_spread", "arrival", "arr_rate", "q_cap", "slo", "tb",
+                 "fault", "flt_rate", "flt_scale")
 
 
 def lock_sim_block_ref(st, rem, wake_at, slept, spun, ctr, ticket,
@@ -562,6 +624,7 @@ def lock_sim_block_ref(st, rem, wake_at, slept, spun, ctr, ticket,
                        ncs_lo, ncs_hi, k, sws_max, spin_budget, seed,
                        oracle, workload, wl_period, wl_duty, wl_burst,
                        wl_spread, arrival, arr_rate, q_cap, slo, tb,
+                       fault, flt_rate, flt_scale,
                        *, n_sub_steps: int, limit=None, open_state=None):
     """``n_sub_steps`` fused timesteps for a (C, T) block of configurations.
 
@@ -601,13 +664,16 @@ def lock_sim_block_ref(st, rem, wake_at, slept, spun, ctr, ticket,
         now2 = (i.astype(jnp.float32) + 1.0) * dt
         rem_s, burn = lock_sim_step_ref(st_s, rem_s, alpha, cores, dt,
                                         has_budget)
+        rem_s = fault_rewind(st_s, rem_s, alpha, cores, dt,
+                             i.astype(jnp.float32) * dt, seed, fault,
+                             flt_rate, flt_scale)
         out = lock_transitions_ref(st_s, rem_s, *state[2:], now2, i,
                                    policy, threads, dt, wake, cs_lo,
                                    cs_hi, ncs_lo, ncs_hi, k, sws_max,
                                    spin_budget, seed, oracle, workload,
                                    wl_period, wl_duty, wl_burst,
                                    wl_spread, arrival, arr_rate, q_cap,
-                                   slo, tb,
+                                   slo, tb, fault, flt_rate, flt_scale,
                                    open_state=ostate if n_open else None)
         new, onew = out[:16], out[16:]
         if limit is None:

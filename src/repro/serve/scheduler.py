@@ -256,6 +256,16 @@ class SchedScenario:
     of the ``requests`` workers, and depart with a recorded sojourn —
     per-request p50/p95/p99 and the fraction violating ``slo_s`` come
     from the engine's on-device latency histograms.
+
+    ``fault`` selects an interference row from
+    :data:`repro.core.policy.FAULT_ROWS` on the same schema, in serving
+    terms: ``preempt`` models a decode slot losing its device for whole
+    windows (host preemption, GC pauses), ``oversub`` a fractional
+    steady-state slowdown (noisy neighbours), ``lostwake`` a missed
+    promotion callback recovered only after a ``fault_scale_s`` timeout,
+    and ``jitter`` variable cold-start latency.  ``fault_scale_s = 0``
+    auto-scales the fault window to 4 mean decode+think rounds (see
+    docs/robustness.md).
     """
 
     slots: int
@@ -273,6 +283,9 @@ class SchedScenario:
     arrival_rate_rps: float = 0.0
     queue_cap: int = QUEUE_MAX
     slo_s: float = 0.5            # per-request sojourn SLO (seconds)
+    fault: str = "none"           # interference row (FAULT_ROWS)
+    fault_rate: float = 0.0
+    fault_scale_s: float = 0.0    # fault window; 0 -> auto-scaled
 
     @property
     def capacity_rps(self) -> float:
@@ -302,7 +315,10 @@ class SchedScenario:
                          wl_burst=self.wl_burst, wl_spread=self.wl_spread,
                          arrival=self.arrival,
                          arrival_rate=self.arrival_rate_rps,
-                         queue_cap=self.queue_cap, slo=self.slo_s)
+                         queue_cap=self.queue_cap, slo=self.slo_s,
+                         fault=self.fault, fault_rate=self.fault_rate,
+                         fault_scale=self.fault_scale_s
+                         or 4.0 * (self.decode_s + self.think_s))
 
 
 def sample_sched_scenarios(n_scenarios: int, seed: int = 0,

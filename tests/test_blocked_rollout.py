@@ -56,8 +56,9 @@ def test_block_ref_matches_per_step_composition():
     random state — the kernel-level parity pin."""
     import jax.numpy as jnp
 
-    from repro.kernels.ref import (NO_TICKET, lock_sim_block_ref,
-                                   lock_sim_step_ref, lock_transitions_ref)
+    from repro.kernels.ref import (NO_TICKET, fault_rewind,
+                                   lock_sim_block_ref, lock_sim_step_ref,
+                                   lock_transitions_ref)
 
     rng = np.random.default_rng(7)
     C, T = 17, 9
@@ -109,6 +110,9 @@ def test_block_ref_matches_per_step_composition():
         np.full(C, 128, np.int32),                              # q_cap
         np.full(C, 1e-3, np.float32),                           # slo
         rng.integers(0, 2, C).astype(np.int32),                 # tb
+        rng.integers(0, 5, C).astype(np.int32),                 # fault
+        rng.uniform(0.0, 0.5, C).astype(np.float32),            # flt_rate
+        rng.uniform(1e-6, 1e-4, C).astype(np.float32),          # flt_scale
     )
     dt = ctx[2]
     B, step0 = 5, 11
@@ -121,6 +125,9 @@ def test_block_ref_matches_per_step_composition():
         now2 = (jnp.int32(step0 + s).astype(jnp.float32) + 1.0) * dt
         rem, burn = lock_sim_step_ref(want[0], want[1], alpha, cores, dt,
                                       has_budget)
+        rem = fault_rewind(want[0], rem, alpha, cores, dt,
+                           jnp.int32(step0 + s).astype(jnp.float32) * dt,
+                           ctx[11], *ctx[23:26])
         want = list(lock_transitions_ref(want[0], rem, *want[2:], now2,
                                          jnp.int32(step0 + s), *ctx))
         cpu = cpu + burn

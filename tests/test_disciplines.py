@@ -131,6 +131,9 @@ def _one_step_state(policy_id, tickets, T=4):
         q_cap=jnp.full((C,), 128, jnp.int32),
         slo=jnp.full((C,), 1e-3, jnp.float32),
         tb=jnp.zeros((C,), jnp.int32),
+        fault=jnp.zeros((C,), jnp.int32),
+        flt_rate=jnp.zeros((C,), jnp.float32),
+        flt_scale=jnp.full((C,), 1e-4, jnp.float32),
     )
     return args
 
@@ -256,6 +259,9 @@ def test_transitions_kernel_matches_ref_on_random_state():
         np.full(C, 128, np.int32),                              # q_cap
         np.full(C, 1e-3, np.float32),                           # slo
         rng.integers(0, 2, C).astype(np.int32),                 # tb
+        rng.integers(0, 5, C).astype(np.int32),                 # fault
+        rng.uniform(0.0, 0.5, C).astype(np.float32),            # flt_rate
+        rng.uniform(1e-6, 1e-4, C).astype(np.float32),          # flt_scale
     )
     ref = lock_transitions_ref(*args)
     pal = lock_transitions_step(*args, block_configs=16)

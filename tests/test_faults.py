@@ -1,0 +1,372 @@
+"""Fault/interference-row registry: registry + encoding semantics,
+engine invariants (the benign row is bit-identical to the pre-fault
+engine, wake faults never touch pure spinners, full-rate preemption
+yields exactly zero completions), seed-averaged xdes-vs-DES parity per
+fault row, ref-vs-Pallas bit-identity on the fault-aware kernel body,
+the spin-vs-sleep ranking flip under lock-holder preemption, and the
+fault sweep / serve-scenario plumbing (see docs/robustness.md)."""
+
+import numpy as np
+import pytest
+
+from repro.core import policy as P
+from repro.core import xdes
+from repro.core.des import simulate
+from repro.core.policy import SimConfig
+
+FAULTS = ["none", "preempt", "oversub", "lostwake", "jitter"]
+#: The many-windows parity recipe (docs/robustness.md): µs-scale holds
+#: with a 10 µs fault window, so every horizon samples dozens of
+#: windows — the regime where the engine's step-indexed draws and the
+#: DES's event-time draws agree distributionally.
+CS = (1e-6, 2e-6)
+NCS = (2e-6, 4e-6)
+WAKE = 5e-6
+SCALE = 1e-5
+RATES = {"none": 0.0, "preempt": 0.6, "oversub": 0.6,
+         "lostwake": 0.5, "jitter": 0.5}
+
+
+def _mk(lock, fault, seed, rate=None, **kw):
+    kw.setdefault("threads", 8)
+    kw.setdefault("cores", 4)
+    return SimConfig(lock, cs=CS, ncs=NCS, wake_latency=WAKE, seed=seed,
+                     fault=fault,
+                     fault_rate=RATES[fault] if rate is None else rate,
+                     fault_scale=SCALE, **kw)
+
+
+# --------------------------------------------------------------------------
+# Registry + encoding
+# --------------------------------------------------------------------------
+def test_fault_registry():
+    assert sorted(P.FAULT_IDS) == sorted(FAULTS)
+    assert all(P.FAULT_ROWS[n].fid == i for n, i in P.FAULT_IDS.items())
+    assert P.FAULT_IDS["none"] == P.FAULT_NONE == 0
+    # salts are pairwise distinct from the workload/arrival/tie-break ones
+    salts = (P.FLT_GATE_SALT, P.FLT_WAKE_SALT, P.FLT_MAG_SALT,
+             P.WL_PHASE_SALT, P.WL_SPREAD_SALT, P.AR_SALT, P.TB_SALT)
+    assert len(set(salts)) == len(salts)
+
+
+def test_fault_progress_scalar_semantics():
+    # none: exactly 1.0 whatever the draws
+    assert P.fault_progress_scale(P.FAULT_NONE, 1.0, 0.1, 0.9) == 1.0
+    # preempt: the whole window is lost iff the gate fires
+    assert P.fault_progress_scale(P.FAULT_PREEMPT, 1.0, 0.3, 0.6) == 0.0
+    assert P.fault_progress_scale(P.FAULT_PREEMPT, 1.0, 0.9, 0.6) == 1.0
+    # oversub: fractional slowdown, never a blackout
+    assert P.fault_progress_scale(P.FAULT_OVERSUB, 0.0, 0.5, 0.6) \
+        == pytest.approx(0.7)
+    # wake-path rows leave progress untouched
+    for fid in (P.FAULT_LOSTWAKE, P.FAULT_JITTER):
+        assert P.fault_progress_scale(fid, 1.0, 0.01, 0.9) == 1.0
+
+
+def test_fault_wake_delay_scalar_semantics():
+    wake, scale = 5e-6, 1e-4
+    # progress rows leave the wake latency bit-identical
+    for fid in (P.FAULT_NONE, P.FAULT_PREEMPT, P.FAULT_OVERSUB):
+        assert P.fault_wake_delay(fid, wake, 0.01, 0.7, 0.9, scale) == wake
+    # lostwake: a dropped wake recovers exactly at the timeout
+    assert P.fault_wake_delay(P.FAULT_LOSTWAKE, wake, 0.3, 0.7, 0.5,
+                              scale) == scale
+    assert P.fault_wake_delay(P.FAULT_LOSTWAKE, wake, 0.9, 0.7, 0.5,
+                              scale) == wake
+    # jitter: up to `scale` extra, magnitude from the second draw
+    assert P.fault_wake_delay(P.FAULT_JITTER, wake, 0.3, 0.5, 0.5,
+                              scale) == pytest.approx(wake + 0.5 * scale)
+    assert P.fault_wake_delay(P.FAULT_JITTER, wake, 0.9, 0.5, 0.5,
+                              scale) == wake
+
+
+def test_sim_config_validates_and_encodes_fault():
+    cfgs = [_mk("mutable", f, seed=0) for f in FAULTS]
+    arrs = P.encode_configs(cfgs)
+    assert arrs["fault"].tolist() == [P.FAULT_IDS[f] for f in FAULTS]
+    assert arrs["flt_rate"].tolist() == pytest.approx(
+        [np.float32(RATES[f]) for f in FAULTS])
+    assert arrs["flt_scale"].tolist() == [np.float32(SCALE)] * len(FAULTS)
+    with pytest.raises(ValueError):
+        _mk("mutable", "meteor", seed=0, rate=0.5)
+    with pytest.raises(ValueError):
+        _mk("mutable", "preempt", seed=0, rate=1.5)
+    with pytest.raises(ValueError):
+        SimConfig("mutable", threads=2, cores=2, cs=CS, ncs=CS,
+                  fault="jitter", fault_rate=0.5, fault_scale=0.0)
+
+
+def _raw_columns(n=3, lock="ttas"):
+    """Full RAW column dict for ``n`` benign configs (the interchange
+    form the catalog generators emit)."""
+    return P.config_columns([
+        SimConfig(lock, threads=4, cores=4, cs=CS, ncs=CS, seed=s)
+        for s in range(n)])
+
+
+def test_encode_columns_fault_strict_and_clamp():
+    base = _raw_columns()
+    # fault ids and rates always raise, named by row — never clamped
+    with pytest.raises(ValueError, match="row 1.*fault id"):
+        P.encode_columns({**base, "fault": np.asarray([0, 9, 0])})
+    with pytest.raises(ValueError, match="fault_rate"):
+        P.encode_columns({**base, "fault": 1,
+                          "fault_rate": np.asarray([0.5, 0.5, 2.0])},
+                         strict=False)
+    # the strict=False escape hatch still clamps the continuous sweep
+    # knobs on a faulted grid (mechanically generated edge cells survive)
+    out = P.encode_columns({**base, "fault": "oversub", "fault_rate": 0.5,
+                            "arrival_rate": np.asarray([-1.0, 0.0, 5.0]),
+                            "wl_duty": np.asarray([0.0, 0.5, 1.0])},
+                           strict=False)
+    assert out["arr_rate"].min() >= 0.0
+    assert out["wl_duty"].max() <= 1.0    # clamped through validation
+    with pytest.raises(ValueError, match="arrival_rate"):
+        P.encode_columns({**base, "arrival_rate": -1.0})
+
+
+def test_raw_fault_defaults_encode_benign():
+    """Column producers written before the fault rows (no fault keys at
+    all) encode bit-identically to an explicit benign row."""
+    base = {k: v for k, v in _raw_columns(4, lock="mutable").items()
+            if k not in P.RAW_FAULT_DEFAULTS}
+    old = P.encode_columns(dict(base))
+    new = P.encode_columns({**base, "fault": "none", "fault_rate": 0.0,
+                            "fault_scale": P.RAW_FAULT_DEFAULTS[
+                                "fault_scale"]})
+    for k in old:
+        np.testing.assert_array_equal(old[k], new[k], err_msg=k)
+
+
+# --------------------------------------------------------------------------
+# Engine invariants
+# --------------------------------------------------------------------------
+def test_none_row_bit_identical_to_prefault_engine():
+    plain = [SimConfig(l, threads=6, cores=4, cs=CS, ncs=NCS,
+                       wake_latency=WAKE, seed=s)
+             for l in ("ttas", "sleep", "mutable") for s in (0, 1)]
+    benign = [_mk(l, "none", s, threads=6)
+              for l in ("ttas", "sleep", "mutable") for s in (0, 1)]
+    a = xdes.simulate_batch(plain, n_steps=300)
+    b = xdes.simulate_batch(benign, n_steps=300)
+    np.testing.assert_array_equal(a.completed, b.completed)
+    np.testing.assert_array_equal(a.completed_per_thread,
+                                  b.completed_per_thread)
+    np.testing.assert_array_equal(a.spin_cpu, b.spin_cpu)
+
+
+def test_wake_faults_never_touch_pure_spinners():
+    """lostwake/jitter only perturb the wake path; disciplines that never
+    park (ttas) must be bit-identical to their benign run."""
+    for fault in ("lostwake", "jitter"):
+        a = xdes.simulate_batch([_mk("ttas", "none", s) for s in range(3)],
+                                n_steps=300)
+        b = xdes.simulate_batch([_mk("ttas", fault, s) for s in range(3)],
+                                n_steps=300)
+        np.testing.assert_array_equal(a.completed, b.completed,
+                                      err_msg=fault)
+        np.testing.assert_array_equal(a.completed_per_thread,
+                                      b.completed_per_thread,
+                                      err_msg=fault)
+        # ...while the same fault visibly taxes a sleeping discipline
+        c = xdes.simulate_batch([_mk("sleep", "none", s)
+                                 for s in range(3)], n_steps=300)
+        d = xdes.simulate_batch([_mk("sleep", fault, s)
+                                 for s in range(3)], n_steps=300)
+        assert d.completed.sum() < c.completed.sum(), fault
+
+
+def test_full_rate_preemption_stops_everything():
+    """fault_rate=1.0 preemption gates every window of every thread: the
+    rewind must give back every completion — any leak means the engine
+    let a gated thread slip through mid-window."""
+    cfgs = [_mk(l, "preempt", s, rate=1.0)
+            for l in ("ttas", "mcs", "sleep", "mutable") for s in (0, 1)]
+    res = xdes.simulate_batch(cfgs, n_steps=500)
+    assert res.completed.tolist() == [0] * len(cfgs)
+
+
+def test_fault_rows_degrade_throughput():
+    for fault in ("preempt", "oversub"):
+        base = xdes.simulate_batch(
+            [_mk("mutable", "none", s) for s in range(3)], target_cs=100)
+        hurt = xdes.simulate_batch(
+            [_mk("mutable", fault, s) for s in range(3)], target_cs=100)
+        assert (hurt.throughput.mean()
+                < 0.9 * base.throughput.mean()), fault
+
+
+# --------------------------------------------------------------------------
+# xdes vs DES parity per fault row (the event-driven twin)
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("fault", FAULTS)
+def test_xdes_vs_des_parity_per_row(fault):
+    """Seed-averaged throughput band per (fault, lock) cell.  The DES
+    draws its gates at event times and its wake faults from per-thread
+    counters, the engine from step-indexed streams — agreement is
+    distributional, so the pin is the 4-seed mean in a wide band, in the
+    many-windows regime (``SCALE`` = dozens of fault windows per
+    horizon; see docs/robustness.md for why few-window runs diverge)."""
+    locks = ("ttas", "sleep", "mutable")
+    seeds = (0, 1, 2, 3)
+    cfgs = [_mk(lock, fault, s) for lock in locks for s in seeds]
+    x = xdes.simulate_batch(cfgs, target_cs=150)
+    xthr = x.throughput.reshape(len(locks), len(seeds)).mean(axis=1)
+    for i, lock in enumerate(locks):
+        dthr = np.mean([simulate(
+            lock, threads=8, cores=4, cs=CS, ncs=NCS, wake_latency=WAKE,
+            target_cs=800, seed=s, **cfgs[i * len(seeds)].fault_kwargs()
+        ).throughput for s in seeds])
+        assert 0.7 * dthr < xthr[i] < 1.4 * dthr, (
+            fault, lock, xthr[i], dthr)
+
+
+# --------------------------------------------------------------------------
+# ref vs Pallas bit-identity on the fault-aware kernel body
+# --------------------------------------------------------------------------
+def _fault_batch(seed=0):
+    """Every fault row x several disciplines/oracles, random shapes —
+    the randomized parity surface for the fault-aware kernel body."""
+    rng = np.random.default_rng(seed)
+    cfgs = []
+    for f in FAULTS:
+        for lock, oracle in (("mutable", "paper"), ("mutable", "aimd"),
+                             ("ttas", "paper"), ("mcs", "paper"),
+                             ("sleep", "paper"), ("adaptive", "paper")):
+            cfgs.append(SimConfig(
+                lock, threads=int(rng.integers(2, 10)),
+                cores=int(rng.integers(2, 10)), cs=CS, ncs=NCS,
+                wake_latency=WAKE, seed=int(rng.integers(0, 1000)),
+                oracle=oracle, fault=f,
+                fault_rate=float(rng.uniform(0.2, 0.8)) if f != "none"
+                else 0.0,
+                fault_scale=float(rng.uniform(5e-6, 5e-5))))
+    return cfgs
+
+
+def _assert_results_equal(a, b, msg=""):
+    np.testing.assert_array_equal(a.completed, b.completed, err_msg=msg)
+    np.testing.assert_array_equal(a.completed_per_thread,
+                                  b.completed_per_thread, err_msg=msg)
+    np.testing.assert_array_equal(a.wake_count, b.wake_count, err_msg=msg)
+    np.testing.assert_array_equal(a.final_sws, b.final_sws, err_msg=msg)
+    np.testing.assert_array_equal(a.spin_cpu, b.spin_cpu, err_msg=msg)
+
+
+def test_fault_ref_vs_pallas_per_step():
+    cfgs = _fault_batch(seed=17)
+    ref = xdes.simulate_batch(cfgs, n_steps=260, rollout="scan",
+                              backend="ref")
+    pal = xdes.simulate_batch(cfgs, n_steps=260, rollout="scan",
+                              backend="pallas")
+    _assert_results_equal(ref, pal, "per-step")
+
+
+@pytest.mark.parametrize("block_steps", [1, 32])
+def test_fault_ref_vs_pallas_blocked(block_steps):
+    """The blocked body re-derives the global step (and so the fault
+    window) from step0 + s — bit-identity across block sizes pins that
+    indexing."""
+    cfgs = _fault_batch(seed=19)
+    ref = xdes.simulate_batch(cfgs, n_steps=260, rollout="blocked",
+                              block_steps=block_steps, backend="ref")
+    pal = xdes.simulate_batch(cfgs, n_steps=260, rollout="blocked",
+                              block_steps=block_steps, backend="pallas")
+    _assert_results_equal(ref, pal, f"blocked B={block_steps}")
+    scan = xdes.simulate_batch(cfgs, n_steps=260, rollout="scan",
+                               backend="ref")
+    _assert_results_equal(ref, scan, f"blocked==scan B={block_steps}")
+
+
+# --------------------------------------------------------------------------
+# The paper-level claim: preemption flips the ranking toward sleep
+# --------------------------------------------------------------------------
+def test_preemption_flips_ranking_toward_sleep():
+    """On the benign oversubscribed machine the mutable lock wins (its
+    EvalSWS window beats both extremes); under heavy lock-holder
+    preemption the pure sleep lock overtakes every spin-leaning
+    discipline — preemption steals progress but never spin burn, so
+    parked waiters are the only ones not paying for stolen windows."""
+    locks = ("ttas", "mutable", "sleep")
+    seeds = (0, 1, 2, 3)
+    cfgs = [_mk(l, f, s, rate=r)
+            for (f, r) in (("none", 0.0), ("preempt", 0.7))
+            for l in locks for s in seeds]
+    res = xdes.simulate_batch(cfgs, target_cs=150)
+    thr = res.throughput.reshape(2, len(locks), len(seeds)).mean(-1)
+    benign = dict(zip(locks, thr[0]))
+    faulted = dict(zip(locks, thr[1]))
+    assert benign["mutable"] > benign["sleep"] > benign["ttas"]
+    assert faulted["sleep"] > 1.2 * faulted["ttas"]
+    assert faulted["sleep"] > 1.2 * faulted["mutable"]
+
+
+# --------------------------------------------------------------------------
+# Sweep + serve plumbing
+# --------------------------------------------------------------------------
+def test_fault_sweep_catalog_shape():
+    from repro.configs.catalog import (LOCK_FAULT_RATES, LOCK_FAULTS,
+                                       lock_discipline_variants,
+                                       lock_fault_sweep,
+                                       lock_fault_variants)
+
+    disc = lock_discipline_variants()
+    variants = lock_fault_variants()
+    assert len(variants) == len(LOCK_FAULTS) * len(disc)
+    cfgs = lock_fault_sweep(n_scenarios=3)
+    assert len(cfgs) == 3 * len(variants)
+    B = len(variants)
+    for s in range(3):
+        block = cfgs[s * B:(s + 1) * B]
+        # scenario-major: every row of the block shares its machine
+        assert len({(c.threads, c.cores, c.cs, c.wake_latency)
+                    for c in block}) == 1
+        # fault-major within the block, disciplines minor
+        assert [c.fault for c in block] == [
+            f for f in LOCK_FAULTS for _ in disc]
+        assert [c.fault_rate for c in block[:len(disc)]] \
+            == [LOCK_FAULT_RATES["none"]] * len(disc)
+        # the fault window is scenario-scaled
+        assert block[0].fault_scale == pytest.approx(
+            4.0 * (block[0].cs[1] + block[0].ncs[1]))
+
+
+def test_fault_columns_twin_bit_identical():
+    from repro.configs.catalog import lock_fault_columns, lock_fault_sweep
+
+    a = P.encode_configs(lock_fault_sweep(n_scenarios=5, seed=3))
+    b = P.encode_configs(lock_fault_columns(n_scenarios=5, seed=3))
+    assert sorted(a) == sorted(b)
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k], err_msg=k)
+    assert sorted(set(b["fault"].tolist())) == sorted(P.FAULT_IDS.values())
+
+
+def test_fault_grid_smoke():
+    from benchmarks.sweep import fault_grid
+
+    out = fault_grid(n_scenarios=4, target_cs=25, verbose=False)
+    assert out["meta"]["n_configs"] == 4 * 5 * 9
+    assert set(out["faults"]) == set(FAULTS)
+    for fl, rows in out["faults"].items():
+        assert sum(r["wins"] for r in rows.values()) == 4, fl
+        # the benign row retains exactly 1.0 of itself
+        if fl == "none":
+            assert all(r["mean_retained_vs_none"] == pytest.approx(1.0)
+                       for r in rows.values())
+    assert all(0 < c["win_share"] <= 1 for c in out["phase"])
+
+
+def test_sched_scenario_fault_row():
+    from repro.serve import SchedScenario
+
+    sc = SchedScenario(slots=8, requests=20, decode_s=0.05, think_s=0.1,
+                       fault="preempt", fault_rate=0.5)
+    c = sc.to_sim_config("mutable")
+    assert (c.fault, c.fault_rate) == ("preempt", 0.5)
+    assert c.fault_scale == pytest.approx(4.0 * (0.05 + 0.1))
+    assert SchedScenario(slots=4, requests=8).to_sim_config("zero").fault \
+        == "none"
+    with pytest.raises(ValueError):
+        SchedScenario(slots=4, requests=8,
+                      fault="meteor").to_sim_config("zero")

@@ -1,0 +1,382 @@
+"""Self-healing sweeps and fault tolerance (docs/robustness.md): the
+streaming engine's OOM chunk-halving, non-finite quarantine, and
+chunk-granular checkpoint/resume (including a hard mid-sweep kill); the
+heartbeat monitor against a genuinely stalled peer; and the checkpoint
+manager's crash-safety contract (a save that dies mid-write leaves the
+previous checkpoint restorable and LATEST never dangling)."""
+
+import json
+import os
+import subprocess
+import sys
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import stream as xstream
+from repro.core.policy import SimConfig, config_columns
+
+LOCKS = ["ttas", "fifo", "sleep", "mutable", "adaptive", "mcs"]
+
+#: Deterministic mixed batch shared — via exec — between this process and
+#: the crash-resume subprocess, so both sides build the SAME sweep plan
+#: (the resume fingerprint covers the encoded inputs bit for bit).
+_BATCH_SRC = r"""
+import numpy as np
+from repro.core.policy import SimConfig
+
+def res_batch(n=24, seed=42):
+    locks = ["ttas", "fifo", "sleep", "mutable", "adaptive", "mcs"]
+    rng = np.random.default_rng(seed)
+    return [SimConfig(locks[i % 6], threads=int(rng.integers(2, 10)),
+                      cores=int(rng.integers(2, 8)),
+                      cs=(0.0, 3.7e-6), ncs=(0.0, 8e-6),
+                      wake_latency=8e-6, seed=int(rng.integers(0, 1000)),
+                      oracle=("paper", "aimd", "fixed")[i % 3])
+            for i in range(n)]
+"""
+_ns: dict = {}
+exec(_BATCH_SRC, _ns)
+res_batch = _ns["res_batch"]
+
+
+def _assert_summaries_equal(a, b, msg=""):
+    for f in xstream.SUMMARY_FIELDS:
+        np.testing.assert_array_equal(getattr(a, f), getattr(b, f),
+                                      err_msg=f"{msg}:{f}")
+
+
+# --------------------------------------------------------------------------
+# OOM chunk-halving
+# --------------------------------------------------------------------------
+def test_oom_retries_with_halved_chunks_bit_identical(monkeypatch):
+    """First device call dies with RESOURCE_EXHAUSTED: the chunk is
+    split into two group-aligned halves, both complete, and the sweep's
+    bits match an unfailed run."""
+    cfgs = res_batch(24, seed=7)
+    clean = xstream.sweep_stream(cfgs, n_steps=300, chunk=8, shard=False)
+
+    real = xstream._run_chunk
+    calls = {"n": 0, "oom": 0}
+
+    def flaky(*a, **kw):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            calls["oom"] += 1
+            raise RuntimeError(
+                "RESOURCE_EXHAUSTED: Out of memory while trying to "
+                "allocate 1234567 bytes.")
+        return real(*a, **kw)
+
+    monkeypatch.setattr(xstream, "_run_chunk", flaky)
+    with pytest.warns(UserWarning, match="halved"):
+        s = xstream.sweep_stream(cfgs, n_steps=300, chunk=8, shard=False)
+    assert calls["oom"] == 1
+    assert calls["n"] >= 4          # 1 failed + 2 halves + later chunks
+    _assert_summaries_equal(s, clean, "oom-halved")
+
+
+def test_oom_at_quantum_floor_reraises(monkeypatch):
+    """Halving bottoms out at one reduction/shard quantum: a persistent
+    allocation failure eventually surfaces instead of looping."""
+    cfgs = res_batch(8, seed=1)
+
+    def always_oom(*a, **kw):
+        raise RuntimeError("RESOURCE_EXHAUSTED: out of memory")
+
+    monkeypatch.setattr(xstream, "_run_chunk", always_oom)
+    with pytest.warns(UserWarning, match="halved"):
+        with pytest.raises(RuntimeError, match="RESOURCE_EXHAUSTED"):
+            xstream.sweep_stream(cfgs, n_steps=100, chunk=4, shard=False)
+
+
+def test_non_oom_error_propagates_without_halving(monkeypatch):
+    """Only allocation failures trigger the retry path — anything else
+    is a real bug and must surface on the FIRST call."""
+    cfgs = res_batch(8, seed=2)
+    calls = {"n": 0}
+
+    def broken(*a, **kw):
+        calls["n"] += 1
+        raise ValueError("wrong dtype")
+
+    monkeypatch.setattr(xstream, "_run_chunk", broken)
+    with pytest.raises(ValueError, match="wrong dtype"):
+        xstream.sweep_stream(cfgs, n_steps=100, chunk=8, shard=False)
+    assert calls["n"] == 1
+
+
+# --------------------------------------------------------------------------
+# Non-finite quarantine
+# --------------------------------------------------------------------------
+def test_quarantine_reports_and_sanitizes_wins(monkeypatch, tmp_path):
+    """One poisoned config (NaN t_end): its raw value stays visible in
+    the summary columns, a structured failure record (global index,
+    offending fields, full config) lands in StreamResult.failures and
+    the JSON report, and the win-count reduction sees a sanitized row so
+    the poison cannot flip a phase-diagram cell."""
+    cfgs = res_batch(16, seed=11)
+    red = xstream.CellReduce(group=4,
+                             cell_ids=np.asarray([0, 1, 0, 1], np.int32),
+                             n_cells=2)
+    clean = xstream.sweep_stream(cfgs, n_steps=250, chunk=8, shard=False,
+                                 reduce=red)
+
+    real = xstream._run_chunk
+    state = {"n": 0}
+
+    def poison(*a, **kw):
+        state["n"] += 1
+        out = {k: np.asarray(v).copy()
+               for k, v in real(*a, **kw).items()}
+        if state["n"] == 1:
+            out["t_end"][1] = np.nan
+        return out
+
+    monkeypatch.setattr(xstream, "_run_chunk", poison)
+    fpath = str(tmp_path / "sweep_failures.json")
+    with pytest.warns(UserWarning, match="quarantined"):
+        s = xstream.sweep_stream(cfgs, n_steps=250, chunk=8, shard=False,
+                                 reduce=red, failures_path=fpath)
+
+    # raw NaN kept in the summary column; every other row untouched
+    assert np.isnan(s.t_end[1])
+    mask = np.ones(16, bool)
+    mask[1] = False
+    np.testing.assert_array_equal(s.completed[mask], clean.completed[mask])
+    np.testing.assert_array_equal(s.t_end[mask], clean.t_end[mask])
+
+    # structured failure record, in memory and on disk
+    assert len(s.failures) == 1
+    rec = s.failures[0]
+    assert rec["index"] == 1
+    assert "t_end" in rec["fields"]
+    assert rec["config"] and isinstance(rec["config"], dict)
+    with open(fpath) as f:
+        report = json.load(f)
+    assert report["n_configs"] == 16 and report["n_failures"] == 1
+    assert report["failures"][0]["index"] == 1
+
+    # win reduction saw the sanitized row (throughput 0), not the NaN
+    thr = s.completed.astype(np.float64) / np.where(
+        np.isfinite(s.t_end), np.maximum(s.t_end, 1e-30), 1.0)
+    thr[1] = 0.0
+    expect = np.zeros((2, 4), np.int64)
+    win = thr.reshape(4, 4).argmax(axis=1)
+    for g in range(4):
+        expect[red.cell_ids[g], win[g]] += 1
+    np.testing.assert_array_equal(s.wins, expect)
+
+
+# --------------------------------------------------------------------------
+# Checkpoint / resume
+# --------------------------------------------------------------------------
+_CRASH_SCRIPT = r"""
+import os
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+import numpy as np
+from repro.core import stream as xstream
+""" + _BATCH_SRC + r"""
+real = xstream._run_chunk
+calls = {"n": 0}
+
+def dying(*a, **kw):
+    calls["n"] += 1
+    if calls["n"] == 3:
+        os._exit(9)       # hard kill mid-sweep: no cleanup, no atexit
+    return real(*a, **kw)
+
+xstream._run_chunk = dying
+red = xstream.CellReduce(group=6,
+                         cell_ids=np.asarray([0, 1, 0, 1], np.int32),
+                         n_cells=2)
+xstream.sweep_stream(res_batch(), n_steps=300, chunk=6, shard=False,
+                     reduce=red, checkpoint_dir=os.environ["CKPT_DIR"])
+print("UNREACHABLE")
+"""
+
+
+def test_kill_mid_sweep_then_resume_bit_identical(tmp_path):
+    """A subprocess sweep is hard-killed (os._exit) inside its third
+    chunk; resuming from the checkpoint skips the two committed chunks
+    and the final result — including the on-device win counts — is bit-
+    identical to an uninterrupted run."""
+    ckpt = str(tmp_path / "ck")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        filter(None, ["src", env.get("PYTHONPATH")]))
+    env["CKPT_DIR"] = ckpt
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", _CRASH_SCRIPT],
+                          capture_output=True, text=True, timeout=600,
+                          env=env)
+    assert proc.returncode == 9, proc.stdout + proc.stderr
+    assert "UNREACHABLE" not in proc.stdout
+    assert os.path.exists(os.path.join(ckpt, "LATEST"))
+
+    cfgs = res_batch()
+    red = xstream.CellReduce(group=6,
+                             cell_ids=np.asarray([0, 1, 0, 1], np.int32),
+                             n_cells=2)
+    clean = xstream.sweep_stream(cfgs, n_steps=300, chunk=6, shard=False,
+                                 reduce=red)
+    resumed = xstream.sweep_stream(cfgs, n_steps=300, chunk=6,
+                                   shard=False, reduce=red,
+                                   checkpoint_dir=ckpt, resume=True)
+    assert resumed.resumed_chunks == 2 and resumed.n_chunks == 4
+    _assert_summaries_equal(resumed, clean, "crash-resume")
+    np.testing.assert_array_equal(resumed.wins, clean.wins)
+
+
+def test_resume_from_complete_checkpoint_recomputes_nothing(monkeypatch,
+                                                            tmp_path):
+    """Resuming a sweep that already finished restores every chunk from
+    disk: the device is never touched and the bits match."""
+    cfgs = res_batch(24, seed=5)
+    ckpt = str(tmp_path / "ck")
+    plain = xstream.sweep_stream(cfgs, n_steps=250, chunk=8, shard=False)
+    first = xstream.sweep_stream(cfgs, n_steps=250, chunk=8, shard=False,
+                                 checkpoint_dir=ckpt)
+    # checkpointing is observation-only: same bits as the plain run
+    _assert_summaries_equal(first, plain, "ckpt-observer")
+
+    def boom(*a, **kw):
+        raise AssertionError("resume recomputed a committed chunk")
+
+    monkeypatch.setattr(xstream, "_run_chunk", boom)
+    res = xstream.sweep_stream(cfgs, n_steps=250, chunk=8, shard=False,
+                               checkpoint_dir=ckpt, resume=True)
+    assert res.resumed_chunks == res.n_chunks == 3
+    _assert_summaries_equal(res, first, "full-resume")
+
+
+def test_resume_refuses_foreign_checkpoint(tmp_path):
+    """A checkpoint written by a DIFFERENT sweep plan (other configs or
+    other chunking) must never silently resume into this one."""
+    ckpt = str(tmp_path / "ck")
+    xstream.sweep_stream(res_batch(16, seed=3), n_steps=200, chunk=8,
+                         shard=False, checkpoint_dir=ckpt)
+    with pytest.raises(ValueError, match="refusing to resume"):
+        xstream.sweep_stream(res_batch(16, seed=4), n_steps=200, chunk=8,
+                             shard=False, checkpoint_dir=ckpt,
+                             resume=True)
+    with pytest.raises(ValueError, match="refusing to resume"):
+        xstream.sweep_stream(res_batch(16, seed=3), n_steps=200, chunk=4,
+                             shard=False, checkpoint_dir=ckpt,
+                             resume=True)
+
+
+# --------------------------------------------------------------------------
+# strict= escape hatch
+# --------------------------------------------------------------------------
+def test_sweep_stream_strict_false_clamps_columns():
+    """Out-of-range sweep columns raise under the default strict
+    validation; strict=False clamps them (arrival_rate -> 0 here, i.e.
+    the closed-loop encoding) instead of killing a 100k-config sweep."""
+    cols = config_columns(res_batch(8, seed=9))
+    bad = {k: np.asarray(v).copy() for k, v in cols.items()}
+    bad["arrival_rate"] = np.full(8, -3.0, np.float64)
+    with pytest.raises(ValueError):
+        xstream.sweep_stream(bad, n_steps=100, chunk=8, shard=False)
+    s = xstream.sweep_stream(bad, n_steps=100, chunk=8, shard=False,
+                             strict=False)
+    good = {k: np.asarray(v).copy() for k, v in cols.items()}
+    good["arrival_rate"] = np.zeros(8, np.float64)
+    ref = xstream.sweep_stream(good, n_steps=100, chunk=8, shard=False)
+    _assert_summaries_equal(s, ref, "strict-clamp")
+
+
+# --------------------------------------------------------------------------
+# Heartbeat: a genuinely stalled peer
+# --------------------------------------------------------------------------
+def test_straggler_monitor_flags_stalled_thread():
+    """Four live worker threads; one silently stops beating after step 2.
+    While its silence is shorter than dead_after_s it is a straggler
+    (behind the median by > lag_steps); once the silence exceeds
+    dead_after_s it is presumed dead and no longer blocks the barrier."""
+    from repro.runtime.heartbeat import HeartbeatBoard, StragglerMonitor
+
+    board = HeartbeatBoard(4)
+
+    def worker(hid, stall_after):
+        for step in range(1, 8):
+            if stall_after is not None and step > stall_after:
+                return
+            board.beat(hid, step)
+            time.sleep(0.01)
+
+    threads = [threading.Thread(target=worker, args=(h, None))
+               for h in range(3)]
+    threads.append(threading.Thread(target=worker, args=(3, 2)))
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+
+    mon = StragglerMonitor(board, dead_after_s=60.0, lag_steps=2)
+    rep = mon.wait_for_step(7, timeout_s=0.5)
+    assert rep.stragglers == [3]
+    assert sorted(rep.ready) == [0, 1, 2]
+    assert rep.failed == []
+
+    # silence crosses dead_after_s: reclassified failed, barrier unblocks
+    time.sleep(0.25)
+    for h in range(3):
+        board.beat(h, 8)
+    mon2 = StragglerMonitor(board, dead_after_s=0.2, lag_steps=2)
+    t0 = time.monotonic()
+    rep2 = mon2.wait_for_step(8, timeout_s=5.0)
+    assert time.monotonic() - t0 < 4.0      # did not ride the timeout
+    assert rep2.failed == [3]
+    assert sorted(rep2.ready) == [0, 1, 2]
+
+
+# --------------------------------------------------------------------------
+# Checkpoint manager crash-safety
+# --------------------------------------------------------------------------
+def test_checkpoint_crash_mid_save_keeps_previous(monkeypatch, tmp_path):
+    """A save that dies mid-serialization (partial tmp dir on disk)
+    leaves the previous checkpoint restorable and LATEST still pointing
+    at it; the next successful save cleans the debris and commits."""
+    from repro.checkpoint import manager as ckpt
+
+    mgr = ckpt.CheckpointManager(str(tmp_path), keep_last=3,
+                                 async_save=False)
+    state1 = {"a": np.arange(8, dtype=np.int32),
+              "b": np.full((), 1.5, np.float32)}
+    mgr.save(1, state1)
+
+    real_save = ckpt.save_pytree
+
+    def die_mid_write(tree, out_dir):
+        os.makedirs(out_dir, exist_ok=True)
+        with open(os.path.join(out_dir, "leaf_000000.npy"), "wb") as f:
+            f.write(b"partial garbage")     # torn write, no manifest
+        raise RuntimeError("killed mid-serialization")
+
+    monkeypatch.setattr(ckpt, "save_pytree", die_mid_write)
+    state2 = {"a": np.arange(8, dtype=np.int32) * 2,
+              "b": np.full((), 2.5, np.float32)}
+    with pytest.raises(RuntimeError, match="mid-serialization"):
+        mgr.save(2, state2)
+
+    # LATEST never dangles: still the last COMMITTED step, restorable
+    assert mgr.latest_step() == 1
+    tmp_debris = os.path.join(str(tmp_path), "step_00000002.tmp")
+    assert os.path.exists(tmp_debris)       # the torn save, uncommitted
+    template = {"a": np.zeros(8, np.int32), "b": np.zeros((), np.float32)}
+    step, tree = mgr.restore(template)
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(tree["a"]), state1["a"])
+    assert float(tree["b"]) == 1.5
+
+    # recovery: the retried save clears the debris and commits atomically
+    monkeypatch.setattr(ckpt, "save_pytree", real_save)
+    mgr.save(2, state2)
+    assert mgr.latest_step() == 2
+    assert not os.path.exists(tmp_debris)
+    step, tree = mgr.restore(template)
+    assert step == 2
+    np.testing.assert_array_equal(np.asarray(tree["a"]), state2["a"])
