@@ -14,6 +14,7 @@
 | workload   | workload x lock map    | benchmarks.workload_diagram (sharded xdes) |
 | arrival    | open-loop traffic map  | benchmarks.arrival_diagram (sharded xdes) |
 | fault      | fault x lock map       | benchmarks.fault_diagram (sharded xdes) |
+| park       | park-cost x lock map   | benchmarks.park_diagram (sharded xdes) |
 | perf       | engine perf trajectory | benchmarks.perf_bench   |
 | fidelity   | dt-convergence study   | benchmarks.fidelity_study (xdes vs DES; not in --quick/--full, run on demand) |
 
@@ -98,6 +99,16 @@ def main(argv=None) -> None:
             top = max(rows, key=lambda d: rows[d]["wins"])
             summary.append((f"fault.{fl}.top", top))
         print("\n" + "=" * 72)
+        print("[quick] park-cost x discipline diagram smoke (sharded xdes)")
+        print("=" * 72)
+        from benchmarks import park_diagram
+        # 4 scenarios keep the park_cost=100 horizons (the slowest cells
+        # in the whole quick path) inside the smoke budget
+        pd = park_diagram.main(["--quick", "--scenarios", "4"])
+        for p, rows in pd["park_costs"].items():
+            top = max(rows, key=lambda d: rows[d]["wins"])
+            summary.append((f"park.{p}.top", top))
+        print("\n" + "=" * 72)
         print("[quick] xdes perf microbenchmark")
         print("=" * 72)
         from benchmarks import perf_bench
@@ -117,7 +128,7 @@ def main(argv=None) -> None:
         return
 
     print("=" * 72)
-    print("[1/11] lockbench fig1 (paper Fig. 1 timelines)")
+    print("[1/12] lockbench fig1 (paper Fig. 1 timelines)")
     print("=" * 72)
     from benchmarks import lockbench
     f1 = lockbench.fig1()
@@ -129,7 +140,7 @@ def main(argv=None) -> None:
                     f1["mutable"]["makespan_slots"]))
 
     print("\n" + "=" * 72)
-    print("[2/11] lockbench fig3 (paper Fig. 3 grid, batched xdes engine)")
+    print("[2/12] lockbench fig3 (paper Fig. 3 grid, batched xdes engine)")
     print("=" * 72)
     f3 = lockbench.fig3(target_cs=400 if args.full else 200)
     for regime, data in f3.items():
@@ -140,7 +151,7 @@ def main(argv=None) -> None:
         json.dump({"fig1": f1, "fig3": f3}, f, indent=1)
 
     print("\n" + "=" * 72)
-    print("[3/11] batched xdes sweep (fig3 grid + 1000-config scenarios)")
+    print("[3/12] batched xdes sweep (fig3 grid + 1000-config scenarios)")
     print("=" * 72)
     from benchmarks import sweep
     sw = sweep.main(["--target-cs", "250" if args.full else "150"])
@@ -150,7 +161,7 @@ def main(argv=None) -> None:
         summary.append((f"sweep.scenario.{lock}.mean_ratio", round(r, 3)))
 
     print("\n" + "=" * 72)
-    print("[4/11] PHOLD on share-everything PDES (paper Fig. 4)")
+    print("[4/12] PHOLD on share-everything PDES (paper Fig. 4)")
     print("=" * 72)
     from benchmarks import phold
     ph = phold.run_phold(n_events=3000 if args.full else 1500)
@@ -162,7 +173,7 @@ def main(argv=None) -> None:
                             locks["mutable"]["speedup"]))
 
     print("\n" + "=" * 72)
-    print("[5/11] serving-window scheduler (the technique on TPU batches)")
+    print("[5/12] serving-window scheduler (the technique on TPU batches)")
     print("=" * 72)
     from benchmarks import sched_bench
     sb = sched_bench.main(["--requests", "400" if args.full else "250"])
@@ -173,7 +184,7 @@ def main(argv=None) -> None:
                         round(agg["avg_standby"], 2)))
 
     print("\n" + "=" * 72)
-    print("[6/11] oracle-family grid (paper §5 future work, batched xdes)")
+    print("[6/12] oracle-family grid (paper §5 future work, batched xdes)")
     print("=" * 72)
     from benchmarks import oracle_ablation
     oa = oracle_ablation.main(
@@ -185,7 +196,7 @@ def main(argv=None) -> None:
                         round(row["best_tuned_mean_ratio"], 3)))
 
     print("\n" + "=" * 72)
-    print("[7/11] discipline x oracle diagram (sharded batched xdes)")
+    print("[7/12] discipline x oracle diagram (sharded batched xdes)")
     print("=" * 72)
     from benchmarks import discipline_diagram
     dd = discipline_diagram.main(
@@ -196,7 +207,7 @@ def main(argv=None) -> None:
                         round(row["best_variant_mean_ratio"], 3)))
 
     print("\n" + "=" * 72)
-    print("[8/11] workload x discipline diagram (sharded batched xdes)")
+    print("[8/12] workload x discipline diagram (sharded batched xdes)")
     print("=" * 72)
     from benchmarks import workload_diagram
     wd = workload_diagram.main(
@@ -209,7 +220,7 @@ def main(argv=None) -> None:
                               3)))
 
     print("\n" + "=" * 72)
-    print("[9/11] arrival x discipline diagram (open-loop sharded xdes)")
+    print("[9/12] arrival x discipline diagram (open-loop sharded xdes)")
     print("=" * 72)
     from benchmarks import arrival_diagram
     ad = arrival_diagram.main(
@@ -223,7 +234,7 @@ def main(argv=None) -> None:
              round(cell["mean_slo_frac"], 3)))
 
     print("\n" + "=" * 72)
-    print("[10/11] fault x discipline diagram (sharded batched xdes)")
+    print("[10/12] fault x discipline diagram (sharded batched xdes)")
     print("=" * 72)
     from benchmarks import fault_diagram
     fd = fault_diagram.main(
@@ -236,7 +247,20 @@ def main(argv=None) -> None:
                         None if ret is None else round(ret, 3)))
 
     print("\n" + "=" * 72)
-    print("[11/11] xdes perf microbenchmark (reports/bench_xdes.json)")
+    print("[11/12] park-cost x discipline diagram (sharded batched xdes)")
+    print("=" * 72)
+    from benchmarks import park_diagram
+    pkd = park_diagram.main(
+        [] if args.full else ["--scenarios", "25", "--target-cs", "100"])
+    for p, rows in pkd["park_costs"].items():
+        top = max(rows, key=lambda d: rows[d]["wins"])
+        summary.append((f"park.{p}.top", top))
+        ret = rows["sleep"]["mean_retained_vs_unit"]
+        summary.append((f"park.{p}.sleep.retained",
+                        None if ret is None else round(ret, 3)))
+
+    print("\n" + "=" * 72)
+    print("[12/12] xdes perf microbenchmark (reports/bench_xdes.json)")
     print("=" * 72)
     from benchmarks import perf_bench
     pb = perf_bench.main(["--full-size"] if args.full else [])

@@ -69,7 +69,8 @@ from repro.configs.catalog import (LOCK_ARRIVAL_RHOS, LOCK_ARRIVALS,
                                    LOCK_ORACLE_KS, LOCK_ORACLE_SWS_MAX,
                                    LOCK_ORACLES, LOCK_REGIMES, LOCK_SHORT,
                                    LOCK_THREADS, LOCK_WAKE, LOCK_WORKLOADS,
-                                   _product_columns, lock_arrival_columns,
+                                   LOCK_PARK_COSTS, _product_columns,
+                                   lock_arrival_columns,
                                    lock_arrival_sweep, lock_arrival_variants,
                                    lock_discipline_columns,
                                    lock_discipline_sweep,
@@ -77,6 +78,7 @@ from repro.configs.catalog import (LOCK_ARRIVAL_RHOS, LOCK_ARRIVALS,
                                    lock_fault_columns, lock_fault_sweep,
                                    lock_fig3_grid, lock_oracle_columns,
                                    lock_oracle_sweep, lock_oracle_variants,
+                                   lock_park_columns, lock_park_sweep,
                                    lock_scenario_columns,
                                    lock_scenario_sweep,
                                    lock_workload_columns, lock_workload_sweep,
@@ -95,6 +97,17 @@ STREAM_AUTO = 50_000
 #: the win-count reduction) instead of poisoning a phase diagram —
 #: docs/robustness.md.  Only written when a sweep quarantined something.
 FAILURES_PATH = os.path.join("reports", "sweep_failures.json")
+
+
+def _variant_name(v: dict) -> str:
+    """Display name of a (discipline, oracle) variant: *windowed* rows —
+    the rows that actually read the oracle column (mutable, fissile) —
+    carry a ``lock/oracle`` suffix; every other discipline appears bare
+    (its oracle axis is pruned by ``lock_discipline_variants``)."""
+    from repro.core.policy import POLICY_IDS, POLICY_ROW
+
+    return (f"{v['lock']}/{v['oracle']}"
+            if POLICY_ROW[POLICY_IDS[v["lock"]]].windowed else v["lock"])
 
 
 # --------------------------------------------------------------------------
@@ -469,9 +482,7 @@ def discipline_grid(n_scenarios: int = 200, target_cs: int = 150,
     ratio = thr / best[:, None]
     win_v = wins_cells.sum(axis=0)
 
-    def vname(v):
-        return (f"{v['lock']}/{v['oracle']}"
-                if v["lock"] == "mutable" else v["lock"])
+    vname = _variant_name
 
     out_variants = [{
         "name": vname(v), "lock": v["lock"], "oracle": v["oracle"],
@@ -612,9 +623,7 @@ def workload_grid(n_scenarios: int = 100, target_cs: int = 150,
     win_wv = np.zeros((W, V), np.int64)
     np.add.at(win_wv, cell_w, wins_cells)
 
-    def vname(v):
-        return (f"{v['lock']}/{v['oracle']}"
-                if v["lock"] == "mutable" else v["lock"])
+    vname = _variant_name
 
     variant_names = [vname(v) for v in disc_variants]
     out_variants = [{
@@ -773,9 +782,7 @@ def arrival_grid(n_scenarios: int = 50, target_cs: int = 150,
     lat_wins_cells = np.zeros((len(uniq), V), np.int64)
     np.add.at(lat_wins_cells, (np.asarray(cell_ids), lat_win), 1)
 
-    def vname(v):
-        return (f"{v['lock']}/{v['oracle']}"
-                if v["lock"] == "mutable" else v["lock"])
+    vname = _variant_name
 
     variant_names = [vname(v) for v in disc_variants]
     cell_of = {k: i for i, k in enumerate(uniq)}
@@ -942,9 +949,7 @@ def fault_grid(n_scenarios: int = 100, target_cs: int = 150,
     win_fv = np.zeros((F, V), np.int64)
     np.add.at(win_fv, cell_f, wins_cells)
 
-    def vname(v):
-        return (f"{v['lock']}/{v['oracle']}"
-                if v["lock"] == "mutable" else v["lock"])
+    vname = _variant_name
 
     variant_names = [vname(v) for v in disc_variants]
     out_variants = [{
@@ -1027,6 +1032,166 @@ def fault_grid(n_scenarios: int = 100, target_cs: int = 150,
 
 
 # --------------------------------------------------------------------------
+# Park-cost x discipline x oracle diagram grid (M:N environments)
+# --------------------------------------------------------------------------
+def park_grid(n_scenarios: int = 50, target_cs: int = 150,
+              backend: str = "ref", seed: int = 0,
+              park_costs=LOCK_PARK_COSTS,
+              disciplines=LOCK_DISCIPLINE_SET, oracles=LOCK_ORACLES,
+              shard: bool | None = None, stream: bool | None = None,
+              mem_mb: float | None = None,
+              early_exit: bool | None = None,
+              verbose: bool = True) -> dict:
+    """The full ``park_cost x (discipline, oracle) x scenario`` product —
+    the M:N lightweight-thread environment axis (``SimConfig.park_cost``
+    scaling the park/unpark round trip across three orders of magnitude)
+    crossed with every discipline-diagram variant — as ONE (sharded)
+    jit-compiled :func:`repro.core.xdes.simulate_batch` call, summarized
+    three ways:
+
+    * per (park_cost, variant) — wins, mean/p10 throughput ratio to the
+      per-(scenario, park_cost) best variant, spin CPU per CS, and the
+      throughput retained vs the same variant at ``park_cost=1`` (how
+      hard the environment re-prices each sleep-leaning row);
+    * per park_cost — which discipline wins how often in that
+      environment;
+    * phase diagram — which (discipline, oracle) wins in each
+      (park_cost x CS-length x subscription) bucket: the "when is
+      parking worth it" artifact rendered by ``benchmarks/park_diagram``.
+
+    The per-scenario best is taken *within* a park-cost slice, so a
+    variant is judged against the other locks in the same environment.
+    Scenarios follow the :func:`sample_scenarios` seed contract, so the
+    ``park_cost=1`` slice IS the discipline diagram's machine
+    scenario-by-scenario."""
+    disc_variants = lock_discipline_variants(disciplines, oracles)
+    K, V = len(park_costs), len(disc_variants)
+    C = n_scenarios * K * V
+    if stream is None:
+        stream = C >= STREAM_AUTO
+    feats = _scenario_feats(sample_scenario_columns(n_scenarios, seed))
+    # One phase key per (scenario, park_cost) group of V variants.
+    uniq, cell_ids = _phase_cells(
+        [(p, ft["cs"], ft["sub"]) for ft in feats for p in park_costs])
+    t0 = time.time()
+    if stream:
+        cols = lock_park_columns(n_scenarios=n_scenarios, seed=seed,
+                                 park_costs=park_costs,
+                                 disciplines=disciplines, oracles=oracles)
+        res = xstream.sweep_stream(
+            cols, target_cs=target_cs, backend=backend, shard=shard,
+            mem_mb=mem_mb, early_exit=early_exit,
+            failures_path=FAILURES_PATH,
+            reduce=xstream.CellReduce(V, cell_ids, len(uniq)))
+        wins_cells = res.wins
+    else:
+        configs = lock_park_sweep(n_scenarios=n_scenarios, seed=seed,
+                                  park_costs=park_costs,
+                                  disciplines=disciplines, oracles=oracles)
+        res = xdes.simulate_batch(
+            configs, target_cs=target_cs, backend=backend, shard=shard,
+            early_exit=early_exit).validate("park_grid")
+        wins_cells = _host_wins(res.throughput, len(uniq), cell_ids, V)
+    wall = time.time() - t0
+
+    thr = res.throughput.reshape(n_scenarios, K, V)
+    cpu = res.sync_cpu_per_cs.reshape(n_scenarios, K, V)
+    best = np.maximum(thr.max(axis=2), 1e-30)          # (S, K)
+    ratio = thr / best[..., None]
+    # Throughput retained vs the park_cost=1 baseline, same scenario and
+    # variant — the re-pricing ordinate (only when the grid includes 1.0).
+    retained = None
+    if 1.0 in park_costs:
+        base = np.maximum(thr[:, list(park_costs).index(1.0), :], 1e-30)
+        retained = thr / base[:, None, :]
+    cell_k = np.asarray([list(park_costs).index(k[0]) for k in uniq])
+    win_kv = np.zeros((K, V), np.int64)
+    np.add.at(win_kv, cell_k, wins_cells)
+
+    vname = _variant_name
+
+    variant_names = [vname(v) for v in disc_variants]
+    out_variants = [{
+        "park_cost": p, "name": variant_names[i],
+        "lock": disc_variants[i]["lock"],
+        "oracle": disc_variants[i]["oracle"],
+        "wins": int(win_kv[ki, i]),
+        "mean_ratio_to_best": float(ratio[:, ki, i].mean()),
+        "p10_ratio_to_best": float(np.percentile(ratio[:, ki, i], 10)),
+        "mean_retained_vs_unit": (float(retained[:, ki, i].mean())
+                                  if retained is not None else None),
+        "mean_sync_cpu_per_cs_us": float(cpu[:, ki, i].mean() * 1e6),
+    } for ki, p in enumerate(park_costs) for i in range(V)]
+
+    disc_names = list(dict.fromkeys(v["lock"] for v in disc_variants))
+    disc_cols = {d: [i for i, v in enumerate(disc_variants)
+                     if v["lock"] == d] for d in disc_names}
+    by_park = {}
+    for ki, p in enumerate(park_costs):
+        by_park[str(p)] = {d: {
+            "wins": int(win_kv[ki, cols].sum()),
+            "best_variant_mean_ratio":
+                float(ratio[:, ki, cols].max(axis=1).mean()),
+            "mean_retained_vs_unit":
+                (float(retained[:, ki, cols].mean())
+                 if retained is not None else None),
+            "mean_sync_cpu_per_cs_us":
+                float(cpu[:, ki, cols].mean() * 1e6),
+        } for d, cols in disc_cols.items()}
+
+    phase = []
+    order = sorted(range(len(uniq)),
+                   key=lambda ci: (list(park_costs).index(uniq[ci][0]),
+                                   uniq[ci][1:]))
+    for ci in order:
+        p, cs_b, sub_b = uniq[ci]
+        counts = {variant_names[i]: int(wins_cells[ci, i])
+                  for i in range(V) if wins_cells[ci, i]}
+        n = sum(counts.values())
+        winner = max(counts, key=counts.get)
+        phase.append({"park_cost": p, "cs": cs_b, "sub": sub_b, "n": n,
+                      "winner": winner,
+                      "win_share": round(counts[winner] / n, 3),
+                      "wins_by_variant": counts})
+
+    import jax
+
+    out = {
+        "meta": {"backend": backend, "n_scenarios": n_scenarios,
+                 "n_park_costs": K, "n_variants": V,
+                 "n_configs": C, "n_steps": res.n_steps,
+                 "wall_s": round(wall, 2),
+                 "n_devices": len(jax.devices()),
+                 "sharded": bool(shard) if shard is not None
+                 else len(jax.devices()) > 1,
+                 "streamed": bool(stream),
+                 "configs_per_s": round(C / max(wall, 1e-9), 1),
+                 "park_costs": list(park_costs),
+                 "variant_names": variant_names},
+        "variants": out_variants,
+        "park_costs": by_park,
+        "phase": phase,
+    }
+    if stream:
+        out["meta"].update(chunk_size=res.chunk_size,
+                           n_chunks=res.n_chunks,
+                           budget_mb=round(res.budget_mb, 1))
+    if verbose:
+        print(f"\npark grid: {C} configs ({n_scenarios} "
+              f"scenarios x {K} park costs x {V} variants) x "
+              f"{res.n_steps} steps in {wall:.1f}s on "
+              f"{out['meta']['n_devices']} device(s) "
+              f"({out['meta']['configs_per_s']} cfg/s)")
+        for p in park_costs:
+            rows = by_park[str(p)]
+            top = max(rows, key=lambda d: rows[d]["wins"])
+            print(f"{p:>9}: top discipline {top} "
+                  f"({rows[top]['wins']}/{n_scenarios} wins); "
+                  + " ".join(f"{d}:{r['wins']}" for d, r in rows.items()))
+    return out
+
+
+# --------------------------------------------------------------------------
 # Coarse -> dense resolution refinement
 # --------------------------------------------------------------------------
 def refine_grid(nx: int = 16, ny: int = 12, factor: int = 3,
@@ -1052,9 +1217,7 @@ def refine_grid(nx: int = 16, ny: int = 12, factor: int = 3,
     variants = lock_discipline_variants(disciplines, oracles)
     V = len(variants)
 
-    def vname(v):
-        return (f"{v['lock']}/{v['oracle']}"
-                if v["lock"] == "mutable" else v["lock"])
+    vname = _variant_name
 
     variant_names = [vname(v) for v in variants]
 

@@ -348,8 +348,11 @@ def lock_oracle_sweep(n_scenarios: int = 200, seed: int = 0,
 # -- discipline x oracle diagram grid --------------------------------------
 #: Discipline axis of the full "which lock wins where" diagram: every
 #: DISCIPLINE_ROW is represented (spin via ttas+mcs, sleep, adaptive,
-#: mutable, and the FIFO/MCS ticket-handoff row).
-LOCK_DISCIPLINE_SET = ("ttas", "mcs", "fifo", "sleep", "adaptive", "mutable")
+#: mutable, the FIFO/MCS ticket-handoff row, and the related-work rows:
+#: Fissile spin-then-park, Hapax FIFO admission, TTAS with seeded
+#: bounded-exponential backoff).
+LOCK_DISCIPLINE_SET = ("ttas", "mcs", "fifo", "sleep", "adaptive", "mutable",
+                       "fissile", "hapax", "ttas_backoff")
 
 
 def lock_discipline_variants(disciplines=LOCK_DISCIPLINE_SET,
@@ -589,6 +592,55 @@ def lock_arrival_sweep(n_scenarios: int = 50, seed: int = 0,
     ]
 
 
+# -- park-cost x discipline x oracle diagram grid (M:N environments) -------
+#: Park-cost axis of the M:N lightweight-thread diagram: how expensive is
+#: one park/unpark round trip relative to the baseline OS futex?  0.1 is a
+#: user-level M:N scheduler (park = a userspace context switch), 1 the OS
+#: baseline, 10/100 oversubscribed or VM-mediated kernels — spanning three
+#: orders of magnitude so every sleep-leaning row gets visibly re-priced.
+LOCK_PARK_COSTS = (0.1, 1.0, 10.0, 100.0)
+
+
+def lock_park_variants(park_costs=LOCK_PARK_COSTS,
+                       disciplines=LOCK_DISCIPLINE_SET,
+                       oracles=LOCK_ORACLES) -> list[dict]:
+    """The ``(park_cost, discipline, oracle)`` variant axis of the park
+    diagram: the discipline x oracle variants (windowed-row pruning of
+    :func:`lock_discipline_variants`) replicated under every park-cost
+    environment, park-cost-major."""
+    return [dict(park_cost=p, **v)
+            for p in park_costs
+            for v in lock_discipline_variants(disciplines, oracles)]
+
+
+def lock_park_sweep(n_scenarios: int = 50, seed: int = 0,
+                    park_costs=LOCK_PARK_COSTS,
+                    disciplines=LOCK_DISCIPLINE_SET,
+                    oracles=LOCK_ORACLES) -> list[SimConfig]:
+    """The full park-cost x discipline x oracle product as one flat batch
+    for a single (sharded) :func:`repro.core.xdes.simulate_batch` call.
+
+    Row order is scenario-major, then park_cost, then (discipline, oracle)
+    variant — reshape to ``(n_scenarios, n_park_costs, n_variants)``.
+    Scenarios follow the :func:`sample_scenarios` seed contract, so every
+    park-cost environment sees the same machines scenario-by-scenario and
+    results are comparable cell-by-cell with the discipline diagram (the
+    ``park_cost=1`` slice IS the discipline diagram's machine)."""
+    from repro.core.policy import DEFAULT_ALPHA
+
+    disc_variants = lock_discipline_variants(disciplines, oracles)
+    return [
+        SimConfig(v["lock"], threads=sc["threads"], cores=sc["cores"],
+                  cs=(0.0, sc["cs_hi"]), ncs=(0.0, sc["ncs_hi"]),
+                  wake_latency=sc["wake"],
+                  alpha=sc["contention"] * DEFAULT_ALPHA[v["lock"]],
+                  seed=sc["seed"], oracle=v["oracle"], park_cost=p)
+        for sc in sample_scenarios(n_scenarios, seed)
+        for p in park_costs
+        for v in disc_variants
+    ]
+
+
 # -- array-native column twins (the streaming-sweep feed) ------------------
 # Each lock_*_sweep generator above has a *_columns twin emitting RAW
 # struct-of-arrays columns (repro.core.policy.RAW_CONFIG_FIELDS) directly
@@ -763,6 +815,21 @@ def lock_arrival_columns(n_scenarios: int = 50, seed: int = 0,
     return cols
 
 
+def lock_park_columns(n_scenarios: int = 50, seed: int = 0,
+                      park_costs=LOCK_PARK_COSTS,
+                      disciplines=LOCK_DISCIPLINE_SET,
+                      oracles=LOCK_ORACLES) -> dict:
+    """Column twin of :func:`lock_park_sweep`."""
+    import numpy as np
+
+    sc = sample_scenario_columns(n_scenarios, seed)
+    variants = lock_park_variants(park_costs, disciplines, oracles)
+    cols = _product_columns(sc, variants)
+    cols["park_cost"] = np.tile(np.asarray(
+        [v["park_cost"] for v in variants], np.float64), len(sc["seed"]))
+    return cols
+
+
 #: Named sweep registry (mirrors the model-config registry above).
 LOCK_SWEEPS = {
     "fig3": lock_fig3_grid,
@@ -772,4 +839,5 @@ LOCK_SWEEPS = {
     "workload": lock_workload_sweep,
     "arrival": lock_arrival_sweep,
     "fault": lock_fault_sweep,
+    "park": lock_park_sweep,
 }

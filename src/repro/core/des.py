@@ -175,6 +175,16 @@ class _LockModel:
     def sleepers(self) -> list[_Task]:
         return [t for t in self.sim.tasks if t.state == SLEEP]
 
+    # -- model-internal wall-clock events (backoff polls etc.) --------------
+    def next_event(self) -> float:
+        """Earliest model-internal wall-clock event, or +inf.  The DES main
+        loop caps its interval here so discipline-private timers (e.g. the
+        ttas_backoff poll schedule) fire exactly on time."""
+        return float("inf")
+
+    def on_time_advanced(self) -> None:
+        """Fire model-internal events due at ``sim.now`` (default: none)."""
+
 
 class SpinModel(_LockModel):
     """TTAS-style: every waiter spins; release hands to a random spinner."""
@@ -365,6 +375,177 @@ class MutableModel(_LockModel):
             t.spun = True  # spn_obj.lock() will observe contention
 
 
+class FissileModel(AdaptiveModel):
+    """Fissile-style spin-then-park composition (Dice & Kogan): waiters spin
+    for a *bounded* budget then park, and the budget self-tunes through the
+    same oracle state as the mutable lock — ``sws`` scales the budget
+    (``spin_budget * sws * park_cost``, the spin-for-about-a-park-round-trip
+    rule) instead of gating arrivals.  A park doubles the window (bigger
+    budget next time); clean spin-only acquisitions shrink it.  The
+    event-driven twin of the engine's ``fissile`` row, which masks ``spun``
+    so the oracle's *late* signal is exactly *did this acquisition park?*."""
+
+    name = "fissile"
+    default_alpha = policy.DEFAULT_ALPHA["fissile"]
+
+    def __init__(self, sim, spin_budget: float = 2e-6, initial_sws: int = 1,
+                 max_sws: int | None = None, oracle: Oracle | None = None,
+                 alpha=None):
+        super().__init__(sim, spin_budget, alpha)
+        self.sws = max(1, min(initial_sws,
+                              max_sws if max_sws is not None else sim.cores))
+        self.max = max_sws if max_sws is not None else sim.cores
+        self.oracle = oracle if oracle is not None else EvalSWS(k=10)
+
+    def _budget(self) -> float:
+        return self.spin_budget * self.sws * self.sim.park_cost
+
+    def _acquired(self, t):
+        """Lock acquired: resize the budget window.  ``spun`` is forced
+        False so the oracle's late signal is purely *slept* (as in the
+        engine's ``budget_scaled`` masking)."""
+        self._enter_cs(t)
+        self.sim.res.sws_trace.append((self.sim.now, self.sws))
+        delta = self.oracle.eval_sws(False, t.slept, self.sws)
+        delta = policy.clamp_delta(self.sws, delta, 1, self.max)
+        self.sws += delta
+
+    def on_arrive(self, t):
+        t.slept = t.spun = False
+        if self.holder is None:
+            self._acquired(t)
+        else:
+            t.state = SPIN
+            t.spun = True
+            t.remaining = self._budget()
+
+    def on_release(self, t):
+        self.holder = None
+        sp = self.spinners()
+        if sp:
+            self._acquired(self.sim.rng.choice(sp))
+        elif self.sleepers() or self.sim.any_waking():
+            self._wake_some(1)
+
+    def on_wake_complete(self, t):
+        if self.holder is None:
+            self._acquired(t)
+        else:  # sleep->spin: rejoin the spin phase with a re-armed budget
+            t.state = SPIN
+            t.remaining = self._budget()
+
+
+class HapaxModel(_LockModel):
+    """Hapax value-based FIFO admission (Dice & Kogan): constant-time
+    arrival (tail enqueue) and unlock (head wake).  Every contended arrival
+    parks with its queue position; releases wake strictly in arrival order,
+    and an arrival may barge only when the lock is free AND nobody waits —
+    structurally no barging.  Twin of the engine's ``hapax`` row (min-ticket
+    grant among parked waiters)."""
+
+    name = "hapax"
+    default_alpha = policy.DEFAULT_ALPHA["hapax"]
+
+    def __init__(self, sim, alpha=None):
+        super().__init__(sim, alpha)
+        self.queue: list[int] = []  # tids of parked/waking waiters, FIFO
+
+    def _wake_head(self, k: int = 1) -> None:
+        """Issue k wake permits to the earliest still-sleeping waiters;
+        park-free permits are banked (semaphore law), exactly like
+        :meth:`_LockModel._wake_some` but in queue order, never random."""
+        for _ in range(k):
+            sl = [tid for tid in self.queue
+                  if self.sim.tasks[tid].state == SLEEP]
+            if sl:
+                self.sim.schedule_wake(self.sim.tasks[sl[0]])
+            else:
+                self.permits += 1
+
+    def on_arrive(self, t):
+        if self.holder is None and not self.queue:
+            self._enter_cs(t)
+        else:
+            t.slept = True
+            self.queue.append(t.tid)
+            self._sleep(t)
+
+    def on_release(self, t):
+        self.holder = None
+        if self.queue:
+            self._wake_head(1)
+
+    def on_wake_complete(self, t):
+        if self.holder is None and self.queue and self.queue[0] == t.tid:
+            self.queue.pop(0)
+            self._enter_cs(t)
+        else:
+            # Not yet this waiter's turn (another head is mid-wake) or the
+            # lock is held: re-park WITHOUT losing the queue position.
+            self._sleep(t)
+
+
+class TTASBackoffModel(_LockModel):
+    """TTAS with seeded bounded-exponential backoff: contended waiters stay
+    runnable (burning spin CPU) but only *poll* the lock on a schedule —
+    after each failed poll the next attempt is delayed by
+    ``spin_budget * 2^min(attempt, BO_CAP) * u`` with ``u`` from the
+    dedicated ``BO_SALT`` counter stream.  No handoff: a release leaves the
+    lock free until some spinner's next poll.  Twin of the engine's
+    ``ttas_backoff`` row (lowest-tid due poller wins each instant)."""
+
+    name = "ttas_backoff"
+    default_alpha = policy.DEFAULT_ALPHA["ttas_backoff"]
+
+    def __init__(self, sim, spin_budget: float = 2e-6, alpha=None):
+        super().__init__(sim, alpha)
+        self.spin_budget = spin_budget
+        self.next_poll: dict[int, float] = {}
+        self.attempt: dict[int, int] = {}
+        self._draws: dict[int, int] = {}  # per-tid BO-stream counters
+
+    def _bo_u(self, tid: int) -> float:
+        k = self._draws.get(tid, 0)
+        self._draws[tid] = k + 1
+        return policy.counter_uniform_scalar(
+            self.sim._flt_seed ^ policy.BO_SALT, tid, k)
+
+    def on_arrive(self, t):
+        if self.holder is None:
+            self._enter_cs(t)
+        else:
+            t.state = SPIN
+            t.spun = True
+            self.attempt[t.tid] = 0
+            self.next_poll[t.tid] = (self.sim.now
+                                     + self.spin_budget * self._bo_u(t.tid))
+
+    def on_release(self, t):
+        self.holder = None  # no handoff: spinners acquire at their polls
+
+    def on_wake_complete(self, t):
+        raise AssertionError("ttas_backoff never sleeps")
+
+    def next_event(self) -> float:
+        due = [self.next_poll[t.tid] for t in self.spinners()]
+        return min(due) if due else float("inf")
+
+    def on_time_advanced(self) -> None:
+        eps = 1e-15
+        for t in self.spinners():  # tid order: lowest due poller wins
+            if self.next_poll[t.tid] > self.sim.now + eps:
+                continue
+            if self.holder is None:
+                self.next_poll.pop(t.tid)
+                self.attempt.pop(t.tid)
+                self._enter_cs(t)
+            else:
+                a = self.attempt[t.tid] = self.attempt[t.tid] + 1
+                delay = (self.spin_budget
+                         * 2.0 ** min(a, policy.BO_CAP) * self._bo_u(t.tid))
+                self.next_poll[t.tid] = self.sim.now + delay
+
+
 _MODELS = {
     "tas": TASModel,
     "ttas": SpinModel,
@@ -373,6 +554,9 @@ _MODELS = {
     "sleep": SleepModel,
     "adaptive": AdaptiveModel,
     "mutable": MutableModel,
+    "fissile": FissileModel,
+    "hapax": HapaxModel,
+    "ttas_backoff": TTASBackoffModel,
 }
 
 
@@ -407,12 +591,17 @@ class LockSim:
         fault: str = "none",
         fault_rate: float = 0.0,
         fault_scale: float = 5e-5,
+        park_cost: float = 1.0,
     ):
         self.rng = random.Random(seed)
         self.cores = cores
         self.cs_lo, self.cs_hi = cs
         self.ncs_lo, self.ncs_hi = ncs
-        self.wake_latency = wake_latency
+        # M:N parking axis: park_cost scales the park/unpark round trip
+        # BEFORE the fault rows perturb it, same order as the engine
+        # (wake_base = wake * park_cost, then fault wake_delay).
+        self.park_cost = park_cost
+        self.wake_latency = wake_latency * park_cost
         self.now = 0.0
         self.tasks = [_Task(tid=i) for i in range(threads)]
         self.model: _LockModel = _MODELS[lock](self, **(lock_kwargs or {}))
@@ -658,6 +847,9 @@ class LockSim:
             for t in self.tasks:
                 if t.state == WAKING:
                     dt = min(dt, t.wake_at - self.now)
+            ne = self.model.next_event()
+            if ne < float("inf"):
+                dt = min(dt, ne - self.now)
             if self.open_loop and self._next_arr < float("inf"):
                 dt = min(dt, self._next_arr - self.now)
             if mult is not None:
@@ -712,6 +904,11 @@ class LockSim:
                 elif t.state == NCS:
                     self._log(t.tid, "arrive")
                     self.model.on_arrive(t)
+
+            # model-internal timers (e.g. backoff polls) fire AFTER releases
+            # at the same instant, matching the engine's stage order
+            # (release/wake, then poll pickup, then arrivals).
+            self.model.on_time_advanced()
 
             if self.open_loop:
                 self._admit_due_arrivals()

@@ -54,6 +54,10 @@ STATE_NAMES = ("NCS", "CS", "SPIN", "SLEEP", "WAKING", "DONE")
 # strictly in ticket (arrival) order — no barging.
 # --------------------------------------------------------------------------
 TAS, TTAS, MCS, SLEEP, ADAPTIVE, MUTABLE, FIFO = range(7)
+# Related-work rows (PAPERS.md): Fissile-style spin-then-park with an
+# oracle-tuned budget, Hapax value-based strict-FIFO admission, and
+# TTAS with seeded bounded-exponential backoff.
+FISSILE, HAPAX, TTAS_BACKOFF = 7, 8, 9
 
 POLICY_IDS = {
     "tas": TAS,
@@ -63,6 +67,9 @@ POLICY_IDS = {
     "adaptive": ADAPTIVE,
     "mutable": MUTABLE,
     "fifo": FIFO,
+    "fissile": FISSILE,
+    "hapax": HAPAX,
+    "ttas_backoff": TTAS_BACKOFF,
 }
 POLICY_NAMES = {v: k for k, v in POLICY_IDS.items()}
 
@@ -79,10 +86,23 @@ DEFAULT_ALPHA = {
     "adaptive": 0.02,
     "mutable": 0.02,
     "fifo": 0.0,
+    "fissile": 0.02,        # read-spins during its bounded window
+    "hapax": 0.0,           # never spins: every waiter parks in FIFO order
+    "ttas_backoff": 0.01,   # backoff thins the coherency traffic vs ttas
 }
 
 #: glibc-style default spin budget (CPU-seconds) for the adaptive mutex.
 DEFAULT_SPIN_BUDGET = 2e-6
+
+#: Seed salt for the ttas_backoff per-(thread, step) backoff-delay
+#: uniforms — disjoint from every WL/AR/TB/FLT salt so backoff never
+#: perturbs workload, arrival, tie-break or fault draws.
+BO_SALT = 0x165667B1
+
+#: Bounded-exponential cap: a backoff delay never exceeds
+#: ``spin_budget * 2**BO_CAP`` seconds (the classic truncated-binary
+#: exponential backoff rule).
+BO_CAP = 6
 
 
 # --------------------------------------------------------------------------
@@ -311,6 +331,12 @@ def release_quota(r_wuc: int, thc_pre: int, sws: int) -> int:
 #                 (the sleep/adaptive barging rule); disciplines that
 #                 never park set both wake_to_spin and repark to 0
 #   windowed      the discipline runs the SWS oracle + C1/C2 corrections
+#   budget_scaled the spin budget is priced competitively: effective
+#                 budget = spin_budget * sws * park_cost (Fissile's
+#                 spin-roughly-the-park-cost rule, with the oracle's
+#                 window as the adaptive multiplier)
+#   backoff       spinners poll under seeded bounded-exponential backoff
+#                 (BO_SALT stream) instead of being handed the lock
 #
 #   arrival_sleeps(rank, thc_pre, sws, holder_free) -> 0/1
 #       whether the rank-th simultaneous arrival parks (A7 for the
@@ -332,6 +358,8 @@ class DisciplineRow:
     windowed: int
     arrival_sleeps: object     # callable, elementwise (see module comment)
     quota: object              # callable, elementwise
+    budget_scaled: int = 0
+    backoff: int = 0
 
 
 def _arrive_never(rank, thc_pre, sws, holder_free):
@@ -346,6 +374,13 @@ def _arrive_sleep_lock(rank, thc_pre, sws, holder_free):
 def _arrive_window(rank, thc_pre, sws, holder_free):
     # A7: arriving at index thc_pre (holder at 0) outside the window parks.
     return (thc_pre >= sws) * 1
+
+
+def _arrive_fifo_park(rank, thc_pre, sws, holder_free):
+    # Hapax admission: acquire only when the lock is free AND nobody is
+    # ahead (thc_pre counts holder + waiters); otherwise join the FIFO
+    # parking queue — structurally no barging.
+    return 1 - (thc_pre == 0) * holder_free
 
 
 def _quota_zero(r_wuc, thc_pre, sws, n_parked, handoff_taken):
@@ -388,6 +423,33 @@ DISCIPLINE_ROWS = {
         name="fifo", policy_ids=(FIFO,),
         handoff=1, fifo_grant=1, budget_spin=0, wake_to_spin=0, repark=0,
         windowed=0, arrival_sleeps=_arrive_never, quota=_quota_zero),
+    # Fissile-style spin-then-park: every arrival spins for a bounded
+    # budget priced at the park round-trip (budget_scaled), parks when it
+    # runs out, and a woken thread re-joins the spinners with a fresh
+    # budget.  The SWS oracle tunes the budget multiplier: an acquisition
+    # that had to park reads as a late wake (windowed=1 + the
+    # budget_scaled spun-mask in oracle_acquire), doubling the window.
+    "fissile": DisciplineRow(
+        name="fissile", policy_ids=(FISSILE,),
+        handoff=1, fifo_grant=0, budget_spin=1, wake_to_spin=1, repark=0,
+        windowed=1, arrival_sleeps=_arrive_never,
+        quota=_quota_wake_one_no_handoff, budget_scaled=1),
+    # Hapax value-based FIFO admission: constant-time arrival (tail
+    # enqueue) and unlock (head wake); every contended arrival parks with
+    # a ticket and releases wake strictly in ticket order — no barging.
+    "hapax": DisciplineRow(
+        name="hapax", policy_ids=(HAPAX,),
+        handoff=0, fifo_grant=1, budget_spin=0, wake_to_spin=0, repark=0,
+        windowed=0, arrival_sleeps=_arrive_fifo_park,
+        quota=_quota_wake_one),
+    # TTAS with truncated-binary exponential backoff: spinners poll on a
+    # seeded schedule (BO_SALT) and pick up a free lock when a poll lands;
+    # releases grant nothing (handoff=0) — the poll IS the acquire path.
+    "ttas_backoff": DisciplineRow(
+        name="ttas_backoff", policy_ids=(TTAS_BACKOFF,),
+        handoff=0, fifo_grant=0, budget_spin=0, wake_to_spin=0, repark=0,
+        windowed=0, arrival_sleeps=_arrive_never, quota=_quota_zero,
+        backoff=1),
 }
 
 #: policy id -> row (every POLICY_IDS entry must be claimed by one row).
@@ -401,8 +463,10 @@ assert sorted(POLICY_ROW) == sorted(POLICY_IDS.values()), \
 #: these automatically.
 HANDOFF_POLICIES = frozenset(pid for pid, row in POLICY_ROW.items()
                              if row.handoff)
-SLEEPING_POLICIES = frozenset(pid for pid, row in POLICY_ROW.items()
-                              if row.repark or row.windowed)
+SLEEPING_POLICIES = frozenset(
+    pid for pid, row in POLICY_ROW.items()
+    if row.repark or row.windowed or row.budget_spin
+    or row.arrival_sleeps is not _arrive_never)
 
 
 def _dispatch_rows(policy_id, fn):
@@ -417,14 +481,19 @@ def _dispatch_rows(policy_id, fn):
     return out
 
 
+#: Attribute order of :func:`discipline_flags` — unpack sites must match.
+DISCIPLINE_FLAG_ATTRS = ("handoff", "fifo_grant", "budget_spin",
+                         "wake_to_spin", "repark", "windowed",
+                         "budget_scaled", "backoff")
+
+
 def discipline_flags(policy_id):
     """Per-config capability flags ``(handoff, fifo_grant, budget_spin,
-    wake_to_spin, repark, windowed)`` as 0/1 values, dispatched by policy
-    id.  Valid on scalars and integer arrays (arithmetic select, no
-    ``if``)."""
+    wake_to_spin, repark, windowed, budget_scaled, backoff)`` as 0/1
+    values, dispatched by policy id.  Valid on scalars and integer arrays
+    (arithmetic select, no ``if``)."""
     return tuple(_dispatch_rows(policy_id, lambda r, a=attr: getattr(r, a))
-                 for attr in ("handoff", "fifo_grant", "budget_spin",
-                              "wake_to_spin", "repark", "windowed"))
+                 for attr in DISCIPLINE_FLAG_ATTRS)
 
 
 def discipline_arrival_sleeps(policy_id, rank, thc_pre, sws, holder_free):
@@ -938,6 +1007,10 @@ class SimConfig:
     fault: str = "none"                 # interference row (FAULT_IDS)
     fault_rate: float = 0.0             # interference intensity in [0, 1]
     fault_scale: float = 5e-5           # fault window / timeout (seconds)
+    park_cost: float = 1.0              # M:N environment axis: multiplies
+    #                                     the sleep/wake round-trip (green
+    #                                     threads << 1, kernel threads 1,
+    #                                     oversubscribed VMs >> 1)
 
     def __post_init__(self):
         if self.lock not in POLICY_IDS:
@@ -976,6 +1049,8 @@ class SimConfig:
             raise ValueError("fault_rate must be in [0, 1]")
         if self.fault_scale <= 0.0:
             raise ValueError("fault_scale must be > 0")
+        if self.park_cost <= 0.0:
+            raise ValueError("park_cost must be > 0")
 
     # -- derived quantities shared by both backends -----------------------
     @property
@@ -995,21 +1070,21 @@ class SimConfig:
         pid = POLICY_IDS[self.lock]
         if pid == SLEEP:
             return 1
-        if pid == MUTABLE:
+        if pid in (MUTABLE, FISSILE):
             return max(1, min(self.sws_init, self.sws_max_eff))
-        return self.threads                     # tas/ttas/mcs/adaptive/fifo
+        return self.threads             # tas/ttas/mcs/adaptive/fifo/hapax/bo
 
     def des_kwargs(self) -> dict:
         """Keyword form consumed by :func:`repro.core.des.simulate`."""
         kw: dict = {}
         if self.alpha is not None:
             kw["alpha"] = self.alpha
-        if self.lock == "mutable":
+        if self.lock in ("mutable", "fissile"):
             from .oracle import make_oracle
 
             kw.update(initial_sws=self.sws_init, max_sws=self.sws_max,
                       oracle=make_oracle(self.oracle, k=self.k))
-        if self.lock == "adaptive":
+        if self.lock in ("adaptive", "fissile", "ttas_backoff"):
             kw["spin_budget"] = self.spin_budget
         return kw
 
@@ -1037,6 +1112,11 @@ class SimConfig:
         (the event-driven twin of the fault rows)."""
         return dict(fault=self.fault, fault_rate=self.fault_rate,
                     fault_scale=self.fault_scale)
+
+    def env_kwargs(self) -> dict:
+        """Environment keywords consumed by :class:`repro.core.des.LockSim`
+        (the M:N parking axis)."""
+        return dict(park_cost=self.park_cost)
 
 
 def workload_mean_scale_columns(workload, wl_duty, wl_burst, wl_spread):
@@ -1067,7 +1147,7 @@ CONFIG_FIELDS = (
     "wake", "alpha", "sws_init", "sws_max", "k", "spin_budget", "seed",
     "oracle", "workload", "wl_period", "wl_duty", "wl_burst", "wl_spread",
     "arrival_phase", "arrival", "arr_rate", "q_cap", "slo", "tb",
-    "fault", "flt_rate", "flt_scale",
+    "fault", "flt_rate", "flt_scale", "park_cost",
 )
 
 #: Column order of the RAW (pre-encoding) struct-of-arrays form — the
@@ -1082,7 +1162,7 @@ RAW_CONFIG_FIELDS = (
     "wake_latency", "alpha", "sws_init", "sws_max", "k", "spin_budget",
     "seed", "oracle", "workload", "wl_period", "wl_duty", "wl_burst",
     "wl_spread", "arrival_phase", "arrival", "arrival_rate", "queue_cap",
-    "slo", "tie_break", "fault", "fault_rate", "fault_scale",
+    "slo", "tie_break", "fault", "fault_rate", "fault_scale", "park_cost",
 )
 
 #: Defaults for the RAW open-loop columns — column producers written
@@ -1100,6 +1180,13 @@ RAW_OPEN_DEFAULTS = {
 #: pre-fault encoding.
 RAW_FAULT_DEFAULTS = {
     "fault": FAULT_NONE, "fault_rate": 0.0, "fault_scale": 5e-5,
+}
+
+#: Defaults for the RAW environment columns — same contract: column
+#: producers written before the M:N parking axis get 1:1 kernel threads,
+#: bit-identical to the pre-park_cost encoding.
+RAW_ENV_DEFAULTS = {
+    "park_cost": 1.0,
 }
 
 
@@ -1140,11 +1227,12 @@ def config_columns(configs) -> dict:
         "sws_init", "sws_max", "k", "spin_budget", "seed", "oracle",
         "workload", "wl_period", "wl_duty", "wl_burst", "wl_spread",
         "arrival_phase", "arrival", "arrival_rate", "queue_cap", "slo",
-        "tie_break", "fault", "fault_rate", "fault_scale")
+        "tie_break", "fault", "fault_rate", "fault_scale", "park_cost")
     (lock, threads, cores, cs, ncs, wake, alpha, sws_init, sws_max, k,
      spin_budget, seed, oracle, workload, wl_period, wl_duty, wl_burst,
      wl_spread, arrival_phase, arrival, arrival_rate, queue_cap, slo,
-     tie_break, fault, fault_rate, fault_scale) = zip(*map(get, configs))
+     tie_break, fault, fault_rate, fault_scale,
+     park_cost) = zip(*map(get, configs))
     n = len(configs)
     cs = np.asarray(cs, np.float64)
     ncs = np.asarray(ncs, np.float64)
@@ -1178,6 +1266,7 @@ def config_columns(configs) -> dict:
         "fault": _ids_from(fault, FAULT_IDS, "fault"),
         "fault_rate": np.asarray(fault_rate, np.float64),
         "fault_scale": np.asarray(fault_scale, np.float64),
+        "park_cost": np.asarray(park_cost, np.float64),
     }
 
 
@@ -1224,6 +1313,7 @@ def _validate_columns(cols, C: int) -> None:
     bad((cols["fault_rate"] < 0) | (cols["fault_rate"] > 1),
         "fault_rate must be in [0, 1]")
     bad(cols["fault_scale"] <= 0, "fault_scale must be > 0")
+    bad(cols["park_cost"] <= 0, "park_cost must be > 0")
 
 
 #: DEFAULT_ALPHA indexed by policy id (the vectorized alpha_eff lookup).
@@ -1254,6 +1344,8 @@ def encode_columns(cols, validate: bool = True, strict: bool = True) -> dict:
     for f, v in RAW_OPEN_DEFAULTS.items():
         cols.setdefault(f, v)
     for f, v in RAW_FAULT_DEFAULTS.items():
+        cols.setdefault(f, v)
+    for f, v in RAW_ENV_DEFAULTS.items():
         cols.setdefault(f, v)
     for key, table, what in (("lock", POLICY_IDS, "lock"),
                              ("oracle", ORACLE_IDS, "oracle"),
@@ -1290,7 +1382,7 @@ def encode_columns(cols, validate: bool = True, strict: bool = True) -> dict:
     # sws_start per discipline (the SimConfig.sws_start rule, vectorized)
     sws_start = np.where(
         lock == SLEEP, 1,
-        np.where(lock == MUTABLE,
+        np.where((lock == MUTABLE) | (lock == FISSILE),
                  np.clip(full["sws_init"], 1, np.maximum(sws_max_eff, 1)),
                  threads)).astype(np.int32)
     f32 = lambda key: full[key].astype(np.float32)
@@ -1320,6 +1412,7 @@ def encode_columns(cols, validate: bool = True, strict: bool = True) -> dict:
         "fault": full["fault"].astype(np.int32),
         "flt_rate": f32("fault_rate"),
         "flt_scale": f32("fault_scale"),
+        "park_cost": f32("park_cost"),
     }
 
 
@@ -1391,4 +1484,5 @@ def encode_configs_legacy(configs) -> dict:
         "fault": col(lambda c: FAULT_IDS[c.fault], np.int32),
         "flt_rate": col(lambda c: c.fault_rate, np.float32),
         "flt_scale": col(lambda c: c.fault_scale, np.float32),
+        "park_cost": col(lambda c: c.park_cost, np.float32),
     }

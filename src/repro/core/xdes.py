@@ -95,7 +95,7 @@ _PRM_FIELDS = ("policy", "threads", "dt", "wake", "cs_lo", "cs_hi",
                "ncs_lo", "ncs_hi", "k", "sws_max", "spin_budget", "seed",
                "oracle", "workload", "wl_period", "wl_duty", "wl_burst",
                "wl_spread", "arrival", "arr_rate", "q_cap", "slo", "tb",
-               "fault", "flt_rate", "flt_scale")
+               "fault", "flt_rate", "flt_scale", "park_cost")
 
 
 # --------------------------------------------------------------------------
@@ -249,7 +249,7 @@ def _simulate_core(arrs, n_steps, T: int, backend: str = "ref",
     parity reference.
     """
     C = arrs["policy"].shape[0]
-    _, _, budget_f, _, _, _ = P.discipline_flags(arrs["policy"])
+    budget_f = P.discipline_flags(arrs["policy"])[2]
     has_budget = budget_f > 0
     state0 = _init_state(arrs, T, open_loop)
     prm = tuple(arrs[f] for f in _PRM_FIELDS)
@@ -435,7 +435,8 @@ def plan_schedule_columns(cols, target_cs: int = 300):
     cs_hi = np.asarray(cols["cs_hi"], np.float64)
     ncs_lo = np.asarray(cols["ncs_lo"], np.float64)
     ncs_hi = np.asarray(cols["ncs_hi"], np.float64)
-    wake = np.asarray(cols["wake_latency"], np.float64)
+    wake = (np.asarray(cols["wake_latency"], np.float64)
+            * np.asarray(cols.get("park_cost", 1.0), np.float64))
     threads = np.asarray(cols["threads"], np.int64)
     cores = np.asarray(cols["cores"], np.int64)
     cs_scale, ncs_scale = P.workload_mean_scale_columns(

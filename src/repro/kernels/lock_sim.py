@@ -206,7 +206,7 @@ _THREAD_STATE_SPEC = (
     ("completed_pt", jnp.int32, 0),
 )
 
-#: dtypes of the 28 per-config context columns (TRANSITION_CONTEXT order).
+#: dtypes of the 29 per-config context columns (TRANSITION_CONTEXT order).
 _CONTEXT_DTYPES = (
     jnp.float32,                        # now2
     jnp.int32,                          # stepi (per-step RNG counter)
@@ -221,6 +221,7 @@ _CONTEXT_DTYPES = (
     jnp.int32, jnp.float32,             # arrival, arr_rate
     jnp.int32, jnp.float32, jnp.int32,  # q_cap, slo, tb
     jnp.int32, jnp.float32, jnp.float32,  # fault, flt_rate, flt_scale
+    jnp.float32,                        # park_cost
 )
 
 _N_THREAD, _N_CONF, _N_CTX = 8, 8, len(_CONTEXT_DTYPES)
@@ -291,7 +292,7 @@ def lock_transitions_step(st, rem, wake_at, slept, spun, ctr, ticket,
                           cs_hi, ncs_lo, ncs_hi, k, sws_max, spin_budget,
                           seed, oracle, workload, wl_period, wl_duty,
                           wl_burst, wl_spread, arrival, arr_rate, q_cap,
-                          slo, tb, fault, flt_rate, flt_scale, *,
+                          slo, tb, fault, flt_rate, flt_scale, park_cost, *,
                           open_state=None,
                           block_configs: int = 256,
                           interpret: bool | None = None):
@@ -324,7 +325,7 @@ def lock_transitions_step(st, rem, wake_at, slept, spun, ctr, ticket,
                                    spin_budget, seed, oracle, workload,
                                    wl_period, wl_duty, wl_burst, wl_spread,
                                    arrival, arr_rate, q_cap, slo, tb,
-                                   fault, flt_rate, flt_scale),
+                                   fault, flt_rate, flt_scale, park_cost),
                                   _CONTEXT_DTYPES)]
 
     mat = pl.BlockSpec((bc, Tp), lambda i: (i, 0))
@@ -369,7 +370,7 @@ def lock_transitions_step(st, rem, wake_at, slept, spun, ctr, ticket,
 # scan: 2*B pad/slice round trips and kernel launches become 1 per block.
 # --------------------------------------------------------------------------
 
-#: dtypes of the 31 per-config context columns of the block kernel
+#: dtypes of the 32 per-config context columns of the block kernel
 #: (repro.kernels.ref.BLOCK_CONTEXT order): step0, the step limit, the GPS
 #: advance inputs (alpha, cores, has_budget), then TRANSITION_CONTEXT
 #: minus now2 and stepi (both recomputed in-block from step0 + s).
@@ -406,7 +407,8 @@ def lock_sim_block(st, rem, wake_at, slept, spun, ctr, ticket,
                    policy, threads, dt, wake, cs_lo, cs_hi, ncs_lo, ncs_hi,
                    k, sws_max, spin_budget, seed, oracle, workload,
                    wl_period, wl_duty, wl_burst, wl_spread, arrival,
-                   arr_rate, q_cap, slo, tb, fault, flt_rate, flt_scale, *,
+                   arr_rate, q_cap, slo, tb, fault, flt_rate, flt_scale,
+                   park_cost, *,
                    n_sub_steps: int, block_configs: int = 256,
                    interpret: bool | None = None, limit=None,
                    open_state=None):
@@ -447,7 +449,7 @@ def lock_sim_block(st, rem, wake_at, slept, spun, ctr, ticket,
                                    seed, oracle, workload, wl_period,
                                    wl_duty, wl_burst, wl_spread, arrival,
                                    arr_rate, q_cap, slo, tb,
-                                   fault, flt_rate, flt_scale),
+                                   fault, flt_rate, flt_scale, park_cost),
                                   _BLOCK_CTX_DTYPES)]
 
     mat = pl.BlockSpec((bc, Tp), lambda i: (i, 0))

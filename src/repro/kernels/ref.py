@@ -139,7 +139,7 @@ TRANSITION_CONTEXT = ("now2", "stepi", "policy", "threads", "dt", "wake",
                       "spin_budget", "seed", "oracle", "workload",
                       "wl_period", "wl_duty", "wl_burst", "wl_spread",
                       "arrival", "arr_rate", "q_cap", "slo", "tb",
-                      "fault", "flt_rate", "flt_scale")
+                      "fault", "flt_rate", "flt_scale", "park_cost")
 
 #: Open-loop state appended after the closed carry (spin_cpu) — only
 #: materialized when a batch contains an open-arrival config
@@ -292,7 +292,7 @@ def lock_transitions_ref(st, rem, wake_at, slept, spun, ctr, ticket,
                          cs_hi, ncs_lo, ncs_hi, k, sws_max, spin_budget,
                          seed, oracle, workload, wl_period, wl_duty,
                          wl_burst, wl_spread, arrival, arr_rate, q_cap,
-                         slo, tb, fault, flt_rate, flt_scale, *,
+                         slo, tb, fault, flt_rate, flt_scale, park_cost, *,
                          open_state=None):
     """One transition step for a (C, T) block of configurations.
 
@@ -323,7 +323,7 @@ def lock_transitions_ref(st, rem, wake_at, slept, spun, ctr, ticket,
     col = lambda v: v[:, None]                                 # (C,) -> (C,1)
     active = tid < col(threads)
     (hand_f, fifo_f, budget_f, w2s_f, repark_f,
-     win_f) = P.discipline_flags(policy)
+     win_f, bscale_f, backoff_f) = P.discipline_flags(policy)
     teps = dt * jnp.float32(1e-3)
     stepu = jnp.asarray(stepi).astype(jnp.uint32)  # scalar or (C,)
     stepuT = stepu if stepu.ndim == 0 else stepu[:, None]
@@ -338,8 +338,21 @@ def lock_transitions_ref(st, rem, wake_at, slept, spun, ctr, ticket,
                              stepuT)
     flt_w2 = counter_uniform(col(seed) ^ jnp.uint32(P.FLT_MAG_SALT), tidb,
                              stepuT)
-    wake_eff = P.fault_wake_delay(col(fault), col(wake), flt_w1, flt_w2,
+    # M:N environment axis: park_cost re-prices the sleep/wake round trip
+    # (green threads << 1, kernel threads 1, oversubscribed VMs >> 1).
+    # The default 1.0 multiplies exactly, so pre-park_cost configs are
+    # bit-identical.
+    wake_base = col(wake) * col(park_cost)
+    wake_eff = P.fault_wake_delay(col(fault), wake_base, flt_w1, flt_w2,
                                   col(flt_rate), col(flt_scale))
+    # Fissile competitive pricing: a budget_scaled row spins for about the
+    # park round trip before parking — spin_budget * sws * park_cost, with
+    # the oracle window sws as the adaptive multiplier.  Exact *1.0 for
+    # every other row (adaptive keeps its flat glibc budget).
+    budget_eff = lambda sws_now: col(spin_budget) * jnp.where(
+        col(bscale_f) > 0,
+        col(sws_now).astype(jnp.float32) * col(park_cost),
+        jnp.float32(1.0))
 
     # -- open-loop admission (arrival rows; see docs/open_loop.md) --------
     # Runs FIRST so a request admitted at step i is in the system for
@@ -416,6 +429,10 @@ def lock_transitions_ref(st, rem, wake_at, slept, spun, ctr, ticket,
         clamp, C1/C2 correction — windowed disciplines only."""
         do = happened & (win_f > 0)
         spun_w = jnp.sum(jnp.where(winner_oh, spun, 0), axis=-1)
+        # budget_scaled rows feed the oracle "did this acquisition park?"
+        # alone: every fissile arrival spins first, so the raw spun flag
+        # would mask the late signal and freeze the window at 1.
+        spun_w = spun_w * (1 - bscale_f)
         slept_w = jnp.sum(jnp.where(winner_oh, slept, 0), axis=-1)
         delta, cnt2, ewma2 = P.oracle_update(                  # E2-E11
             oracle, spun_w, slept_w, sws, cnt, ewma, k)
@@ -436,7 +453,13 @@ def lock_transitions_ref(st, rem, wake_at, slept, spun, ctr, ticket,
     # -- wake completions --------------------------------------------------
     due = (st == P.WAKING) & (wake_at <= col(now2 + teps))
     holder_free = ~jnp.any(st == P.CS, axis=-1, keepdims=True)
-    winA = first_oh(due) & holder_free
+    # FIFO rows that park (hapax) keep tickets through SLEEP/WAKING, and a
+    # wake completion grants the oldest ticket, not the lowest tid.  For
+    # every other row (and the never-parking fifo row) due threads carry
+    # no ordering constraint and the historical id pick is unchanged.
+    wkey = jnp.where(due, ticket, NO_TICKET)
+    winA_f = first_oh(due & (wkey == jnp.min(wkey, axis=-1, keepdims=True)))
+    winA = jnp.where(col(fifo_f) > 0, winA_f, first_oh(due)) & holder_free
     cs_val, ctr = draw_into(winA, cs_lo, cs_hi, ctr)
     rem = jnp.where(winA, cs_val, rem)
     st = jnp.where(winA, P.CS, st)
@@ -448,7 +471,11 @@ def lock_transitions_ref(st, rem, wake_at, slept, spun, ctr, ticket,
     to_spin = losers & (col(w2s_f) > 0)    # woken into the spinning window
     st = jnp.where(to_spin, P.SPIN, st)
     spun = jnp.where(to_spin, 1, spun)
-    rem = jnp.where(to_spin, inf, rem)
+    # fissile (budget_spin + wake_to_spin) re-arms a fresh bounded budget;
+    # the mutable row's window spinners keep the unbounded inf sentinel
+    rem = jnp.where(to_spin,
+                    jnp.where(col(budget_f) > 0, budget_eff(sws), inf),
+                    rem)
     to_park = losers & (col(repark_f) > 0)     # barged: park again
     st, wake_at, permits, wake_count, slept, rem = park(
         to_park, st, wake_at, permits, wake_count, slept, rem)
@@ -519,12 +546,44 @@ def lock_transitions_ref(st, rem, wake_at, slept, spun, ctr, ticket,
     quota = jnp.where(rel, quota, 0)
     sleepers = st == P.SLEEP_ST
     rank_s = jnp.cumsum(sleepers.astype(jnp.int32), axis=-1) - 1
-    sel = sleepers & (rank_s < col(quota))
+    sel_id = sleepers & (rank_s < col(quota))
+    # FIFO rows wake the oldest ticket first (hapax head-of-queue unlock;
+    # their quota is 0/1, so the single min-ticket pick covers it) — the
+    # never-parking fifo row has no sleepers, leaving sel_id untouched.
+    skey = jnp.where(sleepers, ticket, NO_TICKET)
+    sel_f = first_oh(sleepers
+                     & (skey == jnp.min(skey, axis=-1, keepdims=True))) \
+        & (col(quota) > 0)
+    sel = jnp.where(col(fifo_f) > 0, sel_f, sel_id)
     n_sel = jnp.sum(sel.astype(jnp.int32), axis=-1)
     st = jnp.where(sel, P.WAKING, st)
     wake_at = jnp.where(sel, col(now2) + wake_eff, wake_at)
     wake_count = wake_count + n_sel
     permits = permits + (quota - n_sel)    # park-free permits are banked
+
+    # -- ttas_backoff polls (backoff rows only; exact no-op otherwise) ----
+    # A handoff=0 release just frees the lock, so the poll IS the acquire
+    # path: an eligible spinner (next-poll time reached, lock free) picks
+    # the lock up here; every other eligible poller re-arms with a
+    # truncated-binary-exponential delay ``spin_budget * 2^min(attempt,
+    # BO_CAP) * u`` from the dedicated BO_SALT stream.  Backoff rows never
+    # park, so ``wake_at`` doubles as the next-poll time and ``ticket`` as
+    # the failed-attempt counter (both unread by the generic stages for
+    # spinning threads).
+    bo_u = counter_uniform(col(seed) ^ jnp.uint32(P.BO_SALT), tidb, stepuT)
+    poll = (st == P.SPIN) & (col(backoff_f) > 0) \
+        & (wake_at <= col(now2 + teps))
+    holder_freeP = ~jnp.any(st == P.CS, axis=-1, keepdims=True)
+    winP = first_oh(poll) & holder_freeP
+    cs_valP, ctr = draw_into(winP, cs_lo, cs_hi, ctr)
+    rem = jnp.where(winP, cs_valP, rem)
+    st = jnp.where(winP, P.CS, st)
+    poll_fail = poll & ~winP
+    ticket = jnp.where(poll_fail, ticket + 1, ticket)
+    bo_exp = jnp.exp2(jnp.minimum(ticket, P.BO_CAP).astype(jnp.float32))
+    wake_at = jnp.where(poll_fail,
+                        col(now2) + col(spin_budget) * bo_exp * bo_u,
+                        wake_at)
 
     # -- arrivals (NCS finished) ------------------------------------------
     arr = (st == P.NCS) & (rem <= REM_EPS) & active
@@ -548,16 +607,29 @@ def lock_transitions_ref(st, rem, wake_at, slept, spun, ctr, ticket,
     st = jnp.where(to_spinC, P.SPIN, st)
     spun = jnp.where(to_spinC, 1, spun)
     rem = jnp.where(to_spinC,
-                    jnp.where(col(budget_f) > 0, col(spin_budget), inf),
+                    jnp.where(col(budget_f) > 0, budget_eff(sws), inf),
                     rem)
-    # ticket-order bookkeeping: every new spinner takes the next ticket
-    # (rank order within the step); only FIFO rows read them for grants
-    rank_t = jnp.cumsum(to_spinC.astype(jnp.int32), axis=-1) - 1
-    ticket = jnp.where(to_spinC, col(nticket) + rank_t, ticket)
-    nticket = nticket + jnp.sum(to_spinC.astype(jnp.int32), axis=-1)
+    # ticket-order bookkeeping: every new waiter takes the next ticket
+    # (rank order within the step); only FIFO rows read them for grants.
+    # FIFO rows that park (hapax) ticket their parking arrivals too — for
+    # every other row the joiner set is exactly the new spinners.
+    joiners = to_spinC | (sleeps & (col(fifo_f) > 0))
+    rank_t = jnp.cumsum(joiners.astype(jnp.int32), axis=-1) - 1
+    ticket = jnp.where(joiners, col(nticket) + rank_t, ticket)
+    nticket = nticket + jnp.sum(joiners.astype(jnp.int32), axis=-1)
+    # backoff rows: a new spinner starts its attempt counter at 0 and
+    # schedules its first re-poll within one base delay
+    bo_new = to_spinC & (col(backoff_f) > 0)
+    ticket = jnp.where(bo_new, 0, ticket)
+    wake_at = jnp.where(bo_new, col(now2) + col(spin_budget) * bo_u,
+                        wake_at)
     st, wake_at, permits, wake_count, slept, rem = park(
         sleeps, st, wake_at, permits, wake_count, slept, rem)
-    ticket = jnp.where(st == P.SPIN, ticket, NO_TICKET)    # retire tickets
+    # retire tickets: spinners keep theirs; FIFO rows that park keep them
+    # through SLEEP/WAKING so grants stay in arrival order
+    queued = (st == P.SPIN) | ((col(fifo_f) > 0)
+                               & ((st == P.SLEEP_ST) | (st == P.WAKING)))
+    ticket = jnp.where(queued, ticket, NO_TICKET)
 
     if not open_run:
         return (st, rem, wake_at, slept, spun, ctr, ticket, completed_pt,
@@ -613,7 +685,7 @@ BLOCK_CONTEXT = ("step0", "limit", "alpha", "cores", "has_budget",
                  "ncs_lo", "ncs_hi", "k", "sws_max", "spin_budget", "seed",
                  "oracle", "workload", "wl_period", "wl_duty", "wl_burst",
                  "wl_spread", "arrival", "arr_rate", "q_cap", "slo", "tb",
-                 "fault", "flt_rate", "flt_scale")
+                 "fault", "flt_rate", "flt_scale", "park_cost")
 
 
 def lock_sim_block_ref(st, rem, wake_at, slept, spun, ctr, ticket,
@@ -624,7 +696,7 @@ def lock_sim_block_ref(st, rem, wake_at, slept, spun, ctr, ticket,
                        ncs_lo, ncs_hi, k, sws_max, spin_budget, seed,
                        oracle, workload, wl_period, wl_duty, wl_burst,
                        wl_spread, arrival, arr_rate, q_cap, slo, tb,
-                       fault, flt_rate, flt_scale,
+                       fault, flt_rate, flt_scale, park_cost,
                        *, n_sub_steps: int, limit=None, open_state=None):
     """``n_sub_steps`` fused timesteps for a (C, T) block of configurations.
 
@@ -674,6 +746,7 @@ def lock_sim_block_ref(st, rem, wake_at, slept, spun, ctr, ticket,
                                    wl_period, wl_duty, wl_burst,
                                    wl_spread, arrival, arr_rate, q_cap,
                                    slo, tb, fault, flt_rate, flt_scale,
+                                   park_cost,
                                    open_state=ostate if n_open else None)
         new, onew = out[:16], out[16:]
         if limit is None:

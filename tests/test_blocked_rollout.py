@@ -87,7 +87,7 @@ def test_block_ref_matches_per_step_composition():
     cores = rng.integers(1, 12, C).astype(np.float32)
     has_budget = rng.integers(0, 2, C).astype(bool)
     ctx = (
-        rng.integers(0, 7, C).astype(np.int32),                 # policy
+        rng.integers(0, 10, C).astype(np.int32),                # policy
         rng.integers(1, T + 1, C).astype(np.int32),             # threads
         rng.uniform(1e-8, 1e-6, C).astype(np.float32),          # dt
         np.full(C, WAKE, np.float32),                           # wake
@@ -113,6 +113,7 @@ def test_block_ref_matches_per_step_composition():
         rng.integers(0, 5, C).astype(np.int32),                 # fault
         rng.uniform(0.0, 0.5, C).astype(np.float32),            # flt_rate
         rng.uniform(1e-6, 1e-4, C).astype(np.float32),          # flt_scale
+        rng.uniform(0.1, 100.0, C).astype(np.float32),          # park_cost
     )
     dt = ctx[2]
     B, step0 = 5, 11

@@ -1,0 +1,188 @@
+"""Auto-enumerating cross-registry conformance suite.
+
+Every test matrix here is parameterized FROM the registries in
+``repro.core.policy`` (``POLICY_IDS`` / ``DISCIPLINE_ROWS`` /
+``WORKLOAD_ROWS`` / ``ARRIVAL_ROWS`` / ``FAULT_ROWS``) at import time —
+never from a hand-kept list — so a newly registered discipline,
+workload, arrival, or fault row joins the conformance matrix by virtue
+of being registered, and a row missing its kernel/DES/alpha plumbing
+fails loudly here instead of silently shrinking coverage.
+
+What the matrix pins, for every enumerated combination:
+
+* ref == Pallas bit-identity, on the per-step scan AND the fused
+  blocked rollout at B in {1, 32} (`docs/disciplines.md`),
+* :meth:`BatchResult.validate` — no non-finite leaks anywhere in the
+  cross product,
+* conservation: global completed-CS equals the per-thread ledger sum,
+  and (open-loop rows) arrived == shed + departed + in_flight with the
+  sharp Little's-law bound on the occupancy integral.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import policy as P
+from repro.core import xdes
+from repro.core.policy import SimConfig
+
+SHORT = (0.0, 3.7e-6)
+LONG = (0.0, 80e-6)
+WAKE = 8e-6
+
+# -- enumerated from the registries at import time ------------------------
+LOCKS = sorted(P.POLICY_IDS)                     # every policy id
+WORKLOADS = list(P.WORKLOAD_ROWS)
+ARRIVALS = list(P.ARRIVAL_ROWS)
+OPEN_ARRIVALS = [a for a in ARRIVALS if P.ARRIVAL_IDS[a] != P.AR_CLOSED]
+FAULTS = list(P.FAULT_ROWS)
+PARK_COSTS = (0.25, 1.0, 16.0)                   # M:N environment axis
+
+ROLLOUTS = {
+    "scan": dict(rollout="scan"),
+    "blocked-1": dict(rollout="blocked", block_steps=1),
+    "blocked-32": dict(rollout="blocked", block_steps=32),
+}
+
+
+def test_registry_closure():
+    """The four registries are dense, named, and mutually consistent:
+    every policy id belongs to exactly one discipline row, and every
+    lock has a DEFAULT_ALPHA entry and a DES model twin."""
+    from repro.core.des import _MODELS
+
+    covered = [pid for row in P.DISCIPLINE_ROWS.values()
+               for pid in row.policy_ids]
+    assert sorted(covered) == sorted(P.POLICY_IDS.values())
+    assert len(covered) == len(set(covered))     # a partition, no overlap
+    assert sorted(P.POLICY_IDS.values()) == list(range(len(P.POLICY_IDS)))
+    assert all(P.POLICY_NAMES[i] == n for n, i in P.POLICY_IDS.items())
+    assert set(P.DEFAULT_ALPHA) == set(P.POLICY_IDS)
+    assert set(_MODELS) == set(P.POLICY_IDS)
+    for ids in (P.WORKLOAD_IDS, P.ARRIVAL_IDS, P.FAULT_IDS):
+        assert sorted(ids.values()) == list(range(len(ids)))
+
+
+# -------------------------------------------------------------------------
+# The closed-loop matrix: lock x workload x fault, park_cost riding along
+# -------------------------------------------------------------------------
+def _closed_configs():
+    rng = np.random.default_rng(0)
+    cfgs = []
+    for lock in LOCKS:
+        for w in WORKLOADS:
+            for flt in FAULTS:
+                i = len(cfgs)
+                cfgs.append(SimConfig(
+                    lock, threads=int(rng.integers(2, 9)),
+                    cores=int(rng.integers(2, 9)),
+                    cs=SHORT if i % 2 else LONG, ncs=SHORT,
+                    wake_latency=WAKE, seed=int(rng.integers(0, 1000)),
+                    workload=w,
+                    fault=flt, fault_rate=0.0 if flt == "none" else 0.25,
+                    park_cost=PARK_COSTS[i % len(PARK_COSTS)]))
+    return cfgs
+
+
+@pytest.fixture(scope="module")
+def closed_matrix():
+    cfgs = _closed_configs()
+    runs = {(rk, backend): xdes.simulate_batch(cfgs, n_steps=220,
+                                               backend=backend, **kw)
+            for rk, kw in ROLLOUTS.items() for backend in ("ref", "pallas")}
+    return cfgs, runs
+
+
+def _assert_equal(a, b, fields, msg=""):
+    for f in fields:
+        np.testing.assert_array_equal(np.asarray(getattr(a, f)),
+                                      np.asarray(getattr(b, f)),
+                                      err_msg=f"{msg}: {f}")
+
+
+CLOSED_FIELDS = ("completed", "completed_per_thread", "wake_count",
+                 "final_sws", "spin_cpu", "t_end")
+
+
+@pytest.mark.parametrize("rollout", list(ROLLOUTS))
+def test_closed_matrix_ref_pallas_bit_identity(closed_matrix, rollout):
+    cfgs, runs = closed_matrix
+    _assert_equal(runs[rollout, "ref"], runs[rollout, "pallas"],
+                  CLOSED_FIELDS, f"ref==pallas {rollout}")
+
+
+@pytest.mark.parametrize("rollout", [k for k in ROLLOUTS if k != "scan"])
+def test_closed_matrix_blocked_equals_scan(closed_matrix, rollout):
+    cfgs, runs = closed_matrix
+    _assert_equal(runs["scan", "ref"], runs[rollout, "ref"],
+                  CLOSED_FIELDS, f"scan=={rollout}")
+
+
+def test_closed_matrix_validates_and_conserves(closed_matrix):
+    cfgs, runs = closed_matrix
+    res = runs["scan", "ref"].validate("conformance matrix")
+    per = np.asarray(res.completed_per_thread, np.int64)
+    for i, c in enumerate(cfgs):
+        assert per[i, c.threads:].sum() == 0, (i, c.lock)   # padded lanes
+        assert per[i].sum() == int(res.completed[i]), (i, c.lock)
+    # the matrix actually exercises the machine: most cells complete CSes
+    assert (res.completed > 0).mean() > 0.9
+
+
+# -------------------------------------------------------------------------
+# The open-loop matrix: lock x open arrival rows
+# -------------------------------------------------------------------------
+def _open_configs():
+    rng = np.random.default_rng(1)
+    cfgs = []
+    for lock in LOCKS:
+        for a in OPEN_ARRIVALS:
+            cfgs.append(SimConfig(
+                lock, threads=int(rng.integers(2, 9)),
+                cores=int(rng.integers(2, 9)), cs=SHORT, ncs=SHORT,
+                wake_latency=WAKE, seed=int(rng.integers(0, 1000)),
+                arrival=a, arrival_rate=float(rng.uniform(5e4, 6e5)),
+                queue_cap=int(rng.integers(4, 32)),
+                park_cost=PARK_COSTS[len(cfgs) % len(PARK_COSTS)]))
+    return cfgs
+
+
+OPEN_FIELDS = CLOSED_FIELDS + ("lat_hist", "arrived", "shed", "departed",
+                               "slo_viol", "lat_sum", "occ_int",
+                               "in_flight")
+
+
+@pytest.fixture(scope="module")
+def open_matrix():
+    cfgs = _open_configs()
+    runs = {(rk, backend): xdes.simulate_batch(cfgs, n_steps=260,
+                                               backend=backend, **kw)
+            for rk, kw in ROLLOUTS.items() for backend in ("ref", "pallas")}
+    return cfgs, runs
+
+
+@pytest.mark.parametrize("rollout", list(ROLLOUTS))
+def test_open_matrix_ref_pallas_bit_identity(open_matrix, rollout):
+    cfgs, runs = open_matrix
+    _assert_equal(runs[rollout, "ref"], runs[rollout, "pallas"],
+                  OPEN_FIELDS, f"ref==pallas {rollout}")
+    _assert_equal(runs["scan", "ref"], runs[rollout, "ref"],
+                  OPEN_FIELDS, f"scan=={rollout}")
+
+
+def test_open_matrix_validates_and_conserves(open_matrix):
+    """Request conservation + the sharp Little's-law bound (the same
+    contract as tests/test_open_loop.py) across the whole matrix."""
+    cfgs, runs = open_matrix
+    res = runs["scan", "ref"].validate("open conformance matrix")
+    assert int(np.asarray(res.arrived).sum()) > 0
+    for i, c in enumerate(cfgs):
+        arrived, shed = int(res.arrived[i]), int(res.shed[i])
+        departed, fly = int(res.departed[i]), int(res.in_flight[i])
+        assert arrived - shed - departed - fly == 0, (i, c.lock)
+        assert 0 <= fly <= c.queue_cap + c.threads, (i, c.lock)
+        assert int(res.lat_hist[i].sum()) == departed, (i, c.lock)
+        occ, lat = float(res.occ_int[i]), float(res.lat_sum[i])
+        slack = 1e-3 * max(occ, lat) + 1e-6
+        assert occ - lat >= -slack, (i, c.lock)
+        assert occ - lat <= fly * float(res.t_end[i]) + slack, (i, c.lock)

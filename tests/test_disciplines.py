@@ -30,14 +30,19 @@ def test_every_policy_id_has_a_row():
 
 def test_discipline_flags_table():
     ids = np.arange(len(P.POLICY_IDS), dtype=np.int32)
-    hand, fifo, budget, w2s, repark, win = P.discipline_flags(ids)
-    by = {P.POLICY_NAMES[i]: (hand[i], fifo[i], budget[i], w2s[i],
-                              repark[i], win[i]) for i in ids}
-    assert by["ttas"] == (1, 0, 0, 0, 0, 0)
-    assert by["sleep"] == (0, 0, 0, 0, 1, 0)
-    assert by["adaptive"] == (1, 0, 1, 0, 1, 0)
-    assert by["mutable"] == (1, 0, 0, 1, 0, 1)
-    assert by["fifo"] == (1, 1, 0, 0, 0, 0)
+    flags = P.discipline_flags(ids)
+    assert len(flags) == len(P.DISCIPLINE_FLAG_ATTRS)
+    by = {P.POLICY_NAMES[i]: tuple(int(f[i]) for f in flags) for i in ids}
+    # (handoff, fifo_grant, budget_spin, wake_to_spin, repark, windowed,
+    #  budget_scaled, backoff)
+    assert by["ttas"] == (1, 0, 0, 0, 0, 0, 0, 0)
+    assert by["sleep"] == (0, 0, 0, 0, 1, 0, 0, 0)
+    assert by["adaptive"] == (1, 0, 1, 0, 1, 0, 0, 0)
+    assert by["mutable"] == (1, 0, 0, 1, 0, 1, 0, 0)
+    assert by["fifo"] == (1, 1, 0, 0, 0, 0, 0, 0)
+    assert by["fissile"] == (1, 0, 1, 1, 0, 1, 1, 0)
+    assert by["hapax"] == (0, 1, 0, 0, 0, 0, 0, 0)
+    assert by["ttas_backoff"] == (0, 0, 0, 0, 0, 0, 0, 1)
 
 
 def test_arrival_sleeps_dispatch():
@@ -48,9 +53,14 @@ def test_arrival_sleeps_dispatch():
     assert P.discipline_arrival_sleeps(P.SLEEP, 0, 0, 1, 1) == 0
     assert P.discipline_arrival_sleeps(P.SLEEP, 1, 0, 1, 1) == 1
     assert P.discipline_arrival_sleeps(P.SLEEP, 0, 0, 1, 0) == 1
-    # spin family / adaptive / fifo never park on arrival
-    for pid in (P.TAS, P.TTAS, P.MCS, P.ADAPTIVE, P.FIFO):
+    # spin family / adaptive / fifo / fissile / backoff never park on arrival
+    for pid in (P.TAS, P.TTAS, P.MCS, P.ADAPTIVE, P.FIFO, P.FISSILE,
+                P.TTAS_BACKOFF):
         assert P.discipline_arrival_sleeps(pid, 0, 99, 1, 0) == 0
+    # hapax: barge only when the lock is free AND nobody is ahead
+    assert P.discipline_arrival_sleeps(P.HAPAX, 0, 0, 1, 1) == 0
+    assert P.discipline_arrival_sleeps(P.HAPAX, 0, 1, 1, 1) == 1
+    assert P.discipline_arrival_sleeps(P.HAPAX, 0, 0, 1, 0) == 1
 
 
 def test_release_quota_dispatch_matches_scalar_rules():
@@ -134,6 +144,7 @@ def _one_step_state(policy_id, tickets, T=4):
         fault=jnp.zeros((C,), jnp.int32),
         flt_rate=jnp.zeros((C,), jnp.float32),
         flt_scale=jnp.full((C,), 1e-4, jnp.float32),
+        park_cost=jnp.ones((C,), jnp.float32),
     )
     return args
 
@@ -236,7 +247,7 @@ def test_transitions_kernel_matches_ref_on_random_state():
         rng.integers(0, 100, C).astype(np.int32),               # wake_count
         rng.uniform(1e-6, 1e-4, C).astype(np.float32),          # now2
         rng.integers(0, 5000, C).astype(np.int32),              # stepi
-        rng.integers(0, 7, C).astype(np.int32),                 # policy
+        rng.integers(0, 10, C).astype(np.int32),                # policy
         rng.integers(1, T + 1, C).astype(np.int32),             # threads
         rng.uniform(1e-8, 1e-6, C).astype(np.float32),          # dt
         np.full(C, WAKE, np.float32),                           # wake
@@ -262,6 +273,7 @@ def test_transitions_kernel_matches_ref_on_random_state():
         rng.integers(0, 5, C).astype(np.int32),                 # fault
         rng.uniform(0.0, 0.5, C).astype(np.float32),            # flt_rate
         rng.uniform(1e-6, 1e-4, C).astype(np.float32),          # flt_scale
+        rng.uniform(0.1, 100.0, C).astype(np.float32),          # park_cost
     )
     ref = lock_transitions_ref(*args)
     pal = lock_transitions_step(*args, block_configs=16)
@@ -362,11 +374,14 @@ def test_discipline_variants_sweep_oracles_only_for_windowed_rows():
                                        lock_discipline_variants)
 
     variants = lock_discipline_variants()
-    muts = [v for v in variants if v["lock"] == "mutable"]
-    assert [v["oracle"] for v in muts] == list(LOCK_ORACLES)
-    others = [v for v in variants if v["lock"] != "mutable"]
+    windowed = [d for d in ("mutable", "fissile")]
+    for d in windowed:
+        fam = [v for v in variants if v["lock"] == d]
+        assert [v["oracle"] for v in fam] == list(LOCK_ORACLES), d
+    others = [v for v in variants if v["lock"] not in windowed]
     assert all(v["oracle"] == LOCK_ORACLES[0] for v in others)
-    assert len(others) == 5                  # ttas, mcs, fifo, sleep, adaptive
+    # ttas, mcs, fifo, sleep, adaptive, hapax, ttas_backoff
+    assert len(others) == 7
 
     cfgs = lock_discipline_sweep(n_scenarios=3)
     V = len(variants)
@@ -377,3 +392,260 @@ def test_discipline_variants_sweep_oracles_only_for_windowed_rows():
                     for c in block}) == 1   # scenario-major row order
         assert [(c.lock, c.oracle) for c in block] \
             == [(v["lock"], v["oracle"]) for v in variants]
+
+
+# --------------------------------------------------------------------------
+# Related-work rows: Hapax FIFO admission, ttas_backoff, fissile budget
+# --------------------------------------------------------------------------
+def test_hapax_release_wakes_min_ticket_sleeper():
+    """Hapax unlock is a head wake: the oldest-ticket sleeper (NOT the
+    lowest tid) is promoted to WAKING; everyone else stays parked."""
+    import jax.numpy as jnp
+
+    from repro.kernels.ref import NO_TICKET, lock_transitions_ref
+
+    args = _one_step_state(P.HAPAX, [NO_TICKET, 7, 6, 5])
+    st = np.asarray(args["st"]).copy()
+    st[0, 1:] = P.SLEEP_ST                   # hapax waiters park, never spin
+    args["st"] = jnp.asarray(st)
+    out = lock_transitions_ref(**args)
+    st1 = np.asarray(out[0])[0]
+    assert st1[3] == P.WAKING, st1           # oldest ticket woken first
+    assert st1[1] == P.SLEEP_ST and st1[2] == P.SLEEP_ST
+
+
+def test_hapax_no_barging_and_never_spins():
+    """No-barging fairness (per-thread CS counts within a slot of each
+    other) and the constant-time arrival path never burns spin CPU."""
+    cfgs = [SimConfig("hapax", threads=t, cores=c, cs=SHORT, ncs=SHORT,
+                      wake_latency=WAKE, seed=s)
+            for (t, c, s) in ((8, 4, 0), (16, 8, 1), (6, 20, 2))]
+    res = xdes.simulate_batch(cfgs, target_cs=120)
+    # every CS pays a wake round trip, so the step planner undershoots
+    # the target; enough grants still land to read the fairness spread
+    assert (res.completed >= 40).all()
+    np.testing.assert_array_equal(res.spin_cpu, 0.0)
+    for i in range(len(cfgs)):
+        assert res.fairness_spread(i) <= 3, (
+            i, res.completed_per_thread[i])
+
+
+def test_hapax_des_grants_in_park_order():
+    """DES twin: every grant to a parked waiter follows park order — the
+    FIFO admission property, read off the event timeline."""
+    from repro.core.des import LockSim
+
+    sim = LockSim("hapax", 8, 4, SHORT, SHORT, WAKE, seed=2,
+                  record_timeline=True)
+    sim.run(target_cs=200)
+    tl = sim.res.timeline
+    parked, granted = [], []
+    for i, (t, tid, ev) in enumerate(tl):
+        nxt = tl[i + 1] if i + 1 < len(tl) else None
+        prv = tl[i - 1] if i > 0 else None
+        if ev == "arrive" and not (
+                nxt and nxt[2] == "cs_start" and nxt[1] == tid
+                and nxt[0] == t):
+            parked.append(tid)               # contended arrival -> queue
+        elif ev == "cs_start" and not (
+                prv and prv[2] == "arrive" and prv[1] == tid
+                and prv[0] == t):
+            granted.append(tid)              # grant to a parked waiter
+    assert len(parked) >= 50                 # the lock is actually contended
+    assert granted == parked[:len(granted)]
+
+
+def test_ttas_backoff_seed_determinism_and_no_sleeps():
+    """Same seed -> bit-identical engine run; different salt-stream seed
+    -> a different trajectory; the row never parks."""
+    mk = lambda seed: [SimConfig("ttas_backoff", threads=8, cores=4,
+                                 cs=SHORT, ncs=SHORT, wake_latency=WAKE,
+                                 seed=seed)]
+    a = xdes.simulate_batch(mk(7), n_steps=400)
+    b = xdes.simulate_batch(mk(7), n_steps=400)
+    c = xdes.simulate_batch(mk(8), n_steps=400)
+    np.testing.assert_array_equal(a.completed, b.completed)
+    np.testing.assert_array_equal(a.completed_per_thread,
+                                  b.completed_per_thread)
+    np.testing.assert_array_equal(a.spin_cpu, b.spin_cpu)
+    assert not (np.array_equal(a.completed_per_thread,
+                               c.completed_per_thread)
+                and np.array_equal(a.spin_cpu, c.spin_cpu))
+    assert a.wake_count[0] == 0              # never parks
+
+
+def test_ttas_backoff_delay_is_bounded():
+    """A failed poll reschedules at most ``spin_budget * 2^BO_CAP``
+    ahead, however large the attempt counter already is."""
+    import jax.numpy as jnp
+
+    from repro.kernels.ref import NO_TICKET, lock_transitions_ref
+
+    budget = 2e-6
+    args = _one_step_state(P.TTAS_BACKOFF, [NO_TICKET, 3, 10, 50])
+    rem = np.asarray(args["rem"]).copy()
+    rem[0, 0] = 1.0                          # holder keeps the CS: polls fail
+    args["rem"] = jnp.asarray(rem)
+    args["wake_at"] = jnp.zeros((1, 4), jnp.float32)   # all polls due now
+    out = lock_transitions_ref(**args)
+    st1 = np.asarray(out[0])[0]
+    wa1 = np.asarray(out[2])[0]
+    tk1 = np.asarray(out[6])[0]
+    now = float(np.asarray(args["now2"])[0])
+    dt = float(np.asarray(args["dt"])[0])
+    assert (st1[1:] == P.SPIN).all()         # stayed runnable, no parks
+    assert (tk1[1:] == np.array([4, 11, 51])).all()    # attempts increment
+    assert (wa1[1:] > now).all()
+    assert (wa1[1:] <= now + dt + budget * 2.0 ** P.BO_CAP).all()
+
+
+def test_fissile_budget_monotone_in_park_cost_and_sws():
+    """The fissile spin budget is ``spin_budget * sws * park_cost`` — the
+    spin-for-about-a-park-round-trip rule — checked on the engine's
+    arrival re-arm and the DES model, monotone along both axes."""
+    import jax.numpy as jnp
+
+    from repro.core.des import LockSim
+    from repro.kernels.ref import NO_TICKET, lock_transitions_ref
+
+    budget = 2e-6
+    prev = 0.0
+    for sws, pc in ((1, 1.0), (2, 1.0), (2, 8.0), (4, 64.0)):
+        args = _one_step_state(P.FISSILE, [NO_TICKET] * 4)
+        rem = np.asarray(args["rem"]).copy()
+        rem[0, 0] = 1.0                      # holder busy: arrival must spin
+        st = np.asarray(args["st"]).copy()
+        st[0, 1] = P.NCS                     # thread 1 arrives this step
+        rem[0, 1] = 0.0
+        st[0, 2:] = P.NCS                    # keep the rest out of the way
+        rem[0, 2:] = 1.0
+        args["st"], args["rem"] = jnp.asarray(st), jnp.asarray(rem)
+        args["sws"] = jnp.full((1,), sws, jnp.int32)
+        args["park_cost"] = jnp.full((1,), pc, jnp.float32)
+        out = lock_transitions_ref(**args)
+        st1 = np.asarray(out[0])[0]
+        rem1 = np.asarray(out[1])[0]
+        assert st1[1] == P.SPIN
+        want = np.float32(budget) * np.float32(sws) * np.float32(pc)
+        np.testing.assert_allclose(rem1[1], want, rtol=1e-6)
+        assert rem1[1] > prev
+        prev = rem1[1]
+    # DES twin exposes the same rule
+    sims = [LockSim("fissile", 4, 4, SHORT, SHORT, WAKE, seed=0,
+                    park_cost=pc) for pc in (0.1, 1.0, 10.0)]
+    budgets = [s.model._budget() for s in sims]
+    assert budgets == sorted(budgets) and budgets[0] < budgets[-1]
+    sims[1].model.sws = 4
+    assert sims[1].model._budget() == pytest.approx(4 * budgets[1])
+
+
+def test_fissile_parks_less_as_parking_gets_expensive():
+    """Behavioral consequence of the scaled budget: at park_cost=100 the
+    fissile lock parks far less often than at park_cost=1 (same seeds),
+    in both engines."""
+    from repro.core.des import simulate
+
+    def engine_wakes(pc):
+        cfgs = [SimConfig("fissile", threads=8, cores=4, cs=SHORT,
+                          ncs=SHORT, wake_latency=WAKE, seed=s,
+                          park_cost=pc) for s in range(3)]
+        return int(xdes.simulate_batch(cfgs, n_steps=2000).wake_count.sum())
+
+    def des_wakes(pc):
+        return sum(simulate("fissile", threads=8, cores=4, cs=SHORT,
+                            ncs=SHORT, wake_latency=WAKE, target_cs=400,
+                            seed=s, park_cost=pc).wake_count
+                   for s in range(3))
+
+    assert engine_wakes(100.0) < 0.5 * engine_wakes(1.0)
+    assert des_wakes(100.0) < 0.5 * des_wakes(1.0)
+
+
+@pytest.mark.parametrize("lock", ["fissile", "hapax", "ttas_backoff"])
+def test_new_rows_des_parity_seed_averaged(lock):
+    """Each new row's DES twin and the batched engine agree on
+    throughput within the standard band, averaged over seeds, across
+    subscription levels and the park-cost axis."""
+    for tc, pc in ((4, 1.0), (12, 1.0), (12, 8.0)):
+        seeds = (0, 1, 2)
+        d = float(np.mean([
+            simulate(lock, threads=tc, cores=8, cs=SHORT, ncs=SHORT,
+                     wake_latency=WAKE, target_cs=400, seed=s,
+                     park_cost=pc).throughput
+            for s in seeds]))
+        cfgs = [SimConfig(lock, threads=tc, cores=8, cs=SHORT, ncs=SHORT,
+                          wake_latency=WAKE, seed=s, park_cost=pc)
+                for s in seeds]
+        x = float(np.mean(xdes.simulate_batch(cfgs,
+                                              target_cs=150).throughput))
+        assert 0.7 * d < x < 1.4 * d, (lock, tc, pc, x, d)
+
+
+# --------------------------------------------------------------------------
+# Hypothesis property suite for the new rows (skipped without hypothesis)
+# --------------------------------------------------------------------------
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as hst
+    HAVE_HYPOTHESIS = True
+except ImportError:                          # dev-only dependency
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=20, deadline=None)
+    @given(threads=hst.integers(2, 10), cores=hst.integers(1, 16),
+           seed=hst.integers(0, 2**16))
+    def test_prop_hapax_fifo_admission(threads, cores, seed):
+        from repro.core.des import LockSim
+
+        sim = LockSim("hapax", threads, cores, SHORT, SHORT, WAKE,
+                      seed=seed, record_timeline=True)
+        res = sim.run(target_cs=60)
+        assert res.completed_cs >= 60
+        tl = sim.res.timeline
+        parked, granted = [], []
+        for i, (t, tid, ev) in enumerate(tl):
+            nxt = tl[i + 1] if i + 1 < len(tl) else None
+            prv = tl[i - 1] if i > 0 else None
+            if ev == "arrive" and not (
+                    nxt and nxt[2] == "cs_start" and nxt[1] == tid
+                    and nxt[0] == t):
+                parked.append(tid)
+            elif ev == "cs_start" and not (
+                    prv and prv[2] == "arrive" and prv[1] == tid
+                    and prv[0] == t):
+                granted.append(tid)
+        assert granted == parked[:len(granted)]
+
+    @settings(max_examples=20, deadline=None)
+    @given(threads=hst.integers(2, 10), cores=hst.integers(1, 16),
+           seed=hst.integers(0, 2**16))
+    def test_prop_ttas_backoff_deterministic_never_sleeps(threads, cores,
+                                                          seed):
+        from repro.core.des import simulate
+
+        a = simulate("ttas_backoff", threads=threads, cores=cores,
+                     cs=SHORT, ncs=SHORT, wake_latency=WAKE,
+                     target_cs=60, seed=seed)
+        b = simulate("ttas_backoff", threads=threads, cores=cores,
+                     cs=SHORT, ncs=SHORT, wake_latency=WAKE,
+                     target_cs=60, seed=seed)
+        assert a.completed_cs == b.completed_cs >= 60
+        assert a.t_end == b.t_end and a.spin_cpu == b.spin_cpu
+        assert a.wake_count == 0
+
+    @settings(max_examples=20, deadline=None)
+    @given(sws=hst.integers(1, 32),
+           costs=hst.lists(hst.floats(0.01, 1000.0), min_size=2,
+                           max_size=5, unique=True))
+    def test_prop_fissile_budget_monotone(sws, costs):
+        from repro.core.des import LockSim
+
+        budgets = []
+        for pc in sorted(costs):
+            sim = LockSim("fissile", 4, 4, SHORT, SHORT, WAKE,
+                          park_cost=pc)
+            sim.model.sws = sws
+            budgets.append(sim.model._budget())
+        assert budgets == sorted(budgets)
+        assert budgets[0] < budgets[-1]

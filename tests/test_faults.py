@@ -344,9 +344,10 @@ def test_fault_columns_twin_bit_identical():
 
 def test_fault_grid_smoke():
     from benchmarks.sweep import fault_grid
+    from repro.configs.catalog import lock_discipline_variants
 
     out = fault_grid(n_scenarios=4, target_cs=25, verbose=False)
-    assert out["meta"]["n_configs"] == 4 * 5 * 9
+    assert out["meta"]["n_configs"] == 4 * 5 * len(lock_discipline_variants())
     assert set(out["faults"]) == set(FAULTS)
     for fl, rows in out["faults"].items():
         assert sum(r["wins"] for r in rows.values()) == 4, fl

@@ -229,22 +229,27 @@ def test_sweep_stream_rejects_misaligned_chunk():
 
 
 # --------------------------------------------------------------------------
-# Array-native config feed == legacy per-lambda encoder
+# Array-native config feed == SimConfig-list encoder, per catalog family
 # --------------------------------------------------------------------------
-def test_encode_columns_matches_legacy_per_family():
+def test_encode_columns_matches_list_per_family():
     """Every catalog row family: the column twin packs bit-equal engine
-    arrays to the per-config lambda table."""
+    arrays to encoding the equivalent SimConfig list — both through the
+    polymorphic ``encode_configs`` front door (the supported path; the
+    retired per-lambda encoder keeps exactly one parity pin below)."""
     from repro.configs.catalog import (lock_arrival_columns,
                                        lock_arrival_sweep,
                                        lock_discipline_columns,
                                        lock_discipline_sweep,
+                                       lock_fault_columns,
+                                       lock_fault_sweep,
                                        lock_oracle_columns,
                                        lock_oracle_sweep,
+                                       lock_park_columns, lock_park_sweep,
                                        lock_scenario_columns,
                                        lock_scenario_sweep,
                                        lock_workload_columns,
                                        lock_workload_sweep)
-    from repro.core.policy import encode_configs, encode_configs_legacy
+    from repro.core.policy import encode_configs
 
     pairs = [
         ("scenario", lock_scenario_sweep(n_scenarios=23),
@@ -255,21 +260,27 @@ def test_encode_columns_matches_legacy_per_family():
          lock_discipline_columns(n_scenarios=7)),
         ("workload", lock_workload_sweep(n_scenarios=5),
          lock_workload_columns(n_scenarios=5)),
+        ("fault", lock_fault_sweep(n_scenarios=3),
+         lock_fault_columns(n_scenarios=3)),
         ("arrival", lock_arrival_sweep(n_scenarios=3),
          lock_arrival_columns(n_scenarios=3)),
+        ("park", lock_park_sweep(n_scenarios=2),
+         lock_park_columns(n_scenarios=2)),
     ]
     for name, cfgs, cols in pairs:
-        legacy = encode_configs_legacy(cfgs)
+        from_list = encode_configs(cfgs)
         packed = encode_configs(cols)
-        assert set(packed) == set(legacy), name
+        assert set(packed) == set(from_list), name
         for k in packed:
-            np.testing.assert_array_equal(packed[k], legacy[k],
+            np.testing.assert_array_equal(packed[k], from_list[k],
                                           err_msg=f"{name}.{k}")
-            assert packed[k].dtype == legacy[k].dtype, f"{name}.{k}"
+            assert packed[k].dtype == from_list[k].dtype, f"{name}.{k}"
 
 
 def test_encode_configs_list_matches_legacy():
-    """The polymorphic front door on a plain SimConfig list."""
+    """THE legacy-parity pin: the polymorphic front door on a plain
+    SimConfig list == the retired per-field lambda table, bit for bit.
+    Every other test goes through ``encode_configs``."""
     from repro.core.policy import encode_configs, encode_configs_legacy
 
     cfgs = _mixed_batch(30, seed=6)

@@ -357,9 +357,11 @@ def test_sched_scenario_workload_rows():
 
 def test_workload_grid_smoke():
     from benchmarks.sweep import workload_grid
+    from repro.configs.catalog import lock_discipline_variants
 
     out = workload_grid(n_scenarios=4, target_cs=25, verbose=False)
-    assert out["meta"]["n_configs"] == 4 * 4 * 9
+    assert out["meta"]["n_configs"] == \
+        4 * 4 * len(lock_discipline_variants())
     assert set(out["workloads"]) == set(WORKLOADS)
     for w, rows in out["workloads"].items():
         assert sum(r["wins"] for r in rows.values()) == 4, w
